@@ -1,0 +1,68 @@
+//! End-to-end validation driver (DESIGN.md: the repo's headline example).
+//!
+//! Trains the paper's ResNet-20 on the synthetic-CIFAR corpus through the
+//! full three-phase pipeline, logging the loss curve, the evolving
+//! quantization scheme at every re-quantization, and the final
+//! accuracy/compression pair. The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```bash
+//! cargo run --release --example cifar_bsq -- [--alpha 5e-3] [--fast]
+//! ```
+
+use bsq::coordinator::{run_bsq, write_result, BsqConfig};
+use bsq::runtime::Engine;
+use bsq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    bsq::util::logging::init();
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    let alpha: f32 = args.get_or("alpha", 5e-3)?;
+    let fast = args.flag("fast");
+    args.finish()?;
+
+    let engine = Engine::cpu()?;
+    let mut cfg = BsqConfig::for_model("resnet20");
+    cfg.alpha = alpha;
+    if fast {
+        cfg.pretrain_epochs = 3;
+        cfg.bsq_epochs = 4;
+        cfg.finetune_epochs = 2;
+        cfg.train_size = 512;
+        cfg.test_size = 256;
+    }
+
+    println!(
+        "BSQ end-to-end: resnet20 ({} params, {} layers), α = {alpha}, 4-bit activations",
+        268_336, 20
+    );
+    println!(
+        "schedule: {} pretrain + {} BSQ + {} finetune epochs, corpus {}/{} (batch 32)\n",
+        cfg.pretrain_epochs, cfg.bsq_epochs, cfg.finetune_epochs, cfg.train_size, cfg.test_size
+    );
+
+    let outcome = run_bsq(&engine, &cfg)?;
+
+    println!("\n==== loss curve ====");
+    for r in &outcome.history.records {
+        println!(
+            "{:>9} {:>3}  loss {:>7.4}  acc {:>5.3}{}  [{:.2} b/p]",
+            r.phase,
+            r.epoch,
+            r.loss,
+            r.acc,
+            r.eval_acc.map(|a| format!("  eval {a:.3}")).unwrap_or_default(),
+            r.bits_per_param,
+        );
+    }
+    println!("\n==== final scheme ====\n{}", outcome.scheme);
+    println!(
+        "\nfinal: {:.2} bits/param ({:.2}×), acc {:.2}% → {:.2}% after finetune",
+        outcome.bits_per_param,
+        outcome.compression,
+        100.0 * outcome.acc_before_ft,
+        100.0 * outcome.acc_after_ft
+    );
+    write_result(std::path::Path::new("results/cifar_bsq_e2e.json"), &outcome.to_json())?;
+    println!("record → results/cifar_bsq_e2e.json");
+    Ok(())
+}

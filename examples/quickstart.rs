@@ -1,0 +1,40 @@
+//! Quickstart: the whole BSQ pipeline on the tiny test model, in ~2 minutes.
+//!
+//! ```bash
+//! make artifacts            # once: AOT-lower the JAX/Pallas graphs
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Walks the paper's §3.3 pipeline end to end on `tinynet` (4 quantized
+//! layers, 16×16 synthetic corpus): float pretrain → 8-bit bit-plane
+//! conversion → BSQ training under the bit-level group-Lasso → periodic
+//! re-quantization/precision adjustment → DoReFa finetune at the frozen
+//! mixed-precision scheme.
+
+use bsq::coordinator::{run_bsq, BsqConfig};
+use bsq::runtime::Engine;
+
+fn main() -> anyhow::Result<()> {
+    bsq::util::logging::init();
+
+    let engine = Engine::cpu()?;
+    let mut cfg = BsqConfig::for_model("tinynet");
+    cfg.alpha = 2e-4; // the single knob: higher α → fewer bits (tinynet scale)
+    cfg.cache_pretrained = false;
+
+    println!("running BSQ on {} (α = {}) …", cfg.model, cfg.alpha);
+    let outcome = run_bsq(&engine, &cfg)?;
+
+    println!("\ndiscovered mixed-precision scheme:");
+    println!("{}", outcome.scheme);
+    println!(
+        "\naccuracy: {:.1}% before finetune → {:.1}% after",
+        100.0 * outcome.acc_before_ft,
+        100.0 * outcome.acc_after_ft
+    );
+    println!(
+        "model size: {:.2} bits/param = {:.1}× smaller than fp32",
+        outcome.bits_per_param, outcome.compression
+    );
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! α sweep: regenerate the paper's Table 1 / Figure 3 trade-off curve.
+//!
+//! ```bash
+//! cargo run --release --example sweep_alpha -- --model tinynet \
+//!     --alphas 1e-3,3e-3,1e-2,3e-2
+//! ```
+//!
+//! Prints one row per α (bits/param, compression, accuracy before/after
+//! finetune) plus the per-layer precision profile — the paper's central
+//! claim that one hyperparameter traces the whole accuracy-size frontier.
+
+use bsq::coordinator::{run_bsq, BsqConfig};
+use bsq::runtime::Engine;
+use bsq::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    bsq::util::logging::init();
+    let mut args = Args::parse(std::env::args().skip(1))?;
+    let model = args.str_or("model", "tinynet")?;
+    let alphas: Vec<f32> =
+        args.list("alphas")?.unwrap_or_else(|| vec![5e-5, 1e-4, 2e-4, 5e-4]);
+    let fast = !args.flag("full");
+    args.finish()?;
+
+    let engine = Engine::cpu()?;
+    println!("{:>9} {:>12} {:>9} {:>11} {:>10}  layer bits", "α", "bits/param", "comp(×)", "preFT acc%", "FT acc%");
+    for alpha in alphas {
+        let mut cfg = BsqConfig::for_model(&model);
+        cfg.alpha = alpha;
+        if fast && model == "resnet20" {
+            cfg.pretrain_epochs = 3;
+            cfg.bsq_epochs = 4;
+            cfg.finetune_epochs = 2;
+            cfg.train_size = 512;
+            cfg.test_size = 256;
+        }
+        let o = run_bsq(&engine, &cfg)?;
+        println!(
+            "{alpha:>9.0e} {:>12.2} {:>9.2} {:>11.2} {:>10.2}  {:?}",
+            o.bits_per_param,
+            o.compression,
+            100.0 * o.acc_before_ft,
+            100.0 * o.acc_after_ft,
+            o.scheme.bits_vec()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+"""AOT compiler: lower every registered entry point to HLO text + manifest.
+
+Run via `make artifacts` (never at runtime):
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--model NAME]
+
+Interchange format is HLO *text*, not a serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per model this writes
+    artifacts/<model>/<entry>.hlo.txt
+    artifacts/<model>/manifest.json     (layer metadata + flat I/O specs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import REGISTRY
+from .models import get_model
+from .quantize import NB
+from .train import build_entry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model(name: str, out_dir: str, batch_override: int | None = None) -> dict:
+    batch, entries = REGISTRY[name]
+    if batch_override:
+        batch = batch_override
+    model = get_model(name)
+    mdir = os.path.join(out_dir, name)
+    os.makedirs(mdir, exist_ok=True)
+
+    manifest = {
+        "model": name,
+        "version": 1,
+        "batch": batch,
+        "nb": NB,
+        "input_hw": list(model.input_hw),
+        "in_ch": model.in_ch,
+        "num_classes": model.num_classes,
+        "qlayers": [
+            {"name": q.name, "shape": list(q.shape), "kind": q.kind,
+             "params": q.params}
+            for q in model.qlayers
+        ],
+        "bn_names": list(model.bn_names),
+        "act_sites": list(model.act_sites),
+        "dense_bias": list(model.dense_bias),
+        "artifacts": {},
+    }
+
+    for entry in entries:
+        t0 = time.time()
+        spec_in, spec_out, fn = build_entry(model, entry, batch)
+        lowered = jax.jit(fn).lower(*[i.sds() for i in spec_in])
+        text = to_hlo_text(lowered)
+        fname = f"{entry}.hlo.txt"
+        with open(os.path.join(mdir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][entry] = {
+            "file": fname,
+            "inputs": [i.to_json() for i in spec_in],
+            "outputs": [o.to_json() for o in spec_out],
+        }
+        print(f"  {name}/{entry}: {len(spec_in)} in / {len(spec_out)} out, "
+              f"{len(text) / 1e6:.2f} MB HLO, {time.time() - t0:.1f}s")
+
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--model", default=None,
+                    help="lower a single model (default: all registered)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="override the registered batch size")
+    args = ap.parse_args()
+
+    names = [args.model] if args.model else list(REGISTRY)
+    t0 = time.time()
+    for name in names:
+        print(f"lowering {name} …")
+        lower_model(name, args.out_dir, args.batch)
+    print(f"done in {time.time() - t0:.1f}s → {os.path.abspath(args.out_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""L1: Pallas kernels for BSQ's compute hot spots, with pure-jnp oracles.
+
+Exports:
+  bitrep.plane_sum   — masked bit-plane reconstruction (paper Eq. 2/3 STE)
+  bgl.bgl_sumsq      — per-plane sum-of-squares for the group Lasso (Eq. 4)
+  actquant.fakequant — activation fake-quantization (ReLU6 / PACT bounds)
+  ref.*              — jnp reference implementations (test oracles)
+"""
+
+from . import ref  # noqa: F401
+from .actquant import fakequant  # noqa: F401
+from .bgl import bgl_sumsq  # noqa: F401
+from .bitrep import plane_sum  # noqa: F401

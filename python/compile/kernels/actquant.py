@@ -1,0 +1,121 @@
+"""L1 Pallas kernel: activation fake-quantization (ReLU6 / PACT paths).
+
+Paper §3.3: activations are quantized at a fixed precision chosen per layer
+(8-bit first/last, 2–4-bit elsewhere); ReLU6 bounds are used at ≥4 bits and
+the trainable PACT clip (Choi et al., 2018) below that. Both reduce to the
+same primitive:
+
+    q = Round[clip(x, 0, bound) / bound · levels] / levels · bound
+
+with `levels = 2^a − 1` a runtime scalar and `bound` either the constant 6.0
+(ReLU6) or a trained PACT parameter. The STE backward passes the gradient
+inside (0, bound) and routes the above-bound mass to the bound (the PACT
+clip-parameter gradient).
+
+Forward and backward are element-wise Pallas kernels blocked along a
+flattened element axis; wrappers reshape arbitrary activation shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_E = 65536
+INTERPRET = True
+
+
+def _fq_kernel(bound_ref, levels_ref, x_ref, o_ref):
+    b = bound_ref[0]
+    lv = levels_ref[0]
+    xc = jnp.clip(x_ref[...], 0.0, b)
+    o_ref[...] = jnp.round(xc / b * lv) / lv * b
+
+
+def _fq_bwd_kernel(bound_ref, x_ref, g_ref, gx_ref, gb_ref):
+    i = pl.program_id(0)
+    b = bound_ref[0]
+    x = x_ref[...]
+    g = g_ref[...]
+    inside = jnp.logical_and(x > 0.0, x < b)
+    gx_ref[...] = jnp.where(inside, g, 0.0)
+    part = jnp.sum(jnp.where(x >= b, g, 0.0))
+
+    @pl.when(i == 0)
+    def _init():
+        gb_ref[...] = jnp.zeros_like(gb_ref)
+
+    gb_ref[0] += part
+
+
+def _pad1(x, fill=0.0):
+    rem = (-x.shape[0]) % BLOCK_E
+    if rem == 0:
+        return x
+    # Pad with -1 on the forward path: clips to 0 and quantizes to 0; on the
+    # backward path a -1 pad falls outside (0, bound) so both gradient
+    # contributions of the padded tail are exactly zero.
+    return jnp.pad(x, (0, rem), constant_values=fill)
+
+
+@jax.custom_vjp
+def fakequant(x: jnp.ndarray, bound: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Fake-quantize x (any shape) onto `levels` uniform steps of [0, bound]."""
+    return _fq_impl(x, bound, levels)
+
+
+def _fq_impl(x, bound, levels):
+    shape = x.shape
+    xf = _pad1(x.reshape(-1), fill=-1.0)
+    ep = xf.shape[0]
+    grid = (ep // BLOCK_E,)
+    out = pl.pallas_call(
+        _fq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ep,), x.dtype),
+        interpret=INTERPRET,
+    )(bound.reshape(1), levels.reshape(1), xf)
+    return out[: x.size].reshape(shape)
+
+
+def _fq_fwd(x, bound, levels):
+    return _fq_impl(x, bound, levels), (x, bound)
+
+
+def _fq_bwd(res, g):
+    x, bound = res
+    shape = x.shape
+    xf = _pad1(x.reshape(-1), fill=-1.0)
+    gf = _pad1(g.reshape(-1), fill=0.0)
+    ep = xf.shape[0]
+    grid = (ep // BLOCK_E,)
+    gx, gb = pl.pallas_call(
+        _fq_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ep,), x.dtype),
+            jax.ShapeDtypeStruct((1,), x.dtype),
+        ],
+        interpret=INTERPRET,
+    )(bound.reshape(1), xf, gf)
+    # levels is a fixed configuration input: zero cotangent.
+    return gx[: x.size].reshape(shape), gb.reshape(()), jnp.zeros(())
+
+
+fakequant.defvjp(_fq_fwd, _fq_bwd)

@@ -1,0 +1,132 @@
+"""L1 Pallas kernel: bit-plane reconstruction with the paper's STE (Eq. 2/3).
+
+The hot spot of BSQ training is reconstructing every layer's weight tensor
+from its NB bit planes at every step:
+
+    v      = Σ_b mask_b (W_p^(b) − W_n^(b)) 2^b          (plane reduction)
+    W_q    = Round[v] / max(Σ_b mask_b 2^b, 1)           (quantize)
+    W      = scale ⊙ W_q                                  (rescale)
+
+The plane reduction is the bandwidth-dominant part (NB+1 tensor reads per
+weight element per step) and is implemented here as a Pallas kernel, blocked
+along the element axis so each block's planes live in VMEM while the
+accumulation runs. The backward of the (linear) reduction is exactly the
+paper's Eq. 3 STE backward — ∂L/∂W^(b) = 2^b/(2^n−1) ∂L/∂W_q — and is
+implemented as a second (broadcast) Pallas kernel via jax.custom_vjp.
+
+Rounding + denominator + scale are composed at the JAX level (bit_weight in
+python/compile/quantize.py) where `stop_gradient` expresses the round STE.
+
+Hardware adaptation (DESIGN.md §3): the paper trains on GPUs with no custom
+kernels; on TPU this reduction is VPU work. Block shape [NB, BLOCK_E] keeps
+the working set (9·BLOCK_E·4 B ≈ 1.2 MiB per plane tensor at BLOCK_E=32768;
+wp+wn+out ≈ 2.5 MiB, ×2 for double-buffering ≈ 5 MiB) comfortably under the
+16 MiB VMEM budget while minimizing grid-iteration overhead — the block size
+was raised from 4096 after the §Perf pass measured the lowered interpret-mode
+grid loop dominating the step (EXPERIMENTS.md §Perf: −46%% step latency).
+interpret=True everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Element-axis block: covers all but the largest resnet layers in one grid
+# step; VMEM working set ≈ 5 MiB with double buffering (see module doc).
+BLOCK_E = 32768
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _plane_sum_kernel(pow2_ref, wp_ref, wn_ref, o_ref):
+    """o[e] = Σ_b pow2[b] * (wp[b, e] − wn[b, e]) for one element block."""
+    diff = wp_ref[...] - wn_ref[...]            # [NB, BE]
+    w = pow2_ref[...].reshape(-1, 1)            # [NB, 1]
+    o_ref[...] = jnp.sum(diff * w, axis=0)      # [BE]
+
+
+def _plane_sum_bwd_kernel(pow2_ref, g_ref, gp_ref, gn_ref):
+    """Paper Eq. 3 backward: broadcast g over planes scaled by 2^b·mask_b."""
+    g = g_ref[...].reshape(1, -1)               # [1, BE]
+    w = pow2_ref[...].reshape(-1, 1)            # [NB, 1]
+    gp_ref[...] = g * w                         # [NB, BE]
+    gn_ref[...] = -g * w
+
+
+def _pad_to_block(x: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """Right-pad `axis` to a multiple of BLOCK_E with zeros."""
+    e = x.shape[axis]
+    rem = (-e) % BLOCK_E
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def plane_sum(wp: jnp.ndarray, wn: jnp.ndarray, pow2: jnp.ndarray) -> jnp.ndarray:
+    """v[E] = Σ_b pow2[b]·(wp[b,:] − wn[b,:]); linear, custom VJP = Eq. 3.
+
+    wp, wn: [NB, E] bit planes; pow2: [NB] = mask ⊙ 2^arange(NB).
+    """
+    return _plane_sum_fwd_impl(wp, wn, pow2)
+
+
+def _plane_sum_fwd_impl(wp, wn, pow2):
+    nb, e = wp.shape
+    wp_p = _pad_to_block(wp, 1)
+    wn_p = _pad_to_block(wn, 1)
+    ep = wp_p.shape[1]
+    grid = (ep // BLOCK_E,)
+    out = pl.pallas_call(
+        _plane_sum_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((nb, BLOCK_E), lambda i: (0, i)),
+            pl.BlockSpec((nb, BLOCK_E), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((ep,), wp.dtype),
+        interpret=INTERPRET,
+    )(pow2, wp_p, wn_p)
+    return out[:e]
+
+
+def _plane_sum_fwd(wp, wn, pow2):
+    return _plane_sum_fwd_impl(wp, wn, pow2), (pow2, wp.shape)
+
+
+def _plane_sum_bwd(res, g):
+    pow2, (nb, e) = res
+    g_p = _pad_to_block(g, 0)
+    ep = g_p.shape[0]
+    grid = (ep // BLOCK_E,)
+    gp, gn = pl.pallas_call(
+        _plane_sum_bwd_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nb,), lambda i: (0,)),
+            pl.BlockSpec((BLOCK_E,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((nb, BLOCK_E), lambda i: (0, i)),
+            pl.BlockSpec((nb, BLOCK_E), lambda i: (0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, ep), g.dtype),
+            jax.ShapeDtypeStruct((nb, ep), g.dtype),
+        ],
+        interpret=INTERPRET,
+    )(pow2, g_p)
+    # pow2 (mask·2^b) is a non-trained configuration input: zero cotangent.
+    return gp[:, :e], gn[:, :e], jnp.zeros_like(pow2)
+
+
+plane_sum.defvjp(_plane_sum_fwd, _plane_sum_bwd)

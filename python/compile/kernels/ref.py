@@ -1,0 +1,86 @@
+"""Pure-jnp reference oracles for every Pallas kernel in this package.
+
+These implement the paper's equations directly with jax.numpy and serve as
+the correctness ground truth: pytest (python/tests/test_kernels.py) asserts
+that each Pallas kernel matches its oracle bit-for-bit (or to fp32 tolerance
+where a reduction order differs), for both values and gradients.
+
+Paper: BSQ (Yang et al., ICLR 2021).
+  Eq. 2  bit representation    W = sign(W) ⊙ s/(2^n−1) Σ_b W_s^(b) 2^b
+  Eq. 3  bit-rep STE           fwd round, bwd scaled pass-through
+  Eq. 4  bit-level group Lasso B_GL = Σ_b ‖[W_p^(b); W_n^(b)]‖_2
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Smoothing constant for the group-Lasso norm at zero (the subgradient at the
+# origin is the zero vector; the eps keeps the gradient defined and bounded).
+BGL_EPS = 1e-12
+
+
+def plane_sum_ref(wp: jnp.ndarray, wn: jnp.ndarray, pow2: jnp.ndarray) -> jnp.ndarray:
+    """Masked bit-plane reconstruction (the linear part of paper Eq. 2/3).
+
+    Args:
+      wp: positive bit planes, shape [NB, E], values in [0, 2].
+      wn: negative bit planes, shape [NB, E].
+      pow2: per-plane weights, shape [NB]; caller passes mask_b * 2**b so a
+        disabled plane contributes nothing.
+
+    Returns:
+      v[E] = Σ_b pow2[b] * (wp[b] − wn[b])  (float, *before* rounding).
+    """
+    return jnp.einsum("b,be->e", pow2, wp - wn)
+
+
+def bgl_sumsq_ref(wp: jnp.ndarray, wn: jnp.ndarray) -> jnp.ndarray:
+    """Per-plane sum of squares over the [W_p^(b); W_n^(b)] concatenation.
+
+    Returns ssq[NB]; the bit-level group-Lasso of paper Eq. 4 is
+    Σ_b mask_b * sqrt(ssq[b] + eps) (assembled at the L2 level).
+    """
+    return jnp.sum(wp * wp + wn * wn, axis=1)
+
+
+def bgl_ref(wp: jnp.ndarray, wn: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Full bit-level group Lasso (paper Eq. 4), eps-smoothed at 0."""
+    ssq = bgl_sumsq_ref(wp, wn)
+    return jnp.sum(mask * jnp.sqrt(ssq + BGL_EPS))
+
+
+def fakequant_ref(x: jnp.ndarray, bound: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Uniform activation fake-quantization on [0, bound] with `levels` steps.
+
+    q = round(clip(x, 0, bound) / bound * levels) / levels * bound
+    `levels` = 2^a − 1 for an a-bit activation. Matches Polino et al. (2018)
+    as adopted by the paper (§3.3, activation quantization).
+    """
+    xc = jnp.clip(x, 0.0, bound)
+    return jnp.round(xc / bound * levels) / levels * bound
+
+
+def fakequant_bwd_ref(x: jnp.ndarray, bound: jnp.ndarray, g: jnp.ndarray):
+    """STE backward of fake-quant: pass-through inside [0, bound].
+
+    Returns (gx, gbound): gx masks the gradient to the un-clipped region;
+    gbound accumulates the PACT clip gradient (Choi et al., 2018): elements
+    clipped from above move with the bound.
+    """
+    inside = jnp.logical_and(x > 0.0, x < bound)
+    gx = jnp.where(inside, g, 0.0)
+    gbound = jnp.sum(jnp.where(x >= bound, g, 0.0))
+    return gx, gbound
+
+
+def bitrep_quantize_ref(wp, wn, mask, scale):
+    """Full paper Eq. 2 reconstruction with rounding (no STE; value only).
+
+    W = scale * Round[Σ_b mask_b (wp_b − wn_b) 2^b] / max(Σ_b mask_b 2^b, 1)
+    """
+    nb = wp.shape[0]
+    pow2 = mask * (2.0 ** jnp.arange(nb, dtype=jnp.float32))
+    v = plane_sum_ref(wp.reshape(nb, -1), wn.reshape(nb, -1), pow2)
+    denom = jnp.maximum(jnp.sum(pow2), 1.0)
+    return (scale * jnp.round(v) / denom).reshape(wp.shape[1:])

@@ -1,0 +1,106 @@
+"""L2 building blocks: conv / batch-norm / dense over a weight-provider.
+
+The same forward graph must run under four weight modes (fp, BSQ bit
+representation, DoReFa, LSQ) and two activation modes (ReLU6, PACT). To keep
+one source of truth per architecture, a model's `forward` is written against
+a `Forward` context that:
+
+  * resolves weights through a caller-supplied provider (the train step
+    injects the quantizer there),
+  * applies batch norm from a parameter dict and records updated running
+    statistics in train mode (BN stays float — paper App. A),
+  * quantizes activations through a caller-supplied site function (so the
+    per-site precision vector and ReLU6/PACT choice live with the caller).
+
+Convolutions carry no bias (BN absorbs it); the final dense layer has one.
+Layouts: NHWC activations, HWIO conv kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax.numpy as jnp
+from jax import lax
+
+BN_MOMENTUM = 0.1  # running-stat update rate (PyTorch convention, paper impl)
+BN_EPS = 1e-5
+
+
+class Forward:
+    """One forward pass; collects BN running-stat updates in train mode."""
+
+    def __init__(
+        self,
+        weight: Callable[[str], jnp.ndarray],
+        bn_params: Dict[str, jnp.ndarray],
+        act_site: Callable[[int, jnp.ndarray], jnp.ndarray],
+        train: bool,
+    ):
+        self.weight = weight
+        self.bn_params = bn_params
+        self.act_site = act_site
+        self.train = train
+        self.new_stats: Dict[str, jnp.ndarray] = {}
+        self._site = 0
+
+    # -- primitives --------------------------------------------------------
+
+    def conv(self, x: jnp.ndarray, name: str, stride: int = 1,
+             padding: str = "SAME") -> jnp.ndarray:
+        w = self.weight(name)  # HWIO
+        return lax.conv_general_dilated(
+            x, w,
+            window_strides=(stride, stride),
+            padding=padding,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+
+    def bn(self, x: jnp.ndarray, name: str) -> jnp.ndarray:
+        gamma = self.bn_params[f"{name}/gamma"]
+        beta = self.bn_params[f"{name}/beta"]
+        if self.train:
+            mean = jnp.mean(x, axis=(0, 1, 2))
+            var = jnp.var(x, axis=(0, 1, 2))
+            run_m = self.bn_params[f"{name}/mean"]
+            run_v = self.bn_params[f"{name}/var"]
+            self.new_stats[f"{name}/mean"] = (1 - BN_MOMENTUM) * run_m + BN_MOMENTUM * mean
+            self.new_stats[f"{name}/var"] = (1 - BN_MOMENTUM) * run_v + BN_MOMENTUM * var
+        else:
+            mean = self.bn_params[f"{name}/mean"]
+            var = self.bn_params[f"{name}/var"]
+        inv = lax.rsqrt(var + BN_EPS)
+        return (x - mean) * inv * gamma + beta
+
+    def act(self, x: jnp.ndarray) -> jnp.ndarray:
+        """Quantized activation; sites are numbered in call order."""
+        out = self.act_site(self._site, x)
+        self._site += 1
+        return out
+
+    def dense(self, x: jnp.ndarray, name: str) -> jnp.ndarray:
+        w = self.weight(name)  # [in, out]
+        b = self.weight(f"{name}/b")
+        return x @ w + b
+
+    # -- composites --------------------------------------------------------
+
+    def conv_bn_act(self, x, name, stride=1):
+        return self.act(self.bn(self.conv(x, name, stride=stride), name))
+
+    def global_avg_pool(self, x):
+        return jnp.mean(x, axis=(1, 2))
+
+
+def pad_shortcut(x: jnp.ndarray, cout: int, stride: int) -> jnp.ndarray:
+    """ResNet option-A shortcut: strided subsample + zero channel padding.
+
+    Parameter-free (matches the He et al. 2016 CIFAR ResNet the paper uses —
+    its layer count implies no projection shortcuts on CIFAR).
+    """
+    if stride > 1:
+        x = x[:, ::stride, ::stride, :]
+    cin = x.shape[-1]
+    if cout > cin:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, 0), (0, cout - cin)))
+    return x

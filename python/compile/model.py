@@ -1,0 +1,32 @@
+"""Artifact registry: which entry points get lowered for which model.
+
+The sets mirror what the experiments need (DESIGN.md §6–7):
+  * tinynet       — fast integration-test model: full BSQ pipeline + HVP.
+  * resnet20      — the paper's CIFAR-10 model: everything, including the
+                    PACT (2/3-bit activation) variants and the LSQ baseline.
+  * resnet50_sim / inception_sim — ImageNet-row twins: ReLU6 path only
+                    (the paper uses ≥4-bit activations on ImageNet).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+_RELU6_SET = [
+    "fp_train_relu6", "fp_eval_relu6",
+    "bsq_train_relu6", "q_eval_relu6",
+    "dorefa_train_relu6", "dorefa_eval_relu6",
+]
+_PACT_SET = [
+    "bsq_train_pact", "q_eval_pact",
+    "dorefa_train_pact", "dorefa_eval_pact",
+]
+_LSQ_SET = ["lsq_train_relu6", "lsq_eval_relu6"]
+
+# model → (train/eval batch size, entry list)
+REGISTRY: Dict[str, Tuple[int, List[str]]] = {
+    "tinynet": (16, _RELU6_SET + ["hvp"]),
+    "resnet20": (32, _RELU6_SET + _PACT_SET + _LSQ_SET + ["hvp"]),
+    "resnet50_sim": (32, _RELU6_SET),
+    "inception_sim": (32, _RELU6_SET),
+}

@@ -1,0 +1,274 @@
+"""Model zoo: tinynet / resnet20 / resnet50_sim / inception_sim.
+
+Each model is a `ModelDef`: static metadata (quantized weight layers in
+order, BN names, activation-site names, input/class geometry) plus a
+`forward(fwd, x) -> logits` written against the layers.Forward context.
+The metadata is the single source of truth consumed by aot.py (manifest
+generation) and, through the manifest, by the Rust coordinator (state
+initialization, scheme accounting, regularizer reweighing).
+
+Architecture notes (DESIGN.md §4 substitutions):
+  * resnet20      — the paper's CIFAR-10 model, exactly: 3 stages × 3 basic
+                    blocks × 2 convs at widths 16/32/64, option-A shortcuts,
+                    global avg-pool, 10-way FC. 20 weighted layers.
+  * resnet50_sim  — scaled-down twin of ResNet-50 for the ImageNet rows:
+                    bottleneck (1×1→3×3→1×1, 4× expansion) stages [2,2,2]
+                    at widths 16/32/64, projection shortcuts, 100 classes.
+  * inception_sim — scaled-down Inception-V3 twin: conv stem + 3 mixed
+                    blocks with 1×1 / 3×3 / double-3×3 / pool branches.
+  * tinynet       — 4 weighted layers on 16×16 inputs; fast-path model for
+                    integration tests and the quickstart example.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Tuple
+
+import jax.numpy as jnp
+
+from .layers import Forward, pad_shortcut
+
+
+@dataclasses.dataclass(frozen=True)
+class QLayer:
+    """One quantized weight layer (conv or dense)."""
+    name: str
+    shape: Tuple[int, ...]  # HWIO for conv, [in, out] for dense
+    kind: str               # "conv" | "dense"
+
+    @property
+    def params(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelDef:
+    name: str
+    input_hw: Tuple[int, int]
+    in_ch: int
+    num_classes: int
+    qlayers: Tuple[QLayer, ...]        # ordered; defines wlv/regw vector order
+    bn_names: Tuple[str, ...]          # ordered BN parameter groups
+    act_sites: Tuple[str, ...]         # ordered activation sites (actlv order)
+    dense_bias: Tuple[str, ...]        # dense layers carrying a bias
+    forward: Callable[[Forward, jnp.ndarray], jnp.ndarray]
+
+    @property
+    def total_params(self) -> int:
+        return sum(q.params for q in self.qlayers)
+
+
+# ---------------------------------------------------------------------------
+# resnet20 (paper's CIFAR-10 model)
+# ---------------------------------------------------------------------------
+
+def _resnet20_def(width: int = 16, num_classes: int = 10) -> ModelDef:
+    widths = (width, 2 * width, 4 * width)
+    qlayers: List[QLayer] = [QLayer("conv1", (3, 3, 3, width), "conv")]
+    bns = ["conv1"]
+    acts = ["conv1"]
+    cin = width
+    for s, w in enumerate(widths):
+        for b in range(3):
+            for c in (1, 2):
+                nm = f"s{s}b{b}c{c}"
+                qlayers.append(QLayer(nm, (3, 3, cin if c == 1 else w, w), "conv"))
+                bns.append(nm)
+                acts.append(nm)
+            cin = w
+    qlayers.append(QLayer("fc", (widths[-1], num_classes), "dense"))
+
+    def forward(fwd: Forward, x: jnp.ndarray) -> jnp.ndarray:
+        x = fwd.conv_bn_act(x, "conv1")
+        cin_ = width
+        for s, w in enumerate(widths):
+            for b in range(3):
+                stride = 2 if (s > 0 and b == 0) else 1
+                sc = pad_shortcut(x, w, stride)
+                y = fwd.conv_bn_act(x, f"s{s}b{b}c1", stride=stride)
+                y = fwd.bn(fwd.conv(y, f"s{s}b{b}c2"), f"s{s}b{b}c2")
+                x = fwd.act(y + sc)
+                cin_ = w
+        x = fwd.global_avg_pool(x)
+        return fwd.dense(x, "fc")
+
+    return ModelDef(
+        name="resnet20", input_hw=(32, 32), in_ch=3, num_classes=num_classes,
+        qlayers=tuple(qlayers), bn_names=tuple(bns), act_sites=tuple(acts),
+        dense_bias=("fc",), forward=forward,
+    )
+
+
+# ---------------------------------------------------------------------------
+# tinynet (fast integration-test model)
+# ---------------------------------------------------------------------------
+
+def _tinynet_def() -> ModelDef:
+    qlayers = (
+        QLayer("conv1", (3, 3, 3, 8), "conv"),
+        QLayer("conv2", (3, 3, 8, 16), "conv"),
+        QLayer("conv3", (3, 3, 16, 16), "conv"),
+        QLayer("fc", (16, 10), "dense"),
+    )
+    bns = ("conv1", "conv2", "conv3")
+    acts = ("conv1", "conv2", "conv3")
+
+    def forward(fwd: Forward, x: jnp.ndarray) -> jnp.ndarray:
+        x = fwd.conv_bn_act(x, "conv1")
+        x = fwd.conv_bn_act(x, "conv2", stride=2)
+        x = fwd.conv_bn_act(x, "conv3")
+        x = fwd.global_avg_pool(x)
+        return fwd.dense(x, "fc")
+
+    return ModelDef(
+        name="tinynet", input_hw=(16, 16), in_ch=3, num_classes=10,
+        qlayers=qlayers, bn_names=bns, act_sites=acts,
+        dense_bias=("fc",), forward=forward,
+    )
+
+
+# ---------------------------------------------------------------------------
+# resnet50_sim (bottleneck twin for the ImageNet ResNet-50 rows)
+# ---------------------------------------------------------------------------
+
+def _resnet50_sim_def(width: int = 16, num_classes: int = 100,
+                      blocks: Tuple[int, ...] = (2, 2, 2),
+                      expansion: int = 4) -> ModelDef:
+    widths = tuple(width * (2 ** i) for i in range(len(blocks)))
+    qlayers: List[QLayer] = [QLayer("conv1", (3, 3, 3, width), "conv")]
+    bns = ["conv1"]
+    acts = ["conv1"]
+    cin = width
+    for s, (nb, w) in enumerate(zip(blocks, widths)):
+        for b in range(nb):
+            pre = f"s{s}b{b}"
+            cout = w * expansion
+            qlayers.append(QLayer(f"{pre}c1", (1, 1, cin, w), "conv"))
+            qlayers.append(QLayer(f"{pre}c2", (3, 3, w, w), "conv"))
+            qlayers.append(QLayer(f"{pre}c3", (1, 1, w, cout), "conv"))
+            bns += [f"{pre}c1", f"{pre}c2", f"{pre}c3"]
+            acts += [f"{pre}c1", f"{pre}c2", f"{pre}c3"]
+            if b == 0:
+                qlayers.append(QLayer(f"{pre}proj", (1, 1, cin, cout), "conv"))
+                bns.append(f"{pre}proj")
+            cin = cout
+    qlayers.append(QLayer("fc", (widths[-1] * expansion, num_classes), "dense"))
+
+    def forward(fwd: Forward, x: jnp.ndarray) -> jnp.ndarray:
+        x = fwd.conv_bn_act(x, "conv1")
+        cin_ = width
+        for s, (nb, w) in enumerate(zip(blocks, widths)):
+            for b in range(nb):
+                pre = f"s{s}b{b}"
+                stride = 2 if (s > 0 and b == 0) else 1
+                if b == 0:
+                    sc = fwd.bn(fwd.conv(x, f"{pre}proj", stride=stride), f"{pre}proj")
+                else:
+                    sc = x
+                y = fwd.conv_bn_act(x, f"{pre}c1")
+                y = fwd.conv_bn_act(y, f"{pre}c2", stride=stride)
+                y = fwd.bn(fwd.conv(y, f"{pre}c3"), f"{pre}c3")
+                x = fwd.act(y + sc)
+        x = fwd.global_avg_pool(x)
+        return fwd.dense(x, "fc")
+
+    return ModelDef(
+        name="resnet50_sim", input_hw=(32, 32), in_ch=3, num_classes=num_classes,
+        qlayers=tuple(qlayers), bn_names=tuple(bns), act_sites=tuple(acts),
+        dense_bias=("fc",), forward=forward,
+    )
+
+
+# ---------------------------------------------------------------------------
+# inception_sim (mixed-block twin for the ImageNet Inception-V3 rows)
+# ---------------------------------------------------------------------------
+
+def _inception_sim_def(num_classes: int = 100) -> ModelDef:
+    qlayers: List[QLayer] = []
+    bns: List[str] = []
+    acts: List[str] = []
+
+    def cba(name, kh, kw, cin, cout):
+        qlayers.append(QLayer(name, (kh, kw, cin, cout), "conv"))
+        bns.append(name)
+        acts.append(name)
+
+    # Stem: the paper quantizes Inception-V3's first 5 convs at 8-bit; the
+    # twin keeps a 3-conv stem (32×32 inputs leave no room for 5 strided
+    # convs) whose sites the coordinator pins to 8-bit.
+    cba("stem1", 3, 3, 3, 16)
+    cba("stem2", 3, 3, 16, 16)
+    cba("stem3", 3, 3, 16, 32)
+
+    # Three mixed blocks, each with 4 branches (1×1 / 3×3 / double-3×3 /
+    # pool-proj) mirroring Inception-V3's Mixed-5 family.
+    mixed = []
+    cin = 32
+    for m in range(3):
+        b1 = 16
+        b3r, b3 = 12, 16
+        d3r, d3 = 12, 16
+        pp = 8
+        pre = f"mix{m}"
+        cba(f"{pre}_b1", 1, 1, cin, b1)
+        cba(f"{pre}_b3r", 1, 1, cin, b3r)
+        cba(f"{pre}_b3", 3, 3, b3r, b3)
+        cba(f"{pre}_d3r", 1, 1, cin, d3r)
+        cba(f"{pre}_d3a", 3, 3, d3r, d3)
+        cba(f"{pre}_d3b", 3, 3, d3, d3)
+        cba(f"{pre}_pp", 1, 1, cin, pp)
+        cout = b1 + b3 + d3 + pp
+        mixed.append((pre, cin, cout))
+        cin = cout
+    qlayers.append(QLayer("fc", (cin, num_classes), "dense"))
+
+    def forward(fwd: Forward, x: jnp.ndarray) -> jnp.ndarray:
+        x = fwd.conv_bn_act(x, "stem1")
+        x = fwd.conv_bn_act(x, "stem2", stride=2)
+        x = fwd.conv_bn_act(x, "stem3")
+        for m, (pre, _, _) in enumerate(mixed):
+            if m == 1:
+                x = x[:, ::2, ::2, :]  # stride-2 transition between blocks
+            y1 = fwd.conv_bn_act(x, f"{pre}_b1")
+            y3 = fwd.conv_bn_act(x, f"{pre}_b3r")
+            y3 = fwd.conv_bn_act(y3, f"{pre}_b3")
+            yd = fwd.conv_bn_act(x, f"{pre}_d3r")
+            yd = fwd.conv_bn_act(yd, f"{pre}_d3a")
+            yd = fwd.conv_bn_act(yd, f"{pre}_d3b")
+            # 3×3 average-pool branch (SAME), then 1×1 projection.
+            yp = jnp.pad(x, ((0, 0), (1, 1), (1, 1), (0, 0)), mode="edge")
+            yp = sum(
+                yp[:, i:i + x.shape[1], j:j + x.shape[2], :]
+                for i in range(3) for j in range(3)
+            ) / 9.0
+            yp = fwd.conv_bn_act(yp, f"{pre}_pp")
+            x = jnp.concatenate([y1, y3, yd, yp], axis=-1)
+        x = fwd.global_avg_pool(x)
+        return fwd.dense(x, "fc")
+
+    return ModelDef(
+        name="inception_sim", input_hw=(32, 32), in_ch=3, num_classes=num_classes,
+        qlayers=tuple(qlayers), bn_names=tuple(bns), act_sites=tuple(acts),
+        dense_bias=("fc",), forward=forward,
+    )
+
+
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {
+    "tinynet": _tinynet_def,
+    "resnet20": _resnet20_def,
+    "resnet50_sim": _resnet50_sim_def,
+    "inception_sim": _inception_sim_def,
+}
+
+
+def get_model(name: str) -> ModelDef:
+    """Look up a model definition by registry name."""
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown model {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()

@@ -1,0 +1,107 @@
+"""L2 quantization plumbing: STE wrappers over the L1 kernels.
+
+Implements every quantizer the reproduction needs:
+  * bit_weight     — BSQ bit-representation weight reconstruction (Eq. 2/3)
+  * dorefa_weight  — DoReFa-Net uniform weight quantizer (paper Eq. 1 family),
+                     used for finetuning and the train-from-scratch baseline
+  * lsq_weight     — learned-step-size quantizer (LQ-Nets/LSQ stand-in)
+  * act_quant      — ReLU6 / PACT activation quantization (paper §3.3)
+  * bgl_layer      — the bit-level group-Lasso term of one layer (Eq. 4)
+
+All rounding is expressed with the straight-through estimator
+`x + stop_gradient(round(x) − x)` so gradients flow as the paper specifies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import bgl_sumsq, fakequant, plane_sum
+from .kernels.ref import BGL_EPS
+
+NB = 9  # fixed bit-plane count: 8-bit initial precision + 1 overflow plane
+
+
+def ste_round(x: jnp.ndarray) -> jnp.ndarray:
+    """Round with identity gradient (Bengio et al., 2013)."""
+    return x + jax.lax.stop_gradient(jnp.round(x) - x)
+
+
+def pow2_vec(mask: jnp.ndarray) -> jnp.ndarray:
+    """mask ⊙ [1, 2, 4, …]: per-plane weights of the reconstruction."""
+    return mask * (2.0 ** jnp.arange(mask.shape[0], dtype=jnp.float32))
+
+
+def bit_weight(wp: jnp.ndarray, wn: jnp.ndarray, mask: jnp.ndarray,
+               scale: jnp.ndarray) -> jnp.ndarray:
+    """Reconstruct the effective weight from bit planes (paper Eq. 2 + 3).
+
+    wp/wn: [NB, *shape] trainable planes in [0, 2]; mask: [NB] 0/1 with the
+    active planes bottom-packed; scale: scalar s.
+
+    W = s · Round[Σ_b mask_b (wp_b − wn_b) 2^b] / max(Σ_b mask_b 2^b, 1)
+
+    The plane reduction runs in the L1 Pallas kernel; with bottom-packed
+    masks Σ_b mask_b 2^b = 2^n − 1 so the denominator is the paper's. The
+    max(·, 1) guard keeps a fully pruned (n = 0) layer finite (it is exactly
+    zero: every plane is masked).
+    """
+    shape = wp.shape[1:]
+    p2 = pow2_vec(mask)
+    v = plane_sum(wp.reshape(NB, -1), wn.reshape(NB, -1), p2)
+    denom = jnp.maximum(jnp.sum(p2), 1.0)
+    return (scale * ste_round(v) / denom).reshape(shape)
+
+
+def bgl_layer(wp: jnp.ndarray, wn: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Bit-level group Lasso of one layer (paper Eq. 4), eps-smoothed.
+
+    Only active planes are penalized; the sqrt is taken at the JAX level on
+    the per-plane sums of squares produced by the L1 kernel.
+    """
+    ssq = bgl_sumsq(wp.reshape(NB, -1), wn.reshape(NB, -1))
+    return jnp.sum(mask * jnp.sqrt(ssq + BGL_EPS))
+
+
+def dorefa_weight(w: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """DoReFa-style uniform weight quantizer at a fixed level count.
+
+    Follows the paper's finetuning setup (DoReFa-Net, Zhou et al. 2016, with
+    the dynamic-range scaling of Polino et al. 2018): scale by max|w|,
+    quantize magnitude onto `levels` = 2^n − 1 uniform steps, restore sign
+    and range. `levels` is a traced scalar so one artifact serves any
+    precision; levels < 1 (an n = 0 layer) collapses the weight to zero.
+    """
+    s = jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    ws = w / s
+    lv = jnp.maximum(levels, 1.0)
+    wq = ste_round(jnp.abs(ws) * lv) / lv * jnp.sign(ws)
+    wq = jnp.where(levels >= 1.0, wq, jnp.zeros_like(wq))
+    return s * wq
+
+
+def lsq_weight(w: jnp.ndarray, step: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Learned-step-size uniform quantizer (LSQ, Esser et al. 2019).
+
+    Stands in for the learned-quantizer baselines (LQ-Nets/LSQ rows of the
+    paper's Tables 2–3). Symmetric: codes in [−levels, levels] of width
+    `step`, with the LSQ gradient-scale heuristic folded into the caller's
+    learning rate.
+    """
+    lv = jnp.maximum(levels, 1.0)
+    st = jnp.maximum(step, 1e-8)
+    code = jnp.clip(w / st, -lv, lv)
+    return ste_round(code) * st
+
+
+def act_quant(x: jnp.ndarray, bound: jnp.ndarray, levels: jnp.ndarray) -> jnp.ndarray:
+    """Quantized clipped activation via the L1 fake-quant kernel.
+
+    `bound` is 6.0 for the ReLU6 path (≥4-bit) or the trainable PACT clip
+    (<4-bit). `levels` = 2^a − 1 is a traced scalar; levels ≤ 0 disables
+    quantization (full-precision activations) while keeping the clip.
+    """
+    q = fakequant(x, bound, jnp.maximum(levels, 1.0))
+    clipped = jnp.clip(x, 0.0, bound)
+    return jnp.where(levels >= 1.0, q, clipped)

@@ -1,0 +1,156 @@
+"""Flat I/O specification for AOT artifacts — the Python↔Rust contract.
+
+Every lowered entry point takes a *flat, ordered* tuple of arrays and
+returns one. `IOItem` describes one slot; a list of them (the spec) is
+serialized into `manifest.json` so the Rust coordinator can marshal its own
+state without understanding the graph. Roles:
+
+  inputs
+    x / y     — the minibatch (images f32 NHWC, labels i32)
+    state     — a named model-state tensor (weights, planes, masks, scales,
+                BN params, momenta, PACT clips, LSQ steps)
+    hyper     — a named scalar hyperparameter (lr, alpha, wd, …)
+    vec       — a named per-layer configuration vector (regw, wlv, actlv)
+    probe     — HVP direction vectors (v:<layer>)
+  outputs
+    state     — updated value of the named state tensor
+    metric    — a named scalar metric (loss, ce, acc, bgl)
+    probe_out — HVP results (hv:<layer>)
+
+State-key naming convention (shared with rust/src/model/state.rs):
+    w:<layer>          fp master weight          [HWIO] / [in,out]
+    w:<layer>/b        dense bias                [out]
+    wp:<layer>         positive bit planes       [NB, *shape]
+    wn:<layer>         negative bit planes       [NB, *shape]
+    mask:<layer>       active-plane mask         [NB]
+    scale:<layer>      dynamic-range scale s     []
+    bn:<name>/gamma|beta|mean|var                [C]
+    pact:<site>        PACT clip                 []
+    step:<layer>       LSQ step size             []
+    m:<key>            SGD momentum buffer of a trainable key
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .models import ModelDef
+from .quantize import NB
+
+
+@dataclasses.dataclass(frozen=True)
+class IOItem:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str  # "f32" | "i32"
+    role: str
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        dt = jnp.float32 if self.dtype == "f32" else jnp.int32
+        return jax.ShapeDtypeStruct(self.shape, dt)
+
+    def to_json(self) -> dict:
+        return {
+            "name": self.name,
+            "shape": list(self.shape),
+            "dtype": self.dtype,
+            "role": self.role,
+        }
+
+
+def batch_items(model: ModelDef, batch: int) -> List[IOItem]:
+    h, w = model.input_hw
+    return [
+        IOItem("x", (batch, h, w, model.in_ch), "f32", "x"),
+        IOItem("y", (batch,), "i32", "y"),
+    ]
+
+
+def fp_weight_items(model: ModelDef) -> List[IOItem]:
+    items = []
+    for q in model.qlayers:
+        items.append(IOItem(f"w:{q.name}", q.shape, "f32", "state"))
+    for d in model.dense_bias:
+        out = [q.shape[-1] for q in model.qlayers if q.name == d][0]
+        items.append(IOItem(f"w:{d}/b", (out,), "f32", "state"))
+    return items
+
+
+def bit_weight_items(model: ModelDef) -> List[IOItem]:
+    items = []
+    for q in model.qlayers:
+        items.append(IOItem(f"wp:{q.name}", (NB,) + q.shape, "f32", "state"))
+        items.append(IOItem(f"wn:{q.name}", (NB,) + q.shape, "f32", "state"))
+        items.append(IOItem(f"mask:{q.name}", (NB,), "f32", "state"))
+        items.append(IOItem(f"scale:{q.name}", (), "f32", "state"))
+    for d in model.dense_bias:
+        out = [q.shape[-1] for q in model.qlayers if q.name == d][0]
+        items.append(IOItem(f"w:{d}/b", (out,), "f32", "state"))
+    return items
+
+
+def bn_items(model: ModelDef, stats: bool = True) -> List[IOItem]:
+    items = []
+    for n in model.bn_names:
+        c = _bn_channels(model, n)
+        items.append(IOItem(f"bn:{n}/gamma", (c,), "f32", "state"))
+        items.append(IOItem(f"bn:{n}/beta", (c,), "f32", "state"))
+        if stats:
+            items.append(IOItem(f"bn:{n}/mean", (c,), "f32", "state"))
+            items.append(IOItem(f"bn:{n}/var", (c,), "f32", "state"))
+    return items
+
+
+def _bn_channels(model: ModelDef, name: str) -> int:
+    for q in model.qlayers:
+        if q.name == name and q.kind == "conv":
+            return q.shape[-1]
+    raise KeyError(f"BN {name} has no matching conv layer")
+
+
+def pact_items(model: ModelDef) -> List[IOItem]:
+    return [IOItem(f"pact:{s}", (), "f32", "state") for s in model.act_sites]
+
+
+def lsq_items(model: ModelDef) -> List[IOItem]:
+    return [IOItem(f"step:{q.name}", (), "f32", "state") for q in model.qlayers]
+
+
+def momentum_items(trainables: Sequence[IOItem]) -> List[IOItem]:
+    return [IOItem(f"m:{t.name}", t.shape, t.dtype, "state") for t in trainables]
+
+
+def vec_items(model: ModelDef, which: Sequence[str]) -> List[IOItem]:
+    out = []
+    if "regw" in which:
+        out.append(IOItem("regw", (len(model.qlayers),), "f32", "vec"))
+    if "wlv" in which:
+        out.append(IOItem("wlv", (len(model.qlayers),), "f32", "vec"))
+    if "actlv" in which:
+        out.append(IOItem("actlv", (len(model.act_sites),), "f32", "vec"))
+    return out
+
+
+def hyper_items(names: Sequence[str]) -> List[IOItem]:
+    return [IOItem(n, (), "f32", "hyper") for n in names]
+
+
+def metric_items(names: Sequence[str]) -> List[IOItem]:
+    return [IOItem(n, (), "f32", "metric") for n in names]
+
+
+def as_state_outputs(items: Sequence[IOItem]) -> List[IOItem]:
+    return [IOItem(i.name, i.shape, i.dtype, "state") for i in items]
+
+
+def env_from_flat(spec: Sequence[IOItem], flat: Sequence[jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    assert len(spec) == len(flat), (len(spec), len(flat))
+    return {item.name: arr for item, arr in zip(spec, flat)}
+
+
+def flat_from_env(spec: Sequence[IOItem], env: Dict[str, jnp.ndarray]):
+    return tuple(env[item.name] for item in spec)

@@ -1,0 +1,317 @@
+"""L2 entry points: the jittable training/eval/HVP graphs that get AOT-lowered.
+
+Each builder returns `(spec_in, spec_out, fn)` where `fn` consumes/produces
+the flat tuples described by the specs (statespec.py). Everything that runs
+per step — forward, loss (paper Eq. 5), BGL regularizer (Eq. 4 via the L1
+kernel), backward, SGD-momentum update, [0,2] plane clamp, BN running-stat
+update — lives inside one graph so the Rust hot path is a single PJRT
+execute per step.
+
+Entry points:
+  fp_train      — float pretraining step (weights fp, activations ReLU6-quant
+                  with runtime level vector; levels=0 disables quantization)
+  bsq_train     — the paper's BSQ step: bit-rep STE forward, CE + α·Σ c_l·BGL,
+                  momentum update on planes/BN/scale/(PACT), plane clamp
+  dorefa_train  — DoReFa QAT at a fixed per-layer level vector (finetune and
+                  train-from-scratch baseline)
+  lsq_train     — learned-step-size QAT (LQ-Nets/LSQ baseline stand-in)
+  eval          — loss/accuracy under any weight mode, BN running stats
+  hvp           — Hessian-vector product of the CE loss w.r.t. fp weights
+                  (HAWQ importance ranking; fp activations, eval-mode BN)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import statespec as ss
+from .layers import Forward
+from .models import ModelDef
+from .quantize import (act_quant, bgl_layer, bit_weight, dorefa_weight,
+                       lsq_weight)
+
+MOMENTUM = 0.9  # SGD momentum (paper App. A)
+
+
+# ---------------------------------------------------------------------------
+# forward-pass assembly
+# ---------------------------------------------------------------------------
+
+def _weight_fn(model: ModelDef, mode: str, env: Dict[str, jnp.ndarray]):
+    """Weight provider for layers.Forward under a given weight mode."""
+    lidx = {q.name: i for i, q in enumerate(model.qlayers)}
+
+    def weight(name: str) -> jnp.ndarray:
+        if name.endswith("/b"):          # dense biases stay float
+            return env[f"w:{name}"]
+        if mode == "fp":
+            return env[f"w:{name}"]
+        if mode == "bit":
+            return bit_weight(env[f"wp:{name}"], env[f"wn:{name}"],
+                              env[f"mask:{name}"], env[f"scale:{name}"])
+        if mode == "dorefa":
+            return dorefa_weight(env[f"w:{name}"], env["wlv"][lidx[name]])
+        if mode == "lsq":
+            return lsq_weight(env[f"w:{name}"], env[f"step:{name}"],
+                              env["wlv"][lidx[name]])
+        raise ValueError(mode)
+
+    return weight
+
+
+def _act_fn(model: ModelDef, act_mode: str, env: Dict[str, jnp.ndarray]):
+    """Activation-site provider: ReLU6 bound or trainable PACT clip."""
+    sites = model.act_sites
+
+    def act(site: int, x: jnp.ndarray) -> jnp.ndarray:
+        if act_mode == "ref":
+            # Analysis paths (HVP) differentiate twice; the custom-VJP Pallas
+            # kernel has no JVP rule, and HAWQ measures the fp model anyway.
+            return jnp.clip(x, 0.0, 6.0)
+        lv = env["actlv"][site]
+        if act_mode == "pact":
+            # Keep the clip strictly positive; gradient flows where α > min.
+            bound = jnp.maximum(env[f"pact:{sites[site]}"], 0.05)
+        else:
+            bound = jnp.asarray(6.0, dtype=jnp.float32)
+        return act_quant(x, bound, lv)
+
+    return act
+
+
+def _bn_view(model: ModelDef, env: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    view = {}
+    for n in model.bn_names:
+        for p in ("gamma", "beta", "mean", "var"):
+            view[f"{n}/{p}"] = env[f"bn:{n}/{p}"]
+    return view
+
+
+def _forward(model: ModelDef, mode: str, act_mode: str,
+             env: Dict[str, jnp.ndarray], train: bool):
+    fwd = Forward(
+        weight=_weight_fn(model, mode, env),
+        bn_params=_bn_view(model, env),
+        act_site=_act_fn(model, act_mode, env),
+        train=train,
+    )
+    logits = model.forward(fwd, env["x"])
+    return logits, fwd.new_stats
+
+
+def _ce_acc(logits: jnp.ndarray, y: jnp.ndarray):
+    logp = jax.nn.log_softmax(logits)
+    ce = -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return ce, acc
+
+
+def _bgl_total(model: ModelDef, env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Σ_l regw_l · B_GL(W^l): the reweighed regularizer of paper Eq. 5.
+
+    regw_l = #Para_l · #Bit_l / Σ#Para is recomputed by the Rust coordinator
+    after every precision adjustment and fed in as the `regw` vector.
+    """
+    total = jnp.asarray(0.0, dtype=jnp.float32)
+    for i, q in enumerate(model.qlayers):
+        total += env["regw"][i] * bgl_layer(
+            env[f"wp:{q.name}"], env[f"wn:{q.name}"], env[f"mask:{q.name}"])
+    return total
+
+
+# ---------------------------------------------------------------------------
+# SGD-momentum update (shared by all train steps)
+# ---------------------------------------------------------------------------
+
+def _sgd_update(env, grads: Dict[str, jnp.ndarray], lr, wd) -> Dict[str, jnp.ndarray]:
+    """PyTorch-convention SGD: m ← μm + (g + wd·w); w ← w − lr·m.
+
+    Weight decay applies to float parameters (weights, biases, BN affine,
+    PACT clips, LSQ steps) but *not* to bit planes — their shrinkage is the
+    BGL regularizer's job (paper Eq. 5) — and not to the dynamic-range
+    scales, which re-quantization manages.
+    """
+    out = {}
+    for k, g in grads.items():
+        decay = 0.0 if k.startswith(("wp:", "wn:", "scale:")) else wd
+        m = MOMENTUM * env[f"m:{k}"] + g + decay * env[k]
+        v = env[k] - lr * m
+        if k.startswith(("wp:", "wn:")):
+            # Paper §3.1: planes live in [0, 2] so re-quantization can grow
+            # or shrink precision; trim after every step.
+            v = jnp.clip(v, 0.0, 2.0)
+        out[k] = v
+        out[f"m:{k}"] = m
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry-point builders
+# ---------------------------------------------------------------------------
+
+def _build_train(model: ModelDef, batch: int, mode: str, act_mode: str):
+    """Shared builder for fp/bsq/dorefa/lsq train steps."""
+    if mode == "fp":
+        weight_in = ss.fp_weight_items(model)
+        vecs = ss.vec_items(model, ["actlv"])
+        hypers = ss.hyper_items(["lr", "wd"])
+    elif mode == "bit":
+        weight_in = ss.bit_weight_items(model)
+        vecs = ss.vec_items(model, ["regw", "actlv"])
+        hypers = ss.hyper_items(["lr", "wd", "alpha"])
+    elif mode == "dorefa":
+        weight_in = ss.fp_weight_items(model)
+        vecs = ss.vec_items(model, ["wlv", "actlv"])
+        hypers = ss.hyper_items(["lr", "wd"])
+    elif mode == "lsq":
+        weight_in = ss.fp_weight_items(model) + ss.lsq_items(model)
+        vecs = ss.vec_items(model, ["wlv", "actlv"])
+        hypers = ss.hyper_items(["lr", "wd"])
+    else:
+        raise ValueError(mode)
+
+    bn_in = ss.bn_items(model)
+    pact_in = ss.pact_items(model) if act_mode == "pact" else []
+
+    # Trainables: everything differentiable. Masks and (for non-bit modes)
+    # level vectors are configuration, not parameters.
+    trainables = [
+        i for i in weight_in + bn_in + pact_in
+        if not i.name.startswith("mask:")
+        and "/mean" not in i.name and "/var" not in i.name
+    ]
+    momenta = ss.momentum_items(trainables)
+
+    spec_in = (ss.batch_items(model, batch) + weight_in + bn_in + pact_in
+               + momenta + vecs + hypers)
+
+    bn_stat_out = [i for i in bn_in if "/mean" in i.name or "/var" in i.name]
+    metrics = ["loss", "ce", "acc"] + (["bgl"] if mode == "bit" else [])
+    spec_out = (ss.as_state_outputs(trainables) + ss.as_state_outputs(momenta)
+                + ss.as_state_outputs(bn_stat_out) + ss.metric_items(metrics))
+
+    tkeys = [t.name for t in trainables]
+
+    def fn(*flat):
+        env = ss.env_from_flat(spec_in, flat)
+        params = {k: env[k] for k in tkeys}
+
+        def loss_fn(params):
+            e = dict(env)
+            e.update(params)
+            logits, new_stats = _forward(model, mode, act_mode, e, train=True)
+            ce, acc = _ce_acc(logits, e["y"])
+            if mode == "bit":
+                bgl = _bgl_total(model, e)
+                loss = ce + e["alpha"] * bgl
+            else:
+                bgl = jnp.asarray(0.0, dtype=jnp.float32)
+                loss = ce
+            return loss, (ce, acc, bgl, new_stats)
+
+        (loss, (ce, acc, bgl, new_stats)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+
+        out_env = dict(env)
+        out_env.update(_sgd_update(env, grads, env["lr"], env["wd"]))
+        for k, v in new_stats.items():
+            out_env[f"bn:{k}"] = v
+        out_env.update({"loss": loss, "ce": ce, "acc": acc, "bgl": bgl})
+        return ss.flat_from_env(spec_out, out_env)
+
+    return spec_in, spec_out, fn
+
+
+def _build_eval(model: ModelDef, batch: int, mode: str, act_mode: str):
+    if mode == "fp":
+        weight_in = ss.fp_weight_items(model)
+        vecs = ss.vec_items(model, ["actlv"])
+    elif mode == "bit":
+        weight_in = ss.bit_weight_items(model)
+        vecs = ss.vec_items(model, ["actlv"])
+    elif mode == "dorefa":
+        weight_in = ss.fp_weight_items(model)
+        vecs = ss.vec_items(model, ["wlv", "actlv"])
+    elif mode == "lsq":
+        weight_in = ss.fp_weight_items(model) + ss.lsq_items(model)
+        vecs = ss.vec_items(model, ["wlv", "actlv"])
+    else:
+        raise ValueError(mode)
+
+    bn_in = ss.bn_items(model)
+    pact_in = ss.pact_items(model) if act_mode == "pact" else []
+    spec_in = ss.batch_items(model, batch) + weight_in + bn_in + pact_in + vecs
+    spec_out = ss.metric_items(["loss", "acc"])
+
+    def fn(*flat):
+        env = ss.env_from_flat(spec_in, flat)
+        logits, _ = _forward(model, mode, act_mode, env, train=False)
+        ce, acc = _ce_acc(logits, env["y"])
+        return ss.flat_from_env(spec_out, {"loss": ce, "acc": acc})
+
+    return spec_in, spec_out, fn
+
+
+def _build_hvp(model: ModelDef, batch: int):
+    """Hessian-vector product for HAWQ's importance score S_i = λ_i / n_i.
+
+    Differentiates the CE loss twice w.r.t. the fp conv/dense weights at
+    eval-mode BN and full-precision activations, matching HAWQ's analysis of
+    the pretrained float model. The Rust side runs block power iteration by
+    zeroing v outside the layer under analysis.
+    """
+    weight_in = ss.fp_weight_items(model)
+    bn_in = ss.bn_items(model)
+    probes = [ss.IOItem(f"v:{q.name}", q.shape, "f32", "probe")
+              for q in model.qlayers]
+    # NOTE: no actlv input — the "ref" activation path ignores it, and XLA
+    # prunes unused entry parameters, which would desync the manifest.
+    spec_in = ss.batch_items(model, batch) + weight_in + bn_in + probes
+    spec_out = [ss.IOItem(f"hv:{q.name}", q.shape, "f32", "probe_out")
+                for q in model.qlayers] + ss.metric_items(["loss"])
+
+    wkeys = [f"w:{q.name}" for q in model.qlayers]
+
+    def fn(*flat):
+        env = ss.env_from_flat(spec_in, flat)
+
+        def loss_of(wdict):
+            e = dict(env)
+            e.update(wdict)
+            logits, _ = _forward(model, "fp", "ref", e, train=False)
+            ce, _ = _ce_acc(logits, e["y"])
+            return ce
+
+        w0 = {k: env[k] for k in wkeys}
+        v = {k: env[f"v:{q}"] for k, q in zip(wkeys, [q.name for q in model.qlayers])}
+        # jvp of grad: primal out = grad (a dict, unused); tangent out = H·v.
+        _, hv = jax.jvp(jax.grad(loss_of), (w0,), (v,))
+        out = {f"hv:{q.name}": hv[f"w:{q.name}"] for q in model.qlayers}
+        out["loss"] = loss_of(w0)
+        return ss.flat_from_env(spec_out, out)
+
+    return spec_in, spec_out, fn
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def build_entry(model: ModelDef, kind: str, batch: int):
+    """kind: '<fn>_<actmode>' e.g. 'bsq_train_relu6', or 'hvp'."""
+    if kind == "hvp":
+        return _build_hvp(model, batch)
+    base, act_mode = kind.rsplit("_", 1)
+    assert act_mode in ("relu6", "pact"), kind
+    mode_map = {
+        "fp_train": ("fp", _build_train), "fp_eval": ("fp", _build_eval),
+        "bsq_train": ("bit", _build_train), "q_eval": ("bit", _build_eval),
+        "dorefa_train": ("dorefa", _build_train),
+        "dorefa_eval": ("dorefa", _build_eval),
+        "lsq_train": ("lsq", _build_train), "lsq_eval": ("lsq", _build_eval),
+    }
+    mode, builder = mode_map[base]
+    return builder(model, batch, mode, act_mode)

@@ -1,0 +1,80 @@
+"""AOT manifest/spec integrity: what the Rust coordinator relies on."""
+
+import json
+import os
+
+import pytest
+
+from compile.model import REGISTRY
+from compile.models import get_model
+from compile.train import build_entry
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestSpecs:
+    @pytest.mark.parametrize("model_name", list(REGISTRY))
+    def test_unique_names_per_entry(self, model_name):
+        batch, entries = REGISTRY[model_name]
+        model = get_model(model_name)
+        for entry in entries:
+            spec_in, spec_out, _ = build_entry(model, entry, batch)
+            in_names = [i.name for i in spec_in]
+            out_names = [o.name for o in spec_out]
+            assert len(in_names) == len(set(in_names)), entry
+            assert len(out_names) == len(set(out_names)), entry
+
+    @pytest.mark.parametrize("model_name", list(REGISTRY))
+    def test_every_state_output_has_matching_input(self, model_name):
+        """The Rust step loop writes outputs back onto inputs by name."""
+        batch, entries = REGISTRY[model_name]
+        model = get_model(model_name)
+        for entry in entries:
+            spec_in, spec_out, _ = build_entry(model, entry, batch)
+            in_shapes = {i.name: i.shape for i in spec_in}
+            for o in spec_out:
+                if o.role == "state":
+                    assert o.name in in_shapes, (entry, o.name)
+                    assert in_shapes[o.name] == o.shape, (entry, o.name)
+
+    def test_train_entries_update_all_trainables(self):
+        model = get_model("resnet20")
+        spec_in, spec_out, _ = build_entry(model, "bsq_train_relu6", 4)
+        outs = {o.name for o in spec_out}
+        for q in model.qlayers:
+            assert f"wp:{q.name}" in outs and f"wn:{q.name}" in outs
+            assert f"m:wp:{q.name}" in outs
+            # masks and scales are coordinator-owned in the relu6 graph
+            assert f"mask:{q.name}" not in outs
+        for n in model.bn_names:
+            assert f"bn:{n}/gamma" in outs and f"bn:{n}/mean" in outs
+
+    def test_roles_are_known(self):
+        model = get_model("tinynet")
+        for entry in REGISTRY["tinynet"][1]:
+            spec_in, spec_out, _ = build_entry(model, entry, 4)
+            assert {i.role for i in spec_in} <= {"x", "y", "state", "hyper",
+                                                 "vec", "probe"}
+            assert {o.role for o in spec_out} <= {"state", "metric", "probe_out"}
+
+
+@pytest.mark.skipif(not os.path.isdir(ART), reason="run `make artifacts` first")
+class TestEmittedArtifacts:
+    @pytest.mark.parametrize("model_name", list(REGISTRY))
+    def test_manifest_matches_registry(self, model_name):
+        mpath = os.path.join(ART, model_name, "manifest.json")
+        if not os.path.exists(mpath):
+            pytest.skip("model not lowered")
+        with open(mpath) as f:
+            man = json.load(f)
+        batch, entries = REGISTRY[model_name]
+        assert set(man["artifacts"]) == set(entries)
+        model = get_model(model_name)
+        assert [q["name"] for q in man["qlayers"]] == [q.name for q in model.qlayers]
+        assert man["nb"] == 9
+        for entry, art in man["artifacts"].items():
+            hlo = os.path.join(ART, model_name, art["file"])
+            assert os.path.getsize(hlo) > 1000, entry
+            with open(hlo) as f:
+                head = f.read(4000)
+            assert head.startswith("HloModule"), entry

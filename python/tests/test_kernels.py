@@ -1,0 +1,147 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including block-boundary and padded-tail cases) and
+value ranges; both forward values and custom-VJP gradients must match the
+oracles (exactly for the linear/elementwise kernels, to fp32 tolerance for
+the reduction whose order differs).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bgl_sumsq, fakequant, plane_sum, ref
+from compile.kernels.bitrep import BLOCK_E as BITREP_BLOCK
+from compile.kernels.actquant import BLOCK_E as ACT_BLOCK
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rand(rng, *shape, lo=0.0, hi=2.0):
+    return jnp.asarray(rng.uniform(lo, hi, shape).astype(np.float32))
+
+
+# interesting element counts: tiny, just below/at/above the block size
+ECOUNTS = st.sampled_from(
+    [1, 7, 100, BITREP_BLOCK - 1, BITREP_BLOCK, BITREP_BLOCK + 1, 2 * BITREP_BLOCK + 5]
+)
+NBITS = st.integers(min_value=1, max_value=9)
+
+
+class TestPlaneSum:
+    @settings(max_examples=20, deadline=None)
+    @given(e=ECOUNTS, nb=NBITS, seed=st.integers(0, 2**31 - 1), nact=st.integers(0, 9))
+    def test_matches_ref(self, e, nb, seed, nact):
+        rng = np.random.RandomState(seed)
+        wp, wn = rand(rng, nb, e), rand(rng, nb, e)
+        mask = jnp.asarray([1.0] * min(nact, nb) + [0.0] * max(nb - nact, 0))[:nb]
+        pow2 = mask * 2.0 ** jnp.arange(nb)
+        got = plane_sum(wp, wn, pow2)
+        want = ref.plane_sum_ref(wp, wn, pow2)
+        np.testing.assert_allclose(got, want, rtol=0, atol=0)
+
+    @settings(max_examples=10, deadline=None)
+    @given(e=ECOUNTS, seed=st.integers(0, 2**31 - 1))
+    def test_vjp_is_paper_eq3(self, e, seed):
+        """∂⟨g, v⟩/∂wp_b = g·2^b·mask_b — the paper's STE backward."""
+        rng = np.random.RandomState(seed)
+        nb = 9
+        wp, wn = rand(rng, nb, e), rand(rng, nb, e)
+        mask = jnp.asarray([1.0] * 8 + [0.0])
+        pow2 = mask * 2.0 ** jnp.arange(nb)
+        g = jnp.asarray(rng.randn(e).astype(np.float32))
+        gp, gn = jax.grad(lambda a, b: jnp.vdot(plane_sum(a, b, pow2), g),
+                          argnums=(0, 1))(wp, wn)
+        want = g[None, :] * pow2[:, None]
+        np.testing.assert_allclose(gp, want, rtol=0, atol=0)
+        np.testing.assert_allclose(gn, -want, rtol=0, atol=0)
+
+    def test_all_masked_is_zero(self):
+        rng = np.random.RandomState(0)
+        wp, wn = rand(rng, 9, 100), rand(rng, 9, 100)
+        out = plane_sum(wp, wn, jnp.zeros(9))
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+class TestBglSumsq:
+    @settings(max_examples=20, deadline=None)
+    @given(e=ECOUNTS, nb=NBITS, seed=st.integers(0, 2**31 - 1))
+    def test_matches_ref(self, e, nb, seed):
+        rng = np.random.RandomState(seed)
+        wp, wn = rand(rng, nb, e), rand(rng, nb, e)
+        got = bgl_sumsq(wp, wn)
+        want = ref.bgl_sumsq_ref(wp, wn)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(e=ECOUNTS, seed=st.integers(0, 2**31 - 1))
+    def test_grad_matches_ref(self, e, seed):
+        rng = np.random.RandomState(seed)
+        wp, wn = rand(rng, 9, e), rand(rng, 9, e)
+        co = jnp.asarray(rng.randn(9).astype(np.float32))
+        gp, gn = jax.grad(lambda a, b: jnp.vdot(bgl_sumsq(a, b), co),
+                          argnums=(0, 1))(wp, wn)
+        np.testing.assert_allclose(gp, 2.0 * wp * co[:, None], rtol=0)
+        np.testing.assert_allclose(gn, 2.0 * wn * co[:, None], rtol=0)
+
+    def test_padded_tail_contributes_zero(self):
+        """The iota mask must exclude block-padding elements exactly."""
+        rng = np.random.RandomState(1)
+        e = BITREP_BLOCK + 3
+        wp, wn = rand(rng, 9, e), rand(rng, 9, e)
+        got = bgl_sumsq(wp, wn)
+        want = ref.bgl_sumsq_ref(wp, wn)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_zero_planes(self):
+        z = jnp.zeros((9, 50))
+        np.testing.assert_array_equal(np.asarray(bgl_sumsq(z, z)), 0.0)
+
+
+class TestFakequant:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        e=st.sampled_from([1, 5, ACT_BLOCK - 1, ACT_BLOCK, ACT_BLOCK + 3]),
+        bits=st.integers(1, 8),
+        seed=st.integers(0, 2**31 - 1),
+        bound=st.sampled_from([1.0, 6.0, 3.7]),
+    )
+    def test_matches_ref(self, e, bits, seed, bound):
+        rng = np.random.RandomState(seed)
+        x = jnp.asarray((rng.randn(e) * 4).astype(np.float32))
+        b, lv = jnp.asarray(bound), jnp.asarray(float(2**bits - 1))
+        got = fakequant(x, b, lv)
+        want = ref.fakequant_ref(x, b, lv)
+        np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_grad_matches_ref(self, seed):
+        rng = np.random.RandomState(seed)
+        x = jnp.asarray((rng.randn(300) * 4).astype(np.float32))
+        b, lv = jnp.asarray(6.0), jnp.asarray(15.0)
+        g = jnp.asarray(rng.randn(300).astype(np.float32))
+        gx, gb = jax.grad(lambda a, bb: jnp.vdot(fakequant(a, bb, lv), g),
+                          argnums=(0, 1))(x, b)
+        gxr, gbr = ref.fakequant_bwd_ref(x, b, g)
+        np.testing.assert_allclose(gx, gxr, rtol=0)
+        # gb is a padded-block reduction: allow reduction-order noise
+        np.testing.assert_allclose(gb, gbr, rtol=1e-4, atol=1e-6)
+
+    def test_multi_dim_shapes(self):
+        rng = np.random.RandomState(2)
+        x = jnp.asarray(rng.randn(2, 9, 5, 3).astype(np.float32))
+        got = fakequant(x, jnp.asarray(6.0), jnp.asarray(15.0))
+        assert got.shape == x.shape
+        want = ref.fakequant_ref(x, jnp.asarray(6.0), jnp.asarray(15.0))
+        np.testing.assert_allclose(got, want)
+
+    def test_quantized_values_are_grid_points(self):
+        rng = np.random.RandomState(3)
+        x = jnp.asarray((rng.rand(1000) * 6).astype(np.float32))
+        lv = 7.0
+        q = np.asarray(fakequant(x, jnp.asarray(6.0), jnp.asarray(lv)))
+        codes = q / 6.0 * lv
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)

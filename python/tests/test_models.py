@@ -1,0 +1,111 @@
+"""Model-zoo structural checks: shapes, metadata consistency, forward pass."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.layers import Forward, pad_shortcut
+from compile.models import get_model
+
+MODELS = ["tinynet", "resnet20", "resnet50_sim", "inception_sim"]
+
+
+def _fp_forward(model, batch=2, seed=0):
+    """Run the model float, with random params, identity act clip."""
+    rng = np.random.RandomState(seed)
+    weights = {}
+    for q in model.qlayers:
+        fan_in = int(np.prod(q.shape[:-1]))
+        weights[q.name] = jnp.asarray(
+            (rng.randn(*q.shape) * np.sqrt(2.0 / fan_in)).astype(np.float32))
+    for d in model.dense_bias:
+        out = [q.shape[-1] for q in model.qlayers if q.name == d][0]
+        weights[f"{d}/b"] = jnp.zeros((out,))
+    bn = {}
+    for n in model.bn_names:
+        c = [q.shape[-1] for q in model.qlayers if q.name == n][0]
+        bn[f"{n}/gamma"] = jnp.ones((c,))
+        bn[f"{n}/beta"] = jnp.zeros((c,))
+        bn[f"{n}/mean"] = jnp.zeros((c,))
+        bn[f"{n}/var"] = jnp.ones((c,))
+    h, w = model.input_hw
+    x = jnp.asarray(rng.randn(batch, h, w, model.in_ch).astype(np.float32))
+    fwd = Forward(weight=lambda nm: weights[nm], bn_params=bn,
+                  act_site=lambda s, a: jnp.clip(a, 0.0, 6.0), train=True)
+    return model.forward(fwd, x), fwd
+
+
+class TestModelZoo:
+    @pytest.mark.parametrize("name", MODELS)
+    def test_forward_shape_and_finite(self, name):
+        model = get_model(name)
+        logits, _ = _fp_forward(model)
+        assert logits.shape == (2, model.num_classes)
+        assert np.isfinite(np.asarray(logits)).all()
+
+    @pytest.mark.parametrize("name", MODELS)
+    def test_act_site_count_matches_metadata(self, name):
+        model = get_model(name)
+        _, fwd = _fp_forward(model)
+        assert fwd._site == len(model.act_sites)
+
+    @pytest.mark.parametrize("name", MODELS)
+    def test_bn_updates_collected_for_every_bn(self, name):
+        model = get_model(name)
+        _, fwd = _fp_forward(model)
+        got = {k.rsplit("/", 1)[0] for k in fwd.new_stats}
+        assert got == set(model.bn_names)
+
+    @pytest.mark.parametrize("name", MODELS)
+    def test_qlayer_names_unique(self, name):
+        model = get_model(name)
+        names = [q.name for q in model.qlayers]
+        assert len(names) == len(set(names))
+
+    def test_resnet20_is_the_papers_20_layers(self):
+        model = get_model("resnet20")
+        assert len(model.qlayers) == 20  # conv1 + 18 block convs + fc
+        assert model.qlayers[0].shape == (3, 3, 3, 16)
+        assert model.qlayers[-1].kind == "dense"
+        # ~0.27M parameters, matching He et al. (2016) ResNet-20
+        assert 0.25e6 < model.total_params < 0.30e6
+
+    def test_resnet50_sim_has_bottlenecks_and_projections(self):
+        model = get_model("resnet50_sim")
+        names = [q.name for q in model.qlayers]
+        assert "s0b0proj" in names and "s2b0proj" in names
+        k1 = [q for q in model.qlayers if q.name == "s1b0c1"][0]
+        assert k1.shape[:2] == (1, 1)  # bottleneck reduce is 1×1
+
+    def test_inception_sim_branch_structure(self):
+        model = get_model("inception_sim")
+        names = [q.name for q in model.qlayers]
+        for br in ("_b1", "_b3r", "_b3", "_d3r", "_d3a", "_d3b", "_pp"):
+            assert f"mix0{br}" in names
+
+    def test_pad_shortcut(self):
+        x = jnp.ones((1, 8, 8, 4))
+        y = pad_shortcut(x, 8, 2)
+        assert y.shape == (1, 4, 4, 8)
+        np.testing.assert_array_equal(np.asarray(y[..., 4:]), 0.0)
+        np.testing.assert_array_equal(np.asarray(y[..., :4]), 1.0)
+
+    def test_eval_mode_uses_running_stats(self):
+        model = get_model("tinynet")
+        rng = np.random.RandomState(0)
+        _, fwd = _fp_forward(model)
+        assert fwd.new_stats  # train mode collected stats
+        # eval mode must not touch stats
+        weights = {q.name: jnp.zeros(q.shape) for q in model.qlayers}
+        weights["fc/b"] = jnp.zeros((10,))
+        bn = {}
+        for n in model.bn_names:
+            c = [q.shape[-1] for q in model.qlayers if q.name == n][0]
+            bn.update({f"{n}/gamma": jnp.ones((c,)), f"{n}/beta": jnp.zeros((c,)),
+                       f"{n}/mean": jnp.zeros((c,)), f"{n}/var": jnp.ones((c,))})
+        x = jnp.asarray(rng.randn(1, 16, 16, 3).astype(np.float32))
+        fwd2 = Forward(weight=lambda nm: weights[nm], bn_params=bn,
+                       act_site=lambda s, a: a, train=False)
+        model.forward(fwd2, x)
+        assert not fwd2.new_stats

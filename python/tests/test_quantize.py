@@ -1,0 +1,149 @@
+"""L2 quantizer semantics: bit_weight (paper Eq. 2/3), DoReFa, LSQ, act_quant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.quantize import (NB, act_quant, bgl_layer, bit_weight,
+                              dorefa_weight, lsq_weight, pow2_vec, ste_round)
+
+
+def bits_mask(n):
+    return jnp.asarray([1.0] * n + [0.0] * (NB - n))
+
+
+class TestBitWeight:
+    @settings(max_examples=15, deadline=None)
+    @given(n=st.integers(0, NB), seed=st.integers(0, 2**31 - 1))
+    def test_matches_eq2_ref(self, n, seed):
+        rng = np.random.RandomState(seed)
+        shape = (3, 3, 2, 4)
+        wp = jnp.asarray(rng.uniform(0, 2, (NB,) + shape).astype(np.float32))
+        wn = jnp.asarray(rng.uniform(0, 2, (NB,) + shape).astype(np.float32))
+        mask, scale = bits_mask(n), jnp.asarray(0.37, dtype=jnp.float32)
+        got = bit_weight(wp, wn, mask, scale)
+        want = ref.bitrep_quantize_ref(wp, wn, mask, scale)
+        np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-7)
+        assert got.shape == shape
+
+    def test_exact_binary_roundtrip(self):
+        """Exact binary planes reconstruct the exact fixed-point value."""
+        n = 4
+        # code 0b1011 = 11 → w = s * 11 / 15
+        wp = jnp.zeros((NB, 1))
+        wp = wp.at[0, 0].set(1.0).at[1, 0].set(1.0).at[3, 0].set(1.0)
+        wn = jnp.zeros((NB, 1))
+        w = bit_weight(wp, wn, bits_mask(n), jnp.asarray(1.5))
+        np.testing.assert_allclose(np.asarray(w), 1.5 * 11 / 15, rtol=1e-6)
+
+    def test_zero_bit_layer_is_zero_and_finite(self):
+        rng = np.random.RandomState(0)
+        wp = jnp.asarray(rng.uniform(0, 2, (NB, 8)).astype(np.float32))
+        wn = jnp.asarray(rng.uniform(0, 2, (NB, 8)).astype(np.float32))
+        w = bit_weight(wp, wn, bits_mask(0), jnp.asarray(1.0))
+        assert np.isfinite(np.asarray(w)).all()
+        np.testing.assert_array_equal(np.asarray(w), 0.0)
+
+    def test_ste_gradient_scaling(self):
+        """∂Σw/∂wp_b = s·2^b/(2^n−1): Eq. 3's backward through the round."""
+        n, s = 3, 2.0
+        rng = np.random.RandomState(1)
+        wp = jnp.asarray(rng.uniform(0, 2, (NB, 5)).astype(np.float32))
+        wn = jnp.zeros((NB, 5))
+        g = jax.grad(lambda a: jnp.sum(bit_weight(a, wn, bits_mask(n),
+                                                  jnp.asarray(s))))(wp)
+        for b in range(NB):
+            want = s * (2.0**b) / (2.0**n - 1) if b < n else 0.0
+            np.testing.assert_allclose(np.asarray(g[b]), want, rtol=1e-6)
+
+    def test_negative_weights_via_wn(self):
+        wp = jnp.zeros((NB, 1))
+        wn = jnp.zeros((NB, 1)).at[2, 0].set(1.0)  # code −4
+        w = bit_weight(wp, wn, bits_mask(3), jnp.asarray(7.0))
+        np.testing.assert_allclose(np.asarray(w), -4.0, rtol=1e-6)
+
+
+class TestBglLayer:
+    def test_value(self):
+        rng = np.random.RandomState(0)
+        shape = (3, 3, 4, 4)
+        wp = jnp.asarray(rng.uniform(0, 2, (NB,) + shape).astype(np.float32))
+        wn = jnp.asarray(rng.uniform(0, 2, (NB,) + shape).astype(np.float32))
+        got = bgl_layer(wp, wn, bits_mask(8))
+        want = ref.bgl_ref(wp.reshape(NB, -1), wn.reshape(NB, -1), bits_mask(8))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_gradient_is_normalized_direction(self):
+        """d BGL/d wp_b = wp_b/‖[wp_b;wn_b]‖ — the group-Lasso shrinkage."""
+        rng = np.random.RandomState(1)
+        wp = jnp.asarray(rng.uniform(0.5, 2, (NB, 20)).astype(np.float32))
+        wn = jnp.asarray(rng.uniform(0.5, 2, (NB, 20)).astype(np.float32))
+        mask = bits_mask(8)
+        g = jax.grad(lambda a: bgl_layer(a, wn, mask))(wp)
+        norms = np.sqrt(np.asarray(ref.bgl_sumsq_ref(wp, wn)))
+        for b in range(8):
+            np.testing.assert_allclose(np.asarray(g[b]),
+                                       np.asarray(wp[b]) / norms[b], rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(g[8]), 0.0)
+
+    def test_zero_layer_gradient_is_finite(self):
+        z = jnp.zeros((NB, 10))
+        g = jax.grad(lambda a: bgl_layer(a, z, bits_mask(8)))(z)
+        assert np.isfinite(np.asarray(g)).all()
+
+
+class TestDorefa:
+    @settings(max_examples=15, deadline=None)
+    @given(bits=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+    def test_levels_and_range(self, bits, seed):
+        rng = np.random.RandomState(seed)
+        w = jnp.asarray(rng.randn(64).astype(np.float32))
+        lv = float(2**bits - 1)
+        wq = np.asarray(dorefa_weight(w, jnp.asarray(lv)))
+        s = np.abs(np.asarray(w)).max()
+        codes = np.abs(wq) / s * lv
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-3)
+        assert np.abs(wq).max() <= s + 1e-6
+
+    def test_zero_levels_collapses_to_zero(self):
+        w = jnp.asarray(np.random.RandomState(0).randn(16).astype(np.float32))
+        np.testing.assert_array_equal(np.asarray(dorefa_weight(w, jnp.asarray(0.0))), 0.0)
+
+    def test_ste_passes_gradient(self):
+        w = jnp.asarray(np.linspace(-1, 1, 11).astype(np.float32))
+        g = jax.grad(lambda a: jnp.sum(dorefa_weight(a, jnp.asarray(15.0))))(w)
+        assert np.isfinite(np.asarray(g)).all()
+        assert np.abs(np.asarray(g)).sum() > 0
+
+
+class TestLsqAndAct:
+    def test_lsq_quantizes_to_step_grid(self):
+        w = jnp.asarray(np.random.RandomState(0).randn(32).astype(np.float32))
+        step = jnp.asarray(0.1)
+        wq = np.asarray(lsq_weight(w, step, jnp.asarray(7.0)))
+        codes = wq / 0.1
+        np.testing.assert_allclose(codes, np.round(codes), atol=1e-4)
+        assert np.abs(codes).max() <= 7
+
+    def test_lsq_step_is_trainable(self):
+        w = jnp.asarray(np.random.RandomState(1).randn(32).astype(np.float32))
+        g = jax.grad(lambda s: jnp.sum(lsq_weight(w, s, jnp.asarray(7.0)) ** 2))(
+            jnp.asarray(0.1))
+        assert np.isfinite(float(g)) and abs(float(g)) > 0
+
+    def test_act_quant_fp_mode_is_clip(self):
+        x = jnp.asarray(np.linspace(-2, 9, 23).astype(np.float32))
+        out = act_quant(x, jnp.asarray(6.0), jnp.asarray(0.0))
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.clip(np.asarray(x), 0, 6), rtol=1e-6)
+
+    def test_ste_round_identity_grad(self):
+        x = jnp.asarray([0.2, 1.7, -0.4], dtype=jnp.float32)
+        g = jax.grad(lambda a: jnp.sum(ste_round(a)))(x)
+        np.testing.assert_array_equal(np.asarray(g), 1.0)
+
+    def test_pow2_vec(self):
+        m = jnp.asarray([1.0, 1.0, 0.0, 1.0])
+        np.testing.assert_array_equal(np.asarray(pow2_vec(m)), [1, 2, 0, 8])

@@ -1,0 +1,38 @@
+//! Data-pipeline throughput: corpus synthesis, augmented batch assembly,
+//! eval batch assembly. The loader must never be the bottleneck against a
+//! ~1.3 s/step device (resnet20 on this CPU) — §Perf records the margin.
+
+use bsq::data::{AugmentCfg, Corpus, CorpusSpec, Loader};
+use bsq::util::bench::{black_box, Bench};
+
+fn main() {
+    let bench = Bench::default();
+    println!("== data_pipeline ==");
+
+    let s = bench.run_elems("corpus/synthetic-cifar-1k", 1024, || {
+        black_box(Corpus::generate(CorpusSpec::cifar().with_sizes(1024, 64)));
+    });
+    println!("{}", s.report());
+
+    let corpus = Corpus::generate(CorpusSpec::cifar().with_sizes(4096, 512));
+    for (name, cfg) in
+        [("augmented", AugmentCfg::default()), ("eval", AugmentCfg::off())]
+    {
+        let mut loader = Loader::new(&corpus.train, 32, cfg, 7);
+        let s = bench.run_elems(&format!("loader/batch32-{name}"), 32, || {
+            black_box(loader.next_batch());
+        });
+        println!(
+            "{}  ({:.1} imgs/ms)",
+            s.report(),
+            32.0 / s.mean.as_secs_f64() / 1e3
+        );
+    }
+
+    // epoch turnover (shuffle) cost
+    let mut loader = Loader::new(&corpus.train, 32, AugmentCfg::default(), 7);
+    let s = bench.run("loader/next_epoch-4096", || {
+        loader.next_epoch();
+    });
+    println!("{}", s.report());
+}

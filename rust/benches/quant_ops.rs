@@ -1,0 +1,62 @@
+//! Micro-benchmarks of the coordinator-side quantization hot paths:
+//! bit-plane packing, reconstruction, integer re-quantization codes and the
+//! full precision adjustment — the work that runs between training epochs.
+//!
+//! These dominate the re-quantization pause (paper §3.3), so their
+//! throughput bounds how often re-quantization can run. §Perf in
+//! EXPERIMENTS.md tracks before/after numbers.
+
+use bsq::quant::{from_bitplanes, requantize, to_bitplanes};
+use bsq::quant::bitplane::integer_codes;
+use bsq::tensor::Tensor;
+use bsq::util::bench::{black_box, Bench};
+use bsq::util::Pcg32;
+
+fn main() {
+    let bench = Bench::default();
+    let mut rng = Pcg32::seeded(0);
+
+    println!("== quant_ops ==");
+    // resnet20's biggest layer is 36 864 params; resnet50_sim's ~131 072.
+    for &elems in &[4_096usize, 36_864, 131_072] {
+        let w = Tensor::randn(&[elems], 0.5, &mut rng);
+
+        let s = bench.run_elems(&format!("to_bitplanes/{elems}"), elems as u64, || {
+            black_box(to_bitplanes(&w, 8).unwrap());
+        });
+        println!("{}", s.report());
+
+        let rep = to_bitplanes(&w, 8).unwrap();
+        let s = bench.run_elems(&format!("from_bitplanes/{elems}"), elems as u64, || {
+            black_box(from_bitplanes(&rep));
+        });
+        println!("{}", s.report());
+
+        let s = bench.run_elems(&format!("integer_codes/{elems}"), elems as u64, || {
+            black_box(integer_codes(&rep));
+        });
+        println!("{}", s.report());
+
+        let s = bench.run_elems(&format!("requantize/{elems}"), elems as u64, || {
+            let mut r = rep.clone();
+            black_box(requantize(&mut r));
+        });
+        println!("{}", s.report());
+    }
+
+    // whole-model requantization pause (resnet20 shape mix)
+    let shapes: Vec<usize> =
+        std::iter::once(432).chain((0..18).map(|i| if i < 6 { 2_304 } else if i < 12 { 9_216 } else { 36_864 })).chain(std::iter::once(640)).collect();
+    let reps: Vec<_> = shapes
+        .iter()
+        .map(|&e| to_bitplanes(&Tensor::randn(&[e], 0.5, &mut rng), 8).unwrap())
+        .collect();
+    let total: usize = shapes.iter().sum();
+    let s = bench.run_elems("requantize/resnet20-all-layers", total as u64, || {
+        for rep in &reps {
+            let mut r = rep.clone();
+            black_box(requantize(&mut r));
+        }
+    });
+    println!("{}", s.report());
+}

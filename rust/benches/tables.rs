@@ -1,0 +1,91 @@
+//! End-to-end table workloads at miniature scale — one benchmark per paper
+//! table/figure family, measuring the *whole pipeline* (data → device steps
+//! → re-quantization → scheme) the corresponding experiment harness runs.
+//!
+//! These use tinynet so a full suite completes in minutes; the resnet-scale
+//! numbers live in results/*.json (see EXPERIMENTS.md). Skips without
+//! artifacts.
+
+use bsq::baselines::{self, HawqConfig, QatConfig};
+use bsq::coordinator::{run_bsq, BsqConfig, Session};
+use bsq::model::ModelState;
+use bsq::quant::{QuantScheme, Reweigh};
+use bsq::runtime::Engine;
+use bsq::util::bench::Bench;
+
+fn tiny_cfg(alpha: f32) -> BsqConfig {
+    let mut cfg = BsqConfig::for_model("tinynet");
+    cfg.alpha = alpha;
+    cfg.pretrain_epochs = 2;
+    cfg.bsq_epochs = 3;
+    cfg.finetune_epochs = 1;
+    cfg.train_size = 256;
+    cfg.test_size = 128;
+    cfg.cache_pretrained = false;
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    if !bsq::runtime::artifacts_root().join("tinynet/manifest.json").exists() {
+        eprintln!("skipping tables bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::cpu()?;
+    let bench = Bench { warmup: 0, iters: 1, max_time: std::time::Duration::from_secs(300) };
+    println!("== tables (end-to-end pipeline workloads, tinynet miniature) ==");
+
+    // Table 1 / Fig 3 family: one full BSQ pipeline run per α point.
+    let s = bench.run("table1/bsq-pipeline-per-alpha", || {
+        run_bsq(&engine, &tiny_cfg(2e-4)).unwrap();
+    });
+    println!("{}", s.report());
+
+    // Table 1 scratch row / Table 2 DoReFa rows: from-scratch QAT run.
+    let session = Session::open(&engine, "tinynet", 256, 128, 0)?;
+    let names: Vec<(String, usize)> =
+        session.man.qlayers.iter().map(|q| (q.name.clone(), q.params)).collect();
+    let uni = QuantScheme::uniform(&names, 3);
+    let s = bench.run("table2/dorefa-from-scratch", || {
+        baselines::dorefa::train_from_scratch(&session, &uni, &QatConfig::from_scratch(3, 4, 0))
+            .unwrap();
+    });
+    println!("{}", s.report());
+
+    // Fig 2 family: reweighing ablation = two pipeline runs.
+    let s = bench.run("fig2/reweigh-pair", || {
+        let mut a = tiny_cfg(2e-4);
+        a.reweigh = Reweigh::MemoryAware;
+        let mut b = tiny_cfg(9e-5);
+        b.reweigh = Reweigh::None;
+        run_bsq(&engine, &a).unwrap();
+        run_bsq(&engine, &b).unwrap();
+    });
+    println!("{}", s.report());
+
+    // Fig 4 family: one extra arm (interval = 0).
+    let s = bench.run("fig4/no-requant-arm", || {
+        let mut cfg = tiny_cfg(2e-4);
+        cfg.requant_interval = 0;
+        run_bsq(&engine, &cfg).unwrap();
+    });
+    println!("{}", s.report());
+
+    // Fig 7 / Table 2 HAWQ row: Hessian block power iteration.
+    let state = ModelState::init_fp(&session.man, 0);
+    let s = bench.run("fig7/hawq-analysis", || {
+        baselines::hawq::analyze(&session, &state, &HawqConfig { power_iters: 4, batches: 1, seed: 0 })
+            .unwrap();
+    });
+    println!("{}", s.report());
+
+    // Tables 4/5: PACT-path pipeline (resnet20-only artifact; report eval
+    // via the relu6 miniature at 4-bit instead so the bench stays tiny).
+    let s = bench.run("table45/bsq-4bit-act", || {
+        let mut cfg = tiny_cfg(4e-4);
+        cfg.act_bits = 4;
+        run_bsq(&engine, &cfg).unwrap();
+    });
+    println!("{}", s.report());
+
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Device-step latency: one PJRT execute of each artifact per model — the
+//! end-to-end hot path (literal marshalling + XLA execution + writeback).
+//!
+//! Skips silently when `make artifacts` has not run. Pass --model to limit.
+
+use bsq::data::{Corpus, Loader};
+use bsq::coordinator::corpus_for_model;
+use bsq::model::{momentum_slots, ModelState};
+use bsq::quant::{reg_weights, LayerPrec, QuantScheme, Reweigh};
+use bsq::runtime::{load_manifest, Engine, RunInputs};
+use bsq::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let models: Vec<String> = {
+        let args: Vec<String> = std::env::args().skip(1).collect();
+        match args.iter().position(|a| a == "--model") {
+            Some(i) => vec![args[i + 1].clone()],
+            None => vec!["tinynet".into(), "resnet20".into()],
+        }
+    };
+    if !bsq::runtime::artifacts_root().join("tinynet/manifest.json").exists() {
+        eprintln!("skipping train_step bench: run `make artifacts` first");
+        return Ok(());
+    }
+    let engine = Engine::cpu()?;
+    let bench = Bench::quick();
+    println!("== train_step ==");
+
+    for model in &models {
+        let man = load_manifest(model)?;
+        let corpus = Corpus::generate(corpus_for_model(model, 0).with_sizes(man.batch * 2, man.batch));
+        let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 1);
+        let batch = loader.next_batch();
+        let scheme = QuantScheme::new(
+            man.qlayers
+                .iter()
+                .map(|q| LayerPrec { name: q.name.clone(), params: q.params, bits: 8 })
+                .collect(),
+        );
+        for art in ["fp_train_relu6", "bsq_train_relu6", "dorefa_train_relu6", "q_eval_relu6"] {
+            let exe = match man.artifact(art) {
+                Ok(spec) => engine.load(spec)?,
+                Err(_) => continue,
+            };
+            let mut state = ModelState::init_fp(&man, 0);
+            if art.starts_with("bsq") || art.starts_with("q_eval") {
+                state.to_bit_representation(&man, 8)?;
+            }
+            state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+            let inputs = RunInputs::default()
+                .hyper("lr", 0.05)
+                .hyper("wd", 1e-4)
+                .hyper("alpha", 5e-3)
+                .vec("regw", reg_weights(&scheme, Reweigh::MemoryAware))
+                .vec("wlv", scheme.levels_vec())
+                .vec("actlv", vec![15.0; man.act_sites.len()]);
+            let s = bench.run_elems(&format!("{model}/{art}"), man.batch as u64, || {
+                exe.run(&mut state, Some(&batch), &inputs).unwrap();
+            });
+            println!(
+                "{}  ({:.1} imgs/s)",
+                s.report(),
+                man.batch as f64 / s.mean.as_secs_f64()
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! DoReFa-Net baseline (Zhou et al., 2016): quantization-aware training at a
+//! *fixed* per-layer scheme, from scratch.
+//!
+//! Serves three paper roles: the DoReFa rows of Table 2, the PACT rows
+//! (same weight quantizer + trainable PACT activation clip — the `pact`
+//! artifact variant), and Table 1's "train from scratch" comparison where
+//! the scheme is the one BSQ discovered.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::{EpochRecord, History};
+use crate::coordinator::schedule::StepDecay;
+use crate::coordinator::trainer::{train_epoch, Session};
+use crate::coordinator::ActMode;
+use crate::data::Loader;
+use crate::model::{momentum_slots, ModelState};
+use crate::quant::QuantScheme;
+use crate::runtime::RunInputs;
+
+#[derive(Debug, Clone)]
+pub struct QatConfig {
+    pub epochs: usize,
+    pub act_bits: usize,
+    pub act_first_last: usize,
+    pub weight_decay: f32,
+    pub seed: u64,
+    pub eval_batches: usize,
+    /// Learning-rate schedule (paper: pretrain-shaped for from-scratch QAT).
+    pub schedule: StepDecay,
+}
+
+impl QatConfig {
+    pub fn from_scratch(epochs: usize, act_bits: usize, seed: u64) -> QatConfig {
+        QatConfig {
+            epochs,
+            act_bits,
+            act_first_last: 8,
+            weight_decay: 1e-4,
+            seed,
+            eval_batches: 8,
+            schedule: StepDecay::pretrain(),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct QatOutcome {
+    pub final_acc: f32,
+    pub best_acc: f32,
+    pub history: History,
+}
+
+/// Train a model from scratch with DoReFa STE at the given scheme.
+pub fn train_from_scratch(
+    session: &Session,
+    scheme: &QuantScheme,
+    cfg: &QatConfig,
+) -> Result<QatOutcome> {
+    let act_mode = ActMode::for_bits(cfg.act_bits);
+    let exe = session.artifact(&format!("dorefa_train_{}", act_mode.suffix()))?;
+    let eval = session.artifact(&format!("dorefa_eval_{}", act_mode.suffix()))?;
+
+    let mut state = ModelState::init_fp(&session.man, cfg.seed);
+    if act_mode == ActMode::Pact {
+        state.add_pact(&session.man);
+    }
+    state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+    state.check_against(&exe.spec.inputs)?;
+
+    let wlv = scheme.levels_vec();
+    let actlv = session.act_levels(cfg.act_bits, cfg.act_first_last);
+    let mut loader =
+        Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xD);
+    let mut history = History::default();
+    let mut best = 0.0f32;
+
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        let lr = cfg.schedule.lr(epoch, cfg.epochs);
+        let inputs = RunInputs::default()
+            .hyper("lr", lr)
+            .hyper("wd", cfg.weight_decay)
+            .vec("wlv", wlv.clone())
+            .vec("actlv", actlv.clone());
+        let m = train_epoch(&exe, &mut loader, &mut state, &inputs)?;
+        let (_, eacc) = session.evaluate(
+            &eval,
+            &mut state,
+            &RunInputs::default().vec("wlv", wlv.clone()).vec("actlv", actlv.clone()),
+            cfg.eval_batches,
+        )?;
+        best = best.max(eacc);
+        history.push(EpochRecord {
+            phase: "dorefa".into(),
+            epoch,
+            lr,
+            loss: m.loss,
+            ce: m.ce,
+            acc: m.acc,
+            bgl: 0.0,
+            eval_acc: Some(eacc),
+            bits_per_param: scheme.bits_per_param(),
+            compression: scheme.compression(),
+            seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
+    let (_, final_acc) = session.evaluate(
+        &eval,
+        &mut state,
+        &RunInputs::default().vec("wlv", wlv).vec("actlv", actlv),
+        usize::MAX,
+    )?;
+    Ok(QatOutcome { final_acc, best_acc: best.max(final_acc), history })
+}

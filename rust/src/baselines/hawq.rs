@@ -1,0 +1,165 @@
+//! HAWQ baseline (Dong et al., 2019): Hessian-aware importance ranking.
+//!
+//! HAWQ scores layer i by S_i = λ_i / n_i where λ_i is the top eigenvalue
+//! of the loss Hessian restricted to that layer's weights; higher-scored
+//! layers get more bits. The paper compares BSQ's discovered precision
+//! ranking against this ranking (App. B.3 / Fig. 7) and against HAWQ's
+//! manually assigned schemes (Tables 2–3).
+//!
+//! We compute λ_i by *block power iteration* on the AOT `hvp` artifact:
+//! the probe vector v is zero outside layer i, Hv comes back from the
+//! device, and the Rayleigh quotient converges to the top eigenvalue of
+//! the layer-diagonal Hessian block (averaged over a few minibatches).
+
+use anyhow::Result;
+
+use crate::coordinator::trainer::Session;
+use crate::data::Loader;
+use crate::model::ModelState;
+use crate::quant::{LayerPrec, QuantScheme};
+use crate::runtime::RunInputs;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+#[derive(Debug, Clone)]
+pub struct HawqConfig {
+    pub power_iters: usize,
+    pub batches: usize,
+    pub seed: u64,
+}
+
+impl Default for HawqConfig {
+    fn default() -> Self {
+        HawqConfig { power_iters: 6, batches: 2, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct HawqReport {
+    /// Per-layer top Hessian eigenvalue λ_i.
+    pub eigenvalues: Vec<f64>,
+    /// Per-layer importance S_i = λ_i / n_i.
+    pub importance: Vec<f64>,
+    /// Layer indices sorted by descending importance.
+    pub ranking: Vec<usize>,
+}
+
+/// Estimate per-layer top Hessian eigenvalues of the pretrained fp model.
+pub fn analyze(session: &Session, state: &ModelState, cfg: &HawqConfig) -> Result<HawqReport> {
+    let exe = session.artifact("hvp")?;
+    let man = &session.man;
+    let mut rng = Pcg32::new(cfg.seed, 0x4A39);
+
+    // fixed analysis batches (HAWQ uses a data subsample)
+    let mut loader = Loader::eval(&session.corpus.train, man.batch);
+    let batches: Vec<_> = (0..cfg.batches.max(1)).map(|_| loader.next_batch()).collect();
+
+    let mut eigenvalues = Vec::with_capacity(man.qlayers.len());
+    let mut state = state.clone();
+    for q in &man.qlayers {
+        let probe_key = format!("v:{}", q.name);
+        let hv_key = format!("hv:{}", q.name);
+        // random unit start
+        let mut v = Tensor::randn(&q.shape, 1.0, &mut rng);
+        let norm = v.norm2().max(1e-12);
+        v.scale_inplace(1.0 / norm);
+
+        let mut lambda = 0.0f64;
+        for _ in 0..cfg.power_iters {
+            // Hv averaged over the analysis batches
+            let mut hv_acc = Tensor::zeros(&q.shape);
+            for b in batches.iter() {
+                let mut inputs = RunInputs::default();
+                inputs.probes.insert(probe_key.clone(), v.clone());
+                let out = exe.run(&mut state, Some(b), &inputs)?;
+                let hv = &out.probes[&hv_key];
+                for (a, &h) in hv_acc.data_mut().iter_mut().zip(hv.data()) {
+                    *a += h / batches.len() as f32;
+                }
+            }
+            lambda = (v.dot(&hv_acc) as f64).abs(); // Rayleigh quotient (‖v‖=1)
+            let n = hv_acc.norm2();
+            if n < 1e-12 {
+                lambda = 0.0;
+                break;
+            }
+            hv_acc.scale_inplace(1.0 / n);
+            v = hv_acc;
+        }
+        eigenvalues.push(lambda);
+    }
+
+    let importance: Vec<f64> = eigenvalues
+        .iter()
+        .zip(&man.qlayers)
+        .map(|(&l, q)| l / q.params.max(1) as f64)
+        .collect();
+    let mut ranking: Vec<usize> = (0..importance.len()).collect();
+    ranking.sort_by(|&a, &b| importance[b].partial_cmp(&importance[a]).unwrap());
+    Ok(HawqReport { eigenvalues, importance, ranking })
+}
+
+/// HAWQ's manual step: assign precisions by importance rank to hit a target
+/// average bit budget. Layers are split into rank tiers mapped onto a
+/// descending bit ladder around `target_bits` (HAWQ itself picks these by
+/// hand; this is the deterministic policy we use for the comparison rows).
+pub fn assign_scheme(
+    session: &Session,
+    report: &HawqReport,
+    target_bits: f64,
+    ladder: &[usize],
+) -> QuantScheme {
+    let man = &session.man;
+    let n = man.qlayers.len();
+    // search the tier split that gets closest to the target average
+    let mut best: Option<(f64, Vec<usize>)> = None;
+    // tiers: top k1 layers → ladder[0], next k2 → ladder[1], … remainder last
+    let tiers = ladder.len();
+    let mut counts = vec![n / tiers; tiers];
+    counts[tiers - 1] += n % tiers;
+    // local search: move boundaries to approach the target
+    for shift in -(n as isize)..=(n as isize) {
+        let mut c = counts.clone();
+        let delta = shift.unsigned_abs().min(c[0] + c[tiers - 1]);
+        if shift >= 0 {
+            let d = delta.min(c[tiers - 1].saturating_sub(1));
+            c[0] += d;
+            c[tiers - 1] -= d;
+        } else {
+            let d = delta.min(c[0].saturating_sub(1));
+            c[0] -= d;
+            c[tiers - 1] += d;
+        }
+        let bits = bits_by_rank(report, &c, ladder, n);
+        let scheme = scheme_with_bits(man, &bits);
+        let err = (scheme.bits_per_param() - target_bits).abs();
+        if best.as_ref().map(|(e, _)| err < *e).unwrap_or(true) {
+            best = Some((err, bits));
+        }
+    }
+    scheme_with_bits(man, &best.unwrap().1)
+}
+
+fn bits_by_rank(report: &HawqReport, counts: &[usize], ladder: &[usize], n: usize) -> Vec<usize> {
+    let mut bits = vec![*ladder.last().unwrap(); n];
+    let mut pos = 0usize;
+    for (tier, &c) in counts.iter().enumerate() {
+        for _ in 0..c {
+            if pos < n {
+                bits[report.ranking[pos]] = ladder[tier];
+                pos += 1;
+            }
+        }
+    }
+    bits
+}
+
+fn scheme_with_bits(man: &crate::runtime::Manifest, bits: &[usize]) -> QuantScheme {
+    QuantScheme::new(
+        man.qlayers
+            .iter()
+            .zip(bits)
+            .map(|(q, &b)| LayerPrec { name: q.name.clone(), params: q.params, bits: b })
+            .collect(),
+    )
+}

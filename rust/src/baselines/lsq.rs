@@ -1,0 +1,84 @@
+//! Learned-step-size quantization baseline (LSQ, Esser et al. 2019) —
+//! the stand-in for the paper's learned-quantizer comparators (LQ-Nets /
+//! LSQ rows of Tables 2–3). Uniform precision, per-layer trainable step.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::baselines::dorefa::{QatConfig, QatOutcome};
+use crate::coordinator::metrics::EpochRecord;
+use crate::coordinator::trainer::{train_epoch, Session};
+use crate::data::Loader;
+use crate::model::{momentum_slots, ModelState};
+use crate::quant::QuantScheme;
+use crate::runtime::RunInputs;
+
+/// Train from scratch with LSQ at a uniform `bits` precision.
+///
+/// LSQ codes are symmetric in [−(2^{b−1}−1), 2^{b−1}−1] per level count;
+/// we pass `levels = 2^{bits−1} − 1` to match the signed quantizer the
+/// artifact implements.
+pub fn train_from_scratch(
+    session: &Session,
+    scheme: &QuantScheme,
+    cfg: &QatConfig,
+) -> Result<QatOutcome> {
+    let exe = session.artifact("lsq_train_relu6")?;
+    let eval = session.artifact("lsq_eval_relu6")?;
+
+    let mut state = ModelState::init_fp(&session.man, cfg.seed);
+    state.add_lsq_steps(&session.man)?;
+    state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+    state.check_against(&exe.spec.inputs)?;
+
+    // signed levels: 2^{b−1} − 1 (≥ 1)
+    let wlv: Vec<f32> = scheme
+        .layers
+        .iter()
+        .map(|l| (((1u64 << l.bits.max(1)) / 2).max(2) - 1) as f32)
+        .collect();
+    let actlv = session.act_levels(cfg.act_bits, cfg.act_first_last);
+    let mut loader =
+        Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xE);
+    let mut history = crate::coordinator::History::default();
+    let mut best = 0.0f32;
+
+    for epoch in 0..cfg.epochs {
+        let t0 = Instant::now();
+        let lr = cfg.schedule.lr(epoch, cfg.epochs);
+        let inputs = RunInputs::default()
+            .hyper("lr", lr)
+            .hyper("wd", cfg.weight_decay)
+            .vec("wlv", wlv.clone())
+            .vec("actlv", actlv.clone());
+        let m = train_epoch(&exe, &mut loader, &mut state, &inputs)?;
+        let (_, eacc) = session.evaluate(
+            &eval,
+            &mut state,
+            &RunInputs::default().vec("wlv", wlv.clone()).vec("actlv", actlv.clone()),
+            cfg.eval_batches,
+        )?;
+        best = best.max(eacc);
+        history.push(EpochRecord {
+            phase: "lsq".into(),
+            epoch,
+            lr,
+            loss: m.loss,
+            ce: m.ce,
+            acc: m.acc,
+            bgl: 0.0,
+            eval_acc: Some(eacc),
+            bits_per_param: scheme.bits_per_param(),
+            compression: scheme.compression(),
+            seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
+    let (_, final_acc) = session.evaluate(
+        &eval,
+        &mut state,
+        &RunInputs::default().vec("wlv", wlv).vec("actlv", actlv),
+        usize::MAX,
+    )?;
+    Ok(QatOutcome { final_acc, best_acc: best.max(final_acc), history })
+}

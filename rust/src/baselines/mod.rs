@@ -1,0 +1,15 @@
+//! Comparator implementations: DoReFa / PACT QAT, LSQ, HAWQ ranking.
+//!
+//! These are the baselines the BSQ pipeline itself depends on (DoReFa is
+//! the paper's finetuning substrate; PACT its low-bit activation function)
+//! plus the Hessian-aware HAWQ ranking used in Tables 2–3 and Fig. 7.
+//! Comparators we cannot rebuild faithfully offline (DNAS, HAQ, RVQ, DC,
+//! Integer) are reported as paper-cited reference rows by the experiment
+//! harnesses (DESIGN.md §4).
+
+pub mod dorefa;
+pub mod hawq;
+pub mod lsq;
+
+pub use dorefa::{train_from_scratch, QatConfig, QatOutcome};
+pub use hawq::{analyze, assign_scheme, HawqConfig, HawqReport};

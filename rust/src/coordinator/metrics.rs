@@ -1,0 +1,139 @@
+//! Training telemetry: per-epoch records, JSON export, result files.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub phase: String,
+    pub epoch: usize,
+    pub lr: f32,
+    pub loss: f32,
+    pub ce: f32,
+    pub acc: f32,
+    pub bgl: f32,
+    pub eval_acc: Option<f32>,
+    pub bits_per_param: f64,
+    pub compression: f64,
+    pub seconds: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct History {
+    pub records: Vec<EpochRecord>,
+}
+
+impl History {
+    pub fn push(&mut self, r: EpochRecord) {
+        log::info!(
+            "[{}] epoch {:>3} lr {:.4} loss {:.4} acc {:.3}{} bgl {:.2} {:.2} b/p ({:.2}x) {:.1}s",
+            r.phase,
+            r.epoch,
+            r.lr,
+            r.loss,
+            r.acc,
+            r.eval_acc.map(|a| format!(" eval {a:.3}")).unwrap_or_default(),
+            r.bgl,
+            r.bits_per_param,
+            r.compression,
+            r.seconds
+        );
+        self.records.push(r);
+    }
+
+    pub fn last_of(&self, phase: &str) -> Option<&EpochRecord> {
+        self.records.iter().rev().find(|r| r.phase == phase)
+    }
+
+    pub fn best_eval(&self, phase: &str) -> Option<f32> {
+        self.records
+            .iter()
+            .filter(|r| r.phase == phase)
+            .filter_map(|r| r.eval_acc)
+            .fold(None, |m, a| Some(m.map_or(a, |m: f32| m.max(a))))
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.records
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("phase", Json::str(r.phase.clone())),
+                        ("epoch", Json::num(r.epoch as f64)),
+                        ("lr", Json::num(r.lr as f64)),
+                        ("loss", Json::num(r.loss as f64)),
+                        ("ce", Json::num(r.ce as f64)),
+                        ("acc", Json::num(r.acc as f64)),
+                        ("bgl", Json::num(r.bgl as f64)),
+                        (
+                            "eval_acc",
+                            r.eval_acc.map(|a| Json::num(a as f64)).unwrap_or(Json::Null),
+                        ),
+                        ("bits_per_param", Json::num(r.bits_per_param)),
+                        ("compression", Json::num(r.compression)),
+                        ("seconds", Json::num(r.seconds)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Write an experiment record under `results/` (pretty JSON, atomic-ish).
+pub fn write_result(path: &Path, value: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, value.to_string_pretty())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(phase: &str, epoch: usize, eval: Option<f32>) -> EpochRecord {
+        EpochRecord {
+            phase: phase.into(),
+            epoch,
+            lr: 0.1,
+            loss: 1.0,
+            ce: 0.9,
+            acc: 0.5,
+            bgl: 2.0,
+            eval_acc: eval,
+            bits_per_param: 8.0,
+            compression: 4.0,
+            seconds: 1.0,
+        }
+    }
+
+    #[test]
+    fn history_queries() {
+        let mut h = History::default();
+        h.push(rec("bsq", 0, Some(0.4)));
+        h.push(rec("bsq", 1, Some(0.6)));
+        h.push(rec("ft", 0, Some(0.55)));
+        assert_eq!(h.last_of("bsq").unwrap().epoch, 1);
+        assert_eq!(h.best_eval("bsq"), Some(0.6));
+        assert_eq!(h.best_eval("nope"), None);
+        let j = h.to_json();
+        assert_eq!(j.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn result_files_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("bsq_res_{}", std::process::id()));
+        let p = dir.join("t.json");
+        write_result(&p, &Json::obj(vec![("x", Json::num(1.0))])).unwrap();
+        let back = crate::util::json::parse(&std::fs::read_to_string(&p).unwrap()).unwrap();
+        assert_eq!(back.req("x").unwrap().as_f64().unwrap(), 1.0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

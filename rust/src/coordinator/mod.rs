@@ -1,0 +1,16 @@
+//! L3 coordinator: the training pipelines that orchestrate AOT artifacts.
+//!
+//! `bsq` implements the paper's full §3.3 pipeline (pretrain → bit
+//! conversion → regularized training with periodic re-quantization →
+//! finetune); `trainer` holds the shared session/epoch machinery;
+//! `schedule` the paper's LR shapes; `metrics` telemetry + result files.
+
+pub mod bsq;
+pub mod metrics;
+pub mod schedule;
+pub mod trainer;
+
+pub use bsq::{run_bsq, ActMode, BsqConfig, BsqOutcome};
+pub use metrics::{write_result, EpochRecord, History};
+pub use schedule::StepDecay;
+pub use trainer::{corpus_for_model, train_epoch, Session};

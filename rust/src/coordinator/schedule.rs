@@ -1,0 +1,66 @@
+//! Learning-rate schedules (paper App. A: step decay at fixed epochs).
+
+/// Piecewise-constant LR: `base` until the first milestone, then ×`gamma`
+/// at each milestone — the paper's "decay by 0.1 at epoch 150, 250, 325"
+/// style, expressed in *fractions* of the phase length so abbreviated
+/// schedules keep the same shape.
+#[derive(Debug, Clone)]
+pub struct StepDecay {
+    pub base: f32,
+    pub gamma: f32,
+    /// Milestones as fractions of total epochs (e.g. [0.43, 0.71, 0.93]).
+    pub milestones: Vec<f32>,
+}
+
+impl StepDecay {
+    /// The paper's pretrain/from-scratch schedule: 0.1 → ×0.1 at
+    /// 150/350, 250/350, 325/350.
+    pub fn pretrain() -> StepDecay {
+        StepDecay { base: 0.1, gamma: 0.1, milestones: vec![150.0 / 350.0, 250.0 / 350.0, 325.0 / 350.0] }
+    }
+
+    /// The paper's BSQ schedule: 0.1 for the first 250/350, then 0.01.
+    pub fn bsq() -> StepDecay {
+        StepDecay { base: 0.1, gamma: 0.1, milestones: vec![250.0 / 350.0] }
+    }
+
+    /// The paper's finetune schedule: 0.01 → ×0.1 at 150/300, 250/300.
+    pub fn finetune() -> StepDecay {
+        StepDecay { base: 0.01, gamma: 0.1, milestones: vec![0.5, 250.0 / 300.0] }
+    }
+
+    /// LR for `epoch` (0-based) of a phase lasting `total` epochs.
+    pub fn lr(&self, epoch: usize, total: usize) -> f32 {
+        let frac = if total == 0 { 0.0 } else { epoch as f32 / total as f32 };
+        let decays = self.milestones.iter().filter(|&&m| frac >= m).count();
+        self.base * self.gamma.powi(decays as i32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pretrain_shape_matches_paper_at_350() {
+        let s = StepDecay::pretrain();
+        assert_eq!(s.lr(0, 350), 0.1);
+        assert_eq!(s.lr(149, 350), 0.1);
+        assert!((s.lr(150, 350) - 0.01).abs() < 1e-9);
+        assert!((s.lr(250, 350) - 0.001).abs() < 1e-9);
+        assert!((s.lr(325, 350) - 0.0001).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scales_to_abbreviated_runs() {
+        let s = StepDecay::bsq();
+        // 10-epoch run: switch at ~epoch 7 (250/350 ≈ 0.714)
+        assert_eq!(s.lr(6, 10), 0.1);
+        assert!((s.lr(8, 10) - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_total_is_safe() {
+        assert_eq!(StepDecay::finetune().lr(0, 0), 0.01);
+    }
+}

@@ -1,0 +1,140 @@
+//! Shared training-loop machinery: sessions, epoch runners, evaluation.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+
+use crate::data::{Corpus, CorpusSpec, Loader};
+use crate::model::ModelState;
+use crate::runtime::{load_manifest, Engine, Executable, Manifest, RunInputs};
+
+/// A model + corpus bound to an engine: the context every phase runs in.
+pub struct Session<'e> {
+    pub engine: &'e Engine,
+    pub man: Manifest,
+    pub corpus: Corpus,
+    pub seed: u64,
+}
+
+impl<'e> Session<'e> {
+    /// Open a session: load the manifest and synthesize the matching corpus.
+    pub fn open(
+        engine: &'e Engine,
+        model: &str,
+        train_size: usize,
+        test_size: usize,
+        seed: u64,
+    ) -> Result<Session<'e>> {
+        let man = load_manifest(model)?;
+        let spec = corpus_for_model(model, seed).with_sizes(train_size, test_size);
+        if spec.hw.0 != man.input_hw.0 || spec.channels != man.in_ch {
+            bail!("corpus {:?} does not match model geometry", spec.name);
+        }
+        if spec.classes != man.num_classes {
+            bail!("corpus classes {} ≠ model classes {}", spec.classes, man.num_classes);
+        }
+        Ok(Session { engine, man, corpus: Corpus::generate(spec), seed })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<Rc<Executable>> {
+        self.engine.load(self.man.artifact(name)?)
+    }
+
+    /// Per-site activation level vector (2^a − 1): the paper pins the first
+    /// and last sites to `first_last` bits (8 on CIFAR/ResNet; pass the same
+    /// value as `bits` for Inception's uniform 6-bit setting). `bits == 0`
+    /// disables activation quantization (float activations, clip only).
+    pub fn act_levels(&self, bits: usize, first_last: usize) -> Vec<f32> {
+        let n = self.man.act_sites.len();
+        let lv = |b: usize| if b == 0 { 0.0 } else { ((1u64 << b) - 1) as f32 };
+        (0..n)
+            .map(|i| if i == 0 || i == n - 1 { lv(first_last) } else { lv(bits) })
+            .collect()
+    }
+
+    /// Average (loss, acc) over up to `max_batches` of the test split.
+    pub fn evaluate(
+        &self,
+        exe: &Executable,
+        state: &mut ModelState,
+        inputs: &RunInputs,
+        max_batches: usize,
+    ) -> Result<(f32, f32)> {
+        let mut loader = Loader::eval(&self.corpus.test, self.man.batch);
+        let n = loader.batches_per_epoch().min(max_batches.max(1));
+        let (mut loss, mut acc) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let b = loader.next_batch();
+            let out = exe.run(state, Some(&b), inputs)?;
+            loss += out.metric("loss")? as f64;
+            acc += out.metric("acc")? as f64;
+        }
+        Ok(((loss / n as f64) as f32, (acc / n as f64) as f32))
+    }
+}
+
+/// Map a model to its corpus profile (DESIGN.md §4 substitutions).
+pub fn corpus_for_model(model: &str, seed: u64) -> CorpusSpec {
+    let base = match model {
+        "tinynet" => CorpusSpec::tiny(),
+        "resnet20" => CorpusSpec::cifar(),
+        "resnet50_sim" | "inception_sim" => CorpusSpec::imagenet_sim(),
+        _ => CorpusSpec::cifar(),
+    };
+    // vary only the corpus *rendering* seed stream with the session seed so
+    // multi-seed repeats (Fig. 4) see different draws of the same task
+    let base_seed = base.seed;
+    base.with_seed(base_seed ^ (seed.wrapping_mul(0x9e3779b97f4a7c15)))
+}
+
+/// Averaged metrics of one training epoch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EpochMetrics {
+    pub loss: f32,
+    pub ce: f32,
+    pub acc: f32,
+    pub bgl: f32,
+}
+
+/// Run one epoch of a train artifact over the loader.
+pub fn train_epoch(
+    exe: &Executable,
+    loader: &mut Loader,
+    state: &mut ModelState,
+    inputs: &RunInputs,
+) -> Result<EpochMetrics> {
+    loader.next_epoch();
+    let steps = loader.batches_per_epoch();
+    let mut m = EpochMetrics::default();
+    for _ in 0..steps {
+        let b = loader.next_batch();
+        let out = exe.run(state, Some(&b), inputs)?;
+        m.loss += out.metric("loss")?;
+        m.ce += out.metric("ce")?;
+        m.acc += out.metric("acc")?;
+        m.bgl += out.metrics.get("bgl").copied().unwrap_or(0.0);
+    }
+    let n = steps.max(1) as f32;
+    m.loss /= n;
+    m.ce /= n;
+    m.acc /= n;
+    m.bgl /= n;
+    if !m.loss.is_finite() {
+        bail!("training diverged (loss = {})", m.loss);
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_mapping() {
+        assert_eq!(corpus_for_model("resnet20", 0).classes, 10);
+        assert_eq!(corpus_for_model("resnet50_sim", 0).classes, 100);
+        assert_eq!(corpus_for_model("tinynet", 0).hw, (16, 16));
+        // seed perturbs rendering
+        assert_ne!(corpus_for_model("resnet20", 1).seed, corpus_for_model("resnet20", 2).seed);
+    }
+}

@@ -1,0 +1,177 @@
+//! Training-time augmentation — the paper's CIFAR pipeline (App. A.1):
+//! random crop with 4-pixel padding, random horizontal flip, per-channel
+//! normalization. Operates on single NHWC images in place of a batch slot.
+
+use crate::util::Pcg32;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AugmentCfg {
+    pub pad: usize,
+    pub hflip: bool,
+    pub enabled: bool,
+}
+
+impl Default for AugmentCfg {
+    fn default() -> Self {
+        AugmentCfg { pad: 4, hflip: true, enabled: true }
+    }
+}
+
+impl AugmentCfg {
+    pub fn off() -> Self {
+        AugmentCfg { pad: 0, hflip: false, enabled: false }
+    }
+}
+
+/// Per-channel statistics for normalization, computed once on the train split.
+#[derive(Debug, Clone)]
+pub struct ChannelStats {
+    pub mean: Vec<f32>,
+    pub std: Vec<f32>,
+}
+
+impl ChannelStats {
+    pub fn compute(images: &[f32], channels: usize) -> ChannelStats {
+        let mut mean = vec![0.0f64; channels];
+        let mut count = vec![0usize; channels];
+        for (i, &v) in images.iter().enumerate() {
+            mean[i % channels] += v as f64;
+            count[i % channels] += 1;
+        }
+        for (m, &c) in mean.iter_mut().zip(&count) {
+            *m /= c.max(1) as f64;
+        }
+        let mut var = vec![0.0f64; channels];
+        for (i, &v) in images.iter().enumerate() {
+            let d = v as f64 - mean[i % channels];
+            var[i % channels] += d * d;
+        }
+        ChannelStats {
+            mean: mean.iter().map(|&m| m as f32).collect(),
+            std: var
+                .iter()
+                .zip(&count)
+                .map(|(&v, &c)| ((v / c.max(1) as f64).sqrt().max(1e-6)) as f32)
+                .collect(),
+        }
+    }
+
+    pub fn normalize(&self, px: &mut [f32]) {
+        let c = self.mean.len();
+        for (i, v) in px.iter_mut().enumerate() {
+            *v = (*v - self.mean[i % c]) / self.std[i % c];
+        }
+    }
+}
+
+/// Copy `src` (one HWC image) into `dst`, applying pad-crop + flip + norm.
+///
+/// Padding is zero-fill (post-normalization zeros ≈ channel mean), matching
+/// the standard CIFAR `RandomCrop(32, padding=4)` recipe.
+pub fn augment_into(
+    src: &[f32],
+    dst: &mut [f32],
+    h: usize,
+    w: usize,
+    c: usize,
+    cfg: &AugmentCfg,
+    stats: &ChannelStats,
+    rng: &mut Pcg32,
+) {
+    debug_assert_eq!(src.len(), h * w * c);
+    debug_assert_eq!(dst.len(), h * w * c);
+    let (dy, dx, flip) = if cfg.enabled {
+        (
+            rng.below(2 * cfg.pad as u32 + 1) as isize - cfg.pad as isize,
+            rng.below(2 * cfg.pad as u32 + 1) as isize - cfg.pad as isize,
+            cfg.hflip && rng.bool(0.5),
+        )
+    } else {
+        (0, 0, false)
+    };
+    for y in 0..h {
+        let sy = y as isize + dy;
+        for x in 0..w {
+            let sx0 = x as isize + dx;
+            let sx = if flip { w as isize - 1 - sx0 } else { sx0 };
+            let di = (y * w + x) * c;
+            if sy >= 0 && sy < h as isize && sx >= 0 && sx < w as isize {
+                let si = (sy as usize * w + sx as usize) * c;
+                dst[di..di + c].copy_from_slice(&src[si..si + c]);
+            } else {
+                dst[di..di + c].fill(0.0);
+            }
+        }
+    }
+    stats.normalize(dst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ident_stats(c: usize) -> ChannelStats {
+        ChannelStats { mean: vec![0.0; c], std: vec![1.0; c] }
+    }
+
+    #[test]
+    fn disabled_augment_is_identity_with_norm() {
+        let src: Vec<f32> = (0..4 * 4 * 3).map(|i| i as f32).collect();
+        let mut dst = vec![0.0; src.len()];
+        let mut rng = Pcg32::seeded(0);
+        augment_into(&src, &mut dst, 4, 4, 3, &AugmentCfg::off(), &ident_stats(3), &mut rng);
+        assert_eq!(src, dst);
+    }
+
+    #[test]
+    fn normalization_applies() {
+        let src = vec![2.0f32; 2 * 2 * 1];
+        let mut dst = vec![0.0; 4];
+        let stats = ChannelStats { mean: vec![2.0], std: vec![4.0] };
+        let mut rng = Pcg32::seeded(0);
+        augment_into(&src, &mut dst, 2, 2, 1, &AugmentCfg::off(), &stats, &mut rng);
+        assert!(dst.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn crop_shifts_content() {
+        // image with a single hot pixel; over many draws the hot pixel must
+        // land on different positions (or fall off) — i.e. crops vary.
+        let mut src = vec![0.0f32; 8 * 8];
+        src[3 * 8 + 3] = 1.0;
+        let mut rng = Pcg32::seeded(7);
+        let cfg = AugmentCfg { pad: 2, hflip: false, enabled: true };
+        let mut positions = std::collections::BTreeSet::new();
+        for _ in 0..50 {
+            let mut dst = vec![0.0f32; 64];
+            augment_into(&src, &mut dst, 8, 8, 1, &cfg, &ident_stats(1), &mut rng);
+            positions.insert(dst.iter().position(|&v| v == 1.0));
+        }
+        assert!(positions.len() > 5, "crops did not vary: {positions:?}");
+    }
+
+    #[test]
+    fn flip_mirrors_row() {
+        let src: Vec<f32> = (0..4).map(|i| i as f32).collect(); // 1×4×1
+        let cfg = AugmentCfg { pad: 0, hflip: true, enabled: true };
+        let mut rng = Pcg32::seeded(1);
+        let mut saw_flipped = false;
+        for _ in 0..20 {
+            let mut dst = vec![0.0f32; 4];
+            augment_into(&src, &mut dst, 1, 4, 1, &cfg, &ident_stats(1), &mut rng);
+            if dst == [3.0, 2.0, 1.0, 0.0] {
+                saw_flipped = true;
+            }
+        }
+        assert!(saw_flipped);
+    }
+
+    #[test]
+    fn channel_stats_compute() {
+        // 2 pixels × 2 channels: ch0 = {1, 3}, ch1 = {2, 4}
+        let img = [1.0, 2.0, 3.0, 4.0];
+        let s = ChannelStats::compute(&img, 2);
+        assert_eq!(s.mean, vec![2.0, 3.0]);
+        assert!((s.std[0] - 1.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,183 @@
+//! Batch loader: epoch shuffling, augmentation, fixed-size batch assembly.
+//!
+//! Artifacts are compiled at a static batch size, so the loader always
+//! yields full batches: the final ragged remainder of an epoch wraps around
+//! into the shuffled head (standard drop-last-free behaviour at small
+//! corpus sizes). Deterministic given (corpus seed, loader seed, epoch).
+
+use crate::data::augment::{augment_into, AugmentCfg, ChannelStats};
+use crate::data::synthetic::Split;
+use crate::tensor::{IntTensor, Tensor};
+use crate::util::Pcg32;
+
+/// One device-ready minibatch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: Tensor,
+    pub y: IntTensor,
+}
+
+pub struct Loader<'a> {
+    split: &'a Split,
+    batch: usize,
+    hw: (usize, usize),
+    channels: usize,
+    cfg: AugmentCfg,
+    stats: ChannelStats,
+    rng: Pcg32,
+    order: Vec<usize>,
+    cursor: usize,
+    // reusable staging buffers (hot path: no per-batch allocation)
+    xbuf: Vec<f32>,
+    ybuf: Vec<i32>,
+}
+
+impl<'a> Loader<'a> {
+    pub fn new(split: &'a Split, batch: usize, cfg: AugmentCfg, seed: u64) -> Loader<'a> {
+        let shape = split.images.shape();
+        let (h, w, c) = (shape[1], shape[2], shape[3]);
+        let stats = ChannelStats::compute(split.images.data(), c);
+        let mut rng = Pcg32::new(seed, 17);
+        let mut order: Vec<usize> = (0..split.n).collect();
+        rng.shuffle(&mut order);
+        Loader {
+            split,
+            batch,
+            hw: (h, w),
+            channels: c,
+            cfg,
+            stats,
+            rng,
+            order,
+            cursor: 0,
+            xbuf: vec![0.0; batch * h * w * c],
+            ybuf: vec![0; batch],
+        }
+    }
+
+    /// Evaluation loader: no augmentation, sequential order.
+    pub fn eval(split: &'a Split, batch: usize) -> Loader<'a> {
+        let mut l = Loader::new(split, batch, AugmentCfg::off(), 0);
+        l.order = (0..split.n).collect();
+        l
+    }
+
+    pub fn batches_per_epoch(&self) -> usize {
+        self.split.n.div_ceil(self.batch)
+    }
+
+    /// Advance to the next epoch: reshuffle (train mode) and reset.
+    pub fn next_epoch(&mut self) {
+        if self.cfg.enabled {
+            self.rng.shuffle(&mut self.order);
+        }
+        self.cursor = 0;
+    }
+
+    /// Assemble the next batch (wrapping at the epoch tail).
+    pub fn next_batch(&mut self) -> Batch {
+        let (h, w) = self.hw;
+        let c = self.channels;
+        let pix = h * w * c;
+        let src = self.split.images.data();
+        for slot in 0..self.batch {
+            let idx = self.order[(self.cursor + slot) % self.order.len()];
+            let img = &src[idx * pix..(idx + 1) * pix];
+            augment_into(
+                img,
+                &mut self.xbuf[slot * pix..(slot + 1) * pix],
+                h,
+                w,
+                c,
+                &self.cfg,
+                &self.stats,
+                &mut self.rng,
+            );
+            self.ybuf[slot] = self.split.labels.data()[idx];
+        }
+        self.cursor = (self.cursor + self.batch) % self.order.len().max(1);
+        Batch {
+            x: Tensor::new(vec![self.batch, h, w, c], self.xbuf.clone()).unwrap(),
+            y: IntTensor::new(vec![self.batch], self.ybuf.clone()).unwrap(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Corpus, CorpusSpec};
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusSpec::tiny().with_sizes(64, 32))
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let c = corpus();
+        let mut l = Loader::new(&c.train, 16, AugmentCfg::default(), 1);
+        let b = l.next_batch();
+        assert_eq!(b.x.shape(), &[16, 16, 16, 3]);
+        assert_eq!(b.y.shape(), &[16]);
+    }
+
+    #[test]
+    fn epoch_covers_every_example_once() {
+        let c = corpus();
+        let mut l = Loader::eval(&c.train, 16);
+        let mut seen = std::collections::BTreeMap::new();
+        for _ in 0..l.batches_per_epoch() {
+            let b = l.next_batch();
+            for &y in b.y.data() {
+                *seen.entry(y).or_insert(0) += 1;
+            }
+        }
+        // 64 examples / 16 per batch = 4 batches, each example exactly once
+        assert_eq!(seen.values().sum::<i32>(), 64);
+    }
+
+    #[test]
+    fn shuffling_changes_order_across_epochs() {
+        let c = corpus();
+        let mut l = Loader::new(&c.train, 64, AugmentCfg::default(), 5);
+        let b1 = l.next_batch().y;
+        l.next_epoch();
+        let b2 = l.next_batch().y;
+        assert_ne!(b1.data(), b2.data());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = corpus();
+        let mut a = Loader::new(&c.train, 8, AugmentCfg::default(), 3);
+        let mut b = Loader::new(&c.train, 8, AugmentCfg::default(), 3);
+        for _ in 0..5 {
+            let (x, y) = (a.next_batch(), b.next_batch());
+            assert_eq!(x.x.data(), y.x.data());
+            assert_eq!(x.y.data(), y.y.data());
+        }
+    }
+
+    #[test]
+    fn eval_loader_is_unaugmented_and_normalized() {
+        let c = corpus();
+        let mut l1 = Loader::eval(&c.test, 32);
+        let mut l2 = Loader::eval(&c.test, 32);
+        assert_eq!(l1.next_batch().x.data(), l2.next_batch().x.data());
+        // normalized data should be roughly zero-mean
+        let mut l = Loader::eval(&c.train, 64);
+        let b = l.next_batch();
+        let mean: f32 = b.x.data().iter().sum::<f32>() / b.x.len() as f32;
+        assert!(mean.abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn wraps_final_ragged_batch() {
+        let c = corpus(); // train 64
+        let mut l = Loader::eval(&c.train, 48);
+        assert_eq!(l.batches_per_epoch(), 2);
+        l.next_batch();
+        let b = l.next_batch(); // 16 real + 32 wrapped
+        assert_eq!(b.y.data().len(), 48);
+    }
+}

@@ -1,0 +1,14 @@
+//! Data pipeline substrate: synthetic corpora, augmentation, batch loading.
+//!
+//! Stands in for the paper's CIFAR-10 / ImageNet inputs (DESIGN.md §4) with
+//! deterministic, learnable synthetic corpora that exercise the identical
+//! pipeline: generation → shuffle → pad-crop/flip augmentation → per-channel
+//! normalization → fixed-size NHWC batches.
+
+pub mod augment;
+pub mod loader;
+pub mod synthetic;
+
+pub use augment::{AugmentCfg, ChannelStats};
+pub use loader::{Batch, Loader};
+pub use synthetic::{Corpus, CorpusSpec, Split};

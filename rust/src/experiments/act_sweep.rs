@@ -1,0 +1,65 @@
+//! Tables 4/5 + Figures 8/9: accuracy-#bits trade-off at 2-bit and 3-bit
+//! activations (PACT path), across α (paper App. B.4).
+
+use anyhow::Result;
+
+use crate::coordinator::{run_bsq, write_result, BsqConfig};
+use crate::experiments::ExpOpts;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+pub fn run(engine: &Engine, opts: &ExpOpts, act_bits: usize) -> Result<()> {
+    let default: &[f32] = match act_bits {
+        2 => &[1e-3, 2e-3, 3e-3, 5e-3], // paper Table 4
+        _ => &[2e-3, 5e-3, 8e-3, 1e-2], // paper Table 5
+    };
+    let alphas = opts.alphas.clone().unwrap_or_else(|| {
+        if opts.is_fast() {
+            vec![default[0], default[default.len() - 1]] // grid endpoints
+        } else {
+            default.to_vec()
+        }
+    });
+    let (table, fig) = if act_bits == 2 { ("Table 4", "Fig 8") } else { ("Table 5", "Fig 9") };
+
+    println!("\n{table} / {fig} — {act_bits}-bit activation (PACT), resnet20");
+    println!("{:>9} {:>12} {:>9} {:>11} {:>10}", "α", "#bits/para", "Comp(×)", "preFT acc%", "FT acc%");
+    let mut rows = Vec::new();
+    for &alpha in &alphas {
+        let mut cfg = BsqConfig::for_model("resnet20");
+        cfg.alpha = alpha;
+        cfg.act_bits = act_bits;
+        opts.scale_cfg(&mut cfg);
+        let o = run_bsq(engine, &cfg)?;
+        println!(
+            "{alpha:>9.0e} {:>12.2} {:>9.2} {:>11.2} {:>10.2}",
+            o.bits_per_param,
+            o.compression,
+            100.0 * o.acc_before_ft,
+            100.0 * o.acc_after_ft
+        );
+        rows.push(Json::obj(vec![
+            ("alpha", Json::num(alpha as f64)),
+            ("act_bits", Json::num(act_bits as f64)),
+            ("bits_per_param", Json::num(o.bits_per_param)),
+            ("compression", Json::num(o.compression)),
+            ("acc_before_ft", Json::num(o.acc_before_ft as f64)),
+            ("acc_after_ft", Json::num(o.acc_after_ft as f64)),
+            ("scheme_bits", Json::arr_num(o.scheme.bits_vec().iter().map(|&b| b as f64))),
+        ]));
+    }
+    println!("{fig} — layer-wise precision per α:");
+    for r in &rows {
+        let bits: Vec<String> = r
+            .get("scheme_bits")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|b| format!("{}", b.as_usize().unwrap_or(0)))
+            .collect();
+        println!("α={:7.0e}  [{}]", r.get("alpha").unwrap().as_f64().unwrap(), bits.join(" "));
+    }
+    write_result(&opts.out_dir.join(format!("table{}.json", if act_bits == 2 { 4 } else { 5 })), &Json::Arr(rows))?;
+    Ok(())
+}

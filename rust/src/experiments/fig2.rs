@@ -1,0 +1,86 @@
+//! Figures 2 / 5 / 6: quantization schemes with vs. without the
+//! memory-consumption-aware regularization reweighing (paper §4.1, App B.2).
+//!
+//! The paper pairs α values chosen for comparable compression:
+//!   Fig 2: (5e-3 reweighed, 2e-3 plain)
+//!   Fig 5: (6e-3 reweighed, 3e-3 plain)
+//!   Fig 6: (1.5e-2 reweighed, 5e-3 plain)
+
+use anyhow::Result;
+
+use crate::coordinator::{run_bsq, write_result, BsqConfig};
+use crate::experiments::ExpOpts;
+use crate::quant::Reweigh;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+pub fn run(engine: &Engine, opts: &ExpOpts, id: &str) -> Result<()> {
+    let (a_rw, a_plain) = match id {
+        "fig5" => (6e-3f32, 3e-3f32),
+        "fig6" => (1.5e-2, 5e-3),
+        _ => (5e-3, 2e-3),
+    };
+    let mut record = Vec::new();
+    let mut lines = Vec::new();
+    for (label, alpha, policy) in [
+        ("with reweighing", a_rw, Reweigh::MemoryAware),
+        ("without reweighing", a_plain, Reweigh::None),
+    ] {
+        let mut cfg = BsqConfig::for_model("resnet20");
+        cfg.alpha = alpha;
+        cfg.reweigh = policy;
+        opts.scale_cfg(&mut cfg);
+        let o = run_bsq(engine, &cfg)?;
+        lines.push(format!(
+            "{label:<20} α={alpha:7.0e}  comp {:6.2}x  acc {:.2}%  bits {:?}",
+            o.compression,
+            100.0 * o.acc_after_ft,
+            o.scheme.bits_vec()
+        ));
+        record.push(Json::obj(vec![
+            ("label", Json::str(label)),
+            ("alpha", Json::num(alpha as f64)),
+            ("compression", Json::num(o.compression)),
+            ("acc_after_ft", Json::num(o.acc_after_ft as f64)),
+            ("scheme_bits", Json::arr_num(o.scheme.bits_vec().iter().map(|&b| b as f64))),
+            (
+                "params",
+                Json::arr_num(o.scheme.layers.iter().map(|l| l.params as f64)),
+            ),
+        ]));
+    }
+    println!("\n{} — reweighing ablation (resnet20, 4-bit act)", id);
+    for l in &lines {
+        println!("{l}");
+    }
+    // The paper's observation: without reweighing, small early layers get
+    // over-penalized and the big late layers keep too many bits. Quantify:
+    summarize_shift(&record);
+    write_result(&opts.out_dir.join(format!("{id}.json")), &Json::Arr(record))?;
+    Ok(())
+}
+
+fn summarize_shift(record: &[Json]) {
+    let bits = |r: &Json| -> Vec<f64> {
+        r.get("scheme_bits").unwrap().as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).collect()
+    };
+    let params = |r: &Json| -> Vec<f64> {
+        r.get("params").unwrap().as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).collect()
+    };
+    if record.len() != 2 {
+        return;
+    }
+    let (rw, plain) = (bits(&record[0]), bits(&record[1]));
+    let p = params(&record[0]);
+    let half = p.len() / 2;
+    let avg = |v: &[f64], lo: usize, hi: usize| {
+        v[lo..hi].iter().sum::<f64>() / (hi - lo).max(1) as f64
+    };
+    println!(
+        "early-layer avg bits: reweighed {:.2} vs plain {:.2}; late-layer: {:.2} vs {:.2}",
+        avg(&rw, 0, half),
+        avg(&plain, 0, half),
+        avg(&rw, half, p.len()),
+        avg(&plain, half, p.len()),
+    );
+}

@@ -1,0 +1,75 @@
+//! Figure 4: re-quantization interval ablation (paper App. B.1).
+//!
+//! Arms: no re-quantization during training (final only), and intervals
+//! {short, medium, long} in epochs — scaled analogues of the paper's
+//! 20/50/100 on its 350-epoch schedule. Each arm repeats over seeds and
+//! reports mean/min/max accuracy and compression.
+
+use anyhow::Result;
+
+use crate::coordinator::{run_bsq, write_result, BsqConfig};
+use crate::experiments::ExpOpts;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
+    let base = {
+        let mut cfg = BsqConfig::for_model("resnet20");
+        opts.scale_cfg(&mut cfg);
+        cfg
+    };
+    // paper: 350-epoch schedule with intervals {none, 20, 50, 100} →
+    // fractions of the phase: {0, 0.06, 0.14, 0.29}
+    let intervals: Vec<(String, usize)> = [0.0f32, 0.06, 0.14, 0.29]
+        .iter()
+        .map(|f| {
+            let iv = (*f * base.bsq_epochs as f32).round() as usize;
+            let label = if *f == 0.0 {
+                "none".to_string()
+            } else {
+                format!("int {}", iv.max(1))
+            };
+            (label, if *f == 0.0 { 0 } else { iv.max(1) })
+        })
+        .collect();
+
+    let mut record = Vec::new();
+    println!("\nFigure 4 — re-quantization interval ablation (resnet20)");
+    println!("{:>8} {:>7} {:>9} {:>9} {:>9} {:>9}", "arm", "seeds", "acc mean", "acc min", "acc max", "comp");
+    for (label, interval) in intervals {
+        let mut accs = Vec::new();
+        let mut comps = Vec::new();
+        for &seed in &opts.seeds {
+            let mut cfg = base.clone();
+            cfg.requant_interval = interval;
+            cfg.seed = seed;
+            let o = run_bsq(engine, &cfg)?;
+            accs.push(o.acc_after_ft as f64);
+            comps.push(o.compression);
+        }
+        let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+        let min = accs.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = accs.iter().cloned().fold(0.0, f64::max);
+        let comp = comps.iter().sum::<f64>() / comps.len() as f64;
+        println!(
+            "{label:>8} {:>7} {:>9.2} {:>9.2} {:>9.2} {:>9.2}",
+            accs.len(),
+            100.0 * mean,
+            100.0 * min,
+            100.0 * max,
+            comp
+        );
+        record.push(Json::obj(vec![
+            ("arm", Json::str(label)),
+            ("interval_epochs", Json::num(interval as f64)),
+            ("acc_mean", Json::num(mean)),
+            ("acc_min", Json::num(min)),
+            ("acc_max", Json::num(max)),
+            ("compression_mean", Json::num(comp)),
+            ("accs", Json::arr_num(accs)),
+            ("compressions", Json::arr_num(comps)),
+        ]));
+    }
+    write_result(&opts.out_dir.join("fig4.json"), &Json::Arr(record))?;
+    Ok(())
+}

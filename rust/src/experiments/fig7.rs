@@ -1,0 +1,57 @@
+//! Figure 7 (App. B.3): BSQ's discovered precision ranking vs HAWQ's
+//! Hessian-importance ranking on ResNet-20, with Spearman correlation.
+
+use anyhow::Result;
+
+use crate::baselines::hawq::{analyze, HawqConfig};
+use crate::coordinator::bsq::pretrain;
+use crate::coordinator::{BsqConfig, History, Session};
+use crate::experiments::ExpOpts;
+use crate::quant::spearman;
+use crate::runtime::Engine;
+use crate::util::json::{parse, Json};
+
+pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
+    let mut cfg = BsqConfig::for_model("resnet20");
+    opts.scale_cfg(&mut cfg);
+    let session = Session::open(engine, "resnet20", cfg.train_size, cfg.test_size, cfg.seed)?;
+
+    // HAWQ importance on the pretrained fp model (cached pretrain reused).
+    let mut hist = History::default();
+    let state = pretrain(&session, &cfg, &mut hist)?;
+    let report = analyze(&session, &state, &HawqConfig::default())?;
+
+    println!("\nFigure 7 — BSQ precision vs HAWQ importance (resnet20)");
+    println!("HAWQ importance S_i = λ_i/n_i (log10):");
+    for (q, s) in session.man.qlayers.iter().zip(&report.importance) {
+        println!("  {:<10} λ/n = {:10.3e}", q.name, s);
+    }
+
+    // BSQ schemes from the table1 record (if present) for the correlation.
+    let t1 = opts.out_dir.join("table1.json");
+    let mut record = vec![(
+        "hawq_importance".to_string(),
+        Json::arr_num(report.importance.clone()),
+    )];
+    if let Ok(text) = std::fs::read_to_string(&t1) {
+        let rows = parse(&text)?;
+        for r in rows.as_arr()? {
+            let alpha = r.req("alpha")?.as_f64()?;
+            let bits: Vec<f64> = r
+                .req("scheme_bits")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_f64().unwrap())
+                .collect();
+            let rho = spearman(&bits, &report.importance);
+            println!("α={alpha:7.0e}: Spearman(BSQ bits, HAWQ importance) = {rho:+.3}");
+            record.push((format!("spearman_alpha_{alpha:e}"), Json::num(rho)));
+        }
+    } else {
+        println!("(run `experiment table1` first for the BSQ-vs-HAWQ correlation rows)");
+    }
+
+    let obj = Json::Obj(record.into_iter().map(|(k, v)| (k, v)).collect());
+    crate::coordinator::write_result(&opts.out_dir.join("fig7.json"), &obj)?;
+    Ok(())
+}

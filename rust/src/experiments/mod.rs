@@ -1,0 +1,94 @@
+//! Experiment harnesses: one per paper table/figure (DESIGN.md §7).
+//!
+//! Each harness runs the workload, prints the same rows/series the paper
+//! reports, and writes a machine-readable record under `results/`.
+//! Defaults are the testbed-scaled fast profiles recorded in
+//! EXPERIMENTS.md; `--epochs-scale`/`--data-scale` grow them toward the
+//! paper's full schedules.
+
+pub mod act_sweep;
+pub mod fig2;
+pub mod fig4;
+pub mod fig7;
+pub mod schemes;
+pub mod table1;
+pub mod table2;
+pub mod table3;
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Engine;
+
+/// Shared experiment options (from CLI flags).
+#[derive(Debug, Clone)]
+pub struct ExpOpts {
+    /// Scale factor on the default (fast) epoch counts.
+    pub epochs_scale: f32,
+    /// Scale factor on the default corpus sizes.
+    pub data_scale: f32,
+    /// Override α list where applicable.
+    pub alphas: Option<Vec<f32>>,
+    /// Seeds for repeated runs (Fig. 4).
+    pub seeds: Vec<u64>,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            epochs_scale: 1.0,
+            data_scale: 1.0,
+            alphas: None,
+            seeds: vec![0],
+            out_dir: PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("results"),
+        }
+    }
+}
+
+impl ExpOpts {
+    /// Abbreviated recorded profile? (smaller default α grids)
+    pub fn is_fast(&self) -> bool {
+        self.epochs_scale < 1.0 || self.data_scale < 1.0
+    }
+
+    pub fn scale_cfg(&self, cfg: &mut crate::coordinator::BsqConfig) {
+        let e = |n: usize| ((n as f32 * self.epochs_scale).round() as usize).max(1);
+        cfg.pretrain_epochs = e(cfg.pretrain_epochs);
+        cfg.bsq_epochs = e(cfg.bsq_epochs);
+        cfg.finetune_epochs = e(cfg.finetune_epochs);
+        let d = |n: usize| ((n as f32 * self.data_scale).round() as usize).max(64);
+        cfg.train_size = d(cfg.train_size);
+        cfg.test_size = d(cfg.test_size);
+    }
+}
+
+/// Dispatch by experiment id.
+pub fn run(engine: &Engine, id: &str, opts: &ExpOpts) -> Result<()> {
+    match id {
+        "table1" => table1::run(engine, opts),
+        "table2" => table2::run(engine, opts),
+        "table3" => table3::run(engine, opts),
+        "table4" | "fig8" => act_sweep::run(engine, opts, 2),
+        "table5" | "fig9" => act_sweep::run(engine, opts, 3),
+        "table6" | "table7" => schemes::run(opts, id),
+        "fig2" | "fig5" | "fig6" => fig2::run(engine, opts, id),
+        "fig3" => table1::print_fig3(opts),
+        "fig4" => fig4::run(engine, opts),
+        "fig7" => fig7::run(engine, opts),
+        "all" => {
+            for id in [
+                "table1", "fig3", "fig2", "fig4", "fig7", "table4", "table5", "table3",
+                "table6", "table7", "table2",
+            ] {
+                log::info!("=== experiment {id} ===");
+                if let Err(e) = run(engine, id, opts) {
+                    log::error!("experiment {id} failed: {e:#}");
+                }
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment {other:?} (see DESIGN.md §7)"),
+    }
+}

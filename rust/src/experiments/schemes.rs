@@ -1,0 +1,28 @@
+//! Tables 6/7: detailed per-layer quantization schemes of the Table 3 runs
+//! (ResNet-50 twin for Table 6, Inception twin for Table 7), printed from
+//! the table3 record.
+
+use anyhow::{anyhow, Result};
+
+use crate::experiments::ExpOpts;
+use crate::util::json::parse;
+
+pub fn run(opts: &ExpOpts, id: &str) -> Result<()> {
+    let model = if id == "table6" { "resnet50_sim" } else { "inception_sim" };
+    let path = opts.out_dir.join("table3.json");
+    let text = std::fs::read_to_string(&path)
+        .map_err(|e| anyhow!("{e}: run `experiment table3` first ({})", path.display()))?;
+    let rows = parse(&text)?;
+
+    println!("\n{} — per-layer schemes of the {model} runs", if id == "table6" { "Table 6" } else { "Table 7" });
+    for r in rows.as_arr()? {
+        if r.req("model")?.as_str()? != model || r.get("scheme").is_none() {
+            continue;
+        }
+        println!("\n{}:", r.req("method")?.as_str()?);
+        for l in r.req("scheme")?.as_arr()? {
+            println!("  {:<12} {:>2} bits", l.req("name")?.as_str()?, l.req("bits")?.as_usize()?);
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,104 @@
+//! Table 1 + Figure 3: accuracy-#bits trade-off of ResNet-20 under
+//! different regularization strengths α (4-bit activations), plus the
+//! "train from scratch at the BSQ scheme" comparison row.
+
+use anyhow::Result;
+
+use crate::baselines::dorefa;
+use crate::coordinator::{run_bsq, write_result, BsqConfig, Session, StepDecay};
+use crate::experiments::ExpOpts;
+use crate::runtime::Engine;
+use crate::util::json::{parse, Json};
+
+pub const DEFAULT_ALPHAS: &[f32] = &[3e-3, 5e-3, 7e-3, 1e-2, 2e-2];
+
+pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
+    let alphas = opts.alphas.clone().unwrap_or_else(|| {
+        if opts.is_fast() {
+            vec![3e-3, 5e-3, 2e-2] // fast recorded profile: ends + middle
+        } else {
+            DEFAULT_ALPHAS.to_vec()
+        }
+    });
+    let mut rows = Vec::new();
+
+    for &alpha in &alphas {
+        let mut cfg = BsqConfig::for_model("resnet20");
+        cfg.alpha = alpha;
+        cfg.act_bits = 4;
+        opts.scale_cfg(&mut cfg);
+        let outcome = run_bsq(engine, &cfg)?;
+
+        // "Train from scratch" row: DoReFa QAT at the BSQ-discovered scheme.
+        let session = Session::open(engine, "resnet20", cfg.train_size, cfg.test_size, cfg.seed)?;
+        let scratch_epochs =
+            (cfg.pretrain_epochs + cfg.bsq_epochs + cfg.finetune_epochs).max(1);
+        let mut qat = dorefa::QatConfig::from_scratch(scratch_epochs, 4, cfg.seed);
+        qat.schedule = StepDecay::pretrain();
+        let scratch = dorefa::train_from_scratch(&session, &outcome.scheme, &qat)?;
+
+        println!(
+            "α={alpha:7.0e}  {:.2} bits/para  {:6.2}x  BSQ acc {:.2}%/{:.2}%  scratch {:.2}%",
+            outcome.bits_per_param,
+            outcome.compression,
+            100.0 * outcome.acc_before_ft,
+            100.0 * outcome.acc_after_ft,
+            100.0 * scratch.final_acc,
+        );
+        rows.push(Json::obj(vec![
+            ("alpha", Json::num(alpha as f64)),
+            ("bits_per_param", Json::num(outcome.bits_per_param)),
+            ("compression", Json::num(outcome.compression)),
+            ("acc_before_ft", Json::num(outcome.acc_before_ft as f64)),
+            ("acc_after_ft", Json::num(outcome.acc_after_ft as f64)),
+            ("train_from_scratch_acc", Json::num(scratch.final_acc as f64)),
+            (
+                "scheme_bits",
+                Json::arr_num(outcome.scheme.bits_vec().iter().map(|&b| b as f64)),
+            ),
+            ("outcome", outcome.to_json()),
+        ]));
+    }
+
+    print_table(&rows);
+    write_result(&opts.out_dir.join("table1.json"), &Json::Arr(rows))?;
+    Ok(())
+}
+
+fn print_table(rows: &[Json]) {
+    println!("\nTable 1 — Accuracy-#Bits trade-off (resnet20, 4-bit act, synthetic CIFAR)");
+    println!(
+        "{:>9} {:>14} {:>9} {:>12} {:>11} {:>13}",
+        "α", "#bits/para", "Comp(×)", "acc preFT%", "acc FT%", "scratch acc%"
+    );
+    for r in rows {
+        println!(
+            "{:>9.0e} {:>14.2} {:>9.2} {:>12.2} {:>11.2} {:>13.2}",
+            r.get("alpha").unwrap().as_f64().unwrap(),
+            r.get("bits_per_param").unwrap().as_f64().unwrap(),
+            r.get("compression").unwrap().as_f64().unwrap(),
+            100.0 * r.get("acc_before_ft").unwrap().as_f64().unwrap(),
+            100.0 * r.get("acc_after_ft").unwrap().as_f64().unwrap(),
+            100.0 * r.get("train_from_scratch_acc").unwrap().as_f64().unwrap(),
+        );
+    }
+}
+
+/// Figure 3: per-layer precision by α, printed from the table1 record.
+pub fn print_fig3(opts: &ExpOpts) -> Result<()> {
+    let path = opts.out_dir.join("table1.json");
+    let rows = parse(&std::fs::read_to_string(&path).map_err(|e| {
+        anyhow::anyhow!("{e}: run `experiment table1` first to produce {}", path.display())
+    })?)?;
+    println!("\nFigure 3 — layer-wise precision vs α (resnet20)");
+    for r in rows.as_arr()? {
+        let bits: Vec<String> = r
+            .req("scheme_bits")?
+            .as_arr()?
+            .iter()
+            .map(|b| format!("{}", b.as_usize().unwrap_or(0)))
+            .collect();
+        println!("α={:7.0e}  [{}]", r.req("alpha")?.as_f64()?, bits.join(" "));
+    }
+    Ok(())
+}

@@ -1,0 +1,31 @@
+//! # bsq — BSQ (ICLR 2021) reproduction
+//!
+//! Bit-level sparsity for mixed-precision neural-network quantization
+//! (Yang, Duan, Chen & Li), built as a three-layer Rust + JAX + Pallas
+//! system: Pallas kernels (L1) and JAX training graphs (L2) are AOT-lowered
+//! to HLO text at build time; this crate (L3) owns everything at runtime —
+//! data pipeline, training orchestration, the dynamic precision-adjustment
+//! state machine, baselines, and the experiment harnesses that regenerate
+//! every table and figure of the paper. See DESIGN.md.
+//!
+//! Layout:
+//! * [`util`] — offline substrates (JSON, PRNG, CLI, bench harness, logging)
+//! * [`tensor`] — host tensors
+//! * [`quant`] — bit planes, re-quantization/precision adjustment (§3.3),
+//!   scheme accounting, Eq. 5 reweighing
+//! * [`data`] — synthetic corpora + augmentation + loaders
+//! * [`runtime`] — PJRT engine + artifact manifests
+//! * [`model`] — named state maps + checkpoints
+//! * [`coordinator`] — training pipelines (pretrain → BSQ → finetune)
+//! * [`baselines`] — DoReFa / PACT / LSQ / HAWQ comparators
+//! * [`experiments`] — per-table/figure harnesses
+
+pub mod baselines;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,227 @@
+//! bsq-repro — leader binary for the BSQ (ICLR 2021) reproduction.
+//!
+//! Subcommands:
+//!   bsq        run the full BSQ pipeline on one model/α
+//!   dorefa     DoReFa QAT from scratch at a uniform precision
+//!   hawq       Hessian-importance analysis of a pretrained model
+//!   eval       evaluate a checkpoint
+//!   experiment regenerate a paper table/figure (table1…table7, fig2…fig9, all)
+//!   info       list models/artifacts and their shapes
+//!
+//! Examples:
+//!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4
+//!   bsq-repro experiment table1 --alphas 3e-3,5e-3,2e-2
+//!   bsq-repro experiment all --epochs-scale 0.5
+//!   bsq-repro hawq --model resnet20
+
+use anyhow::{bail, Context, Result};
+use bsq::baselines::{self, QatConfig};
+use bsq::coordinator::{run_bsq, write_result, BsqConfig, Session};
+use bsq::experiments::{self, ExpOpts};
+use bsq::model::ModelState;
+use bsq::quant::{QuantScheme, Reweigh};
+use bsq::runtime::Engine;
+use bsq::util::cli::Args;
+
+fn main() {
+    bsq::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info> [flags]\n\
+         run `bsq-repro <cmd> --help` conceptually via README.md §CLI"
+    );
+    std::process::exit(2);
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::from_env()?;
+    let cmd = match args.take_positional(0) {
+        Some(c) => c,
+        None => usage(),
+    };
+    match cmd.as_str() {
+        "bsq" => cmd_bsq(args),
+        "dorefa" => cmd_dorefa(args),
+        "hawq" => cmd_hawq(args),
+        "eval" => cmd_eval(args),
+        "experiment" => cmd_experiment(args),
+        "info" => cmd_info(args),
+        _ => usage(),
+    }
+}
+
+fn bsq_cfg_from_args(args: &mut Args) -> Result<BsqConfig> {
+    let model = args.str_or("model", "resnet20")?;
+    let mut cfg = BsqConfig::for_model(&model);
+    cfg.alpha = args.get_or("alpha", cfg.alpha)?;
+    cfg.act_bits = args.get_or("act-bits", cfg.act_bits)?;
+    cfg.act_first_last = args.get_or("act-first-last", cfg.act_first_last)?;
+    cfg.init_bits = args.get_or("init-bits", cfg.init_bits)?;
+    cfg.pretrain_epochs = args.get_or("pretrain-epochs", cfg.pretrain_epochs)?;
+    cfg.bsq_epochs = args.get_or("bsq-epochs", cfg.bsq_epochs)?;
+    cfg.finetune_epochs = args.get_or("finetune-epochs", cfg.finetune_epochs)?;
+    cfg.requant_interval = args.get_or("requant-interval", cfg.requant_interval)?;
+    cfg.weight_decay = args.get_or("weight-decay", cfg.weight_decay)?;
+    cfg.seed = args.get_or("seed", cfg.seed)?;
+    cfg.train_size = args.get_or("train-size", cfg.train_size)?;
+    cfg.test_size = args.get_or("test-size", cfg.test_size)?;
+    cfg.eval_batches = args.get_or("eval-batches", cfg.eval_batches)?;
+    cfg.alpha_ref_steps = args.get_or("alpha-ref-steps", cfg.alpha_ref_steps)?;
+    if args.flag("no-reweigh") {
+        cfg.reweigh = Reweigh::None;
+    }
+    if args.flag("no-cache") {
+        cfg.cache_pretrained = false;
+    }
+    Ok(cfg)
+}
+
+fn cmd_bsq(mut args: Args) -> Result<()> {
+    let cfg = bsq_cfg_from_args(&mut args)?;
+    let out = args.str_or("out", "results/bsq_run.json")?;
+    args.finish()?;
+    let engine = Engine::cpu()?;
+    let outcome = run_bsq(&engine, &cfg)?;
+    println!("{}", outcome.scheme);
+    println!(
+        "acc before finetune {:.2}%  after {:.2}%  ({:.2} bits/param, {:.2}x)",
+        100.0 * outcome.acc_before_ft,
+        100.0 * outcome.acc_after_ft,
+        outcome.bits_per_param,
+        outcome.compression
+    );
+    write_result(std::path::Path::new(&out), &outcome.to_json())?;
+    println!("record written to {out}");
+    Ok(())
+}
+
+fn cmd_dorefa(mut args: Args) -> Result<()> {
+    let model = args.str_or("model", "resnet20")?;
+    let bits: usize = args.get_or("bits", 3)?;
+    let act_bits: usize = args.get_or("act-bits", 4)?;
+    let epochs: usize = args.get_or("epochs", 12)?;
+    let train_size: usize = args.get_or("train-size", 1024)?;
+    let test_size: usize = args.get_or("test-size", 512)?;
+    let seed: u64 = args.get_or("seed", 0)?;
+    args.finish()?;
+
+    let engine = Engine::cpu()?;
+    let session = Session::open(&engine, &model, train_size, test_size, seed)?;
+    let names: Vec<(String, usize)> =
+        session.man.qlayers.iter().map(|q| (q.name.clone(), q.params)).collect();
+    let scheme = QuantScheme::uniform(&names, bits);
+    let out = baselines::dorefa::train_from_scratch(
+        &session,
+        &scheme,
+        &QatConfig::from_scratch(epochs, act_bits, seed),
+    )?;
+    println!(
+        "DoReFa {model} w{bits}a{act_bits}: final acc {:.2}% (best {:.2}%), comp {:.2}x",
+        100.0 * out.final_acc,
+        100.0 * out.best_acc,
+        scheme.compression()
+    );
+    Ok(())
+}
+
+fn cmd_hawq(mut args: Args) -> Result<()> {
+    let model = args.str_or("model", "resnet20")?;
+    let ckpt = args.opt_str("checkpoint")?;
+    let train_size: usize = args.get_or("train-size", 512)?;
+    let iters: usize = args.get_or("power-iters", 6)?;
+    args.finish()?;
+
+    let engine = Engine::cpu()?;
+    let session = Session::open(&engine, &model, train_size, 128, 0)?;
+    let state = match ckpt {
+        Some(p) => bsq::model::checkpoint::load(std::path::Path::new(&p))?,
+        None => {
+            log::warn!("no --checkpoint given; analyzing a freshly initialized model");
+            ModelState::init_fp(&session.man, 0)
+        }
+    };
+    let report = baselines::hawq::analyze(
+        &session,
+        &state,
+        &baselines::HawqConfig { power_iters: iters, ..Default::default() },
+    )?;
+    println!("{:<12} {:>12} {:>14}", "layer", "λ_max", "S = λ/n");
+    for (i, q) in session.man.qlayers.iter().enumerate() {
+        println!("{:<12} {:>12.4e} {:>14.4e}", q.name, report.eigenvalues[i], report.importance[i]);
+    }
+    println!("ranking (most → least important): {:?}", report.ranking);
+    Ok(())
+}
+
+fn cmd_eval(mut args: Args) -> Result<()> {
+    let model = args.str_or("model", "resnet20")?;
+    let ckpt = args.opt_str("checkpoint")?.context("--checkpoint required")?;
+    let act_bits: usize = args.get_or("act-bits", 4)?;
+    let test_size: usize = args.get_or("test-size", 512)?;
+    args.finish()?;
+
+    let engine = Engine::cpu()?;
+    let session = Session::open(&engine, &model, 64, test_size, 0)?;
+    let mut state = bsq::model::checkpoint::load(std::path::Path::new(&ckpt))?;
+    let bit_mode = state.contains(&format!("wp:{}", session.man.qlayers[0].name));
+    let exe = session.artifact(if bit_mode { "q_eval_relu6" } else { "fp_eval_relu6" })?;
+    let actlv = session.act_levels(act_bits, 8);
+    let (loss, acc) = session.evaluate(
+        &exe,
+        &mut state,
+        &bsq::runtime::RunInputs::default().vec("actlv", actlv),
+        usize::MAX,
+    )?;
+    println!("{model} ({}): loss {loss:.4} acc {:.2}%", if bit_mode { "bit-rep" } else { "fp" }, 100.0 * acc);
+    Ok(())
+}
+
+fn cmd_experiment(mut args: Args) -> Result<()> {
+    let id = args.take_positional(1).unwrap_or_else(|| "all".to_string());
+    let mut opts = ExpOpts::default();
+    opts.epochs_scale = args.get_or("epochs-scale", 1.0f32)?;
+    opts.data_scale = args.get_or("data-scale", 1.0f32)?;
+    opts.alphas = args.list("alphas")?;
+    if let Some(seeds) = args.list::<u64>("seeds")? {
+        opts.seeds = seeds;
+    }
+    if let Some(out) = args.opt_str("out-dir")? {
+        opts.out_dir = out.into();
+    }
+    args.finish()?;
+    let engine = Engine::cpu()?;
+    experiments::run(&engine, &id, &opts)
+}
+
+fn cmd_info(args: Args) -> Result<()> {
+    args.finish()?;
+    let root = bsq::runtime::artifacts_root();
+    if !root.exists() {
+        bail!("no artifacts at {} — run `make artifacts`", root.display());
+    }
+    for entry in std::fs::read_dir(&root)? {
+        let dir = entry?.path();
+        if !dir.join("manifest.json").exists() {
+            continue;
+        }
+        let man = bsq::runtime::Manifest::load(&dir)?;
+        println!(
+            "{:<14} batch {:>3}  {:>2} layers  {:>9} params  {} artifacts",
+            man.model,
+            man.batch,
+            man.qlayers.len(),
+            man.total_params(),
+            man.artifacts.len()
+        );
+        for (name, a) in &man.artifacts {
+            println!("    {:<22} {:>3} in / {:>3} out", name, a.inputs.len(), a.outputs.len());
+        }
+    }
+    Ok(())
+}

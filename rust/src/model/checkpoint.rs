@@ -1,0 +1,129 @@
+//! Checkpointing: ModelState ⇄ a small self-describing binary format.
+//!
+//! Format (little-endian):
+//!   magic "BSQCKPT1" | u32 entry count | entries…
+//!   entry: u32 key len | key utf8 | u32 ndim | u64 dims… | f32 data…
+//!
+//! Plus a JSON sidecar (`.meta.json`) carrying run metadata (model name,
+//! phase, epoch, scheme) for human inspection.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::state::ModelState;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"BSQCKPT1";
+
+pub fn save(state: &ModelState, path: &Path, meta: &Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(MAGIC)?;
+    w.write_all(&(state.len() as u32).to_le_bytes())?;
+    for (key, t) in state.iter() {
+        w.write_all(&(key.len() as u32).to_le_bytes())?;
+        w.write_all(key.as_bytes())?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        let bytes = unsafe {
+            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+        };
+        w.write_all(bytes)?;
+    }
+    w.flush()?;
+    std::fs::write(path.with_extension("meta.json"), meta.to_string_pretty())?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<ModelState> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{path:?} is not a BSQ checkpoint");
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut state = ModelState::new();
+    for _ in 0..count {
+        let klen = read_u32(&mut r)? as usize;
+        if klen > 1 << 16 {
+            bail!("corrupt checkpoint: key length {klen}");
+        }
+        let mut kbuf = vec![0u8; klen];
+        r.read_exact(&mut kbuf)?;
+        let key = String::from_utf8(kbuf)?;
+        let ndim = read_u32(&mut r)? as usize;
+        if ndim > 16 {
+            bail!("corrupt checkpoint: ndim {ndim}");
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let bytes = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
+        };
+        r.read_exact(bytes)?;
+        state.insert(key, Tensor::new(shape, data)?);
+    }
+    Ok(state)
+}
+
+pub fn load_meta(path: &Path) -> Result<Json> {
+    let text = std::fs::read_to_string(path.with_extension("meta.json"))?;
+    crate::util::json::parse(&text)
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg32::seeded(0);
+        let mut s = ModelState::new();
+        s.insert("w:conv1".into(), Tensor::randn(&[3, 3, 2, 4], 0.5, &mut rng));
+        s.insert("scale:conv1".into(), Tensor::scalar(0.7));
+        s.insert("mask:conv1".into(), Tensor::full(&[9], 1.0));
+        let dir = std::env::temp_dir().join(format!("bsq_ckpt_{}", std::process::id()));
+        let path = dir.join("test.ckpt");
+        let meta = Json::obj(vec![("model", Json::str("tinynet")), ("epoch", Json::num(3.0))]);
+        save(&s, &path, &meta).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded.get("w:conv1").unwrap(), s.get("w:conv1").unwrap());
+        assert_eq!(loaded.get("scale:conv1").unwrap().item().unwrap(), 0.7);
+        let m = load_meta(&path).unwrap();
+        assert_eq!(m.req("epoch").unwrap().as_usize().unwrap(), 3);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir();
+        let path = dir.join(format!("bsq_not_ckpt_{}", std::process::id()));
+        std::fs::write(&path, b"garbage!").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,6 @@
+//! Model state management: named parameter maps + checkpointing.
+
+pub mod checkpoint;
+pub mod state;
+
+pub use state::{momentum_slots, ModelState};

@@ -1,0 +1,265 @@
+//! Model state: the named tensor map the coordinator owns.
+//!
+//! Keys follow the shared convention in `python/compile/statespec.py`
+//! (w:, wp:, wn:, mask:, scale:, bn:, pact:, step:, m: prefixes). The state
+//! is initialized host-side from manifest metadata (He init for weights,
+//! identity BN, zero momenta) and marshalled to/from device literals by
+//! `runtime::exec`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::quant::bitplane::BitRep;
+use crate::runtime::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+#[derive(Debug, Clone, Default)]
+pub struct ModelState {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl ModelState {
+    pub fn new() -> ModelState {
+        ModelState { map: BTreeMap::new() }
+    }
+
+    /// Fresh float-training state for a manifest: He-initialized weights,
+    /// zero biases, identity BN, zero momenta for every trainable.
+    pub fn init_fp(man: &Manifest, seed: u64) -> ModelState {
+        let mut rng = Pcg32::new(seed, 101);
+        let mut s = ModelState::new();
+        for q in &man.qlayers {
+            s.insert(format!("w:{}", q.name), Tensor::he_init(&q.shape, &mut rng));
+        }
+        for d in &man.dense_bias {
+            let out = man
+                .qlayers
+                .iter()
+                .find(|q| &q.name == d)
+                .map(|q| *q.shape.last().unwrap())
+                .unwrap_or(man.num_classes);
+            s.insert(format!("w:{d}/b"), Tensor::zeros(&[out]));
+        }
+        for n in &man.bn_names {
+            let c = man
+                .qlayers
+                .iter()
+                .find(|q| &q.name == n)
+                .map(|q| *q.shape.last().unwrap())
+                .expect("bn without conv");
+            s.insert(format!("bn:{n}/gamma"), Tensor::full(&[c], 1.0));
+            s.insert(format!("bn:{n}/beta"), Tensor::zeros(&[c]));
+            s.insert(format!("bn:{n}/mean"), Tensor::zeros(&[c]));
+            s.insert(format!("bn:{n}/var"), Tensor::full(&[c], 1.0));
+        }
+        s
+    }
+
+    /// Add PACT clip parameters (one per activation site, init 6.0).
+    pub fn add_pact(&mut self, man: &Manifest) {
+        for site in &man.act_sites {
+            self.insert(format!("pact:{site}"), Tensor::scalar(6.0));
+        }
+    }
+
+    /// Add LSQ step sizes (one per layer, init from max|w|/levels at 8-bit).
+    pub fn add_lsq_steps(&mut self, man: &Manifest) -> Result<()> {
+        for q in &man.qlayers {
+            let w = self.get(&format!("w:{}", q.name))?;
+            let step = (w.max_abs() / 255.0).max(1e-6);
+            self.insert(format!("step:{}", q.name), Tensor::scalar(step));
+        }
+        Ok(())
+    }
+
+    /// Ensure a zero momentum buffer `m:<key>` exists for every key an
+    /// artifact wants (idempotent — call before running any train artifact).
+    pub fn ensure_momenta(&mut self, wanted: &[(String, Vec<usize>)]) {
+        for (name, shape) in wanted {
+            if !self.map.contains_key(name) {
+                self.insert(name.clone(), Tensor::zeros(shape));
+            }
+        }
+    }
+
+    /// Drop all momentum buffers (fresh optimizer for a new phase).
+    pub fn reset_momenta(&mut self) {
+        self.map.retain(|k, _| !k.starts_with("m:"));
+    }
+
+    // -- bit representation --------------------------------------------------
+
+    /// Convert fp weights to the bit representation (start of BSQ training):
+    /// installs wp:/wn:/mask:/scale: and removes the float master weights.
+    pub fn to_bit_representation(&mut self, man: &Manifest, init_bits: usize) -> Result<()> {
+        let bits = vec![init_bits; man.qlayers.len()];
+        self.to_bit_representation_per_layer(man, &bits)
+    }
+
+    /// Per-layer initial precisions (the paper's ImageNet setting quantizes
+    /// the leading convolutions at 8-bit and the rest at 6-bit).
+    pub fn to_bit_representation_per_layer(&mut self, man: &Manifest, bits: &[usize]) -> Result<()> {
+        if bits.len() != man.qlayers.len() {
+            bail!("{} init precisions for {} layers", bits.len(), man.qlayers.len());
+        }
+        for (q, &n) in man.qlayers.iter().zip(bits) {
+            let key = format!("w:{}", q.name);
+            let w = self.map.remove(&key).ok_or_else(|| anyhow!("missing {key}"))?;
+            let rep = crate::quant::to_bitplanes(&w, n)?;
+            self.install_bitrep(&q.name, rep);
+        }
+        self.reset_momenta();
+        Ok(())
+    }
+
+    /// Materialize fp weights from the bit representation (for finetuning at
+    /// a frozen scheme): installs w: keys, keeps the bit state intact.
+    pub fn bit_to_fp_weights(&mut self, man: &Manifest) -> Result<()> {
+        for q in &man.qlayers {
+            let rep = self.bitrep(&q.name)?;
+            let w = crate::quant::from_bitplanes(&rep);
+            self.insert(format!("w:{}", q.name), w);
+        }
+        Ok(())
+    }
+
+    pub fn install_bitrep(&mut self, layer: &str, rep: BitRep) {
+        self.insert(format!("wp:{layer}"), rep.wp);
+        self.insert(format!("wn:{layer}"), rep.wn);
+        self.insert(format!("mask:{layer}"), rep.mask);
+        self.insert(format!("scale:{layer}"), Tensor::scalar(rep.scale));
+    }
+
+    /// Borrowed view of a layer's bit representation (clones tensors; plane
+    /// tensors are the dominant cost and this runs only at re-quantization).
+    pub fn bitrep(&self, layer: &str) -> Result<BitRep> {
+        Ok(BitRep {
+            wp: self.get(&format!("wp:{layer}"))?.clone(),
+            wn: self.get(&format!("wn:{layer}"))?.clone(),
+            mask: self.get(&format!("mask:{layer}"))?.clone(),
+            scale: self.get(&format!("scale:{layer}"))?.item()?,
+        })
+    }
+
+    /// Per-layer active-bit counts, in manifest layer order.
+    pub fn bits_by_layer(&self, man: &Manifest) -> Result<Vec<usize>> {
+        man.qlayers
+            .iter()
+            .map(|q| {
+                let m = self.get(&format!("mask:{}", q.name))?;
+                Ok(m.data().iter().filter(|&&v| v != 0.0).count())
+            })
+            .collect()
+    }
+
+    // -- map plumbing ---------------------------------------------------------
+
+    pub fn insert(&mut self, key: String, t: Tensor) {
+        self.map.insert(key, t);
+    }
+
+    pub fn get(&self, key: &str) -> Result<&Tensor> {
+        self.map.get(key).ok_or_else(|| anyhow!("state missing key {key:?}"))
+    }
+
+    pub fn get_mut(&mut self, key: &str) -> Result<&mut Tensor> {
+        self.map.get_mut(key).ok_or_else(|| anyhow!("state missing key {key:?}"))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn remove(&mut self, key: &str) -> Option<Tensor> {
+        self.map.remove(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.map.keys()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&String, &Tensor)> {
+        self.map.iter()
+    }
+
+    /// Validate that every `state`/input the artifact wants exists with the
+    /// right shape (momenta are auto-created by `ensure_momenta` first).
+    pub fn check_against(&self, inputs: &[crate::runtime::manifest::IoItem]) -> Result<()> {
+        use crate::runtime::manifest::Role;
+        for item in inputs {
+            if item.role == Role::State {
+                let t = self.get(&item.name)?;
+                if t.shape() != item.shape.as_slice() {
+                    bail!(
+                        "state {}: shape {:?} ≠ artifact {:?}",
+                        item.name,
+                        t.shape(),
+                        item.shape
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Momentum keys an artifact requires, derived from its input spec.
+pub fn momentum_slots(inputs: &[crate::runtime::manifest::IoItem]) -> Vec<(String, Vec<usize>)> {
+    inputs
+        .iter()
+        .filter(|i| i.name.starts_with("m:"))
+        .map(|i| (i.name.clone(), i.shape.clone()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitplane::{packed_mask, NB};
+
+    #[test]
+    fn map_basics() {
+        let mut s = ModelState::new();
+        s.insert("a".into(), Tensor::scalar(1.0));
+        assert!(s.contains("a"));
+        assert!(s.get("b").is_err());
+        assert_eq!(s.get("a").unwrap().item().unwrap(), 1.0);
+        s.reset_momenta();
+        assert_eq!(s.len(), 1);
+        s.insert("m:a".into(), Tensor::scalar(0.0));
+        s.reset_momenta();
+        assert!(!s.contains("m:a"));
+    }
+
+    #[test]
+    fn bitrep_roundtrip_via_state() {
+        let mut s = ModelState::new();
+        let w = Tensor::new(vec![4], vec![0.5, -0.25, 0.75, -1.0]).unwrap();
+        let rep = crate::quant::to_bitplanes(&w, 8).unwrap();
+        s.install_bitrep("conv1", rep);
+        let back = s.bitrep("conv1").unwrap();
+        assert_eq!(back.bits(), 8);
+        assert_eq!(back.wp.shape(), &[NB, 4]);
+        assert_eq!(back.mask.data(), packed_mask(8).data());
+    }
+
+    #[test]
+    fn ensure_momenta_idempotent() {
+        let mut s = ModelState::new();
+        let slots = vec![("m:w:x".to_string(), vec![3usize])];
+        s.ensure_momenta(&slots);
+        s.get_mut("m:w:x").unwrap().data_mut()[0] = 5.0;
+        s.ensure_momenta(&slots); // must not reset existing buffer
+        assert_eq!(s.get("m:w:x").unwrap().data()[0], 5.0);
+    }
+}

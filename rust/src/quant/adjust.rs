@@ -1,0 +1,257 @@
+//! Re-quantization + dynamic precision adjustment (paper §3.3, Eq. 6).
+//!
+//! Periodically during BSQ training the coordinator:
+//!   1. rounds the floating planes to signed integer codes
+//!      V = Round[Σ_b (W_p^(b) − W_n^(b)) 2^b]  (re-quantization),
+//!   2. trims all-zero MSBs (top-down until the first used bit),
+//!   3. trims all-zero LSBs (each removal right-shifts every code and
+//!      doubles the LSB step — the paper's s-doubling),
+//!   4. updates the scale to s' = δ'·(2^{n'} − 1) (equivalently the paper's
+//!      s' = s·(2^{n'}−1)/(2^n−1) composed with the LSB doublings),
+//!   5. re-splits the shifted codes into fresh binary W_p / W_n planes.
+//!
+//! Invariant (verified by property tests): with δ = s/(2^n − 1), the
+//! represented weight W = δ·V is unchanged (paper Eq. 6) — the integer
+//! codes V transform *exactly* (pure shifts), and the only rounding is the
+//! final f64→f32 store of the updated scale (≤ 1 ulp per adjustment).
+
+use crate::quant::bitplane::{integer_codes, packed_mask, planes_from_codes, BitRep, NB};
+
+/// Outcome of one re-quantization + precision adjustment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdjustReport {
+    pub bits_before: usize,
+    pub bits_after: usize,
+    pub msb_trimmed: usize,
+    pub lsb_trimmed: usize,
+}
+
+/// Re-quantize one layer in place and adjust its precision.
+///
+/// Mirrors §3.3 exactly, with one engineering cap: codes exceeding the fixed
+/// plane capacity (|V| > 2^NB − 1, possible only when every plane saturates
+/// at its 2.0 clamp) are clamped by `integer_codes` — growth beyond NB bits
+/// would need a dynamic shape, which the AOT artifacts rule out (DESIGN.md
+/// §2). In practice the regularizer drives precision *down*.
+pub fn requantize(rep: &mut BitRep) -> AdjustReport {
+    let n = rep.bits();
+    let wshape = rep.wp.shape()[1..].to_vec();
+    if n == 0 {
+        // Dead layer: nothing to represent; stays dead.
+        return AdjustReport { bits_before: 0, bits_after: 0, msb_trimmed: 0, lsb_trimmed: 0 };
+    }
+
+    let mut codes = integer_codes(rep);
+    let mut delta = rep.delta(); // s / (2^n − 1), exact in f64
+
+    // Highest used bit across all magnitudes. The float planes live in
+    // [0, 2], so V can reach 2·(2^n − 1) < 2^{n+1}: precision may *grow* to
+    // n + 1 (the paper's "between 0 and (n+1)-bit").
+    let max_mag = codes.iter().map(|v| v.unsigned_abs()).max().unwrap_or(0);
+    if max_mag == 0 {
+        // Every weight collapsed to zero: the layer is pruned away entirely
+        // (the paper observes this under large α; shortcuts carry the signal).
+        rep.mask = packed_mask(0);
+        let (wp, wn) = planes_from_codes(&codes, &wshape, 0);
+        rep.wp = wp;
+        rep.wn = wn;
+        // Scale is meaningless for a dead layer; keep it for bookkeeping.
+        return AdjustReport { bits_before: n, bits_after: 0, msb_trimmed: n, lsb_trimmed: 0 };
+    }
+
+    let hi = 63 - max_mag.leading_zeros() as usize; // highest set bit index
+    // LSB trim: number of common trailing zero bits across nonzero codes.
+    let lsb = codes
+        .iter()
+        .filter(|&&v| v != 0)
+        .map(|v| v.trailing_zeros() as usize)
+        .min()
+        .unwrap_or(0)
+        .min(hi); // keep at least one bit
+
+    if lsb > 0 {
+        for v in &mut codes {
+            *v >>= lsb;
+        }
+        delta *= (1u64 << lsb) as f64; // each removed LSB doubles the step
+    }
+
+    let n_after = hi - lsb + 1; // bits needed for the shifted magnitudes
+    debug_assert!(n_after <= NB);
+
+    let (wp, wn) = planes_from_codes(&codes, &wshape, n_after);
+    rep.wp = wp;
+    rep.wn = wn;
+    rep.mask = packed_mask(n_after);
+    rep.scale = (delta * ((1u64 << n_after) - 1) as f64) as f32;
+
+    AdjustReport {
+        bits_before: n,
+        bits_after: n_after,
+        msb_trimmed: (n + 1).saturating_sub(n_after + lsb),
+        lsb_trimmed: lsb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitplane::{from_bitplanes, to_bitplanes};
+    use crate::tensor::Tensor;
+    use crate::util::Pcg32;
+
+    fn rep_from_codes(codes: &[i64], n: usize, scale: f32) -> BitRep {
+        let (wp, wn) = planes_from_codes(codes, &[codes.len()], n);
+        BitRep { wp, wn, mask: packed_mask(n), scale }
+    }
+
+    #[test]
+    fn msb_trim_when_top_bits_unused() {
+        // 8-bit layer whose codes all fit in 5 bits → n' = 5
+        let rep0 = rep_from_codes(&[17, -9, 31, 2], 8, 1.0);
+        let w_before = from_bitplanes(&rep0);
+        let mut rep = rep0;
+        let r = requantize(&mut rep);
+        assert_eq!(r.bits_after, 5);
+        assert_eq!(r.lsb_trimmed, 0);
+        let w_after = from_bitplanes(&rep);
+        assert_eq!(w_before.data(), w_after.data()); // Eq. 6, exact
+        // s' = s·(2^5−1)/(2^8−1)
+        assert!((rep.scale - 31.0 / 255.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn lsb_trim_doubles_step() {
+        // all codes even → one LSB removed, codes halved, δ doubled
+        let rep0 = rep_from_codes(&[2, -4, 6, 128], 8, 2.0);
+        let w_before = from_bitplanes(&rep0);
+        let mut rep = rep0;
+        let r = requantize(&mut rep);
+        assert_eq!(r.lsb_trimmed, 1);
+        assert_eq!(r.bits_after, 7); // 128>>1 = 64 → bits 0..6
+        assert_eq!(from_bitplanes(&rep).data(), w_before.data());
+    }
+
+    #[test]
+    fn precision_can_grow_by_one() {
+        // float planes up to 2.0 can push codes past 2^n − 1
+        let w = Tensor::new(vec![2], vec![0.9, 0.54]).unwrap(); // codes 15, 9
+        let mut rep = to_bitplanes(&w, 4).unwrap();
+        // inflate every active plane of element 0 to 1.9 → code 28; element 1
+        // stays 9 (odd), so no LSB trim masks the growth
+        for b in 0..4 {
+            rep.wp.data_mut()[b * 2] = 1.9;
+        }
+        let r = requantize(&mut rep);
+        assert_eq!(r.bits_after, 5); // 28 needs 5 bits
+        assert_eq!(r.lsb_trimmed, 0);
+    }
+
+    #[test]
+    fn common_trailing_zeros_trigger_lsb_trim_even_on_growth() {
+        // codes {28, 8} share two trailing zeros → 28>>2 = 7 fits 3 bits
+        let rep0 = rep_from_codes(&[28, 8], 5, 1.0);
+        let w_before = from_bitplanes(&rep0);
+        let mut rep = rep0;
+        let r = requantize(&mut rep);
+        assert_eq!(r.bits_after, 3);
+        assert_eq!(r.lsb_trimmed, 2);
+        assert_eq!(from_bitplanes(&rep).data(), w_before.data());
+    }
+
+    #[test]
+    fn all_zero_layer_dies() {
+        let rep0 = rep_from_codes(&[0, 0, 0], 6, 1.0);
+        let mut rep = rep0;
+        let r = requantize(&mut rep);
+        assert_eq!(r.bits_after, 0);
+        assert_eq!(rep.bits(), 0);
+        assert!(from_bitplanes(&rep).data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn dead_layer_stays_dead() {
+        let mut rep = rep_from_codes(&[0, 0], 0, 1.0);
+        rep.mask = packed_mask(0);
+        let r = requantize(&mut rep);
+        assert_eq!(r.bits_before, 0);
+        assert_eq!(r.bits_after, 0);
+    }
+
+    #[test]
+    fn single_bit_survives_lsb_trim() {
+        // code 8 = 0b1000: three LSB trims, one bit left, δ scaled by 8
+        let rep0 = rep_from_codes(&[8, -8], 4, 1.0);
+        let w_before = from_bitplanes(&rep0);
+        let mut rep = rep0;
+        let r = requantize(&mut rep);
+        assert_eq!(r.bits_after, 1);
+        assert_eq!(r.lsb_trimmed, 3);
+        assert_eq!(from_bitplanes(&rep).data(), w_before.data());
+    }
+
+    /// Property test (hand-rolled; proptest unavailable offline): the
+    /// represented weight is exactly preserved across re-quantization for
+    /// random continuous planes, masks and scales.
+    #[test]
+    fn prop_requantize_preserves_represented_weight() {
+        let mut rng = Pcg32::seeded(42);
+        for case in 0..300 {
+            let n = 1 + (case % 8);
+            let elems = 1 + rng.below(40) as usize;
+            let w = Tensor::randn(&[elems], 0.5, &mut rng);
+            let mut rep = to_bitplanes(&w, n).unwrap();
+            // perturb planes into continuous values like mid-training state
+            for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+                *v = (*v + rng.range(-0.45, 0.45)).clamp(0.0, 2.0);
+            }
+            rep.scale = rng.range(0.05, 3.0);
+            // the pre-adjustment representation rounds the continuous planes
+            let codes_before = integer_codes(&rep);
+            let delta_before = rep.delta();
+            let r = requantize(&mut rep);
+            let codes_after = integer_codes(&rep);
+            let delta_after = rep.delta();
+            for (a, b) in codes_before.iter().zip(&codes_after) {
+                let va = delta_before * *a as f64;
+                let vb = delta_after * *b as f64;
+                // codes shift exactly; the f32 scale store rounds ≤ 1 ulp
+                let tol = 1e-6 * va.abs().max(1e-6);
+                assert!(
+                    (va - vb).abs() <= tol,
+                    "case {case}: {va} vs {vb} (n {} → {})",
+                    r.bits_before,
+                    r.bits_after
+                );
+            }
+            // masks stay bottom-packed
+            let m = rep.mask.data();
+            let n_after = rep.bits();
+            assert!(m.iter().take(n_after).all(|&x| x == 1.0));
+            assert!(m.iter().skip(n_after).all(|&x| x == 0.0));
+            // planes come back exactly binary
+            assert!(rep.wp.data().iter().all(|&v| v == 0.0 || v == 1.0));
+            assert!(rep.wn.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    /// Idempotence: adjusting twice changes nothing the second time.
+    #[test]
+    fn prop_requantize_idempotent() {
+        let mut rng = Pcg32::seeded(7);
+        for _ in 0..100 {
+            let elems = 1 + rng.below(20) as usize;
+            let w = Tensor::randn(&[elems], 1.0, &mut rng);
+            let mut rep = to_bitplanes(&w, 8).unwrap();
+            requantize(&mut rep);
+            let wp = rep.wp.clone();
+            let mask = rep.mask.clone();
+            let scale = rep.scale;
+            let r2 = requantize(&mut rep);
+            assert_eq!(r2.bits_before, r2.bits_after);
+            assert_eq!(rep.wp, wp);
+            assert_eq!(rep.mask, mask);
+            assert!((rep.scale - scale).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,254 @@
+//! Bit-plane packing: paper Eq. 2 — floating weights ⇄ bit representation.
+//!
+//! `to_bitplanes` runs once at the start of BSQ training (and the repack half
+//! runs at every re-quantization): it extracts the dynamic range s = max|W|,
+//! quantizes |W|/s onto 2^n − 1 uniform steps, and splits the signed integer
+//! codes into positive/negative binary planes W_p^(b), W_n^(b) stored as f32
+//! (the planes are *trained* as continuous values in [0, 2]).
+//!
+//! All plane tensors carry a fixed NB = 9 planes (8-bit initial precision +
+//! one overflow plane) with a bottom-packed activity mask — the static-shape
+//! scheme of DESIGN.md §2.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Fixed plane count; must match `python/compile/quantize.py::NB`.
+pub const NB: usize = 9;
+
+/// The bit representation of one layer.
+#[derive(Debug, Clone)]
+pub struct BitRep {
+    /// Positive planes, shape `[NB, *wshape]`.
+    pub wp: Tensor,
+    /// Negative planes, shape `[NB, *wshape]`.
+    pub wn: Tensor,
+    /// Active-plane mask `[NB]`, bottom-packed (`[1]*n + [0]*(NB-n)`).
+    pub mask: Tensor,
+    /// Dynamic-range scale s (scalar).
+    pub scale: f32,
+}
+
+impl BitRep {
+    /// Effective precision n = number of active planes.
+    pub fn bits(&self) -> usize {
+        self.mask.data().iter().filter(|&&m| m != 0.0).count()
+    }
+
+    /// The LSB step δ = s / (2^n − 1); 0 for a dead (n = 0) layer.
+    pub fn delta(&self) -> f64 {
+        let n = self.bits();
+        if n == 0 {
+            0.0
+        } else {
+            self.scale as f64 / ((1u64 << n) - 1) as f64
+        }
+    }
+}
+
+/// Bottom-packed mask for n active planes.
+pub fn packed_mask(n: usize) -> Tensor {
+    let mut m = vec![0.0f32; NB];
+    for slot in m.iter_mut().take(n.min(NB)) {
+        *slot = 1.0;
+    }
+    Tensor::new(vec![NB], m).unwrap()
+}
+
+/// Convert a float weight tensor to its n-bit representation (paper Eq. 2).
+///
+/// Planes come out exactly binary (0.0 / 1.0). The represented value is
+/// `sign ⊙ s·Round[|W|/s·(2^n−1)]/(2^n−1)`, i.e. the weight the quantized
+/// forward pass will see at step 0 of BSQ training.
+pub fn to_bitplanes(w: &Tensor, n: usize) -> Result<BitRep> {
+    if n == 0 || n > NB {
+        bail!("initial precision must be in 1..={NB}, got {n}");
+    }
+    let elems = w.len();
+    let scale = w.max_abs().max(1e-12);
+    let levels = ((1u64 << n) - 1) as f32;
+
+    let mut wp = vec![0.0f32; NB * elems];
+    let mut wn = vec![0.0f32; NB * elems];
+    for (e, &v) in w.data().iter().enumerate() {
+        let code = ((v.abs() / scale) * levels).round() as u64; // ≤ 2^n − 1
+        let planes = if v >= 0.0 { &mut wp } else { &mut wn };
+        for b in 0..n {
+            if (code >> b) & 1 == 1 {
+                planes[b * elems + e] = 1.0;
+            }
+        }
+    }
+
+    let mut pshape = vec![NB];
+    pshape.extend_from_slice(w.shape());
+    Ok(BitRep {
+        wp: Tensor::new(pshape.clone(), wp)?,
+        wn: Tensor::new(pshape, wn)?,
+        mask: packed_mask(n),
+        scale,
+    })
+}
+
+/// Reconstruct the represented float weight from a bit representation
+/// (the exact value the device-side STE forward computes: rounds first).
+pub fn from_bitplanes(rep: &BitRep) -> Tensor {
+    let n = rep.bits();
+    let elems = rep.wp.len() / NB;
+    let wshape = rep.wp.shape()[1..].to_vec();
+    if n == 0 {
+        return Tensor::zeros(&wshape);
+    }
+    let delta = rep.delta() as f32;
+    let mut out = vec![0.0f32; elems];
+    let wp = rep.wp.data();
+    let wn = rep.wn.data();
+    let mask = rep.mask.data();
+    for (e, slot) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for b in 0..NB {
+            if mask[b] != 0.0 {
+                acc += ((wp[b * elems + e] - wn[b * elems + e]) as f64) * (1u64 << b) as f64;
+            }
+        }
+        *slot = (acc.round() as f32) * delta;
+    }
+    Tensor::new(wshape, out).unwrap()
+}
+
+/// The signed integer codes V_e = Round[Σ_b mask_b (wp−wn) 2^b], clamped to
+/// the plane capacity ±(2^NB − 1). This is the re-quantization of §3.3.
+pub fn integer_codes(rep: &BitRep) -> Vec<i64> {
+    let elems = rep.wp.len() / NB;
+    let wp = rep.wp.data();
+    let wn = rep.wn.data();
+    let mask = rep.mask.data();
+    let cap = (1i64 << NB) - 1;
+    let mut codes = vec![0i64; elems];
+    for (e, slot) in codes.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for b in 0..NB {
+            if mask[b] != 0.0 {
+                acc += ((wp[b * elems + e] - wn[b * elems + e]) as f64) * (1u64 << b) as f64;
+            }
+        }
+        *slot = (acc.round() as i64).clamp(-cap, cap);
+    }
+    codes
+}
+
+/// Rebuild exact binary planes from signed integer codes (post-adjustment
+/// re-split of §3.3: positives to W_p, magnitudes of negatives to W_n).
+pub fn planes_from_codes(codes: &[i64], wshape: &[usize], n: usize) -> (Tensor, Tensor) {
+    let elems = codes.len();
+    let mut wp = vec![0.0f32; NB * elems];
+    let mut wn = vec![0.0f32; NB * elems];
+    for (e, &v) in codes.iter().enumerate() {
+        let mag = v.unsigned_abs();
+        let planes = if v >= 0 { &mut wp } else { &mut wn };
+        for b in 0..n.min(NB) {
+            if (mag >> b) & 1 == 1 {
+                planes[b * elems + e] = 1.0;
+            }
+        }
+    }
+    let mut pshape = vec![NB];
+    pshape.extend_from_slice(wshape);
+    (Tensor::new(pshape.clone(), wp).unwrap(), Tensor::new(pshape, wn).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    #[test]
+    fn roundtrip_exact_for_quantized_values() {
+        let mut rng = Pcg32::seeded(0);
+        for n in 1..=8 {
+            let levels = ((1u64 << n) - 1) as f32;
+            let s = 0.7f32;
+            // weights already on the n-bit grid → conversion must be exact
+            let data: Vec<f32> = (0..64)
+                .map(|_| {
+                    let code = rng.below(levels as u32 + 1) as f32;
+                    let sign = if rng.bool(0.5) { 1.0 } else { -1.0 };
+                    sign * s * code / levels
+                })
+                .collect();
+            let mut w = Tensor::new(vec![64], data.clone()).unwrap();
+            // ensure max|w| = s so the scale matches
+            w.data_mut()[0] = s;
+            let rep = to_bitplanes(&w, n).unwrap();
+            assert_eq!(rep.bits(), n);
+            let back = from_bitplanes(&rep);
+            for (a, b) in w.data().iter().zip(back.data()) {
+                assert!((a - b).abs() < 1e-6 * s, "n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_error_bounded_by_half_step() {
+        let mut rng = Pcg32::seeded(1);
+        let w = Tensor::randn(&[3, 3, 4, 4], 0.1, &mut rng);
+        let rep = to_bitplanes(&w, 8).unwrap();
+        let back = from_bitplanes(&rep);
+        let delta = rep.delta() as f32;
+        for (a, b) in w.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= 0.5 * delta + 1e-7);
+        }
+    }
+
+    #[test]
+    fn planes_are_binary_and_signed_split() {
+        let w = Tensor::new(vec![2], vec![0.5, -1.0]).unwrap();
+        let rep = to_bitplanes(&w, 4).unwrap();
+        for &v in rep.wp.data().iter().chain(rep.wn.data()) {
+            assert!(v == 0.0 || v == 1.0);
+        }
+        // element 0 positive → wn all zero at e=0; element 1 negative → wp zero
+        for b in 0..NB {
+            assert_eq!(rep.wn.data()[b * 2], 0.0);
+            assert_eq!(rep.wp.data()[b * 2 + 1], 0.0);
+        }
+    }
+
+    #[test]
+    fn integer_codes_round_float_planes() {
+        // planes hold continuous values; codes must round the weighted sum
+        let mut rep = to_bitplanes(&Tensor::new(vec![1], vec![0.3]).unwrap(), 3).unwrap();
+        rep.wp.data_mut().fill(0.0);
+        rep.wp.data_mut()[0] = 0.6; // bit0 → 0.6·1
+        rep.wp.data_mut()[1] = 0.8; // bit1 → 0.8·2
+        // sum = 2.2 → rounds to 2
+        assert_eq!(integer_codes(&rep), vec![2]);
+    }
+
+    #[test]
+    fn codes_clamp_to_capacity() {
+        let mut rep = to_bitplanes(&Tensor::new(vec![1], vec![0.3]).unwrap(), 8).unwrap();
+        rep.wp.data_mut().fill(2.0);
+        rep.wn.data_mut().fill(0.0);
+        rep.mask = packed_mask(NB);
+        // Σ 2·2^b over 9 planes = 1022 > 511 → clamp
+        assert_eq!(integer_codes(&rep), vec![(1 << NB) - 1]);
+    }
+
+    #[test]
+    fn packed_mask_is_bottom_packed() {
+        let m = packed_mask(3);
+        assert_eq!(m.data(), &[1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(packed_mask(0).data().iter().sum::<f32>(), 0.0);
+    }
+
+    #[test]
+    fn zero_bits_layer_reconstructs_zero() {
+        let w = Tensor::new(vec![4], vec![0.1, -0.2, 0.3, 0.0]).unwrap();
+        let mut rep = to_bitplanes(&w, 4).unwrap();
+        rep.mask = packed_mask(0);
+        let back = from_bitplanes(&rep);
+        assert!(back.data().iter().all(|&v| v == 0.0));
+    }
+}

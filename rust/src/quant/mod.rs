@@ -1,0 +1,12 @@
+//! The BSQ quantization substrate: bit planes, precision adjustment,
+//! scheme accounting and regularizer reweighing (paper §3, Eqs. 2–6).
+
+pub mod adjust;
+pub mod bitplane;
+pub mod regweight;
+pub mod scheme;
+
+pub use adjust::{requantize, AdjustReport};
+pub use bitplane::{from_bitplanes, packed_mask, to_bitplanes, BitRep, NB};
+pub use regweight::{reg_weights, Reweigh};
+pub use scheme::{spearman, LayerPrec, QuantScheme};

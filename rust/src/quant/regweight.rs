@@ -1,0 +1,78 @@
+//! Memory-consumption-aware regularizer reweighing (paper Eq. 5).
+//!
+//! The BSQ objective penalizes each layer's bit-level group Lasso with
+//! `c_l = #Para(W^l) * #Bit(W^l) / #Para(W^{1:L})` so layers holding more
+//! memory feel a stronger pull. The coordinator
+//! recomputes this vector after every precision adjustment (the #Bit term
+//! changes) and feeds it to the `bsq_train` artifact as the `regw` input.
+//! The ablation of paper §4.1 / Figs. 2, 5, 6 switches to the unweighted
+//! variant (`c_l = 1`).
+
+use crate::quant::scheme::QuantScheme;
+
+/// Reweighing policy for the B_GL regularizer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Reweigh {
+    /// Paper Eq. 5: c_l = pₗ·nₗ / Σp.
+    MemoryAware,
+    /// Ablation baseline: c_l = 1 for every layer.
+    None,
+}
+
+/// Compute the per-layer regularizer weights for the current scheme.
+pub fn reg_weights(scheme: &QuantScheme, policy: Reweigh) -> Vec<f32> {
+    match policy {
+        Reweigh::None => vec![1.0; scheme.layers.len()],
+        Reweigh::MemoryAware => {
+            let total = scheme.total_params().max(1) as f64;
+            scheme
+                .layers
+                .iter()
+                .map(|l| ((l.params * l.bits) as f64 / total) as f32)
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::scheme::LayerPrec;
+
+    fn scheme() -> QuantScheme {
+        QuantScheme::new(vec![
+            LayerPrec { name: "a".into(), params: 100, bits: 8 },
+            LayerPrec { name: "b".into(), params: 300, bits: 4 },
+            LayerPrec { name: "c".into(), params: 600, bits: 0 },
+        ])
+    }
+
+    #[test]
+    fn memory_aware_matches_eq5() {
+        let w = reg_weights(&scheme(), Reweigh::MemoryAware);
+        let total = 1000.0;
+        assert_eq!(w, vec![800.0 / total, 1200.0 / total, 0.0]);
+    }
+
+    #[test]
+    fn none_is_all_ones() {
+        assert_eq!(reg_weights(&scheme(), Reweigh::None), vec![1.0; 3]);
+    }
+
+    #[test]
+    fn bigger_layers_get_more_pressure() {
+        // equal bits → weight proportional to parameter count
+        let s = QuantScheme::new(vec![
+            LayerPrec { name: "small".into(), params: 10, bits: 8 },
+            LayerPrec { name: "large".into(), params: 1000, bits: 8 },
+        ]);
+        let w = reg_weights(&s, Reweigh::MemoryAware);
+        assert!(w[1] > 50.0 * w[0]);
+    }
+
+    #[test]
+    fn dead_layer_feels_no_pressure() {
+        let w = reg_weights(&scheme(), Reweigh::MemoryAware);
+        assert_eq!(w[2], 0.0);
+    }
+}

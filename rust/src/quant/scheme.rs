@@ -1,0 +1,224 @@
+//! Mixed-precision quantization schemes: the object BSQ *produces*.
+//!
+//! A `QuantScheme` is the per-layer precision assignment plus parameter
+//! counts; it computes the paper's reporting metrics (`#Bits per Para`,
+//! `Comp (×)` vs the fp32 baseline) and formats the per-layer tables of
+//! the paper's Figures 2–3/5–9 and Tables 6–7.
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPrec {
+    pub name: String,
+    pub params: usize,
+    pub bits: usize,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct QuantScheme {
+    pub layers: Vec<LayerPrec>,
+}
+
+impl QuantScheme {
+    pub fn new(layers: Vec<LayerPrec>) -> QuantScheme {
+        QuantScheme { layers }
+    }
+
+    pub fn uniform(names_params: &[(String, usize)], bits: usize) -> QuantScheme {
+        QuantScheme {
+            layers: names_params
+                .iter()
+                .map(|(name, params)| LayerPrec { name: name.clone(), params: *params, bits })
+                .collect(),
+        }
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    pub fn total_bits(&self) -> usize {
+        self.layers.iter().map(|l| l.params * l.bits).sum()
+    }
+
+    /// Paper's "#Bits per Para": Σ pₗ·nₗ / Σ pₗ.
+    pub fn bits_per_param(&self) -> f64 {
+        let p = self.total_params();
+        if p == 0 {
+            return 0.0;
+        }
+        self.total_bits() as f64 / p as f64
+    }
+
+    /// Paper's "Comp (×)" vs the 32-bit float model: 32·Σpₗ / Σ pₗ·nₗ.
+    pub fn compression(&self) -> f64 {
+        let bits = self.total_bits();
+        if bits == 0 {
+            return f64::INFINITY;
+        }
+        32.0 * self.total_params() as f64 / bits as f64
+    }
+
+    pub fn bits_of(&self, name: &str) -> Result<usize> {
+        match self.layers.iter().find(|l| l.name == name) {
+            Some(l) => Ok(l.bits),
+            None => bail!("layer {name:?} not in scheme"),
+        }
+    }
+
+    /// Precision vector in layer order (the `wlv` companion is 2^n − 1).
+    pub fn bits_vec(&self) -> Vec<usize> {
+        self.layers.iter().map(|l| l.bits).collect()
+    }
+
+    /// Per-layer level counts 2^n − 1 as f32 (the `wlv` artifact input).
+    pub fn levels_vec(&self) -> Vec<f32> {
+        self.layers.iter().map(|l| ((1u64 << l.bits) - 1) as f32).collect()
+    }
+
+    /// Average-precision ranking: layers sorted by descending bits, used for
+    /// the HAWQ consistency comparison (paper App. B.3 / Fig. 7).
+    pub fn ranking(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.layers.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.layers[b].bits.cmp(&self.layers[a].bits).then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
+impl fmt::Display for QuantScheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "{:<14} {:>10} {:>6}", "layer", "params", "bits")?;
+        for l in &self.layers {
+            writeln!(f, "{:<14} {:>10} {:>6}", l.name, l.params, l.bits)?;
+        }
+        write!(
+            f,
+            "total {:.2} bits/param, {:.2}x compression",
+            self.bits_per_param(),
+            self.compression()
+        )
+    }
+}
+
+/// Spearman rank correlation between two precision orderings — quantifies
+/// the paper's Fig. 7 claim that BSQ's precision ranking tracks HAWQ's
+/// Hessian-importance ranking.
+pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    if n < 2 {
+        return 1.0;
+    }
+    let ra = fractional_ranks(a);
+    let rb = fractional_ranks(b);
+    let mean = (n as f64 + 1.0) / 2.0;
+    let (mut num, mut da, mut db) = (0.0, 0.0, 0.0);
+    for i in 0..n {
+        let xa = ra[i] - mean;
+        let xb = rb[i] - mean;
+        num += xa * xb;
+        da += xa * xa;
+        db += xb * xb;
+    }
+    if da == 0.0 || db == 0.0 {
+        return 0.0;
+    }
+    num / (da * db).sqrt()
+}
+
+fn fractional_ranks(v: &[f64]) -> Vec<f64> {
+    let n = v.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+    let mut ranks = vec![0.0; n];
+    let mut i = 0;
+    while i < n {
+        let mut j = i;
+        while j + 1 < n && v[idx[j + 1]] == v[idx[i]] {
+            j += 1;
+        }
+        let avg = (i + j) as f64 / 2.0 + 1.0;
+        for k in i..=j {
+            ranks[idx[k]] = avg;
+        }
+        i = j + 1;
+    }
+    ranks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scheme(bits: &[usize]) -> QuantScheme {
+        QuantScheme::new(
+            bits.iter()
+                .enumerate()
+                .map(|(i, &b)| LayerPrec { name: format!("l{i}"), params: 100 * (i + 1), bits: b })
+                .collect(),
+        )
+    }
+
+    #[test]
+    fn uniform_8bit_is_4x_compression() {
+        let s = scheme(&[8, 8, 8]);
+        assert_eq!(s.bits_per_param(), 8.0);
+        assert_eq!(s.compression(), 4.0);
+    }
+
+    #[test]
+    fn mixed_precision_weights_by_params() {
+        // 100 params @ 2 bits + 200 params @ 8 bits = 1800 bits / 300 params
+        let s = scheme(&[2, 8]);
+        assert!((s.bits_per_param() - 6.0).abs() < 1e-12);
+        assert!((s.compression() - 32.0 * 300.0 / 1800.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_bit_layers_count_as_free() {
+        let s = scheme(&[0, 4]);
+        assert_eq!(s.total_bits(), 800);
+        let dead = scheme(&[0, 0]);
+        assert!(dead.compression().is_infinite());
+    }
+
+    #[test]
+    fn levels_vec_matches_bits() {
+        let s = scheme(&[0, 1, 3, 8]);
+        assert_eq!(s.levels_vec(), vec![0.0, 1.0, 7.0, 255.0]);
+    }
+
+    #[test]
+    fn ranking_sorts_by_bits_desc() {
+        let s = scheme(&[3, 8, 5]);
+        assert_eq!(s.ranking(), vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn spearman_perfect_and_inverse() {
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [10.0, 20.0, 30.0, 40.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
+        let c = [4.0, 3.0, 2.0, 1.0];
+        assert!((spearman(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let a = [1.0, 1.0, 2.0, 3.0];
+        let b = [1.0, 1.0, 2.0, 3.0];
+        assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn display_formats() {
+        let s = scheme(&[4, 2]);
+        let out = format!("{s}");
+        assert!(out.contains("compression"));
+        assert!(out.contains("l0"));
+    }
+}

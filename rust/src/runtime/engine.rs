@@ -1,0 +1,242 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute per step.
+//!
+//! Wraps the `xla` crate (PJRT C API): `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Compiled
+//! executables are cached per artifact file for the process lifetime, so
+//! the hot path is a single `execute` plus host-side literal marshalling.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::rc::Rc;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+use log::{debug, info};
+
+use crate::data::Batch;
+use crate::model::state::ModelState;
+use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::tensor::Tensor;
+
+/// Scalar hyperparameters + named configuration vectors for one run.
+#[derive(Debug, Clone, Default)]
+pub struct RunInputs {
+    pub hypers: HashMap<String, f32>,
+    pub vecs: HashMap<String, Vec<f32>>,
+    pub probes: HashMap<String, Tensor>,
+}
+
+impl RunInputs {
+    pub fn hyper(mut self, k: &str, v: f32) -> Self {
+        self.hypers.insert(k.to_string(), v);
+        self
+    }
+
+    pub fn vec(mut self, k: &str, v: Vec<f32>) -> Self {
+        self.vecs.insert(k.to_string(), v);
+        self
+    }
+}
+
+/// Scalar metrics + probe outputs from one run.
+#[derive(Debug, Clone, Default)]
+pub struct RunOutputs {
+    pub metrics: HashMap<String, f32>,
+    pub probes: HashMap<String, Tensor>,
+}
+
+impl RunOutputs {
+    pub fn metric(&self, name: &str) -> Result<f32> {
+        self.metrics.get(name).copied().ok_or_else(|| anyhow!("no metric {name:?}"))
+    }
+}
+
+/// The PJRT engine: one CPU client + a compile cache.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Rc<Executable>>>,
+}
+
+// Rc<Executable> is only handed out within a thread; the Mutex guards the map.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
+        info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    /// Load + compile an artifact (cached by file path).
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Rc<Executable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&spec.file) {
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.file)
+            .map_err(|e| anyhow!("parsing {}: {e}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e}", spec.file.display()))?;
+        info!("compiled {} in {:.2}s", spec.name, t0.elapsed().as_secs_f64());
+        let wrapped = Rc::new(Executable { exe, spec: spec.clone() });
+        cache.insert(spec.file.clone(), wrapped.clone());
+        Ok(wrapped)
+    }
+}
+
+impl Executable {
+    /// Execute one step: marshal inputs by role, run, scatter outputs.
+    ///
+    /// `state` tensors named by `state`-role outputs are updated in place;
+    /// metrics and probe outputs are returned.
+    pub fn run(
+        &self,
+        state: &mut ModelState,
+        batch: Option<&Batch>,
+        inputs: &RunInputs,
+    ) -> Result<RunOutputs> {
+        let literals = self.gather_inputs(state, batch, inputs)?;
+        let t0 = Instant::now();
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e}", self.spec.name))?;
+        debug!("{}: execute {:.1}ms", self.spec.name, t0.elapsed().as_secs_f64() * 1e3);
+        drop(literals);
+
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e}", self.spec.name))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling {}: {e}", self.spec.name))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: executable returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+
+        let mut out = RunOutputs::default();
+        for (item, lit) in self.spec.outputs.iter().zip(parts) {
+            match item.role {
+                Role::State => {
+                    let dst = state.get_mut(&item.name)?;
+                    lit.copy_raw_to::<f32>(dst.data_mut())
+                        .map_err(|e| anyhow!("reading output {}: {e}", item.name))?;
+                }
+                Role::Metric => {
+                    let v: f32 = lit
+                        .get_first_element()
+                        .map_err(|e| anyhow!("metric {}: {e}", item.name))?;
+                    out.metrics.insert(item.name.clone(), v);
+                }
+                Role::ProbeOut => {
+                    let mut t = Tensor::zeros(&item.shape);
+                    lit.copy_raw_to::<f32>(t.data_mut())
+                        .map_err(|e| anyhow!("probe {}: {e}", item.name))?;
+                    out.probes.insert(item.name.clone(), t);
+                }
+                ref r => bail!("{}: unexpected output role {r:?}", item.name),
+            }
+        }
+        Ok(out)
+    }
+
+    fn gather_inputs(
+        &self,
+        state: &ModelState,
+        batch: Option<&Batch>,
+        inputs: &RunInputs,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut literals = Vec::with_capacity(self.spec.inputs.len());
+        for item in &self.spec.inputs {
+            let lit = match item.role {
+                Role::X => {
+                    let b = batch.ok_or_else(|| anyhow!("artifact needs a batch"))?;
+                    f32_literal(b.x.data(), &item.shape)?
+                }
+                Role::Y => {
+                    let b = batch.ok_or_else(|| anyhow!("artifact needs a batch"))?;
+                    i32_literal(b.y.data(), &item.shape)?
+                }
+                Role::State => {
+                    let t = state.get(&item.name)?;
+                    if t.shape() != item.shape.as_slice() {
+                        bail!(
+                            "input {}: state shape {:?} ≠ artifact {:?}",
+                            item.name,
+                            t.shape(),
+                            item.shape
+                        );
+                    }
+                    f32_literal(t.data(), &item.shape)?
+                }
+                Role::Hyper => {
+                    let v = *inputs
+                        .hypers
+                        .get(&item.name)
+                        .ok_or_else(|| anyhow!("missing hyper {:?}", item.name))?;
+                    f32_literal(&[v], &item.shape)?
+                }
+                Role::Vec => {
+                    let v = inputs
+                        .vecs
+                        .get(&item.name)
+                        .ok_or_else(|| anyhow!("missing vec {:?}", item.name))?;
+                    if v.len() != item.elements() {
+                        bail!("vec {}: {} entries ≠ {:?}", item.name, v.len(), item.shape);
+                    }
+                    f32_literal(v, &item.shape)?
+                }
+                Role::Probe => match inputs.probes.get(&item.name) {
+                    Some(t) => f32_literal(t.data(), &item.shape)?,
+                    None => f32_literal(&vec![0.0; item.elements()], &item.shape)?,
+                },
+                ref r => bail!("{}: unexpected input role {r:?}", item.name),
+            };
+            literals.push(lit);
+        }
+        Ok(literals)
+    }
+}
+
+fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
+        .map_err(|e| anyhow!("f32 literal {shape:?}: {e}"))
+}
+
+fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
+        .map_err(|e| anyhow!("i32 literal {shape:?}: {e}"))
+}
+
+/// Batch-less convenience: artifacts whose inputs are all state/hyper/vec.
+pub fn artifacts_root() -> PathBuf {
+    std::env::var("BSQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+/// Load a model manifest from the artifacts root.
+pub fn load_manifest(model: &str) -> Result<crate::runtime::manifest::Manifest> {
+    let dir = artifacts_root().join(model);
+    crate::runtime::manifest::Manifest::load(&dir)
+        .with_context(|| format!("loading manifest for {model} (run `make artifacts`?)"))
+}

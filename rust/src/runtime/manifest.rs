@@ -1,0 +1,265 @@
+//! Manifest parsing: the Python↔Rust artifact contract.
+//!
+//! `python/compile/aot.py` writes one `manifest.json` per model describing
+//! the architecture metadata (quantized layers, BN groups, activation
+//! sites) and, per artifact, the flat ordered input/output specs. This
+//! module parses it with the in-crate JSON parser and validates the
+//! invariants the step loop depends on.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{parse, Json};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Role {
+    X,
+    Y,
+    State,
+    Hyper,
+    Vec,
+    Probe,
+    Metric,
+    ProbeOut,
+}
+
+impl Role {
+    fn from_str(s: &str) -> Result<Role> {
+        Ok(match s {
+            "x" => Role::X,
+            "y" => Role::Y,
+            "state" => Role::State,
+            "hyper" => Role::Hyper,
+            "vec" => Role::Vec,
+            "probe" => Role::Probe,
+            "metric" => Role::Metric,
+            "probe_out" => Role::ProbeOut,
+            other => bail!("unknown role {other:?}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoItem {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+    pub role: Role,
+}
+
+impl IoItem {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<IoItem>,
+    pub outputs: Vec<IoItem>,
+}
+
+#[derive(Debug, Clone)]
+pub struct QLayerMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub kind: String, // "conv" | "dense"
+    pub params: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub batch: usize,
+    pub nb: usize,
+    pub input_hw: (usize, usize),
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub qlayers: Vec<QLayerMeta>,
+    pub bn_names: Vec<String>,
+    pub act_sites: Vec<String>,
+    pub dense_bias: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub dir: PathBuf,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = parse(&text).with_context(|| format!("parsing {}", path.display()))?;
+
+        let qlayers = v
+            .req("qlayers")?
+            .as_arr()?
+            .iter()
+            .map(|q| {
+                Ok(QLayerMeta {
+                    name: q.req("name")?.as_str()?.to_string(),
+                    shape: q.req("shape")?.as_usize_vec()?,
+                    kind: q.req("kind")?.as_str()?.to_string(),
+                    params: q.req("params")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in v.req("artifacts")?.as_obj()? {
+            let spec = ArtifactSpec {
+                name: name.clone(),
+                file: dir.join(a.req("file")?.as_str()?),
+                inputs: parse_items(a.req("inputs")?)?,
+                outputs: parse_items(a.req("outputs")?)?,
+            };
+            validate_spec(&spec)?;
+            artifacts.insert(name.clone(), spec);
+        }
+
+        let hw = v.req("input_hw")?.as_usize_vec()?;
+        if hw.len() != 2 {
+            bail!("input_hw must have 2 entries");
+        }
+        let m = Manifest {
+            model: v.req("model")?.as_str()?.to_string(),
+            batch: v.req("batch")?.as_usize()?,
+            nb: v.req("nb")?.as_usize()?,
+            input_hw: (hw[0], hw[1]),
+            in_ch: v.req("in_ch")?.as_usize()?,
+            num_classes: v.req("num_classes")?.as_usize()?,
+            qlayers,
+            bn_names: v.req("bn_names")?.as_str_vec()?,
+            act_sites: v.req("act_sites")?.as_str_vec()?,
+            dense_bias: v.req("dense_bias")?.as_str_vec()?,
+            artifacts,
+            dir: dir.to_path_buf(),
+        };
+        if m.qlayers.is_empty() {
+            bail!("manifest has no quantized layers");
+        }
+        for q in &m.qlayers {
+            let n: usize = q.shape.iter().product();
+            if n != q.params {
+                bail!("layer {}: shape {:?} ≠ params {}", q.name, q.shape, q.params);
+            }
+        }
+        Ok(m)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("model {} has no artifact {name:?}", self.model))
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.qlayers.iter().map(|q| q.params).sum()
+    }
+
+    pub fn layer_names(&self) -> Vec<String> {
+        self.qlayers.iter().map(|q| q.name.clone()).collect()
+    }
+}
+
+fn parse_items(v: &Json) -> Result<Vec<IoItem>> {
+    v.as_arr()?
+        .iter()
+        .map(|item| {
+            Ok(IoItem {
+                name: item.req("name")?.as_str()?.to_string(),
+                shape: item.req("shape")?.as_usize_vec()?,
+                dtype: item.req("dtype")?.as_str()?.to_string(),
+                role: Role::from_str(item.req("role")?.as_str()?)?,
+            })
+        })
+        .collect()
+}
+
+fn validate_spec(spec: &ArtifactSpec) -> Result<()> {
+    let mut seen = std::collections::BTreeSet::new();
+    for i in &spec.inputs {
+        if !seen.insert(&i.name) {
+            bail!("{}: duplicate input {}", spec.name, i.name);
+        }
+        if i.dtype != "f32" && i.dtype != "i32" {
+            bail!("{}: unsupported dtype {}", spec.name, i.dtype);
+        }
+    }
+    let in_shapes: BTreeMap<&str, &Vec<usize>> =
+        spec.inputs.iter().map(|i| (i.name.as_str(), &i.shape)).collect();
+    for o in &spec.outputs {
+        if o.role == Role::State {
+            match in_shapes.get(o.name.as_str()) {
+                Some(s) if **s == o.shape => {}
+                Some(s) => bail!("{}: output {} shape {:?} ≠ input {:?}", spec.name, o.name, o.shape, s),
+                None => bail!("{}: state output {} has no matching input", spec.name, o.name),
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_tinynet_manifest() {
+        let dir = artifacts_dir().join("tinynet");
+        if !dir.exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "tinynet");
+        assert_eq!(m.nb, 9);
+        assert_eq!(m.qlayers.len(), 4);
+        assert!(m.artifacts.contains_key("bsq_train_relu6"));
+        let a = m.artifact("bsq_train_relu6").unwrap();
+        assert!(a.file.exists());
+        // batch inputs come first by construction
+        assert_eq!(a.inputs[0].name, "x");
+        assert_eq!(a.inputs[0].role, Role::X);
+        assert_eq!(a.inputs[1].dtype, "i32");
+    }
+
+    #[test]
+    fn rejects_bad_role() {
+        assert!(Role::from_str("bogus").is_err());
+        assert!(Role::from_str("state").is_ok());
+    }
+
+    #[test]
+    fn spec_validation_catches_shape_mismatch() {
+        let spec = ArtifactSpec {
+            name: "t".into(),
+            file: "/tmp/x".into(),
+            inputs: vec![IoItem {
+                name: "a".into(),
+                shape: vec![2],
+                dtype: "f32".into(),
+                role: Role::State,
+            }],
+            outputs: vec![IoItem {
+                name: "a".into(),
+                shape: vec![3],
+                dtype: "f32".into(),
+                role: Role::State,
+            }],
+        };
+        assert!(validate_spec(&spec).is_err());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        assert!(Manifest::load(Path::new("/nonexistent")).is_err());
+    }
+}

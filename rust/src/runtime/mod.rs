@@ -1,0 +1,11 @@
+//! Runtime layer: PJRT client wrapper + artifact manifests.
+//!
+//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
+//! (`make artifacts`), compiles them once on the CPU PJRT client, and
+//! executes them from the coordinator's hot path. Python never runs here.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{artifacts_root, load_manifest, Engine, Executable, RunInputs, RunOutputs};
+pub use manifest::{ArtifactSpec, IoItem, Manifest, Role};

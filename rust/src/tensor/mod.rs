@@ -1,0 +1,208 @@
+//! Host tensor substrate: dense f32/i32 arrays with shapes.
+//!
+//! The coordinator's own compute (bit-plane packing, precision adjustment,
+//! HAWQ power iteration, data synthesis) runs on these; device compute goes
+//! through `runtime::` artifacts. Deliberately small: row-major, owned
+//! storage, just the ops the coordinator needs.
+
+use anyhow::{bail, Result};
+
+use crate::util::Pcg32;
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Tensor {
+        Tensor { shape: vec![data.len()], data }
+    }
+
+    /// Standard normal entries scaled by `std`.
+    pub fn randn(shape: &[usize], std: f32, rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.normal() * std).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// He/Kaiming init for a conv (HWIO) or dense ([in, out]) weight:
+    /// N(0, sqrt(2 / fan_in)).
+    pub fn he_init(shape: &[usize], rng: &mut Pcg32) -> Tensor {
+        let fan_in: usize =
+            if shape.len() > 1 { shape[..shape.len() - 1].iter().product() } else { shape[0] };
+        Self::randn(shape, (2.0 / fan_in.max(1) as f32).sqrt(), rng)
+    }
+
+    pub fn uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Pcg32) -> Tensor {
+        let n = shape.iter().product();
+        let data = (0..n).map(|_| rng.range(lo, hi)).collect();
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    // -- accessors -----------------------------------------------------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    // -- math ------------------------------------------------------------------
+
+    pub fn dot(&self, other: &Tensor) -> f32 {
+        debug_assert_eq!(self.len(), other.len());
+        self.data.iter().zip(&other.data).map(|(a, b)| a * b).sum()
+    }
+
+    pub fn norm2(&self) -> f32 {
+        self.data.iter().map(|a| a * a).sum::<f32>().sqrt()
+    }
+
+    pub fn scale_inplace(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+}
+
+/// Dense row-major i32 tensor (labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntTensor {
+    shape: Vec<usize>,
+    data: Vec<i32>,
+}
+
+impl IntTensor {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<IntTensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(IntTensor { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> IntTensor {
+        IntTensor { shape: shape.to_vec(), data: vec![0; shape.iter().product()] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[i32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [i32] {
+        &mut self.data
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+        assert_eq!(Tensor::zeros(&[4, 5]).len(), 20);
+        assert_eq!(Tensor::scalar(3.0).item().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn he_init_variance() {
+        let mut rng = Pcg32::seeded(0);
+        let t = Tensor::he_init(&[3, 3, 16, 32], &mut rng);
+        let n = t.len() as f32;
+        let mean = t.data().iter().sum::<f32>() / n;
+        let var = t.data().iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+        let want = 2.0 / (3.0 * 3.0 * 16.0);
+        assert!((var / want - 1.0).abs() < 0.1, "var {var} want {want}");
+    }
+
+    #[test]
+    fn reshape_and_math() {
+        let t = Tensor::from_vec(vec![3.0, -4.0]);
+        assert_eq!(t.norm2(), 5.0);
+        assert_eq!(t.max_abs(), 4.0);
+        let r = t.clone().reshaped(&[2, 1]).unwrap();
+        assert_eq!(r.shape(), &[2, 1]);
+        assert!(t.clone().reshaped(&[3]).is_err());
+        assert_eq!(t.dot(&Tensor::from_vec(vec![1.0, 1.0])), -1.0);
+    }
+
+    #[test]
+    fn map_and_scale() {
+        let mut t = Tensor::from_vec(vec![1.0, 2.0]);
+        t.scale_inplace(2.0);
+        assert_eq!(t.data(), &[2.0, 4.0]);
+        assert_eq!(t.map(|v| v + 1.0).data(), &[3.0, 5.0]);
+    }
+}

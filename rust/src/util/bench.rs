@@ -1,0 +1,160 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with mean/stddev/median/min and a
+//! criterion-style one-line report. Used by every target in `rust/benches/`
+//! and by the §Perf pass in EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Stats {
+    pub fn throughput_per_sec(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn report(&self) -> String {
+        let tp = match self.throughput_per_sec() {
+            Some(t) if t >= 1e9 => format!("  {:7.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:7.2} Melem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:7.2} Kelem/s", t / 1e3),
+            Some(t) => format!("  {t:7.2} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} {:>12} ± {:>10}  (median {:>12}, min {:>12}, n={}){}",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.median),
+            fmt_dur(self.min),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Benchmark runner: fixed warmup count, then `iters` timed runs (or until
+/// `max_time` elapses, whichever comes first — at least 3 samples).
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 30, max_time: Duration::from_secs(20) }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench { warmup: 1, iters: 10, max_time: Duration::from_secs(10) }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
+        self.run_with_elements(name, None, &mut f)
+    }
+
+    pub fn run_elems<F: FnMut()>(&self, name: &str, elements: u64, mut f: F) -> Stats {
+        self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    fn run_with_elements<F: FnMut()>(&self, name: &str, elements: Option<u64>, f: &mut F) -> Stats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let start = Instant::now();
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+            if start.elapsed() > self.max_time && samples.len() >= 3 {
+                break;
+            }
+        }
+        stats_from_samples(name, &mut samples, elements)
+    }
+}
+
+fn stats_from_samples(name: &str, samples: &mut [Duration], elements: Option<u64>) -> Stats {
+    samples.sort();
+    let n = samples.len();
+    let sum: Duration = samples.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples.iter().map(|s| (s.as_secs_f64() - mean_s).powi(2)).sum::<f64>() / n as f64;
+    Stats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: samples[n / 2],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples[0],
+        max: samples[n - 1],
+        elements,
+    }
+}
+
+/// Prevent the optimizer from discarding a computed value.
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collects_requested_iterations() {
+        let b = Bench { warmup: 1, iters: 5, max_time: Duration::from_secs(60) };
+        let mut count = 0usize;
+        let s = b.run("noop", || count += 1);
+        assert_eq!(s.iters, 5);
+        assert_eq!(count, 6); // warmup + timed
+        assert!(s.min <= s.median && s.median <= s.max);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let b = Bench::quick();
+        let s = b.run_elems("spin", 1000, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(s.throughput_per_sec().unwrap() > 0.0);
+        assert!(s.report().contains("elem/s"));
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(fmt_dur(Duration::from_nanos(12)), "12 ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(2)).contains("s"));
+    }
+}

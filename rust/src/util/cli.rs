@@ -1,0 +1,179 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed accessors record which keys were consumed so `finish()` can reject
+//! typos instead of silently ignoring them.
+//!
+//! Grammar note: a non-`--` token following `--key` binds as its value, so
+//! positionals (the subcommand) must precede flags — which is how every
+//! `bsq-repro` invocation reads anyway (`bsq-repro bsq --model resnet20`).
+//! Boolean flags are safe in any position when followed by another flag or
+//! the end of the line; use `--flag=true` style if you must interleave.
+
+use std::collections::BTreeSet;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug)]
+pub struct Args {
+    pairs: Vec<(String, Option<String>)>, // --key [value]
+    positional: Vec<String>,
+    used: BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut pairs = Vec::new();
+        let mut positional = Vec::new();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    pairs.push((k.to_string(), Some(v.to_string())));
+                } else {
+                    // Peek: a following token that is not itself a flag is
+                    // this key's value.
+                    let take = it.peek().map(|n| !n.starts_with("--")).unwrap_or(false);
+                    let v = if take { it.next() } else { None };
+                    pairs.push((body.to_string(), v));
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Args { pairs, positional, used: BTreeSet::new() })
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn take_positional(&mut self, idx: usize) -> Option<String> {
+        self.positional.get(idx).cloned()
+    }
+
+    fn raw(&mut self, key: &str) -> Option<Option<String>> {
+        self.used.insert(key.to_string());
+        self.pairs.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.clone())
+    }
+
+    /// `--key` present (with or without a value)?
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.raw(key).is_some()
+    }
+
+    pub fn opt_str(&mut self, key: &str) -> Result<Option<String>> {
+        match self.raw(key) {
+            None => Ok(None),
+            Some(Some(v)) => Ok(Some(v)),
+            Some(None) => bail!("--{key} requires a value"),
+        }
+    }
+
+    pub fn str_or(&mut self, key: &str, default: &str) -> Result<String> {
+        Ok(self.opt_str(key)?.unwrap_or_else(|| default.to_string()))
+    }
+
+    pub fn opt<T: std::str::FromStr>(&mut self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(key)? {
+            None => Ok(None),
+            Some(v) => {
+                Ok(Some(v.parse().map_err(|e| anyhow!("--{key}: invalid value {v:?}: {e}"))?))
+            }
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&mut self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.opt(key)?.unwrap_or(default))
+    }
+
+    /// Comma-separated list, e.g. `--alphas 3e-3,5e-3,1e-2`.
+    pub fn list<T: std::str::FromStr>(&mut self, key: &str) -> Result<Option<Vec<T>>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(key)? {
+            None => Ok(None),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| s.trim().parse().map_err(|e| anyhow!("--{key}: bad item {s:?}: {e}")))
+                .collect::<Result<Vec<T>>>()
+                .map(Some),
+        }
+    }
+
+    /// Error on any `--key` that no accessor consumed (typo guard).
+    pub fn finish(self) -> Result<()> {
+        let unknown: Vec<_> =
+            self.pairs.iter().map(|(k, _)| k).filter(|k| !self.used.contains(*k)).collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags: {unknown:?}");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let mut a = args("run --model resnet20 --alpha=5e-3 --verbose");
+        assert_eq!(a.str_or("model", "x").unwrap(), "resnet20");
+        assert_eq!(a.get_or("alpha", 0.0f64).unwrap(), 5e-3);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), ["run"]);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let mut a = args("--n 1 --n 2");
+        assert_eq!(a.get_or("n", 0u32).unwrap(), 2);
+    }
+
+    #[test]
+    fn lists_parse() {
+        let mut a = args("--alphas 3e-3,5e-3,1e-2");
+        assert_eq!(a.list::<f64>("alphas").unwrap().unwrap(), vec![3e-3, 5e-3, 1e-2]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let mut a = args("--model --other x");
+        assert!(a.opt_str("model").unwrap_err().to_string().contains("requires a value"));
+    }
+
+    #[test]
+    fn unknown_flags_rejected() {
+        let mut a = args("--model m --typo 3");
+        let _ = a.opt_str("model");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = args("");
+        assert_eq!(a.get_or("epochs", 5u32).unwrap(), 5);
+        assert_eq!(a.str_or("out", "results").unwrap(), "results");
+    }
+}

@@ -1,0 +1,51 @@
+//! Minimal `log` backend: timestamped stderr lines, level via `BSQ_LOG`.
+
+use std::sync::Once;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+use once_cell::sync::Lazy;
+
+static START: Lazy<Instant> = Lazy::new(Instant::now);
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = START.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+/// Install the logger once; level from `BSQ_LOG` (error|warn|info|debug|trace).
+pub fn init() {
+    INIT.call_once(|| {
+        Lazy::force(&START);
+        let level = match std::env::var("BSQ_LOG").as_deref() {
+            Ok("error") => LevelFilter::Error,
+            Ok("warn") => LevelFilter::Warn,
+            Ok("debug") => LevelFilter::Debug,
+            Ok("trace") => LevelFilter::Trace,
+            _ => LevelFilter::Info,
+        };
+        let _ = log::set_boxed_logger(Box::new(StderrLogger));
+        log::set_max_level(level);
+    });
+}

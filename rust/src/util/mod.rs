@@ -1,0 +1,14 @@
+//! Offline-friendly substrates: JSON, PRNG, CLI parsing, benching, logging.
+//!
+//! The build environment has no crates.io access beyond the `xla` crate's
+//! dependency closure, so serde/clap/criterion equivalents are implemented
+//! here from scratch (DESIGN.md §5).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+pub use json::Json;
+pub use rng::Pcg32;

@@ -1,0 +1,137 @@
+//! Integration: the full BSQ pipeline + baselines on tinynet.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use bsq::baselines::{self, HawqConfig, QatConfig};
+use bsq::coordinator::{run_bsq, BsqConfig, Session};
+use bsq::model::ModelState;
+use bsq::quant::{QuantScheme, Reweigh};
+use bsq::runtime::Engine;
+
+fn have_artifacts() -> bool {
+    bsq::runtime::artifacts_root().join("tinynet/manifest.json").exists()
+}
+
+fn tiny_cfg() -> BsqConfig {
+    let mut cfg = BsqConfig::for_model("tinynet");
+    cfg.pretrain_epochs = 3;
+    cfg.bsq_epochs = 4;
+    cfg.finetune_epochs = 2;
+    cfg.requant_interval = 2;
+    cfg.train_size = 256;
+    cfg.test_size = 128;
+    cfg.alpha = 2.3e-4;
+    cfg.cache_pretrained = false;
+    cfg
+}
+
+#[test]
+fn full_bsq_pipeline_compresses_and_learns() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let outcome = run_bsq(&engine, &tiny_cfg()).unwrap();
+
+    // The pipeline must actually reduce precision below the 8-bit init…
+    assert!(
+        outcome.bits_per_param < 8.0,
+        "no compression: {} bits/param",
+        outcome.bits_per_param
+    );
+    assert!(outcome.compression > 4.0);
+    // …while staying a valid scheme and a working model.
+    assert_eq!(outcome.scheme.layers.len(), 4);
+    assert!(outcome.scheme.layers.iter().all(|l| l.bits <= 9));
+    assert!(outcome.acc_after_ft > 0.15, "model collapsed: {}", outcome.acc_after_ft);
+    // history covers all three phases
+    for phase in ["pretrain", "bsq", "finetune"] {
+        assert!(outcome.history.last_of(phase).is_some(), "missing {phase}");
+    }
+}
+
+#[test]
+fn stronger_alpha_compresses_more() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut weak = tiny_cfg();
+    weak.alpha = 2e-5;
+    let mut strong = tiny_cfg();
+    strong.alpha = 1e-3;
+    let w = run_bsq(&engine, &weak).unwrap();
+    let s = run_bsq(&engine, &strong).unwrap();
+    // Allow half a bit of run-to-run noise at these abbreviated schedules;
+    // the 50× α gap must still show a clear compression gap.
+    assert!(
+        s.bits_per_param <= w.bits_per_param + 0.5,
+        "alpha monotonicity violated: {} (α=1e-3) vs {} (α=2e-5)",
+        s.bits_per_param,
+        w.bits_per_param
+    );
+}
+
+#[test]
+fn dorefa_from_scratch_trains() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let session = Session::open(&engine, "tinynet", 256, 128, 0).unwrap();
+    let names: Vec<(String, usize)> =
+        session.man.qlayers.iter().map(|q| (q.name.clone(), q.params)).collect();
+    let scheme = QuantScheme::uniform(&names, 3);
+    let out =
+        baselines::dorefa::train_from_scratch(&session, &scheme, &QatConfig::from_scratch(4, 4, 0))
+            .unwrap();
+    assert!(out.final_acc > 0.15, "dorefa collapsed: {}", out.final_acc);
+}
+
+#[test]
+fn hawq_analysis_ranks_layers() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let session = Session::open(&engine, "tinynet", 128, 64, 0).unwrap();
+    let state = ModelState::init_fp(&session.man, 3);
+    let report = baselines::hawq::analyze(
+        &session,
+        &state,
+        &HawqConfig { power_iters: 4, batches: 1, seed: 1 },
+    )
+    .unwrap();
+    assert_eq!(report.eigenvalues.len(), 4);
+    assert!(report.eigenvalues.iter().all(|l| l.is_finite() && *l >= 0.0));
+    // ranking is a permutation
+    let mut r = report.ranking.clone();
+    r.sort();
+    assert_eq!(r, vec![0, 1, 2, 3]);
+
+    // scheme assignment hits a reasonable budget
+    let scheme = baselines::hawq::assign_scheme(&session, &report, 4.0, &[8, 4, 2]);
+    assert!(scheme.bits_per_param() > 1.0 && scheme.bits_per_param() < 9.0);
+}
+
+#[test]
+fn reweigh_ablation_changes_scheme() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let engine = Engine::cpu().unwrap();
+    let mut a = tiny_cfg();
+    a.reweigh = Reweigh::MemoryAware;
+    a.alpha = 2.3e-4;
+    let mut b = tiny_cfg();
+    b.reweigh = Reweigh::None;
+    b.alpha = 9e-5; // paper pairs strengths for comparable compression
+    let oa = run_bsq(&engine, &a).unwrap();
+    let ob = run_bsq(&engine, &b).unwrap();
+    assert_ne!(oa.scheme.bits_vec(), ob.scheme.bits_vec());
+}

@@ -1,0 +1,148 @@
+//! Integration: real AOT artifacts through the PJRT runtime.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise). Exercises the
+//! full contract: manifest load → compile → state init → train/eval steps →
+//! metric extraction → output writeback — i.e. exactly what the coordinator
+//! does, on the tinynet model.
+
+use bsq::data::{Corpus, CorpusSpec, Loader};
+use bsq::model::{momentum_slots, ModelState};
+use bsq::quant::{reg_weights, QuantScheme, Reweigh};
+use bsq::runtime::{load_manifest, Engine, RunInputs};
+
+fn have_artifacts() -> bool {
+    bsq::runtime::artifacts_root().join("tinynet/manifest.json").exists()
+}
+
+fn scheme_from_state(man: &bsq::runtime::Manifest, state: &ModelState) -> QuantScheme {
+    let bits = state.bits_by_layer(man).unwrap();
+    QuantScheme::new(
+        man.qlayers
+            .iter()
+            .zip(bits)
+            .map(|(q, b)| bsq::quant::LayerPrec { name: q.name.clone(), params: q.params, bits: b })
+            .collect(),
+    )
+}
+
+#[test]
+fn fp_train_step_decreases_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let man = load_manifest("tinynet").unwrap();
+    let engine = Engine::cpu().unwrap();
+    let exe = engine.load(man.artifact("fp_train_relu6").unwrap()).unwrap();
+
+    let mut state = ModelState::init_fp(&man, 0);
+    state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+    state.check_against(&exe.spec.inputs).unwrap();
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(man.batch * 4, 64));
+    let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 1);
+    let inputs = RunInputs::default()
+        .hyper("lr", 0.05)
+        .hyper("wd", 1e-4)
+        .vec("actlv", vec![0.0; man.act_sites.len()]);
+
+    let mut losses = vec![];
+    for _ in 0..8 {
+        let batch = loader.next_batch();
+        let out = exe.run(&mut state, Some(&batch), &inputs).unwrap();
+        losses.push(out.metric("loss").unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn bsq_train_and_eval_roundtrip() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let man = load_manifest("tinynet").unwrap();
+    let engine = Engine::cpu().unwrap();
+    let train = engine.load(man.artifact("bsq_train_relu6").unwrap()).unwrap();
+    let eval = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+
+    // fp init → bit representation at 8 bits
+    let mut state = ModelState::init_fp(&man, 7);
+    state.to_bit_representation(&man, 8).unwrap();
+    state.ensure_momenta(&momentum_slots(&train.spec.inputs));
+    state.check_against(&train.spec.inputs).unwrap();
+
+    let scheme = scheme_from_state(&man, &state);
+    assert_eq!(scheme.bits_per_param(), 8.0);
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(man.batch * 4, man.batch * 2));
+    let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 2);
+    let regw = reg_weights(&scheme, Reweigh::MemoryAware);
+    let actlv = vec![15.0; man.act_sites.len()];
+    let inputs = RunInputs::default()
+        .hyper("lr", 0.05)
+        .hyper("wd", 1e-4)
+        .hyper("alpha", 1e-2)
+        .vec("regw", regw)
+        .vec("actlv", actlv.clone());
+
+    let mut bgl = vec![];
+    for _ in 0..6 {
+        let b = loader.next_batch();
+        let out = train.run(&mut state, Some(&b), &inputs).unwrap();
+        bgl.push(out.metric("bgl").unwrap());
+        assert!(out.metric("loss").unwrap().is_finite());
+    }
+    // regularizer pressure must shrink the plane norms
+    assert!(bgl.last().unwrap() < bgl.first().unwrap(), "{bgl:?}");
+
+    // planes stayed clamped in [0, 2]
+    for q in &man.qlayers {
+        let wp = state.get(&format!("wp:{}", q.name)).unwrap();
+        assert!(wp.data().iter().all(|&v| (0.0..=2.0).contains(&v)));
+    }
+
+    // eval runs on the same state
+    let mut ev = Loader::eval(&corpus.test, man.batch);
+    let einputs = RunInputs::default().vec("actlv", actlv);
+    let out = eval.run(&mut state, Some(&ev.next_batch()), &einputs).unwrap();
+    let acc = out.metric("acc").unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn requantization_does_not_change_eval_loss() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    // Paper §3.3: sWq is unchanged by re-quantization + precision adjustment,
+    // so the eval loss before and after must agree (up to f32 scale rounding).
+    let man = load_manifest("tinynet").unwrap();
+    let engine = Engine::cpu().unwrap();
+    let eval = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+
+    let mut state = ModelState::init_fp(&man, 21);
+    state.to_bit_representation(&man, 8).unwrap();
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(64, man.batch));
+    let mut ev = Loader::eval(&corpus.test, man.batch);
+    let batch = ev.next_batch();
+    let inputs = RunInputs::default().vec("actlv", vec![15.0; man.act_sites.len()]);
+
+    let before = eval.run(&mut state, Some(&batch), &inputs).unwrap().metric("loss").unwrap();
+    for q in &man.qlayers {
+        let mut rep = state.bitrep(&q.name).unwrap();
+        bsq::quant::requantize(&mut rep);
+        state.install_bitrep(&q.name, rep);
+    }
+    let after = eval.run(&mut state, Some(&batch), &inputs).unwrap().metric("loss").unwrap();
+    assert!(
+        (before - after).abs() < 1e-4 * before.abs().max(1.0),
+        "requantization changed eval loss: {before} → {after}"
+    );
+}
