@@ -3,18 +3,48 @@
 //! full precision adjustment — the work that runs between training epochs.
 //!
 //! These dominate the re-quantization pause (paper §3.3), so their
-//! throughput bounds how often re-quantization can run. §Perf in
-//! EXPERIMENTS.md tracks before/after numbers.
+//! throughput bounds how often re-quantization can run. Each packed-engine
+//! entry is paired with a `*_ref/` run of the retained scalar path
+//! (`quant::reference`) and the speedup is recorded alongside the raw
+//! numbers in `BENCH_quant_ops.json` — the machine-readable record the
+//! §Perf pass in EXPERIMENTS.md tracks across PRs.
+//!
+//! State-restoring setup (cloning the rep an in-place `requantize` is about
+//! to consume) runs through `Bench::run_prepared`, *outside* the timed
+//! region — the numbers report requantization, not allocation.
 
-use bsq::quant::{from_bitplanes, requantize, to_bitplanes};
 use bsq::quant::bitplane::integer_codes;
+use bsq::quant::{from_bitplanes, reference, requantize, to_bitplanes, BitRep};
 use bsq::tensor::Tensor;
-use bsq::util::bench::{black_box, Bench};
+use bsq::util::bench::{black_box, Bench, JsonReport, Stats};
+use bsq::util::json::Json;
 use bsq::util::Pcg32;
 
+struct Recorder {
+    report: JsonReport,
+    speedups: Vec<(String, Json)>,
+}
+
+impl Recorder {
+    fn record(&mut self, s: &Stats) {
+        println!("{}", s.report());
+        self.report.push(s);
+    }
+
+    /// Record a packed/reference pair and log the speedup.
+    fn record_pair(&mut self, fast: &Stats, slow: &Stats) {
+        self.record(fast);
+        self.record(slow);
+        let speedup = slow.mean.as_secs_f64() / fast.mean.as_secs_f64().max(1e-12);
+        println!("    -> {} speedup vs reference: {speedup:.2}x", fast.name);
+        self.speedups.push((fast.name.clone(), Json::num(speedup)));
+    }
+}
+
 fn main() {
-    let bench = Bench::default();
+    let bench = Bench::from_env();
     let mut rng = Pcg32::seeded(0);
+    let mut rec = Recorder { report: JsonReport::new("quant_ops"), speedups: Vec::new() };
 
     println!("== quant_ops ==");
     // resnet20's biggest layer is 36 864 params; resnet50_sim's ~131 072.
@@ -24,39 +54,96 @@ fn main() {
         let s = bench.run_elems(&format!("to_bitplanes/{elems}"), elems as u64, || {
             black_box(to_bitplanes(&w, 8).unwrap());
         });
-        println!("{}", s.report());
+        let s_ref = bench.run_elems(&format!("to_bitplanes_ref/{elems}"), elems as u64, || {
+            black_box(reference::to_bitplanes(&w, 8).unwrap());
+        });
+        rec.record_pair(&s, &s_ref);
 
-        let rep = to_bitplanes(&w, 8).unwrap();
+        // Perturb into mid-training continuous planes so code extraction
+        // does real rounding work (exact binary planes are the easy case).
+        let mut rep = to_bitplanes(&w, 8).unwrap();
+        for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+            *v = (*v + rng.range(-0.2, 0.2)).clamp(0.0, 2.0);
+        }
+
         let s = bench.run_elems(&format!("from_bitplanes/{elems}"), elems as u64, || {
             black_box(from_bitplanes(&rep));
         });
-        println!("{}", s.report());
+        let s_ref = bench.run_elems(&format!("from_bitplanes_ref/{elems}"), elems as u64, || {
+            black_box(reference::from_bitplanes(&rep));
+        });
+        rec.record_pair(&s, &s_ref);
 
         let s = bench.run_elems(&format!("integer_codes/{elems}"), elems as u64, || {
             black_box(integer_codes(&rep));
         });
-        println!("{}", s.report());
-
-        let s = bench.run_elems(&format!("requantize/{elems}"), elems as u64, || {
-            let mut r = rep.clone();
-            black_box(requantize(&mut r));
+        let s_ref = bench.run_elems(&format!("integer_codes_ref/{elems}"), elems as u64, || {
+            black_box(reference::integer_codes(&rep));
         });
-        println!("{}", s.report());
+        rec.record_pair(&s, &s_ref);
+
+        let s = bench.run_prepared(
+            &format!("requantize/{elems}"),
+            elems as u64,
+            || rep.clone(),
+            |r| {
+                black_box(requantize(r));
+            },
+        );
+        let s_ref = bench.run_prepared(
+            &format!("requantize_ref/{elems}"),
+            elems as u64,
+            || rep.clone(),
+            |r| {
+                black_box(reference::requantize(r));
+            },
+        );
+        rec.record_pair(&s, &s_ref);
     }
 
-    // whole-model requantization pause (resnet20 shape mix)
-    let shapes: Vec<usize> =
-        std::iter::once(432).chain((0..18).map(|i| if i < 6 { 2_304 } else if i < 12 { 9_216 } else { 36_864 })).chain(std::iter::once(640)).collect();
-    let reps: Vec<_> = shapes
+    // Whole-model requantization pause (resnet20 shape mix) — the pause the
+    // coordinator takes every `requant_interval` epochs.
+    let shapes: Vec<usize> = std::iter::once(432)
+        .chain((0..18).map(|i| if i < 6 { 2_304 } else if i < 12 { 9_216 } else { 36_864 }))
+        .chain(std::iter::once(640))
+        .collect();
+    let reps: Vec<BitRep> = shapes
         .iter()
-        .map(|&e| to_bitplanes(&Tensor::randn(&[e], 0.5, &mut rng), 8).unwrap())
+        .map(|&e| {
+            let mut rep = to_bitplanes(&Tensor::randn(&[e], 0.5, &mut rng), 8).unwrap();
+            for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+                *v = (*v + rng.range(-0.2, 0.2)).clamp(0.0, 2.0);
+            }
+            rep
+        })
         .collect();
     let total: usize = shapes.iter().sum();
-    let s = bench.run_elems("requantize/resnet20-all-layers", total as u64, || {
-        for rep in &reps {
-            let mut r = rep.clone();
-            black_box(requantize(&mut r));
-        }
-    });
-    println!("{}", s.report());
+    let s = bench.run_prepared(
+        "requantize/resnet20-all-layers",
+        total as u64,
+        || reps.clone(),
+        |rs| {
+            for r in rs.iter_mut() {
+                black_box(requantize(r));
+            }
+        },
+    );
+    let s_ref = bench.run_prepared(
+        "requantize_ref/resnet20-all-layers",
+        total as u64,
+        || reps.clone(),
+        |rs| {
+            for r in rs.iter_mut() {
+                black_box(reference::requantize(r));
+            }
+        },
+    );
+    rec.record_pair(&s, &s_ref);
+
+    let Recorder { mut report, speedups } = rec;
+    report.extra("speedups", Json::Obj(speedups));
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
 }

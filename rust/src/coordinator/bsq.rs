@@ -222,7 +222,8 @@ pub fn pretrain(session: &Session, cfg: &BsqConfig, history: &mut History) -> Re
     // Pretrain with float activations (clip only): actlv = 0.
     let actlv = vec![0.0f32; session.man.act_sites.len()];
     let sched = StepDecay::pretrain();
-    let mut loader = Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xA);
+    let mut loader =
+        Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xA);
     for epoch in 0..cfg.pretrain_epochs {
         let t0 = Instant::now();
         let lr = sched.lr(epoch, cfg.pretrain_epochs);
@@ -351,16 +352,53 @@ pub fn bsq_train(
 
 /// Re-quantize every layer; masks/scales/planes updated in place.
 ///
+/// The layer planes are *moved* out of the state (no per-layer clone),
+/// adjusted in parallel across `std::thread::scope` workers — layers are
+/// independent and real models carry 20–50 of them, so the pause shrinks
+/// toward the slowest single layer — then reinstalled.
+///
 /// Momentum buffers of the repacked planes are zeroed: LSB trims shift the
 /// meaning of every plane slot, so carrying the old momentum would apply
 /// stale updates to the wrong bits (the paper resumes training on the
 /// "newly adjusted" W_p/W_n — a fresh optimizer state for those tensors).
 pub fn requantize_all(session: &Session, state: &mut ModelState) -> Result<()> {
+    let mut reps: Vec<(String, crate::quant::BitRep)> =
+        Vec::with_capacity(session.man.qlayers.len());
     for q in &session.man.qlayers {
-        let mut rep = state.bitrep(&q.name)?;
-        requantize(&mut rep);
-        state.install_bitrep(&q.name, rep);
-        for key in [format!("m:wp:{}", q.name), format!("m:wn:{}", q.name)] {
+        match state.take_bitrep(&q.name) {
+            Ok(rep) => reps.push((q.name.clone(), rep)),
+            Err(e) => {
+                // Put back what was already taken — a missing layer must not
+                // leave the state with other layers' planes dropped.
+                for (name, rep) in reps {
+                    state.install_bitrep(&name, rep);
+                }
+                return Err(e);
+            }
+        }
+    }
+
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(reps.len())
+        .max(1);
+    let chunk = (reps.len() + workers - 1) / workers;
+    if chunk > 0 {
+        std::thread::scope(|s| {
+            for part in reps.chunks_mut(chunk) {
+                s.spawn(move || {
+                    for (_, rep) in part.iter_mut() {
+                        requantize(rep);
+                    }
+                });
+            }
+        });
+    }
+
+    for (name, rep) in reps {
+        state.install_bitrep(&name, rep);
+        for key in [format!("m:wp:{name}"), format!("m:wn:{name}")] {
             if state.contains(&key) {
                 if let Ok(t) = state.get_mut(&key) {
                     t.data_mut().fill(0.0);

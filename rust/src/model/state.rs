@@ -100,7 +100,11 @@ impl ModelState {
 
     /// Per-layer initial precisions (the paper's ImageNet setting quantizes
     /// the leading convolutions at 8-bit and the rest at 6-bit).
-    pub fn to_bit_representation_per_layer(&mut self, man: &Manifest, bits: &[usize]) -> Result<()> {
+    pub fn to_bit_representation_per_layer(
+        &mut self,
+        man: &Manifest,
+        bits: &[usize],
+    ) -> Result<()> {
         if bits.len() != man.qlayers.len() {
             bail!("{} init precisions for {} layers", bits.len(), man.qlayers.len());
         }
@@ -132,8 +136,28 @@ impl ModelState {
         self.insert(format!("scale:{layer}"), Tensor::scalar(rep.scale));
     }
 
-    /// Borrowed view of a layer's bit representation (clones tensors; plane
-    /// tensors are the dominant cost and this runs only at re-quantization).
+    /// Move a layer's bit representation *out* of the state without cloning
+    /// the plane tensors — the allocation-free counterpart of [`Self::bitrep`]
+    /// for the re-quantization pause (pair with `install_bitrep` to put the
+    /// adjusted planes back). Fails without mutating if any piece is absent.
+    pub fn take_bitrep(&mut self, layer: &str) -> Result<BitRep> {
+        let scale = self.get(&format!("scale:{layer}"))?.item()?;
+        for prefix in ["wp", "wn", "mask"] {
+            let key = format!("{prefix}:{layer}");
+            if !self.contains(&key) {
+                bail!("state missing key {key:?}");
+            }
+        }
+        Ok(BitRep {
+            wp: self.remove(&format!("wp:{layer}")).unwrap(),
+            wn: self.remove(&format!("wn:{layer}")).unwrap(),
+            mask: self.remove(&format!("mask:{layer}")).unwrap(),
+            scale,
+        })
+    }
+
+    /// Borrowed view of a layer's bit representation (clones tensors; prefer
+    /// [`Self::take_bitrep`] on hot paths — the plane clones dominate).
     pub fn bitrep(&self, layer: &str) -> Result<BitRep> {
         Ok(BitRep {
             wp: self.get(&format!("wp:{layer}"))?.clone(),
@@ -251,6 +275,24 @@ mod tests {
         assert_eq!(back.bits(), 8);
         assert_eq!(back.wp.shape(), &[NB, 4]);
         assert_eq!(back.mask.data(), packed_mask(8).data());
+    }
+
+    #[test]
+    fn take_bitrep_moves_without_residue() {
+        let mut s = ModelState::new();
+        let w = Tensor::new(vec![3], vec![0.5, -0.25, 1.0]).unwrap();
+        s.install_bitrep("conv1", crate::quant::to_bitplanes(&w, 4).unwrap());
+        let rep = s.take_bitrep("conv1").unwrap();
+        assert_eq!(rep.bits(), 4);
+        // planes/mask are gone from the map, only the scale scalar remains
+        assert!(!s.contains("wp:conv1"));
+        assert!(!s.contains("wn:conv1"));
+        assert!(!s.contains("mask:conv1"));
+        assert!(s.contains("scale:conv1"));
+        s.install_bitrep("conv1", rep);
+        assert!(s.contains("wp:conv1"));
+        // missing layers fail cleanly
+        assert!(s.take_bitrep("nope").is_err());
     }
 
     #[test]

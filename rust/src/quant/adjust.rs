@@ -10,12 +10,20 @@
 //!      s' = s·(2^{n'}−1)/(2^n−1) composed with the LSB doublings),
 //!   5. re-splits the shifted codes into fresh binary W_p / W_n planes.
 //!
+//! Implementation: the packed engine (`quant::packed`). The codes live as
+//! i16, both trims come from word-level OR-reductions over the sign-split
+//! plane bitsets (a plane is trimmable iff its OR is zero), the LSB shift
+//! is a bulk plane-row drop, and the binary planes are rebuilt *in place*
+//! inside the existing `BitRep` buffers — no `planes_from_codes`
+//! reallocation. The scalar original lives in `quant::reference`.
+//!
 //! Invariant (verified by property tests): with δ = s/(2^n − 1), the
 //! represented weight W = δ·V is unchanged (paper Eq. 6) — the integer
 //! codes V transform *exactly* (pure shifts), and the only rounding is the
 //! final f64→f32 store of the updated scale (≤ 1 ulp per adjustment).
 
-use crate::quant::bitplane::{integer_codes, packed_mask, planes_from_codes, BitRep, NB};
+use crate::quant::bitplane::{packed_mask, BitRep, NB};
+use crate::quant::packed::{codes_i16, PlaneBits};
 
 /// Outcome of one re-quantization + precision adjustment.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,58 +38,49 @@ pub struct AdjustReport {
 ///
 /// Mirrors §3.3 exactly, with one engineering cap: codes exceeding the fixed
 /// plane capacity (|V| > 2^NB − 1, possible only when every plane saturates
-/// at its 2.0 clamp) are clamped by `integer_codes` — growth beyond NB bits
-/// would need a dynamic shape, which the AOT artifacts rule out (DESIGN.md
-/// §2). In practice the regularizer drives precision *down*.
+/// at its 2.0 clamp) are clamped by the code rounding — growth beyond NB
+/// bits would need a dynamic shape, which the AOT artifacts rule out
+/// (DESIGN.md §2). In practice the regularizer drives precision *down*.
 pub fn requantize(rep: &mut BitRep) -> AdjustReport {
     let n = rep.bits();
-    let wshape = rep.wp.shape()[1..].to_vec();
     if n == 0 {
         // Dead layer: nothing to represent; stays dead.
         return AdjustReport { bits_before: 0, bits_after: 0, msb_trimmed: 0, lsb_trimmed: 0 };
     }
 
-    let mut codes = integer_codes(rep);
+    let codes = codes_i16(rep); // bit-identical to reference::integer_codes
     let mut delta = rep.delta(); // s / (2^n − 1), exact in f64
 
-    // Highest used bit across all magnitudes. The float planes live in
-    // [0, 2], so V can reach 2·(2^n − 1) < 2^{n+1}: precision may *grow* to
-    // n + 1 (the paper's "between 0 and (n+1)-bit").
-    let max_mag = codes.iter().map(|v| v.unsigned_abs()).max().unwrap_or(0);
-    if max_mag == 0 {
+    let mut bits = PlaneBits::from_codes(&codes);
+    // Word-level OR-reduction: bit b of `occ` ⇔ plane b is non-empty. The
+    // float planes live in [0, 2], so V can reach 2·(2^n − 1) < 2^{n+1}:
+    // precision may *grow* to n + 1 (the paper's "between 0 and (n+1)-bit").
+    let occ = bits.occupancy();
+    if occ == 0 {
         // Every weight collapsed to zero: the layer is pruned away entirely
         // (the paper observes this under large α; shortcuts carry the signal).
         rep.mask = packed_mask(0);
-        let (wp, wn) = planes_from_codes(&codes, &wshape, 0);
-        rep.wp = wp;
-        rep.wn = wn;
+        rep.wp.data_mut().fill(0.0);
+        rep.wn.data_mut().fill(0.0);
         // Scale is meaningless for a dead layer; keep it for bookkeeping.
         return AdjustReport { bits_before: n, bits_after: 0, msb_trimmed: n, lsb_trimmed: 0 };
     }
 
-    let hi = 63 - max_mag.leading_zeros() as usize; // highest set bit index
-    // LSB trim: number of common trailing zero bits across nonzero codes.
-    let lsb = codes
-        .iter()
-        .filter(|&&v| v != 0)
-        .map(|v| v.trailing_zeros() as usize)
-        .min()
-        .unwrap_or(0)
-        .min(hi); // keep at least one bit
+    let hi = 31 - occ.leading_zeros() as usize; // highest occupied plane
+    // LSB trim: common trailing zero planes ≡ trailing zeros of the
+    // occupancy mask; keep at least one bit.
+    let lsb = (occ.trailing_zeros() as usize).min(hi);
 
     if lsb > 0 {
-        for v in &mut codes {
-            *v >>= lsb;
-        }
+        bits.drop_low_planes(lsb); // bulk right-shift of every code
         delta *= (1u64 << lsb) as f64; // each removed LSB doubles the step
     }
 
     let n_after = hi - lsb + 1; // bits needed for the shifted magnitudes
     debug_assert!(n_after <= NB);
 
-    let (wp, wn) = planes_from_codes(&codes, &wshape, n_after);
-    rep.wp = wp;
-    rep.wn = wn;
+    // Re-split into exact binary planes inside the existing buffers.
+    bits.expand_into(rep.wp.data_mut(), rep.wn.data_mut());
     rep.mask = packed_mask(n_after);
     rep.scale = (delta * ((1u64 << n_after) - 1) as f64) as f32;
 
@@ -96,7 +95,7 @@ pub fn requantize(rep: &mut BitRep) -> AdjustReport {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::bitplane::{from_bitplanes, to_bitplanes};
+    use crate::quant::bitplane::{from_bitplanes, integer_codes, planes_from_codes, to_bitplanes};
     use crate::tensor::Tensor;
     use crate::util::Pcg32;
 

@@ -9,9 +9,16 @@
 //! All plane tensors carry a fixed NB = 9 planes (8-bit initial precision +
 //! one overflow plane) with a bottom-packed activity mask — the static-shape
 //! scheme of DESIGN.md §2.
+//!
+//! The conversions here run on the packed codes engine (`quant::packed`):
+//! a single element-major pass emits i16 codes plus the sign-split plane
+//! bitsets, and reconstruction/re-quantization stream contiguous plane rows
+//! instead of the historical `b*elems + e` strided walks. The original
+//! scalar loops survive as `quant::reference` for differential testing.
 
 use anyhow::{bail, Result};
 
+use crate::quant::packed::{self, PackedCodes, PlaneBits};
 use crate::tensor::Tensor;
 
 /// Fixed plane count; must match `python/compile/quantize.py::NB`.
@@ -45,6 +52,17 @@ impl BitRep {
             self.scale as f64 / ((1u64 << n) - 1) as f64
         }
     }
+
+    /// Round the (possibly continuous) planes down to packed integer codes
+    /// — the cheap bridge onto the word-level engine (2 bytes/weight).
+    pub fn pack(&self) -> PackedCodes {
+        PackedCodes {
+            codes: packed::codes_i16(self),
+            wshape: self.wp.shape()[1..].to_vec(),
+            bits: self.bits(),
+            scale: self.scale,
+        }
+    }
 }
 
 /// Bottom-packed mask for n active planes.
@@ -60,7 +78,8 @@ pub fn packed_mask(n: usize) -> Tensor {
 ///
 /// Planes come out exactly binary (0.0 / 1.0). The represented value is
 /// `sign ⊙ s·Round[|W|/s·(2^n−1)]/(2^n−1)`, i.e. the weight the quantized
-/// forward pass will see at step 0 of BSQ training.
+/// forward pass will see at step 0 of BSQ training. One element-major pass
+/// emits the codes; the binary planes are expanded from the plane bitsets.
 pub fn to_bitplanes(w: &Tensor, n: usize) -> Result<BitRep> {
     if n == 0 || n > NB {
         bail!("initial precision must be in 1..={NB}, got {n}");
@@ -69,17 +88,22 @@ pub fn to_bitplanes(w: &Tensor, n: usize) -> Result<BitRep> {
     let scale = w.max_abs().max(1e-12);
     let levels = ((1u64 << n) - 1) as f32;
 
+    let codes: Vec<i16> = w
+        .data()
+        .iter()
+        .map(|&v| {
+            let mag = ((v.abs() / scale) * levels).round() as i16; // ≤ 2^n − 1
+            if v >= 0.0 {
+                mag
+            } else {
+                -mag
+            }
+        })
+        .collect();
+    let bits = PlaneBits::from_codes(&codes);
     let mut wp = vec![0.0f32; NB * elems];
     let mut wn = vec![0.0f32; NB * elems];
-    for (e, &v) in w.data().iter().enumerate() {
-        let code = ((v.abs() / scale) * levels).round() as u64; // ≤ 2^n − 1
-        let planes = if v >= 0.0 { &mut wp } else { &mut wn };
-        for b in 0..n {
-            if (code >> b) & 1 == 1 {
-                planes[b * elems + e] = 1.0;
-            }
-        }
-    }
+    bits.expand_into(&mut wp, &mut wn);
 
     let mut pshape = vec![NB];
     pshape.extend_from_slice(w.shape());
@@ -95,64 +119,31 @@ pub fn to_bitplanes(w: &Tensor, n: usize) -> Result<BitRep> {
 /// (the exact value the device-side STE forward computes: rounds first).
 pub fn from_bitplanes(rep: &BitRep) -> Tensor {
     let n = rep.bits();
-    let elems = rep.wp.len() / NB;
     let wshape = rep.wp.shape()[1..].to_vec();
     if n == 0 {
         return Tensor::zeros(&wshape);
     }
     let delta = rep.delta() as f32;
-    let mut out = vec![0.0f32; elems];
-    let wp = rep.wp.data();
-    let wn = rep.wn.data();
-    let mask = rep.mask.data();
-    for (e, slot) in out.iter_mut().enumerate() {
-        let mut acc = 0.0f64;
-        for b in 0..NB {
-            if mask[b] != 0.0 {
-                acc += ((wp[b * elems + e] - wn[b * elems + e]) as f64) * (1u64 << b) as f64;
-            }
-        }
-        *slot = (acc.round() as f32) * delta;
-    }
+    let out: Vec<f32> =
+        packed::accumulate_codes(rep).iter().map(|a| (a.round() as f32) * delta).collect();
     Tensor::new(wshape, out).unwrap()
 }
 
 /// The signed integer codes V_e = Round[Σ_b mask_b (wp−wn) 2^b], clamped to
 /// the plane capacity ±(2^NB − 1). This is the re-quantization of §3.3.
 pub fn integer_codes(rep: &BitRep) -> Vec<i64> {
-    let elems = rep.wp.len() / NB;
-    let wp = rep.wp.data();
-    let wn = rep.wn.data();
-    let mask = rep.mask.data();
     let cap = (1i64 << NB) - 1;
-    let mut codes = vec![0i64; elems];
-    for (e, slot) in codes.iter_mut().enumerate() {
-        let mut acc = 0.0f64;
-        for b in 0..NB {
-            if mask[b] != 0.0 {
-                acc += ((wp[b * elems + e] - wn[b * elems + e]) as f64) * (1u64 << b) as f64;
-            }
-        }
-        *slot = (acc.round() as i64).clamp(-cap, cap);
-    }
-    codes
+    packed::accumulate_codes(rep).iter().map(|a| (a.round() as i64).clamp(-cap, cap)).collect()
 }
 
 /// Rebuild exact binary planes from signed integer codes (post-adjustment
 /// re-split of §3.3: positives to W_p, magnitudes of negatives to W_n).
 pub fn planes_from_codes(codes: &[i64], wshape: &[usize], n: usize) -> (Tensor, Tensor) {
     let elems = codes.len();
+    let bits = PlaneBits::from_wide_codes(codes, n);
     let mut wp = vec![0.0f32; NB * elems];
     let mut wn = vec![0.0f32; NB * elems];
-    for (e, &v) in codes.iter().enumerate() {
-        let mag = v.unsigned_abs();
-        let planes = if v >= 0 { &mut wp } else { &mut wn };
-        for b in 0..n.min(NB) {
-            if (mag >> b) & 1 == 1 {
-                planes[b * elems + e] = 1.0;
-            }
-        }
-    }
+    bits.expand_into(&mut wp, &mut wn);
     let mut pshape = vec![NB];
     pshape.extend_from_slice(wshape);
     (Tensor::new(pshape.clone(), wp).unwrap(), Tensor::new(pshape, wn).unwrap())
@@ -250,5 +241,21 @@ mod tests {
         rep.mask = packed_mask(0);
         let back = from_bitplanes(&rep);
         assert!(back.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn gapped_masks_skip_inactive_planes() {
+        // a non-bottom-packed mask (never produced, but the reference path
+        // honors it — the packed path must match) weighs only planes 0 and 2
+        let mut rep = to_bitplanes(&Tensor::new(vec![1], vec![0.5]).unwrap(), 3).unwrap();
+        rep.wp.data_mut().fill(0.0);
+        rep.wp.data_mut()[0] = 1.0; // plane 0
+        rep.wp.data_mut()[1] = 1.0; // plane 1 (masked off below)
+        rep.wp.data_mut()[2] = 1.0; // plane 2
+        let mut m = vec![0.0f32; NB];
+        m[0] = 1.0;
+        m[2] = 1.0;
+        rep.mask = Tensor::new(vec![NB], m).unwrap();
+        assert_eq!(integer_codes(&rep), vec![5]); // 1 + 4, plane 1 skipped
     }
 }

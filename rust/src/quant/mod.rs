@@ -1,12 +1,20 @@
 //! The BSQ quantization substrate: bit planes, precision adjustment,
 //! scheme accounting and regularizer reweighing (paper §3, Eqs. 2–6).
+//!
+//! The §3.3 hot path (conversion, code extraction, re-quantization) runs on
+//! the packed codes engine in [`packed`]; the original scalar loops are
+//! retained verbatim in [`reference`] as the differential-testing ground
+//! truth and perf baseline.
 
 pub mod adjust;
 pub mod bitplane;
+pub mod packed;
+pub mod reference;
 pub mod regweight;
 pub mod scheme;
 
 pub use adjust::{requantize, AdjustReport};
 pub use bitplane::{from_bitplanes, packed_mask, to_bitplanes, BitRep, NB};
+pub use packed::{PackedCodes, PlaneBits};
 pub use regweight::{reg_weights, Reweigh};
 pub use scheme::{spearman, LayerPrec, QuantScheme};

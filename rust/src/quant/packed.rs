@@ -1,0 +1,370 @@
+//! Packed codes engine — the word-level representation behind the §3.3
+//! re-quantization hot path (DESIGN.md §2).
+//!
+//! The training-time interface stays `BitRep` (f32 planes in [0, 2] are
+//! trained variables), but everything the coordinator computes *about* a
+//! layer between epochs factors through two compact views:
+//!
+//! * [`PackedCodes`] — the signed integer codes V_e as a flat `Vec<i16>`
+//!   (|V| ≤ 2^NB − 1 = 511, so i16 holds NB = 9 magnitude bits + sign with
+//!   headroom): 2 bytes/weight vs the 72 bytes/weight of the 2×NB f32
+//!   plane slots.
+//! * [`PlaneBits`] — a sign-split bitset view: one `u64` word per 64
+//!   weights per plane (1 bit/weight — 64× smaller than an f32 plane row),
+//!   supporting word-level reductions: popcount for per-plane occupancy,
+//!   OR-reduction for all-zero-plane detection, and bulk plane-row shifts
+//!   for LSB trimming.
+//!
+//! Exactness contract: every routine here reproduces the retained scalar
+//! path (`quant::reference`) bit for bit. The only floating-point work is
+//! the code rounding in [`accumulate_codes`], which performs the *same*
+//! f64 operations in the *same* per-element order (ascending plane index)
+//! as the reference — f64 addition is deterministic, so the rounded codes
+//! are identical, not merely close. `tests/packed_diff.rs` enforces this
+//! over randomized continuous-plane states.
+
+use crate::quant::bitplane::{packed_mask, BitRep, NB};
+use crate::tensor::Tensor;
+
+/// Plane capacity: |code| ≤ 2^NB − 1.
+pub const CODE_CAP: i16 = ((1i32 << NB) - 1) as i16;
+
+/// Per-layer signed integer codes plus the scheme scalars — the compact
+/// re-quantization currency (2 bytes/weight).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PackedCodes {
+    /// Signed codes V_e, |V_e| ≤ [`CODE_CAP`].
+    pub codes: Vec<i16>,
+    /// Weight-tensor shape (without the leading plane axis).
+    pub wshape: Vec<usize>,
+    /// Active precision n (number of live planes).
+    pub bits: usize,
+    /// Dynamic-range scale s.
+    pub scale: f32,
+}
+
+impl PackedCodes {
+    pub fn elems(&self) -> usize {
+        self.codes.len()
+    }
+
+    /// The LSB step δ = s / (2^n − 1); 0 for a dead (n = 0) layer.
+    pub fn delta(&self) -> f64 {
+        if self.bits == 0 {
+            0.0
+        } else {
+            self.scale as f64 / ((1u64 << self.bits) - 1) as f64
+        }
+    }
+
+    /// The sign-split bitset view of the codes.
+    pub fn plane_bits(&self) -> PlaneBits {
+        PlaneBits::from_codes(&self.codes)
+    }
+
+    /// Represented float weights W = δ·V. Matches `from_bitplanes` bitwise
+    /// whenever the codes were within the ±[`CODE_CAP`] clamp.
+    pub fn dequantize(&self) -> Tensor {
+        let delta = self.delta() as f32;
+        let data = self.codes.iter().map(|&c| c as f32 * delta).collect();
+        Tensor::new(self.wshape.clone(), data).unwrap()
+    }
+
+    /// Expand back to an exact binary `BitRep` (the `pack()` inverse).
+    ///
+    /// Requires the codes to fit in `bits` planes — true for any freshly
+    /// converted or re-quantized layer. A mid-training continuous `BitRep`
+    /// can round to codes one bit wider (the §3.3 n+1 growth); run
+    /// `requantize` first to renormalize.
+    pub fn unpack(&self) -> BitRep {
+        debug_assert!(self
+            .codes
+            .iter()
+            .all(|c| (c.unsigned_abs() >> self.bits.min(15)) == 0 || self.bits >= NB));
+        let elems = self.codes.len();
+        let bits = self.plane_bits();
+        let mut wp = vec![0.0f32; NB * elems];
+        let mut wn = vec![0.0f32; NB * elems];
+        bits.expand_into(&mut wp, &mut wn);
+        let mut pshape = vec![NB];
+        pshape.extend_from_slice(&self.wshape);
+        BitRep {
+            wp: Tensor::new(pshape.clone(), wp).unwrap(),
+            wn: Tensor::new(pshape, wn).unwrap(),
+            mask: packed_mask(self.bits),
+            scale: self.scale,
+        }
+    }
+}
+
+/// Sign-split plane bitsets: `words` u64s per plane, NB planes, bit `e % 64`
+/// of word `e / 64` in plane row b set iff bit b of |V_e| is set (in `pos`
+/// for V_e > 0, `neg` for V_e < 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlaneBits {
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+    /// Words per plane row.
+    words: usize,
+    /// Weights covered (bits past `elems` in the last word stay zero).
+    elems: usize,
+}
+
+impl PlaneBits {
+    /// Single element-major pass over narrow (already clamped) codes.
+    pub fn from_codes(codes: &[i16]) -> PlaneBits {
+        Self::build(codes.iter().map(|&c| c as i64), codes.len(), NB)
+    }
+
+    /// Wide codes with an explicit plane cap (bits ≥ `max_planes` of each
+    /// magnitude are dropped — the `planes_from_codes` contract).
+    pub fn from_wide_codes(codes: &[i64], max_planes: usize) -> PlaneBits {
+        Self::build(codes.iter().copied(), codes.len(), max_planes.min(NB))
+    }
+
+    fn build<I: Iterator<Item = i64>>(codes: I, elems: usize, max_planes: usize) -> PlaneBits {
+        let words = (elems + 63) / 64;
+        let mut pos = vec![0u64; NB * words];
+        let mut neg = vec![0u64; NB * words];
+        for (e, v) in codes.enumerate() {
+            if v == 0 {
+                continue;
+            }
+            let (planes, mut mag) =
+                if v > 0 { (&mut pos, v as u64) } else { (&mut neg, v.unsigned_abs()) };
+            let word = e >> 6;
+            let bit = 1u64 << (e & 63);
+            while mag != 0 {
+                let b = mag.trailing_zeros() as usize;
+                if b >= max_planes {
+                    break; // bits only ascend from here
+                }
+                planes[b * words + word] |= bit;
+                mag &= mag - 1;
+            }
+        }
+        PlaneBits { pos, neg, words, elems }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.elems
+    }
+
+    fn row(planes: &[u64], b: usize, words: usize) -> &[u64] {
+        &planes[b * words..(b + 1) * words]
+    }
+
+    /// Per-plane set-bit counts `(positive, negative)` — word-level popcount.
+    pub fn popcount(&self, plane: usize) -> (u64, u64) {
+        let count = |row: &[u64]| row.iter().map(|w| w.count_ones() as u64).sum();
+        (
+            count(Self::row(&self.pos, plane, self.words)),
+            count(Self::row(&self.neg, plane, self.words)),
+        )
+    }
+
+    /// Total occupancy (pos + neg) per plane, planes 0..NB.
+    pub fn plane_popcounts(&self) -> Vec<u64> {
+        (0..NB)
+            .map(|b| {
+                let (p, n) = self.popcount(b);
+                p + n
+            })
+            .collect()
+    }
+
+    /// Occupancy bitmask: bit b set iff plane b holds any weight bit —
+    /// word-level OR-reduction (all-zero-plane detection). The §3.3 trims
+    /// fall out directly: MSB trim from the leading zeros, LSB trim from
+    /// the trailing zeros of this mask.
+    pub fn occupancy(&self) -> u32 {
+        let mut occ = 0u32;
+        for b in 0..NB {
+            let or = Self::row(&self.pos, b, self.words).iter().fold(0u64, |a, &w| a | w)
+                | Self::row(&self.neg, b, self.words).iter().fold(0u64, |a, &w| a | w);
+            if or != 0 {
+                occ |= 1 << b;
+            }
+        }
+        occ
+    }
+
+    /// Bulk LSB trim: drop the bottom `k` planes (plane b+k becomes plane
+    /// b — the bitset image of `code >> k`), zero-filling the vacated top
+    /// rows. Word-level `copy_within`, no per-element work.
+    pub fn drop_low_planes(&mut self, k: usize) {
+        let k = k.min(NB);
+        if k == 0 {
+            return;
+        }
+        let w = self.words;
+        for planes in [&mut self.pos, &mut self.neg] {
+            planes.copy_within(k * w.., 0);
+            planes[(NB - k) * w..].fill(0);
+        }
+    }
+
+    /// Expand to exact binary f32 planes in place (zero-copy with respect
+    /// to the destination `BitRep` plane buffers: every `[NB * elems]` slot
+    /// is overwritten, so no prior clearing or reallocation is needed).
+    pub fn expand_into(&self, wp: &mut [f32], wn: &mut [f32]) {
+        assert_eq!(wp.len(), NB * self.elems, "wp buffer mismatch");
+        assert_eq!(wn.len(), NB * self.elems, "wn buffer mismatch");
+        expand_plane_rows(&self.pos, self.words, self.elems, wp);
+        expand_plane_rows(&self.neg, self.words, self.elems, wn);
+    }
+}
+
+fn expand_plane_rows(bits: &[u64], words: usize, elems: usize, out: &mut [f32]) {
+    for b in 0..NB {
+        let row = &bits[b * words..(b + 1) * words];
+        let out_row = &mut out[b * elems..(b + 1) * elems];
+        for (wi, &w) in row.iter().enumerate() {
+            let base = wi * 64;
+            let chunk = &mut out_row[base..(base + 64).min(elems)];
+            if w == 0 {
+                chunk.fill(0.0); // bit-sparse planes are the common case
+            } else {
+                for (j, slot) in chunk.iter_mut().enumerate() {
+                    *slot = ((w >> j) & 1) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Fused element-major code accumulation over only the *active* planes.
+///
+/// Streams each active plane row (contiguous) into a shared f64 accumulator,
+/// replacing the reference path's per-element strided walk and serial f64
+/// dependency chain with plane-row passes the compiler can vectorize. Per
+/// element, the additions happen in the same ascending-plane order with the
+/// same operand values as `reference::integer_codes`, so the result is
+/// bit-identical.
+pub fn accumulate_codes(rep: &BitRep) -> Vec<f64> {
+    let elems = rep.wp.len() / NB;
+    let mut acc = vec![0.0f64; elems];
+    for (b, &m) in rep.mask.data().iter().enumerate().take(NB) {
+        if m == 0.0 {
+            continue;
+        }
+        let weight = (1u64 << b) as f64;
+        let p = rep.wp.row(b, elems);
+        let n = rep.wn.row(b, elems);
+        for ((a, &pv), &nv) in acc.iter_mut().zip(p).zip(n) {
+            *a += (pv - nv) as f64 * weight;
+        }
+    }
+    acc
+}
+
+/// Rounded, capacity-clamped i16 codes — the packed `integer_codes`.
+pub fn codes_i16(rep: &BitRep) -> Vec<i16> {
+    let cap = CODE_CAP as i64;
+    accumulate_codes(rep).iter().map(|a| (a.round() as i64).clamp(-cap, cap) as i16).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::bitplane::to_bitplanes;
+
+    fn codes_fixture() -> Vec<i16> {
+        vec![5, -3, 0, 8, -511, 511, 64, -64, 1]
+    }
+
+    #[test]
+    fn bitset_roundtrips_codes() {
+        let codes = codes_fixture();
+        let bits = PlaneBits::from_codes(&codes);
+        let mut wp = vec![0.0f32; NB * codes.len()];
+        let mut wn = vec![0.0f32; NB * codes.len()];
+        bits.expand_into(&mut wp, &mut wn);
+        for (e, &c) in codes.iter().enumerate() {
+            let mut acc = 0i32;
+            for b in 0..NB {
+                acc += ((wp[b * codes.len() + e] - wn[b * codes.len() + e]) as i32) << b;
+            }
+            assert_eq!(acc, c as i32, "element {e}");
+        }
+    }
+
+    #[test]
+    fn occupancy_and_popcounts() {
+        // codes {4, -4}: only plane 2 occupied, one bit in each sign half
+        let bits = PlaneBits::from_codes(&[4, -4]);
+        assert_eq!(bits.occupancy(), 0b100);
+        assert_eq!(bits.popcount(2), (1, 1));
+        assert_eq!(bits.popcount(0), (0, 0));
+        let pc = bits.plane_popcounts();
+        assert_eq!(pc[2], 2);
+        assert_eq!(pc.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn drop_low_planes_is_right_shift() {
+        let codes = vec![12i16, -8, 6];
+        let mut bits = PlaneBits::from_codes(&codes);
+        bits.drop_low_planes(1);
+        let shifted: Vec<i16> = codes.iter().map(|&c| c >> 1).collect();
+        assert_eq!(bits, PlaneBits::from_codes(&shifted));
+        // dropping everything leaves an empty bitset
+        bits.drop_low_planes(NB);
+        assert_eq!(bits.occupancy(), 0);
+    }
+
+    #[test]
+    fn word_boundary_elems() {
+        // 64, 65 and 130 elements exercise full/partial trailing words
+        for elems in [64usize, 65, 130] {
+            let codes: Vec<i16> = (0..elems).map(|e| ((e % 13) as i16) - 6).collect();
+            let bits = PlaneBits::from_codes(&codes);
+            let mut wp = vec![9.0f32; NB * elems];
+            let mut wn = vec![9.0f32; NB * elems];
+            bits.expand_into(&mut wp, &mut wn);
+            for (e, &c) in codes.iter().enumerate() {
+                let mut acc = 0i32;
+                for b in 0..NB {
+                    acc += ((wp[b * elems + e] - wn[b * elems + e]) as i32) << b;
+                }
+                assert_eq!(acc, c as i32);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_bridge() {
+        let w = Tensor::new(vec![4], vec![0.5, -0.25, 0.75, -1.0]).unwrap();
+        let rep = to_bitplanes(&w, 6).unwrap();
+        let packed = rep.pack();
+        assert_eq!(packed.bits, 6);
+        assert_eq!(packed.wshape, vec![4]);
+        let back = packed.unpack();
+        assert_eq!(back.wp, rep.wp);
+        assert_eq!(back.wn, rep.wn);
+        assert_eq!(back.mask, rep.mask);
+        assert_eq!(back.scale.to_bits(), rep.scale.to_bits());
+    }
+
+    #[test]
+    fn dequantize_matches_reconstruction() {
+        let w = Tensor::new(vec![5], vec![0.1, -0.6, 0.33, 0.0, -0.05]).unwrap();
+        let rep = to_bitplanes(&w, 8).unwrap();
+        let packed = rep.pack();
+        let deq = packed.dequantize();
+        let rec = crate::quant::from_bitplanes(&rep);
+        assert_eq!(deq.shape(), rec.shape());
+        for (a, b) in deq.data().iter().zip(rec.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn wide_codes_respect_plane_cap() {
+        // bit 3 of |−9| = 0b1001 is above a 3-plane cap and must be dropped
+        let bits = PlaneBits::from_wide_codes(&[9, -9], 3);
+        assert_eq!(bits.occupancy(), 0b001);
+        assert_eq!(bits.popcount(0), (1, 1));
+        assert_eq!(bits.popcount(3), (0, 0));
+    }
+}

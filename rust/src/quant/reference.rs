@@ -1,0 +1,189 @@
+//! Reference scalar implementations of the §3.3 hot path.
+//!
+//! These are the original plane-strided, per-element loops that the packed
+//! engine (`quant::packed`) replaced. They are kept verbatim as the ground
+//! truth for differential testing (`tests/packed_diff.rs` asserts the packed
+//! path produces bit-identical codes, masks, scales and reconstructed
+//! weights) and as the baseline the §Perf pass in EXPERIMENTS.md measures
+//! speedups against. Do not optimize this module — its value is that it is
+//! the obviously-correct transcription of paper Eq. 2 / §3.3.
+
+use anyhow::{bail, Result};
+
+use crate::quant::adjust::AdjustReport;
+use crate::quant::bitplane::{packed_mask, BitRep, NB};
+use crate::tensor::Tensor;
+
+/// Scalar Eq. 2: float weights → bit representation (plane-strided writes).
+pub fn to_bitplanes(w: &Tensor, n: usize) -> Result<BitRep> {
+    if n == 0 || n > NB {
+        bail!("initial precision must be in 1..={NB}, got {n}");
+    }
+    let elems = w.len();
+    let scale = w.max_abs().max(1e-12);
+    let levels = ((1u64 << n) - 1) as f32;
+
+    let mut wp = vec![0.0f32; NB * elems];
+    let mut wn = vec![0.0f32; NB * elems];
+    for (e, &v) in w.data().iter().enumerate() {
+        let code = ((v.abs() / scale) * levels).round() as u64; // ≤ 2^n − 1
+        let planes = if v >= 0.0 { &mut wp } else { &mut wn };
+        for b in 0..n {
+            if (code >> b) & 1 == 1 {
+                planes[b * elems + e] = 1.0;
+            }
+        }
+    }
+
+    let mut pshape = vec![NB];
+    pshape.extend_from_slice(w.shape());
+    Ok(BitRep {
+        wp: Tensor::new(pshape.clone(), wp)?,
+        wn: Tensor::new(pshape, wn)?,
+        mask: packed_mask(n),
+        scale,
+    })
+}
+
+/// Scalar reconstruction: per-element f64 accumulation over all NB planes.
+pub fn from_bitplanes(rep: &BitRep) -> Tensor {
+    let n = rep.bits();
+    let elems = rep.wp.len() / NB;
+    let wshape = rep.wp.shape()[1..].to_vec();
+    if n == 0 {
+        return Tensor::zeros(&wshape);
+    }
+    let delta = rep.delta() as f32;
+    let mut out = vec![0.0f32; elems];
+    let wp = rep.wp.data();
+    let wn = rep.wn.data();
+    let mask = rep.mask.data();
+    for (e, slot) in out.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for b in 0..NB {
+            if mask[b] != 0.0 {
+                acc += ((wp[b * elems + e] - wn[b * elems + e]) as f64) * (1u64 << b) as f64;
+            }
+        }
+        *slot = (acc.round() as f32) * delta;
+    }
+    Tensor::new(wshape, out).unwrap()
+}
+
+/// Scalar signed integer codes (strided walk, f64 inner accumulator).
+pub fn integer_codes(rep: &BitRep) -> Vec<i64> {
+    let elems = rep.wp.len() / NB;
+    let wp = rep.wp.data();
+    let wn = rep.wn.data();
+    let mask = rep.mask.data();
+    let cap = (1i64 << NB) - 1;
+    let mut codes = vec![0i64; elems];
+    for (e, slot) in codes.iter_mut().enumerate() {
+        let mut acc = 0.0f64;
+        for b in 0..NB {
+            if mask[b] != 0.0 {
+                acc += ((wp[b * elems + e] - wn[b * elems + e]) as f64) * (1u64 << b) as f64;
+            }
+        }
+        *slot = (acc.round() as i64).clamp(-cap, cap);
+    }
+    codes
+}
+
+/// Scalar plane re-split of signed codes (freshly allocated plane tensors).
+pub fn planes_from_codes(codes: &[i64], wshape: &[usize], n: usize) -> (Tensor, Tensor) {
+    let elems = codes.len();
+    let mut wp = vec![0.0f32; NB * elems];
+    let mut wn = vec![0.0f32; NB * elems];
+    for (e, &v) in codes.iter().enumerate() {
+        let mag = v.unsigned_abs();
+        let planes = if v >= 0 { &mut wp } else { &mut wn };
+        for b in 0..n.min(NB) {
+            if (mag >> b) & 1 == 1 {
+                planes[b * elems + e] = 1.0;
+            }
+        }
+    }
+    let mut pshape = vec![NB];
+    pshape.extend_from_slice(wshape);
+    (Tensor::new(pshape.clone(), wp).unwrap(), Tensor::new(pshape, wn).unwrap())
+}
+
+/// Scalar §3.3 re-quantization + precision adjustment (allocates fresh
+/// planes via `planes_from_codes`; per-element max/trailing-zero scans).
+pub fn requantize(rep: &mut BitRep) -> AdjustReport {
+    let n = rep.bits();
+    let wshape = rep.wp.shape()[1..].to_vec();
+    if n == 0 {
+        return AdjustReport { bits_before: 0, bits_after: 0, msb_trimmed: 0, lsb_trimmed: 0 };
+    }
+
+    let mut codes = integer_codes(rep);
+    let mut delta = rep.delta();
+
+    let max_mag = codes.iter().map(|v| v.unsigned_abs()).max().unwrap_or(0);
+    if max_mag == 0 {
+        rep.mask = packed_mask(0);
+        let (wp, wn) = planes_from_codes(&codes, &wshape, 0);
+        rep.wp = wp;
+        rep.wn = wn;
+        return AdjustReport { bits_before: n, bits_after: 0, msb_trimmed: n, lsb_trimmed: 0 };
+    }
+
+    let hi = 63 - max_mag.leading_zeros() as usize;
+    let lsb = codes
+        .iter()
+        .filter(|&&v| v != 0)
+        .map(|v| v.trailing_zeros() as usize)
+        .min()
+        .unwrap_or(0)
+        .min(hi);
+
+    if lsb > 0 {
+        for v in &mut codes {
+            *v >>= lsb;
+        }
+        delta *= (1u64 << lsb) as f64;
+    }
+
+    let n_after = hi - lsb + 1;
+    debug_assert!(n_after <= NB);
+
+    let (wp, wn) = planes_from_codes(&codes, &wshape, n_after);
+    rep.wp = wp;
+    rep.wn = wn;
+    rep.mask = packed_mask(n_after);
+    rep.scale = (delta * ((1u64 << n_after) - 1) as f64) as f32;
+
+    AdjustReport {
+        bits_before: n,
+        bits_after: n_after,
+        msb_trimmed: (n + 1).saturating_sub(n_after + lsb),
+        lsb_trimmed: lsb,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_roundtrip_sanity() {
+        let w = Tensor::new(vec![3], vec![0.5, -0.25, 1.0]).unwrap();
+        let rep = to_bitplanes(&w, 8).unwrap();
+        let back = from_bitplanes(&rep);
+        for (a, b) in w.data().iter().zip(back.data()) {
+            assert!((a - b).abs() <= 0.5 * rep.delta() as f32 + 1e-7);
+        }
+    }
+
+    #[test]
+    fn reference_requantize_trims() {
+        let codes = vec![4i64, -8, 12];
+        let (wp, wn) = planes_from_codes(&codes, &[3], 8);
+        let mut rep = BitRep { wp, wn, mask: packed_mask(8), scale: 1.0 };
+        let r = requantize(&mut rep);
+        assert_eq!(r.lsb_trimmed, 2); // all codes divisible by 4
+        assert_eq!(r.bits_after, 2); // 12>>2 = 3 → two bits
+    }
+}

@@ -17,6 +17,10 @@ use log::{debug, info};
 use crate::data::Batch;
 use crate::model::state::ModelState;
 use crate::runtime::manifest::{ArtifactSpec, Role};
+// Offline stand-in for the real `xla` PJRT bindings (crates.io is
+// unreachable from this build environment); see xla_stub.rs to swap the
+// real backend in. All call sites below are written against the real API.
+use crate::runtime::xla_stub as xla;
 use crate::tensor::Tensor;
 
 /// Scalar hyperparameters + named configuration vectors for one run.

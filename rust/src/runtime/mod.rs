@@ -6,6 +6,7 @@
 
 pub mod engine;
 pub mod manifest;
+pub mod xla_stub;
 
 pub use engine::{artifacts_root, load_manifest, Engine, Executable, RunInputs, RunOutputs};
 pub use manifest::{ArtifactSpec, IoItem, Manifest, Role};

@@ -1,0 +1,147 @@
+//! Offline stand-in for the `xla` PJRT bindings.
+//!
+//! The build environment has no crates.io access and no XLA C library, so
+//! the real `xla` crate (PJRT C API bindings) cannot be a hard dependency.
+//! This module mirrors exactly the API surface `runtime::engine` consumes;
+//! every entry point fails at *runtime* with a clear message while keeping
+//! the whole coordinator compiling and unit-testable offline. Everything
+//! that needs a device (`Engine::cpu()` onward) is behind artifact checks
+//! (`make artifacts`), so tests and benches skip gracefully.
+//!
+//! Swapping in the real backend: add the `xla` crate to Cargo.toml and
+//! replace the `use crate::runtime::xla_stub as xla;` alias in
+//! `runtime/engine.rs` with `use xla;` — the call sites are written
+//! against the real crate's API and need no changes.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `Display`-driven usage.
+#[derive(Debug)]
+pub struct XlaError(String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+fn unavailable() -> XlaError {
+    XlaError(
+        "PJRT backend unavailable: this build uses the offline xla stub \
+         (see runtime/xla_stub.rs for how to link the real bindings)"
+            .to_string(),
+    )
+}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable())
+    }
+}
+
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unavailable())
+    }
+}
+
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _literals: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable())
+    }
+}
+
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable())
+    }
+}
+
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn create_from_shape_and_untyped_data(
+        _ty: ElementType,
+        _shape: &[usize],
+        _bytes: &[u8],
+    ) -> Result<Literal> {
+        Err(unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(unavailable())
+    }
+
+    pub fn copy_raw_to<T>(&self, _dst: &mut [T]) -> Result<()> {
+        Err(unavailable())
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        Err(unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_fails_loudly_not_silently() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("nope.hlo").is_err());
+        assert!(Literal::create_from_shape_and_untyped_data(ElementType::F32, &[1], &[0; 4])
+            .is_err());
+    }
+}

@@ -84,6 +84,17 @@ impl Tensor {
         &mut self.data
     }
 
+    /// Zero-copy contiguous row `i` of a `[rows, len]` view of the storage
+    /// (e.g. one bit plane of a `[NB, *wshape]` tensor with `len = elems`).
+    pub fn row(&self, i: usize, len: usize) -> &[f32] {
+        &self.data[i * len..(i + 1) * len]
+    }
+
+    /// Mutable zero-copy row view; see [`Tensor::row`].
+    pub fn row_mut(&mut self, i: usize, len: usize) -> &mut [f32] {
+        &mut self.data[i * len..(i + 1) * len]
+    }
+
     pub fn into_data(self) -> Vec<f32> {
         self.data
     }
@@ -196,6 +207,15 @@ mod tests {
         assert_eq!(r.shape(), &[2, 1]);
         assert!(t.clone().reshaped(&[3]).is_err());
         assert_eq!(t.dot(&Tensor::from_vec(vec![1.0, 1.0])), -1.0);
+    }
+
+    #[test]
+    fn row_views() {
+        let mut t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(t.row(0, 3), &[1.0, 2.0, 3.0]);
+        assert_eq!(t.row(1, 3), &[4.0, 5.0, 6.0]);
+        t.row_mut(1, 3)[0] = 9.0;
+        assert_eq!(t.data()[3], 9.0);
     }
 
     #[test]

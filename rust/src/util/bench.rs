@@ -1,10 +1,17 @@
 //! Micro-benchmark harness (criterion is unavailable offline).
 //!
-//! Provides warmup + timed iterations with mean/stddev/median/min and a
-//! criterion-style one-line report. Used by every target in `rust/benches/`
-//! and by the §Perf pass in EXPERIMENTS.md.
+//! Provides warmup + timed iterations with mean/stddev/median/min, a
+//! criterion-style one-line report, per-iteration setup excluded from the
+//! timed region (`run_prepared`), and machine-readable output: every bench
+//! target collects its [`Stats`] into a [`JsonReport`] and writes
+//! `BENCH_<target>.json` so the perf trajectory is tracked across PRs.
+//! Used by every target in `rust/benches/` and by the §Perf pass in
+//! EXPERIMENTS.md.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Stats {
@@ -22,6 +29,26 @@ pub struct Stats {
 impl Stats {
     pub fn throughput_per_sec(&self) -> Option<f64> {
         self.elements.map(|e| e as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn ns_per_elem(&self) -> Option<f64> {
+        self.elements.map(|e| self.mean.as_nanos() as f64 / e.max(1) as f64)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.mean.as_nanos() as f64)),
+            ("median_ns", Json::num(self.median.as_nanos() as f64)),
+            ("stddev_ns", Json::num(self.stddev.as_nanos() as f64)),
+            ("min_ns", Json::num(self.min.as_nanos() as f64)),
+            ("ns_per_elem", self.ns_per_elem().map(Json::num).unwrap_or(Json::Null)),
+            (
+                "throughput_elems_per_sec",
+                self.throughput_per_sec().map(Json::num).unwrap_or(Json::Null),
+            ),
+        ])
     }
 
     pub fn report(&self) -> String {
@@ -77,12 +104,48 @@ impl Bench {
         Bench { warmup: 1, iters: 10, max_time: Duration::from_secs(10) }
     }
 
+    /// Default runner, or `quick()` when `BSQ_BENCH_QUICK` is set (CI smoke).
+    pub fn from_env() -> Self {
+        if std::env::var_os("BSQ_BENCH_QUICK").is_some() {
+            Bench::quick()
+        } else {
+            Bench::default()
+        }
+    }
+
     pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> Stats {
         self.run_with_elements(name, None, &mut f)
     }
 
     pub fn run_elems<F: FnMut()>(&self, name: &str, elements: u64, mut f: F) -> Stats {
         self.run_with_elements(name, Some(elements), &mut f)
+    }
+
+    /// Like `run_elems`, but rebuilds the routine's input with `setup`
+    /// before every iteration, *outside* the timed region — for routines
+    /// that consume or mutate their input (e.g. in-place re-quantization).
+    /// The measured span covers only `f`; setup and drop are excluded.
+    pub fn run_prepared<T, S, F>(&self, name: &str, elements: u64, mut setup: S, mut f: F) -> Stats
+    where
+        S: FnMut() -> T,
+        F: FnMut(&mut T),
+    {
+        for _ in 0..self.warmup {
+            let mut x = setup();
+            f(&mut x);
+        }
+        let start = Instant::now();
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let mut x = setup();
+            let t0 = Instant::now();
+            f(&mut x);
+            samples.push(t0.elapsed());
+            if start.elapsed() > self.max_time && samples.len() >= 3 {
+                break;
+            }
+        }
+        stats_from_samples(name, &mut samples, Some(elements))
     }
 
     fn run_with_elements<F: FnMut()>(&self, name: &str, elements: Option<u64>, f: &mut F) -> Stats {
@@ -122,6 +185,54 @@ fn stats_from_samples(name: &str, samples: &mut [Duration], elements: Option<u64
     }
 }
 
+/// Accumulates a bench target's [`Stats`] plus free-form extras (e.g.
+/// packed-vs-reference speedups) and writes them as `BENCH_<target>.json`
+/// in the working directory (`BSQ_BENCH_OUT` overrides the path). The file
+/// is the machine-readable perf record EXPERIMENTS.md §Perf tracks per PR.
+#[derive(Debug, Default)]
+pub struct JsonReport {
+    target: String,
+    stats: Vec<Stats>,
+    extra: Vec<(String, Json)>,
+}
+
+impl JsonReport {
+    pub fn new(target: &str) -> JsonReport {
+        JsonReport { target: target.to_string(), stats: Vec::new(), extra: Vec::new() }
+    }
+
+    pub fn push(&mut self, s: &Stats) {
+        self.stats.push(s.clone());
+    }
+
+    pub fn extra(&mut self, key: &str, value: Json) {
+        self.extra.push((key.to_string(), value));
+    }
+
+    /// Default output path: `BENCH_<target>.json` in the working directory,
+    /// or wherever `BSQ_BENCH_OUT` points (read once, at write time, from
+    /// the bench binary's own environment).
+    pub fn out_path(&self) -> PathBuf {
+        std::env::var_os("BSQ_BENCH_OUT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from(format!("BENCH_{}.json", self.target)))
+    }
+
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(self.out_path())
+    }
+
+    pub fn write_to(&self, path: PathBuf) -> std::io::Result<PathBuf> {
+        let mut kv = vec![
+            ("target".to_string(), Json::str(self.target.clone())),
+            ("results".to_string(), Json::Arr(self.stats.iter().map(Stats::to_json).collect())),
+        ];
+        kv.extend(self.extra.iter().cloned());
+        std::fs::write(&path, Json::Obj(kv).to_string_pretty() + "\n")?;
+        Ok(path)
+    }
+}
+
 /// Prevent the optimizer from discarding a computed value.
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
@@ -149,6 +260,51 @@ mod tests {
         });
         assert!(s.throughput_per_sec().unwrap() > 0.0);
         assert!(s.report().contains("elem/s"));
+    }
+
+    #[test]
+    fn run_prepared_excludes_setup() {
+        let b = Bench { warmup: 1, iters: 4, max_time: Duration::from_secs(60) };
+        let mut setups = 0usize;
+        let mut runs = 0usize;
+        let s = b.run_prepared(
+            "consume",
+            10,
+            || {
+                setups += 1;
+                vec![1u8; 8]
+            },
+            |v| {
+                runs += 1;
+                v.clear(); // routine may consume its input
+            },
+        );
+        assert_eq!(s.iters, 4);
+        assert_eq!(setups, 5); // warmup + timed, one fresh input each
+        assert_eq!(runs, 5);
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let b = Bench::quick();
+        let s = b.run_elems("spin2", 100, || {
+            black_box((0..100).sum::<u64>());
+        });
+        let mut rep = JsonReport::new("selftest");
+        rep.push(&s);
+        rep.extra("speedups", Json::obj(vec![("spin2", Json::num(1.0))]));
+        let dir = std::env::temp_dir().join(format!("bsq_bench_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // explicit path: no process-global env mutation under parallel tests
+        let path = rep.write_to(dir.join("BENCH_selftest.json")).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = crate::util::json::parse(&text).unwrap();
+        assert_eq!(parsed.req("target").unwrap().as_str().unwrap(), "selftest");
+        let results = parsed.req("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].req("name").unwrap().as_str().unwrap(), "spin2");
+        assert!(results[0].req("ns_per_elem").unwrap().as_f64().unwrap() >= 0.0);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

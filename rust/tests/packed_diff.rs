@@ -1,0 +1,208 @@
+//! Differential property tests: packed codes engine ⇄ scalar reference.
+//!
+//! The packed engine (`quant::packed`, driving `to_bitplanes` /
+//! `from_bitplanes` / `integer_codes` / `requantize`) must reproduce the
+//! retained scalar path (`quant::reference`) *bit for bit*: identical
+//! integer codes, identical binary planes, identical masks, identical f32
+//! scale bits, identical reconstructed weights. Anything weaker would let
+//! the fast path silently drift from paper Eq. 2 / §3.3 semantics.
+//!
+//! 520 randomized continuous-plane states plus deterministic edges:
+//! precision growth to n+1, capacity clamping, dead layers, LSB-trim
+//! cascades, word-boundary element counts, and gapped (non-bottom-packed)
+//! masks.
+
+use bsq::quant::bitplane::integer_codes;
+use bsq::quant::{
+    from_bitplanes, packed_mask, reference, requantize, to_bitplanes, BitRep, NB,
+};
+use bsq::tensor::Tensor;
+use bsq::util::Pcg32;
+
+fn assert_rep_identical(a: &BitRep, b: &BitRep, ctx: &str) {
+    assert_eq!(a.wp.shape(), b.wp.shape(), "{ctx}: wp shape");
+    assert_eq!(a.wp.data(), b.wp.data(), "{ctx}: wp planes");
+    assert_eq!(a.wn.data(), b.wn.data(), "{ctx}: wn planes");
+    assert_eq!(a.mask.data(), b.mask.data(), "{ctx}: mask");
+    assert_eq!(a.scale.to_bits(), b.scale.to_bits(), "{ctx}: scale bits");
+}
+
+fn assert_weights_identical(a: &Tensor, b: &Tensor, ctx: &str) {
+    assert_eq!(a.shape(), b.shape(), "{ctx}: shape");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: weight {i}: {x} vs {y}");
+    }
+}
+
+/// Full equivalence check of one state: codes, reconstruction, adjustment.
+fn check_state(rep: &BitRep, ctx: &str) {
+    assert_eq!(integer_codes(rep), reference::integer_codes(rep), "{ctx}: codes");
+    assert_weights_identical(&from_bitplanes(rep), &reference::from_bitplanes(rep), ctx);
+
+    let mut fast = rep.clone();
+    let mut slow = rep.clone();
+    let r_fast = requantize(&mut fast);
+    let r_slow = reference::requantize(&mut slow);
+    assert_eq!(r_fast, r_slow, "{ctx}: adjust report");
+    assert_rep_identical(&fast, &slow, &format!("{ctx}: post-requantize"));
+    // and the packed path is a fixed point of itself after adjustment
+    assert_eq!(integer_codes(&fast), reference::integer_codes(&slow), "{ctx}: post codes");
+}
+
+#[test]
+fn prop_packed_matches_reference_across_random_states() {
+    let mut rng = Pcg32::seeded(0xB50D1FF);
+    for case in 0..520usize {
+        let elems = 1 + rng.below(300) as usize;
+        let n = 1 + (case % NB);
+        let w = Tensor::randn(&[elems], rng.range(0.01, 2.0), &mut rng);
+
+        // conversion itself must agree bit for bit
+        let mut rep = reference::to_bitplanes(&w, n).unwrap();
+        let rep_fast = to_bitplanes(&w, n).unwrap();
+        assert_rep_identical(&rep_fast, &rep, &format!("case {case}: to_bitplanes"));
+
+        // drive the state into one of five mid-training shapes
+        match case % 5 {
+            0 => {} // freshly converted, exact binary planes
+            1 => {
+                // generic continuous perturbation
+                for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+                    *v = (*v + rng.range(-0.45, 0.45)).clamp(0.0, 2.0);
+                }
+            }
+            2 => {
+                // saturate planes toward 2.0: forces n+1 growth and, at
+                // full mask, the ±(2^NB − 1) capacity clamp
+                for v in rep.wp.data_mut().iter_mut() {
+                    if rng.bool(0.5) {
+                        *v = rng.range(1.7, 2.0);
+                    }
+                }
+            }
+            3 => {
+                // collapse toward zero: many dead layers
+                for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+                    *v = if rng.bool(0.9) { 0.0 } else { rng.range(0.0, 0.4) };
+                }
+            }
+            _ => {
+                // gapped, non-bottom-packed mask (reference honors it; the
+                // packed path must match), sometimes entirely empty
+                let mut m = vec![0.0f32; NB];
+                for slot in m.iter_mut() {
+                    if rng.bool(0.5) {
+                        *slot = 1.0;
+                    }
+                }
+                rep.mask = Tensor::new(vec![NB], m).unwrap();
+                for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+                    *v = (*v + rng.range(-0.3, 0.3)).clamp(0.0, 2.0);
+                }
+            }
+        }
+        rep.scale = rng.range(0.01, 4.0);
+        check_state(&rep, &format!("case {case} (elems {elems}, n {n})"));
+    }
+}
+
+#[test]
+fn edge_precision_growth_to_n_plus_one() {
+    // float planes up to 2.0 push codes past 2^n − 1: n grows to n + 1
+    for n in 1..NB {
+        let w = Tensor::new(vec![2], vec![0.9, 0.53]).unwrap();
+        let mut rep = reference::to_bitplanes(&w, n).unwrap();
+        // element 0: every active plane inflated to 1.9 → code round(1.9·(2^n−1))
+        // overflows n bits; element 1: pinned to code 1 (odd) so no LSB trim
+        // can mask the growth
+        for b in 0..NB {
+            rep.wp.row_mut(b, 2)[0] = if b < n { 1.9 } else { 0.0 };
+            rep.wp.row_mut(b, 2)[1] = if b == 0 { 1.0 } else { 0.0 };
+        }
+        check_state(&rep, &format!("growth n={n}"));
+        let mut adjusted = rep.clone();
+        let r = requantize(&mut adjusted);
+        assert!(r.bits_after > n, "n={n}: expected growth, got {}", r.bits_after);
+    }
+}
+
+#[test]
+fn edge_capacity_clamp_saturated_planes() {
+    let mut rep = reference::to_bitplanes(&Tensor::new(vec![3], vec![0.3, -0.2, 0.1]).unwrap(), 8)
+        .unwrap();
+    rep.mask = packed_mask(NB);
+    rep.wp.data_mut().fill(2.0);
+    rep.wn.data_mut().fill(0.0);
+    assert_eq!(integer_codes(&rep), vec![(1 << NB) - 1; 3]);
+    check_state(&rep, "saturated clamp");
+}
+
+#[test]
+fn edge_dead_layer() {
+    // codes all round to zero → the layer dies identically on both paths
+    let w = Tensor::new(vec![5], vec![1.0, 0.001, -0.002, 0.0, 0.001]).unwrap();
+    let mut rep = reference::to_bitplanes(&w, 8).unwrap();
+    rep.wp.data_mut().fill(0.0);
+    rep.wn.data_mut().fill(0.0);
+    check_state(&rep, "dead layer");
+    let mut adjusted = rep.clone();
+    assert_eq!(requantize(&mut adjusted).bits_after, 0);
+    // a dead layer stays dead (n = 0 early-return on both paths)
+    check_state(&adjusted, "dead layer stays dead");
+}
+
+#[test]
+fn edge_lsb_trim_cascade() {
+    // all codes sharing k trailing zeros, for every k
+    for k in 0..=3usize {
+        let step = 1i64 << k;
+        let codes: Vec<i64> = vec![3 * step, -5 * step, 7 * step, step];
+        let (wp, wn) = reference::planes_from_codes(&codes, &[codes.len()], 6);
+        let rep = BitRep { wp, wn, mask: packed_mask(6), scale: 1.5 };
+        check_state(&rep, &format!("lsb cascade k={k}"));
+        let mut adjusted = rep.clone();
+        assert_eq!(requantize(&mut adjusted).lsb_trimmed, k);
+    }
+}
+
+#[test]
+fn edge_word_boundary_sizes() {
+    // exercise the partial trailing u64 word of the plane bitsets
+    let mut rng = Pcg32::seeded(99);
+    for elems in [1usize, 63, 64, 65, 127, 128, 129, 256] {
+        let w = Tensor::randn(&[elems], 0.5, &mut rng);
+        let mut rep = reference::to_bitplanes(&w, 8).unwrap();
+        assert_rep_identical(
+            &to_bitplanes(&w, 8).unwrap(),
+            &rep,
+            &format!("boundary {elems}: to_bitplanes"),
+        );
+        for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+            *v = (*v + rng.range(-0.4, 0.4)).clamp(0.0, 2.0);
+        }
+        check_state(&rep, &format!("boundary {elems}"));
+    }
+}
+
+#[test]
+fn pack_bridge_agrees_with_reference_codes() {
+    let mut rng = Pcg32::seeded(7);
+    for case in 0..50usize {
+        let elems = 1 + rng.below(200) as usize;
+        let w = Tensor::randn(&[elems], 0.5, &mut rng);
+        let mut rep = to_bitplanes(&w, 1 + case % 8).unwrap();
+        for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+            *v = (*v + rng.range(-0.3, 0.3)).clamp(0.0, 2.0);
+        }
+        let packed = rep.pack();
+        let want = reference::integer_codes(&rep);
+        assert_eq!(packed.codes.len(), want.len());
+        for (a, b) in packed.codes.iter().zip(&want) {
+            assert_eq!(*a as i64, *b, "case {case}");
+        }
+        // unpacking a *requantized* state reproduces the binary rep exactly
+        let mut adjusted = rep.clone();
+        requantize(&mut adjusted);
+        assert_rep_identical(&adjusted.pack().unpack(), &adjusted, &format!("case {case}: unpack"));
+    }
+}
