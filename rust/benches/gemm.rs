@@ -1,0 +1,174 @@
+//! Dense vs bit-plane GEMM: the sparsity-vs-speedup sweep behind the BSQ
+//! compute story.
+//!
+//! For each workload shape, a base 8-bit weight matrix is trimmed 0–8 LSB
+//! planes (the §3.3 adjustment image: magnitudes shift right, δ doubles)
+//! and the bit-plane kernel is timed against the blocked dense f32 kernel
+//! on the *same* represented weights. Bit-plane work is proportional to
+//! set weight bits, so throughput must rise monotonically with the trim
+//! count; the dense path costs the same at every precision.
+//!
+//! Two weight corpora are swept:
+//! * `bsq` — plane occupancy ≈ 12% per plane, the bit-level sparsity
+//!   regime BSQ's regularizer drives surviving planes into (MSQ,
+//!   arXiv:2507.22349, reports ~90% zero bits post-training). This is the
+//!   headline curve: the regime the kernel is built for.
+//! * `dense8` — uniform random 8-bit codes (≈ 50% per plane), the
+//!   adversarial worst case: even here the trim skip keeps the curve
+//!   monotone.
+//!
+//! Emits `BENCH_gemm.json` (per-run stats + a `sweeps` summary with
+//! speedups and set-bit counts) — the record EXPERIMENTS.md §Perf tracks.
+
+use bsq::tensor::gemm::{matmul, transpose, BitPlaneMatrix};
+use bsq::util::bench::{black_box, Bench, JsonReport};
+use bsq::util::json::Json;
+use bsq::util::Pcg32;
+
+/// Per-plane occupancy of the BSQ-sparse corpus (see module docs).
+const BSQ_PLANE_DENSITY: f32 = 0.12;
+
+struct Shape {
+    label: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+}
+
+/// resnet20-flavoured GEMMs: a mid-stage conv (im2col rows × patch × cout)
+/// and the wider final-stage conv.
+const SHAPES: [Shape; 2] = [
+    Shape { label: "conv16x16", m: 1024, k: 576, n: 64 },
+    Shape { label: "conv8x8", m: 512, k: 288, n: 32 },
+];
+
+fn sparse_codes(rng: &mut Pcg32, len: usize, density: f32) -> Vec<i16> {
+    (0..len)
+        .map(|_| {
+            let mut mag = 0u16;
+            for b in 0..8 {
+                if rng.bool(density) {
+                    mag |= 1 << b;
+                }
+            }
+            if rng.bool(0.5) {
+                mag as i16
+            } else {
+                -(mag as i16)
+            }
+        })
+        .collect()
+}
+
+fn uniform_codes(rng: &mut Pcg32, len: usize) -> Vec<i16> {
+    (0..len)
+        .map(|_| {
+            let mag = rng.below(256) as i16;
+            if rng.bool(0.5) {
+                mag
+            } else {
+                -mag
+            }
+        })
+        .collect()
+}
+
+fn shr_mag(c: i16, t: usize) -> i16 {
+    let m = (c.unsigned_abs() >> t) as i16;
+    if c < 0 {
+        -m
+    } else {
+        m
+    }
+}
+
+fn main() {
+    let bench = Bench::from_env();
+    let mut rng = Pcg32::seeded(0);
+    let mut report = JsonReport::new("gemm");
+    let mut sweeps: Vec<(String, Json)> = Vec::new();
+
+    println!("== gemm: dense f32 vs bit-plane ==");
+    for shape in &SHAPES {
+        let (m, k, n) = (shape.m, shape.k, shape.n);
+        let macs = (m * k * n) as u64;
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let xt = transpose(&x, m, k);
+
+        for corpus in ["bsq", "dense8"] {
+            let base = match corpus {
+                "bsq" => sparse_codes(&mut rng, k * n, BSQ_PLANE_DENSITY),
+                _ => uniform_codes(&mut rng, k * n),
+            };
+            // dense baseline: cost is precision-independent; measure once
+            let wdense: Vec<f32> = base.iter().map(|&c| c as f32 * 0.01).collect();
+            let dense_stats =
+                bench.run_elems(&format!("dense/{}/{corpus}", shape.label), macs, || {
+                    black_box(matmul(&x, &wdense, m, k, n));
+                });
+            println!("{}", dense_stats.report());
+            report.push(&dense_stats);
+
+            let mut rows = Vec::new();
+            let mut last_tp = 0.0f64;
+            let mut monotone = true;
+            for t in 0..=8usize {
+                let codes: Vec<i16> = base.iter().map(|&c| shr_mag(c, t)).collect();
+                let delta = 0.01 * (1u32 << t) as f32;
+                let bpm = BitPlaneMatrix::from_codes(&codes, k, n, 8 - t, delta);
+                let s = bench.run_elems(
+                    &format!("bitplane/{}/{corpus}/trim{t}", shape.label),
+                    macs,
+                    || {
+                        black_box(bpm.matmul_t(&xt, m));
+                    },
+                );
+                println!("{}  [{} set bits]", s.report(), bpm.nnz_bits());
+                report.push(&s);
+                let tp = s.throughput_per_sec().unwrap_or(0.0);
+                if tp + 1e-9 < last_tp {
+                    monotone = false;
+                }
+                last_tp = tp;
+                let speedup = dense_stats.mean.as_secs_f64() / s.mean.as_secs_f64().max(1e-12);
+                rows.push(Json::obj(vec![
+                    ("trimmed_planes", Json::num(t as f64)),
+                    ("occupied_planes", Json::num(bpm.occupied_planes() as f64)),
+                    ("nnz_bits", Json::num(bpm.nnz_bits() as f64)),
+                    ("bits_per_weight", Json::num(bpm.nnz_bits() as f64 / (k * n) as f64)),
+                    ("mean_ns", Json::num(s.mean.as_nanos() as f64)),
+                    ("throughput_macs_per_sec", Json::num(tp)),
+                    ("speedup_vs_dense", Json::num(speedup)),
+                ]));
+                if t == 4 {
+                    println!(
+                        "    -> {}/{corpus}: {speedup:.2}x vs dense at 4 trimmed planes",
+                        shape.label
+                    );
+                }
+            }
+            println!(
+                "    -> {}/{corpus}: throughput monotone with trimming: {monotone}",
+                shape.label
+            );
+            sweeps.push((
+                format!("{}/{corpus}", shape.label),
+                Json::obj(vec![
+                    ("m", Json::num(m as f64)),
+                    ("k", Json::num(k as f64)),
+                    ("n", Json::num(n as f64)),
+                    ("dense_mean_ns", Json::num(dense_stats.mean.as_nanos() as f64)),
+                    ("monotone_throughput", Json::Bool(monotone)),
+                    ("points", Json::Arr(rows)),
+                ]),
+            ));
+        }
+    }
+
+    report.extra("plane_density_bsq", Json::num(BSQ_PLANE_DENSITY as f64));
+    report.extra("sweeps", Json::Obj(sweeps));
+    match report.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+}

@@ -73,8 +73,8 @@ fn main() -> anyhow::Result<()> {
     // Fig 7 / Table 2 HAWQ row: Hessian block power iteration.
     let state = ModelState::init_fp(&session.man, 0);
     let s = bench.run("fig7/hawq-analysis", || {
-        baselines::hawq::analyze(&session, &state, &HawqConfig { power_iters: 4, batches: 1, seed: 0 })
-            .unwrap();
+        let cfg = HawqConfig { power_iters: 4, batches: 1, seed: 0 };
+        baselines::hawq::analyze(&session, &state, &cfg).unwrap();
     });
     println!("{}", s.report());
 

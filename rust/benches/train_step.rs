@@ -28,7 +28,8 @@ fn main() -> anyhow::Result<()> {
 
     for model in &models {
         let man = load_manifest(model)?;
-        let corpus = Corpus::generate(corpus_for_model(model, 0).with_sizes(man.batch * 2, man.batch));
+        let spec = corpus_for_model(model, 0).with_sizes(man.batch * 2, man.batch);
+        let corpus = Corpus::generate(spec);
         let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 1);
         let batch = loader.next_batch();
         let scheme = QuantScheme::new(

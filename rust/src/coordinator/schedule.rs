@@ -16,7 +16,11 @@ impl StepDecay {
     /// The paper's pretrain/from-scratch schedule: 0.1 → ×0.1 at
     /// 150/350, 250/350, 325/350.
     pub fn pretrain() -> StepDecay {
-        StepDecay { base: 0.1, gamma: 0.1, milestones: vec![150.0 / 350.0, 250.0 / 350.0, 325.0 / 350.0] }
+        StepDecay {
+            base: 0.1,
+            gamma: 0.1,
+            milestones: vec![150.0 / 350.0, 250.0 / 350.0, 325.0 / 350.0],
+        }
     }
 
     /// The paper's BSQ schedule: 0.1 for the first 250/350, then 0.01.

@@ -1,12 +1,12 @@
 //! Shared training-loop machinery: sessions, epoch runners, evaluation.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::data::{Corpus, CorpusSpec, Loader};
 use crate::model::ModelState;
-use crate::runtime::{load_manifest, Engine, Executable, Manifest, RunInputs};
+use crate::runtime::{Engine, Executable, Manifest, RunInputs};
 
 /// A model + corpus bound to an engine: the context every phase runs in.
 pub struct Session<'e> {
@@ -17,7 +17,9 @@ pub struct Session<'e> {
 }
 
 impl<'e> Session<'e> {
-    /// Open a session: load the manifest and synthesize the matching corpus.
+    /// Open a session: resolve the manifest through the engine (disk
+    /// artifacts on PJRT, synthesized on the native backend) and synthesize
+    /// the matching corpus.
     pub fn open(
         engine: &'e Engine,
         model: &str,
@@ -25,7 +27,7 @@ impl<'e> Session<'e> {
         test_size: usize,
         seed: u64,
     ) -> Result<Session<'e>> {
-        let man = load_manifest(model)?;
+        let man = engine.manifest(model)?;
         let spec = corpus_for_model(model, seed).with_sizes(train_size, test_size);
         if spec.hw.0 != man.input_hw.0 || spec.channels != man.in_ch {
             bail!("corpus {:?} does not match model geometry", spec.name);
@@ -36,7 +38,7 @@ impl<'e> Session<'e> {
         Ok(Session { engine, man, corpus: Corpus::generate(spec), seed })
     }
 
-    pub fn artifact(&self, name: &str) -> Result<Rc<Executable>> {
+    pub fn artifact(&self, name: &str) -> Result<Arc<Executable>> {
         self.engine.load(self.man.artifact(name)?)
     }
 

@@ -23,7 +23,10 @@ pub fn run(engine: &Engine, opts: &ExpOpts, act_bits: usize) -> Result<()> {
     let (table, fig) = if act_bits == 2 { ("Table 4", "Fig 8") } else { ("Table 5", "Fig 9") };
 
     println!("\n{table} / {fig} — {act_bits}-bit activation (PACT), resnet20");
-    println!("{:>9} {:>12} {:>9} {:>11} {:>10}", "α", "#bits/para", "Comp(×)", "preFT acc%", "FT acc%");
+    println!(
+        "{:>9} {:>12} {:>9} {:>11} {:>10}",
+        "α", "#bits/para", "Comp(×)", "preFT acc%", "FT acc%"
+    );
     let mut rows = Vec::new();
     for &alpha in &alphas {
         let mut cfg = BsqConfig::for_model("resnet20");
@@ -60,6 +63,7 @@ pub fn run(engine: &Engine, opts: &ExpOpts, act_bits: usize) -> Result<()> {
             .collect();
         println!("α={:7.0e}  [{}]", r.get("alpha").unwrap().as_f64().unwrap(), bits.join(" "));
     }
-    write_result(&opts.out_dir.join(format!("table{}.json", if act_bits == 2 { 4 } else { 5 })), &Json::Arr(rows))?;
+    let out = opts.out_dir.join(format!("table{}.json", if act_bits == 2 { 4 } else { 5 }));
+    write_result(&out, &Json::Arr(rows))?;
     Ok(())
 }

@@ -62,7 +62,8 @@ pub fn run(engine: &Engine, opts: &ExpOpts, id: &str) -> Result<()> {
 
 fn summarize_shift(record: &[Json]) {
     let bits = |r: &Json| -> Vec<f64> {
-        r.get("scheme_bits").unwrap().as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).collect()
+        let arr = r.get("scheme_bits").unwrap().as_arr().unwrap();
+        arr.iter().map(|b| b.as_f64().unwrap()).collect()
     };
     let params = |r: &Json| -> Vec<f64> {
         r.get("params").unwrap().as_arr().unwrap().iter().map(|b| b.as_f64().unwrap()).collect()

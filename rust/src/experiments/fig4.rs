@@ -35,7 +35,10 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
 
     let mut record = Vec::new();
     println!("\nFigure 4 — re-quantization interval ablation (resnet20)");
-    println!("{:>8} {:>7} {:>9} {:>9} {:>9} {:>9}", "arm", "seeds", "acc mean", "acc min", "acc max", "comp");
+    println!(
+        "{:>8} {:>7} {:>9} {:>9} {:>9} {:>9}",
+        "arm", "seeds", "acc mean", "acc min", "acc max", "comp"
+    );
     for (label, interval) in intervals {
         let mut accs = Vec::new();
         let mut comps = Vec::new();

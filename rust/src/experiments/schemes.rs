@@ -14,7 +14,8 @@ pub fn run(opts: &ExpOpts, id: &str) -> Result<()> {
         .map_err(|e| anyhow!("{e}: run `experiment table3` first ({})", path.display()))?;
     let rows = parse(&text)?;
 
-    println!("\n{} — per-layer schemes of the {model} runs", if id == "table6" { "Table 6" } else { "Table 7" });
+    let title = if id == "table6" { "Table 6" } else { "Table 7" };
+    println!("\n{title} — per-layer schemes of the {model} runs");
     for r in rows.as_arr()? {
         if r.req("model")?.as_str()? != model || r.get("scheme").is_none() {
             continue;

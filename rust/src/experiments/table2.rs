@@ -65,9 +65,10 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
 
         // DoReFa / LSQ at uniform 3-bit weights.
         let u3 = QuantScheme::uniform(&names, 3);
-        let d = dorefa::train_from_scratch(&session, &u3, &QatConfig::from_scratch(scratch_epochs, 4, 0))?;
+        let qat3 = QatConfig::from_scratch(scratch_epochs, 4, 0);
+        let d = dorefa::train_from_scratch(&session, &u3, &qat3)?;
         push("4-bit", "DoReFa", "3", u3.compression(), d.final_acc as f64, false);
-        let l = lsq::train_from_scratch(&session, &u3, &QatConfig::from_scratch(scratch_epochs, 4, 0))?;
+        let l = lsq::train_from_scratch(&session, &u3, &qat3)?;
         push("4-bit", "LSQ/LQ-Nets", "3", u3.compression(), l.final_acc as f64, false);
 
         // paper-cited anchors for comparators we cannot rebuild offline
@@ -83,7 +84,8 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
         cfg.act_bits = act_bits;
         let bsq = run_bsq(engine, &cfg)?;
         let act = format!("{act_bits}-bit");
-        push(&act, &format!("BSQ {alpha:.0e}"), "MP", bsq.compression, bsq.acc_after_ft as f64, false);
+        let label = format!("BSQ {alpha:.0e}");
+        push(&act, &label, "MP", bsq.compression, bsq.acc_after_ft as f64, false);
 
         let uni = QuantScheme::uniform(&names, act_bits);
         let d = dorefa::train_from_scratch(
@@ -91,8 +93,10 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
             &uni,
             &QatConfig::from_scratch(scratch_epochs, act_bits, 0),
         )?;
-        push(&act, "DoReFa+PACT", &act_bits.to_string(), uni.compression(), d.final_acc as f64, false);
-        push(&act, "LQ-Nets (cited)", &act_bits.to_string(), 32.0 / act_bits as f64, if act_bits == 3 { 0.916 } else { 0.902 }, true);
+        let ab = act_bits.to_string();
+        push(&act, "DoReFa+PACT", &ab, uni.compression(), d.final_acc as f64, false);
+        let cited = if act_bits == 3 { 0.916 } else { 0.902 };
+        push(&act, "LQ-Nets (cited)", &ab, 32.0 / act_bits as f64, cited, true);
     }
 
     write_result(&opts.out_dir.join("table2.json"), &Json::Arr(rows))?;

@@ -31,7 +31,12 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
         let mut qat = QatConfig::from_scratch(epochs, act_bits, 0);
         qat.act_first_last = if model == "inception_sim" { act_bits } else { 8 };
         let d = dorefa::train_from_scratch(&session, &uni, &qat)?;
-        println!("{model:<14} {:<12} {:>9.2} {:>8.2}", "DoReFa-3", uni.compression(), 100.0 * d.final_acc);
+        println!(
+            "{model:<14} {:<12} {:>9.2} {:>8.2}",
+            "DoReFa-3",
+            uni.compression(),
+            100.0 * d.final_acc
+        );
         rows.push(Json::obj(vec![
             ("model", Json::str(model)),
             ("method", Json::str("DoReFa-3")),
@@ -48,7 +53,11 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
             }
             let o = run_bsq(engine, &cfg)?;
             let label = format!("BSQ {alpha:.0e}");
-            println!("{model:<14} {label:<12} {:>9.2} {:>8.2}", o.compression, 100.0 * o.acc_after_ft);
+            println!(
+                "{model:<14} {label:<12} {:>9.2} {:>8.2}",
+                o.compression,
+                100.0 * o.acc_after_ft
+            );
             rows.push(Json::obj(vec![
                 ("model", Json::str(model)),
                 ("method", Json::str(label)),

@@ -178,7 +178,8 @@ fn cmd_eval(mut args: Args) -> Result<()> {
         &bsq::runtime::RunInputs::default().vec("actlv", actlv),
         usize::MAX,
     )?;
-    println!("{model} ({}): loss {loss:.4} acc {:.2}%", if bit_mode { "bit-rep" } else { "fp" }, 100.0 * acc);
+    let kind = if bit_mode { "bit-rep" } else { "fp" };
+    println!("{model} ({kind}): loss {loss:.4} acc {:.2}%", 100.0 * acc);
     Ok(())
 }
 
@@ -201,16 +202,28 @@ fn cmd_experiment(mut args: Args) -> Result<()> {
 
 fn cmd_info(args: Args) -> Result<()> {
     args.finish()?;
-    let root = bsq::runtime::artifacts_root();
-    if !root.exists() {
-        bail!("no artifacts at {} — run `make artifacts`", root.display());
-    }
-    for entry in std::fs::read_dir(&root)? {
-        let dir = entry?.path();
-        if !dir.join("manifest.json").exists() {
-            continue;
+    let engine = Engine::cpu()?;
+    let manifests: Vec<bsq::runtime::Manifest> = if engine.is_native() {
+        println!("backend: native (PJRT stub; manifests synthesized from the model zoo)");
+        bsq::runtime::native::models::model_names()
+            .into_iter()
+            .map(|m| engine.manifest(m))
+            .collect::<Result<_>>()?
+    } else {
+        let root = bsq::runtime::artifacts_root();
+        if !root.exists() {
+            bail!("no artifacts at {} — run `make artifacts`", root.display());
         }
-        let man = bsq::runtime::Manifest::load(&dir)?;
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&root)? {
+            let dir = entry?.path();
+            if dir.join("manifest.json").exists() {
+                out.push(bsq::runtime::Manifest::load(&dir)?);
+            }
+        }
+        out
+    };
+    for man in &manifests {
         println!(
             "{:<14} batch {:>3}  {:>2} layers  {:>9} params  {} artifacts",
             man.model,

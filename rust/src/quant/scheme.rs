@@ -107,6 +107,12 @@ impl fmt::Display for QuantScheme {
 /// Spearman rank correlation between two precision orderings — quantifies
 /// the paper's Fig. 7 claim that BSQ's precision ranking tracks HAWQ's
 /// Hessian-importance ranking.
+///
+/// Degenerate rankings (every value tied, so a rank ordering carries no
+/// information — e.g. a uniform scheme, or HAWQ importances collapsing)
+/// have zero rank variance; the correlation is defined as 0.0 there rather
+/// than the 0/0 = NaN the raw formula produces. NaN *entries* are ranked
+/// via the IEEE total order instead of panicking mid-sort.
 pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
     assert_eq!(a.len(), b.len());
     let n = a.len();
@@ -125,7 +131,7 @@ pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
         db += xb * xb;
     }
     if da == 0.0 || db == 0.0 {
-        return 0.0;
+        return 0.0; // constant ranking: no order to correlate with
     }
     num / (da * db).sqrt()
 }
@@ -133,12 +139,14 @@ pub fn spearman(a: &[f64], b: &[f64]) -> f64 {
 fn fractional_ranks(v: &[f64]) -> Vec<f64> {
     let n = v.len();
     let mut idx: Vec<usize> = (0..n).collect();
-    idx.sort_by(|&a, &b| v[a].partial_cmp(&v[b]).unwrap());
+    // total_cmp: NaN-carrying inputs get a deterministic rank instead of a
+    // partial_cmp().unwrap() panic (NaNs sort above +inf and tie together)
+    idx.sort_by(|&a, &b| v[a].total_cmp(&v[b]));
     let mut ranks = vec![0.0; n];
     let mut i = 0;
     while i < n {
         let mut j = i;
-        while j + 1 < n && v[idx[j + 1]] == v[idx[i]] {
+        while j + 1 < n && v[idx[j + 1]].total_cmp(&v[idx[i]]).is_eq() {
             j += 1;
         }
         let avg = (i + j) as f64 / 2.0 + 1.0;
@@ -205,6 +213,21 @@ mod tests {
         assert!((spearman(&a, &b) - 1.0).abs() < 1e-12);
         let c = [4.0, 3.0, 2.0, 1.0];
         assert!((spearman(&a, &c) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_constant_ranking_is_defined() {
+        // regression: a constant ranking has zero rank variance; the raw
+        // formula divides 0 by 0 — the result must be the defined 0.0
+        let flat = [3.0, 3.0, 3.0, 3.0];
+        let rising = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(spearman(&flat, &rising), 0.0);
+        assert_eq!(spearman(&rising, &flat), 0.0);
+        assert_eq!(spearman(&flat, &flat), 0.0);
+        assert!(!spearman(&flat, &rising).is_nan());
+        // NaN entries rank deterministically instead of panicking
+        let with_nan = [1.0, f64::NAN, 2.0, f64::NAN];
+        assert!(spearman(&with_nan, &rising).is_finite());
     }
 
     #[test]

@@ -1,14 +1,21 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute per step.
+//! Runtime engine: PJRT artifacts when available, native host backend
+//! otherwise.
 //!
-//! Wraps the `xla` crate (PJRT C API): `HloModuleProto::from_text_file` →
-//! `XlaComputation::from_proto` → `client.compile` → `execute`. Compiled
-//! executables are cached per artifact file for the process lifetime, so
-//! the hot path is a single `execute` plus host-side literal marshalling.
+//! The PJRT path loads AOT HLO-text artifacts, compiles once, executes per
+//! step (`HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`). When the `xla` bindings are the offline
+//! stub (no XLA C library in the build environment), [`Engine::cpu`] falls
+//! back to [`runtime::native`](crate::runtime::native): the same manifest
+//! roles executed on host kernels, with manifests synthesized from the
+//! model zoo instead of read from disk.
+//!
+//! Executables are cached per artifact path behind `Arc`, and `Engine` is
+//! `Send + Sync`, so compiled artifacts can be shared across the parallel
+//! backend's worker threads.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::rc::Rc;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -17,6 +24,7 @@ use log::{debug, info};
 use crate::data::Batch;
 use crate::model::state::ModelState;
 use crate::runtime::manifest::{ArtifactSpec, Role};
+use crate::runtime::native::{NativeBackend, NativeExec};
 // Offline stand-in for the real `xla` PJRT bindings (crates.io is
 // unreachable from this build environment); see xla_stub.rs to swap the
 // real backend in. All call sites below are written against the real API.
@@ -56,45 +64,100 @@ impl RunOutputs {
     }
 }
 
-/// The PJRT engine: one CPU client + a compile cache.
-pub struct Engine {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, Rc<Executable>>>,
+enum Backend {
+    Pjrt(xla::PjRtClient),
+    Native(NativeBackend),
 }
 
-// Rc<Executable> is only handed out within a thread; the Mutex guards the map.
+/// The engine: a device backend + a compile cache shared across threads.
+pub struct Engine {
+    backend: Backend,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+enum ExecImpl {
+    Pjrt(xla::PjRtLoadedExecutable),
+    Native(NativeExec),
+}
+
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    imp: ExecImpl,
     pub spec: ArtifactSpec,
 }
 
+// Engine/Executable cross thread boundaries (scoped workers share compiled
+// artifacts); fail the build loudly if a field ever breaks that.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+    assert_send_sync::<Executable>();
+};
+
 impl Engine {
+    /// Preferred constructor: the PJRT CPU client when the real bindings
+    /// are linked, otherwise the native host backend.
+    ///
+    /// Only the offline-stub error triggers the fallback — a *real* PJRT
+    /// stack failing to come up (missing plugin, bad install) propagates,
+    /// so results are never silently computed on a different backend than
+    /// the one the operator configured.
     pub fn cpu() -> Result<Engine> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e}"))?;
-        info!(
-            "PJRT client up: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Engine { client, cache: Mutex::new(HashMap::new()) })
+        match xla::PjRtClient::cpu() {
+            Ok(client) => {
+                info!(
+                    "PJRT client up: platform={} devices={}",
+                    client.platform_name(),
+                    client.device_count()
+                );
+                Ok(Engine { backend: Backend::Pjrt(client), cache: Mutex::new(HashMap::new()) })
+            }
+            Err(e) if e.to_string().contains("offline xla stub") => {
+                info!("PJRT is the offline stub; using the native host backend");
+                Ok(Engine::native())
+            }
+            Err(e) => Err(anyhow!("PJRT cpu client: {e}")),
+        }
+    }
+
+    /// The native host backend, explicitly.
+    pub fn native() -> Engine {
+        Engine { backend: Backend::Native(NativeBackend::new()), cache: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native(_))
+    }
+
+    /// Resolve a model's manifest: from the artifacts directory on the PJRT
+    /// path, synthesized from the model zoo on the native path.
+    pub fn manifest(&self, model: &str) -> Result<crate::runtime::manifest::Manifest> {
+        match &self.backend {
+            Backend::Pjrt(_) => load_manifest(model),
+            Backend::Native(b) => b.manifest(model),
+        }
     }
 
     /// Load + compile an artifact (cached by file path).
-    pub fn load(&self, spec: &ArtifactSpec) -> Result<Rc<Executable>> {
+    pub fn load(&self, spec: &ArtifactSpec) -> Result<Arc<Executable>> {
         let mut cache = self.cache.lock().unwrap();
         if let Some(exe) = cache.get(&spec.file) {
             return Ok(exe.clone());
         }
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(&spec.file)
-            .map_err(|e| anyhow!("parsing {}: {e}", spec.file.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {}: {e}", spec.file.display()))?;
-        info!("compiled {} in {:.2}s", spec.name, t0.elapsed().as_secs_f64());
-        let wrapped = Rc::new(Executable { exe, spec: spec.clone() });
+        let imp = match &self.backend {
+            Backend::Pjrt(client) => {
+                let t0 = Instant::now();
+                let proto = xla::HloModuleProto::from_text_file(&spec.file)
+                    .map_err(|e| anyhow!("parsing {}: {e}", spec.file.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compiling {}: {e}", spec.file.display()))?;
+                info!("compiled {} in {:.2}s", spec.name, t0.elapsed().as_secs_f64());
+                ExecImpl::Pjrt(exe)
+            }
+            Backend::Native(_) => ExecImpl::Native(NativeExec::for_spec(spec)?),
+        };
+        let wrapped = Arc::new(Executable { imp, spec: spec.clone() });
         cache.insert(spec.file.clone(), wrapped.clone());
         Ok(wrapped)
     }
@@ -111,10 +174,22 @@ impl Executable {
         batch: Option<&Batch>,
         inputs: &RunInputs,
     ) -> Result<RunOutputs> {
+        match &self.imp {
+            ExecImpl::Native(exe) => exe.run(&self.spec, state, batch, inputs),
+            ExecImpl::Pjrt(exe) => self.run_pjrt(exe, state, batch, inputs),
+        }
+    }
+
+    fn run_pjrt(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        state: &mut ModelState,
+        batch: Option<&Batch>,
+        inputs: &RunInputs,
+    ) -> Result<RunOutputs> {
         let literals = self.gather_inputs(state, batch, inputs)?;
         let t0 = Instant::now();
-        let result = self
-            .exe
+        let result = exe
             .execute::<xla::Literal>(&literals)
             .map_err(|e| anyhow!("executing {}: {e}", self.spec.name))?;
         debug!("{}: execute {:.1}ms", self.spec.name, t0.elapsed().as_secs_f64() * 1e3);
@@ -218,29 +293,62 @@ impl Executable {
 }
 
 fn f32_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, shape, bytes)
         .map_err(|e| anyhow!("f32 literal {shape:?}: {e}"))
 }
 
 fn i32_literal(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
-    let bytes =
-        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
     xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, shape, bytes)
         .map_err(|e| anyhow!("i32 literal {shape:?}: {e}"))
 }
 
-/// Batch-less convenience: artifacts whose inputs are all state/hyper/vec.
+/// Artifacts root for the PJRT path (`BSQ_ARTIFACTS` overrides).
 pub fn artifacts_root() -> PathBuf {
     std::env::var("BSQ_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 
-/// Load a model manifest from the artifacts root.
+/// Load a model manifest from the artifacts root (PJRT path; the native
+/// backend synthesizes its manifests via [`Engine::manifest`] instead).
 pub fn load_manifest(model: &str) -> Result<crate::runtime::manifest::Manifest> {
     let dir = artifacts_root().join(model);
     crate::runtime::manifest::Manifest::load(&dir)
         .with_context(|| format!("loading manifest for {model} (run `make artifacts`?)"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_engine_falls_back_to_native_on_stub() {
+        // the offline stub cannot create a PJRT client, so Engine::cpu()
+        // must come up native instead of erroring out
+        let engine = Engine::cpu().unwrap();
+        assert!(engine.is_native());
+    }
+
+    #[test]
+    fn native_engine_loads_and_caches_executables() {
+        let engine = Engine::native();
+        let man = engine.manifest("tinynet").unwrap();
+        let spec = man.artifact("fp_train_relu6").unwrap();
+        let a = engine.load(spec).unwrap();
+        let b = engine.load(spec).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
+        assert_eq!(a.spec.name, "fp_train_relu6");
+    }
+
+    #[test]
+    fn native_manifest_covers_model_zoo() {
+        let engine = Engine::native();
+        for model in ["tinynet", "resnet20", "resnet50_sim", "inception_sim"] {
+            let man = engine.manifest(model).unwrap();
+            assert!(!man.artifacts.is_empty(), "{model}: no artifacts");
+        }
+        assert!(engine.manifest("nope").is_err());
+    }
 }

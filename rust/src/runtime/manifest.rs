@@ -196,7 +196,9 @@ fn validate_spec(spec: &ArtifactSpec) -> Result<()> {
         if o.role == Role::State {
             match in_shapes.get(o.name.as_str()) {
                 Some(s) if **s == o.shape => {}
-                Some(s) => bail!("{}: output {} shape {:?} ≠ input {:?}", spec.name, o.name, o.shape, s),
+                Some(s) => {
+                    bail!("{}: output {} shape {:?} ≠ input {:?}", spec.name, o.name, o.shape, s)
+                }
                 None => bail!("{}: state output {} has no matching input", spec.name, o.name),
             }
         }

@@ -1,11 +1,16 @@
-//! Runtime layer: PJRT client wrapper + artifact manifests.
+//! Runtime layer: engine (PJRT or native host backend) + artifact manifests.
 //!
-//! Loads the HLO-text artifacts produced by `python/compile/aot.py`
-//! (`make artifacts`), compiles them once on the CPU PJRT client, and
-//! executes them from the coordinator's hot path. Python never runs here.
+//! With the real `xla` bindings linked, the engine loads the HLO-text
+//! artifacts produced by `python/compile/aot.py` (`make artifacts`),
+//! compiles them once on the CPU PJRT client, and executes them from the
+//! coordinator's hot path. With the offline stub, [`Engine::cpu`] falls
+//! back to [`native`]: the same entry points executed on host kernels
+//! (`tensor::gemm`), with manifests synthesized from the model zoo — the
+//! full pipeline runs without Python or XLA.
 
 pub mod engine;
 pub mod manifest;
+pub mod native;
 pub mod xla_stub;
 
 pub use engine::{artifacts_root, load_manifest, Engine, Executable, RunInputs, RunOutputs};

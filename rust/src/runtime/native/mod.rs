@@ -1,0 +1,413 @@
+//! `runtime::native` — the host compute backend behind [`Engine`].
+//!
+//! When the PJRT client is the offline stub (no XLA library in the build
+//! environment), the engine falls back to this backend: a pure-Rust
+//! implementation of every manifest entry point (train / eval / hvp) on the
+//! `tensor::gemm` kernels — cache-blocked parallel f32 GEMM + im2col for
+//! training, and the bit-plane GEMM for quantized inference, whose cost is
+//! proportional to the set weight bits and therefore *drops* as the BSQ
+//! regularizer empties planes and §3.3 trims them.
+//!
+//! Because there are no AOT artifacts on disk in this mode, the manifest is
+//! synthesized from the native model zoo ([`models`]) with exactly the
+//! statespec contract `python/compile/statespec.py` defines — the
+//! coordinator, baselines and experiment drivers run unchanged.
+//!
+//! [`Engine`]: crate::runtime::Engine
+
+pub mod models;
+pub mod step;
+pub mod tape;
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::data::Batch;
+use crate::model::state::ModelState;
+use crate::quant::bitplane::NB;
+use crate::runtime::engine::{RunInputs, RunOutputs};
+use crate::runtime::manifest::{ArtifactSpec, IoItem, Manifest, QLayerMeta, Role};
+
+use self::models::NativeModel;
+use self::step::{AMode, Entry, WMode};
+
+/// Marker root for synthesized artifact paths (they exist only as cache
+/// keys; nothing is read from disk).
+const NATIVE_ROOT: &str = "native";
+
+/// The native backend: stateless — models are a static registry and every
+/// executable is derived from its artifact spec.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> NativeBackend {
+        NativeBackend
+    }
+
+    /// Synthesize the manifest for `model` (the disk-artifact counterpart
+    /// is `Manifest::load`).
+    pub fn manifest(&self, model: &str) -> Result<Manifest> {
+        manifest_for(model)
+    }
+}
+
+/// A compiled-equivalent native executable: the model plus a validated
+/// entry point.
+pub struct NativeExec {
+    model: Arc<NativeModel>,
+}
+
+impl NativeExec {
+    /// Resolve the model + entry from a synthesized spec (`native/<m>/<e>`).
+    pub fn for_spec(spec: &ArtifactSpec) -> Result<NativeExec> {
+        let model_name = spec
+            .file
+            .parent()
+            .and_then(Path::file_name)
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| anyhow!("not a native artifact path: {}", spec.file.display()))?;
+        let model = models::get(model_name)?;
+        Entry::parse(&spec.name)?; // fail at load time, not step time
+        Ok(NativeExec { model })
+    }
+
+    pub fn run(
+        &self,
+        spec: &ArtifactSpec,
+        state: &mut ModelState,
+        batch: Option<&Batch>,
+        inputs: &RunInputs,
+    ) -> Result<RunOutputs> {
+        step::execute(&self.model, spec, state, batch, inputs)
+    }
+}
+
+// -- manifest synthesis (the statespec.py contract) --------------------------
+
+/// Build the full manifest for a native model: metadata plus one
+/// [`ArtifactSpec`] per registered entry point.
+pub fn manifest_for(name: &str) -> Result<Manifest> {
+    let m = models::get(name)?;
+    let dir = PathBuf::from(NATIVE_ROOT).join(&m.name);
+    let mut artifacts = std::collections::BTreeMap::new();
+    for entry in &m.entries {
+        artifacts.insert(entry.to_string(), artifact_spec(&m, entry, &dir)?);
+    }
+    Ok(Manifest {
+        model: m.name.clone(),
+        batch: m.batch,
+        nb: NB,
+        input_hw: m.input_hw,
+        in_ch: m.in_ch,
+        num_classes: m.num_classes,
+        qlayers: m
+            .qlayers
+            .iter()
+            .map(|q| QLayerMeta {
+                name: q.name.clone(),
+                shape: q.shape.clone(),
+                kind: q.kind.to_string(),
+                params: q.params(),
+            })
+            .collect(),
+        bn_names: m.bn_names.clone(),
+        act_sites: m.act_sites.clone(),
+        dense_bias: m.dense_bias.clone(),
+        artifacts,
+        dir,
+    })
+}
+
+fn item(name: impl Into<String>, shape: Vec<usize>, dtype: &str, role: Role) -> IoItem {
+    IoItem { name: name.into(), shape, dtype: dtype.to_string(), role }
+}
+
+fn batch_items(m: &NativeModel) -> Vec<IoItem> {
+    let (h, w) = m.input_hw;
+    vec![
+        item("x", vec![m.batch, h, w, m.in_ch], "f32", Role::X),
+        item("y", vec![m.batch], "i32", Role::Y),
+    ]
+}
+
+fn bias_items(m: &NativeModel) -> Vec<IoItem> {
+    m.dense_bias
+        .iter()
+        .map(|d| {
+            let out = m
+                .qlayers
+                .iter()
+                .find(|q| &q.name == d)
+                .map(|q| *q.shape.last().unwrap())
+                .unwrap_or(m.num_classes);
+            item(format!("w:{d}/b"), vec![out], "f32", Role::State)
+        })
+        .collect()
+}
+
+fn fp_weight_items(m: &NativeModel) -> Vec<IoItem> {
+    let mut items: Vec<IoItem> = m
+        .qlayers
+        .iter()
+        .map(|q| item(format!("w:{}", q.name), q.shape.clone(), "f32", Role::State))
+        .collect();
+    items.extend(bias_items(m));
+    items
+}
+
+fn bit_weight_items(m: &NativeModel) -> Vec<IoItem> {
+    let mut items = Vec::new();
+    for q in &m.qlayers {
+        let mut pshape = vec![NB];
+        pshape.extend_from_slice(&q.shape);
+        items.push(item(format!("wp:{}", q.name), pshape.clone(), "f32", Role::State));
+        items.push(item(format!("wn:{}", q.name), pshape, "f32", Role::State));
+        items.push(item(format!("mask:{}", q.name), vec![NB], "f32", Role::State));
+        items.push(item(format!("scale:{}", q.name), vec![], "f32", Role::State));
+    }
+    items.extend(bias_items(m));
+    items
+}
+
+fn bn_items(m: &NativeModel) -> Vec<IoItem> {
+    let mut items = Vec::new();
+    for n in &m.bn_names {
+        let c = m
+            .qlayers
+            .iter()
+            .find(|q| &q.name == n)
+            .map(|q| *q.shape.last().unwrap())
+            .expect("bn without conv");
+        for p in ["gamma", "beta", "mean", "var"] {
+            items.push(item(format!("bn:{n}/{p}"), vec![c], "f32", Role::State));
+        }
+    }
+    items
+}
+
+fn pact_items(m: &NativeModel) -> Vec<IoItem> {
+    m.act_sites.iter().map(|s| item(format!("pact:{s}"), vec![], "f32", Role::State)).collect()
+}
+
+fn lsq_items(m: &NativeModel) -> Vec<IoItem> {
+    m.qlayers.iter().map(|q| item(format!("step:{}", q.name), vec![], "f32", Role::State)).collect()
+}
+
+fn momentum_items(trainables: &[IoItem]) -> Vec<IoItem> {
+    trainables
+        .iter()
+        .map(|t| item(format!("m:{}", t.name), t.shape.clone(), "f32", Role::State))
+        .collect()
+}
+
+fn vec_items(m: &NativeModel, which: &[&str]) -> Vec<IoItem> {
+    let mut out = Vec::new();
+    if which.contains(&"regw") {
+        out.push(item("regw", vec![m.qlayers.len()], "f32", Role::Vec));
+    }
+    if which.contains(&"wlv") {
+        out.push(item("wlv", vec![m.qlayers.len()], "f32", Role::Vec));
+    }
+    if which.contains(&"actlv") {
+        out.push(item("actlv", vec![m.act_sites.len()], "f32", Role::Vec));
+    }
+    out
+}
+
+fn hyper_items(names: &[&str]) -> Vec<IoItem> {
+    names.iter().map(|n| item(*n, vec![], "f32", Role::Hyper)).collect()
+}
+
+fn metric_items(names: &[&str]) -> Vec<IoItem> {
+    names.iter().map(|n| item(*n, vec![], "f32", Role::Metric)).collect()
+}
+
+fn is_trainable(i: &IoItem) -> bool {
+    !i.name.starts_with("mask:") && !i.name.contains("/mean") && !i.name.contains("/var")
+}
+
+fn artifact_spec(m: &NativeModel, entry: &str, dir: &Path) -> Result<ArtifactSpec> {
+    let file = dir.join(entry);
+    let (inputs, outputs) = match Entry::parse(entry)? {
+        Entry::Train(wm, am) => {
+            let weight_in = match wm {
+                WMode::Fp | WMode::Dorefa => fp_weight_items(m),
+                WMode::Bit => bit_weight_items(m),
+                WMode::Lsq => {
+                    let mut w = fp_weight_items(m);
+                    w.extend(lsq_items(m));
+                    w
+                }
+            };
+            let vecs = match wm {
+                WMode::Fp => vec_items(m, &["actlv"]),
+                WMode::Bit => vec_items(m, &["regw", "actlv"]),
+                WMode::Dorefa | WMode::Lsq => vec_items(m, &["wlv", "actlv"]),
+            };
+            let hypers = if wm == WMode::Bit {
+                hyper_items(&["lr", "wd", "alpha"])
+            } else {
+                hyper_items(&["lr", "wd"])
+            };
+            let bn_in = bn_items(m);
+            let pact_in = if am == AMode::Pact { pact_items(m) } else { Vec::new() };
+            let trainables: Vec<IoItem> = weight_in
+                .iter()
+                .chain(&bn_in)
+                .chain(&pact_in)
+                .filter(|i| is_trainable(i))
+                .cloned()
+                .collect();
+            let momenta = momentum_items(&trainables);
+            let mut inputs = batch_items(m);
+            inputs.extend(weight_in);
+            inputs.extend(bn_in.clone());
+            inputs.extend(pact_in);
+            inputs.extend(momenta.clone());
+            inputs.extend(vecs);
+            inputs.extend(hypers);
+            let bn_stats: Vec<IoItem> = bn_in
+                .into_iter()
+                .filter(|i| i.name.contains("/mean") || i.name.contains("/var"))
+                .collect();
+            let metrics: &[&str] = if wm == WMode::Bit {
+                &["loss", "ce", "acc", "bgl"]
+            } else {
+                &["loss", "ce", "acc"]
+            };
+            let mut outputs = trainables;
+            outputs.extend(momenta);
+            outputs.extend(bn_stats);
+            outputs.extend(metric_items(metrics));
+            (inputs, outputs)
+        }
+        Entry::Eval(wm, am) => {
+            let weight_in = match wm {
+                WMode::Fp | WMode::Dorefa => fp_weight_items(m),
+                WMode::Bit => bit_weight_items(m),
+                WMode::Lsq => {
+                    let mut w = fp_weight_items(m);
+                    w.extend(lsq_items(m));
+                    w
+                }
+            };
+            let vecs = match wm {
+                WMode::Fp | WMode::Bit => vec_items(m, &["actlv"]),
+                WMode::Dorefa | WMode::Lsq => vec_items(m, &["wlv", "actlv"]),
+            };
+            let pact_in = if am == AMode::Pact { pact_items(m) } else { Vec::new() };
+            let mut inputs = batch_items(m);
+            inputs.extend(weight_in);
+            inputs.extend(bn_items(m));
+            inputs.extend(pact_in);
+            inputs.extend(vecs);
+            (inputs, metric_items(&["loss", "acc"]))
+        }
+        Entry::Hvp => {
+            let mut inputs = batch_items(m);
+            inputs.extend(fp_weight_items(m));
+            inputs.extend(bn_items(m));
+            inputs.extend(
+                m.qlayers
+                    .iter()
+                    .map(|q| item(format!("v:{}", q.name), q.shape.clone(), "f32", Role::Probe)),
+            );
+            let mut outputs: Vec<IoItem> = m
+                .qlayers
+                .iter()
+                .map(|q| item(format!("hv:{}", q.name), q.shape.clone(), "f32", Role::ProbeOut))
+                .collect();
+            outputs.extend(metric_items(&["loss"]));
+            (inputs, outputs)
+        }
+    };
+    Ok(ArtifactSpec { name: entry.to_string(), file, inputs, outputs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{momentum_slots, ModelState};
+
+    #[test]
+    fn manifests_synthesize_for_every_model() {
+        for name in models::model_names() {
+            let man = manifest_for(name).unwrap();
+            assert_eq!(man.model, name);
+            assert_eq!(man.nb, NB);
+            assert!(!man.artifacts.is_empty(), "{name} has no artifacts");
+            for q in &man.qlayers {
+                assert_eq!(q.shape.iter().product::<usize>(), q.params);
+            }
+        }
+    }
+
+    #[test]
+    fn fp_state_checks_against_synthesized_spec() {
+        let man = manifest_for("tinynet").unwrap();
+        let spec = man.artifact("fp_train_relu6").unwrap();
+        let mut state = ModelState::init_fp(&man, 0);
+        state.ensure_momenta(&momentum_slots(&spec.inputs));
+        state.check_against(&spec.inputs).unwrap();
+        // eval spec needs no momenta
+        let espec = man.artifact("fp_eval_relu6").unwrap();
+        assert!(momentum_slots(&espec.inputs).is_empty());
+        ModelState::init_fp(&man, 0).check_against(&espec.inputs).unwrap();
+    }
+
+    #[test]
+    fn bit_state_checks_against_bsq_spec() {
+        let man = manifest_for("tinynet").unwrap();
+        let spec = man.artifact("bsq_train_relu6").unwrap();
+        let mut state = ModelState::init_fp(&man, 1);
+        state.to_bit_representation(&man, 8).unwrap();
+        state.ensure_momenta(&momentum_slots(&spec.inputs));
+        state.check_against(&spec.inputs).unwrap();
+        // masks are configuration, not trainables: no momentum slot
+        assert!(spec.inputs.iter().all(|i| !i.name.starts_with("m:mask:")));
+        // planes and scales are trainable
+        assert!(spec.inputs.iter().any(|i| i.name == "m:wp:conv1"));
+        assert!(spec.inputs.iter().any(|i| i.name == "m:scale:conv1"));
+        // bgl metric present on the bit path
+        assert!(spec.outputs.iter().any(|o| o.name == "bgl" && o.role == Role::Metric));
+    }
+
+    #[test]
+    fn pact_and_lsq_specs_carry_their_parameters() {
+        let man = manifest_for("resnet20").unwrap();
+        let pact = man.artifact("bsq_train_pact").unwrap();
+        assert!(pact.inputs.iter().any(|i| i.name.starts_with("pact:")));
+        assert!(pact.inputs.iter().any(|i| i.name.starts_with("m:pact:")));
+        let lsq = man.artifact("lsq_train_relu6").unwrap();
+        assert!(lsq.inputs.iter().any(|i| i.name.starts_with("step:")));
+        assert!(lsq.inputs.iter().any(|i| i.name == "wlv"));
+    }
+
+    #[test]
+    fn hvp_spec_has_probes_and_probe_outs() {
+        let man = manifest_for("tinynet").unwrap();
+        let hvp = man.artifact("hvp").unwrap();
+        assert_eq!(hvp.inputs.iter().filter(|i| i.role == Role::Probe).count(), 4);
+        assert_eq!(hvp.outputs.iter().filter(|o| o.role == Role::ProbeOut).count(), 4);
+        // no actlv: the ref path ignores it (python aot.py parity)
+        assert!(hvp.inputs.iter().all(|i| i.name != "actlv"));
+    }
+
+    #[test]
+    fn exec_resolves_model_from_spec_path() {
+        let man = manifest_for("tinynet").unwrap();
+        let spec = man.artifact("q_eval_relu6").unwrap();
+        let exe = NativeExec::for_spec(spec).unwrap();
+        assert_eq!(exe.model.name, "tinynet");
+        let bogus = ArtifactSpec {
+            name: "q_eval_relu6".into(),
+            file: PathBuf::from("native/nope/q_eval_relu6"),
+            inputs: vec![],
+            outputs: vec![],
+        };
+        assert!(NativeExec::for_spec(&bogus).is_err());
+    }
+}

@@ -1,0 +1,358 @@
+//! Native model zoo — the Rust twin of `python/compile/models.py`.
+//!
+//! Same four architectures, same layer names/shapes/order, same BN groups
+//! and activation-site numbering (sites are counted in forward call order,
+//! which matches definition order in every model). The metadata feeds the
+//! synthesized manifests; the `forward` builders drive the tape in
+//! `runtime::native::step`.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+use once_cell::sync::Lazy;
+
+use crate::runtime::native::step::Fwd;
+use crate::runtime::native::tape::Var;
+
+#[derive(Debug, Clone)]
+pub struct NativeLayer {
+    pub name: String,
+    /// HWIO for convs, `[in, out]` for dense.
+    pub shape: Vec<usize>,
+    pub kind: &'static str,
+}
+
+impl NativeLayer {
+    fn conv(name: impl Into<String>, kh: usize, kw: usize, cin: usize, cout: usize) -> NativeLayer {
+        NativeLayer { name: name.into(), shape: vec![kh, kw, cin, cout], kind: "conv" }
+    }
+
+    fn dense(name: impl Into<String>, cin: usize, cout: usize) -> NativeLayer {
+        NativeLayer { name: name.into(), shape: vec![cin, cout], kind: "dense" }
+    }
+
+    pub fn params(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct NativeModel {
+    pub name: String,
+    pub batch: usize,
+    pub input_hw: (usize, usize),
+    pub in_ch: usize,
+    pub num_classes: usize,
+    pub qlayers: Vec<NativeLayer>,
+    pub bn_names: Vec<String>,
+    pub act_sites: Vec<String>,
+    pub dense_bias: Vec<String>,
+    /// Artifact entry points this model exposes (python `model.py` registry).
+    pub entries: Vec<&'static str>,
+}
+
+impl NativeModel {
+    pub fn layer(&self, name: &str) -> Result<&NativeLayer> {
+        self.qlayers
+            .iter()
+            .find(|q| q.name == name)
+            .ok_or_else(|| anyhow!("model {} has no layer {name:?}", self.name))
+    }
+}
+
+const RELU6_SET: [&str; 6] = [
+    "fp_train_relu6",
+    "fp_eval_relu6",
+    "bsq_train_relu6",
+    "q_eval_relu6",
+    "dorefa_train_relu6",
+    "dorefa_eval_relu6",
+];
+const PACT_SET: [&str; 4] =
+    ["bsq_train_pact", "q_eval_pact", "dorefa_train_pact", "dorefa_eval_pact"];
+const LSQ_SET: [&str; 2] = ["lsq_train_relu6", "lsq_eval_relu6"];
+
+fn tinynet() -> NativeModel {
+    let qlayers = vec![
+        NativeLayer::conv("conv1", 3, 3, 3, 8),
+        NativeLayer::conv("conv2", 3, 3, 8, 16),
+        NativeLayer::conv("conv3", 3, 3, 16, 16),
+        NativeLayer::dense("fc", 16, 10),
+    ];
+    let convs: Vec<String> = vec!["conv1".into(), "conv2".into(), "conv3".into()];
+    NativeModel {
+        name: "tinynet".into(),
+        batch: 16,
+        input_hw: (16, 16),
+        in_ch: 3,
+        num_classes: 10,
+        qlayers,
+        bn_names: convs.clone(),
+        act_sites: convs,
+        dense_bias: vec!["fc".into()],
+        entries: RELU6_SET.iter().copied().chain(["hvp"]).collect(),
+    }
+}
+
+fn resnet20() -> NativeModel {
+    let width = 16usize;
+    let widths = [width, 2 * width, 4 * width];
+    let mut qlayers = vec![NativeLayer::conv("conv1", 3, 3, 3, width)];
+    let mut bns = vec!["conv1".to_string()];
+    let mut cin = width;
+    for (s, &w) in widths.iter().enumerate() {
+        for b in 0..3 {
+            for c in 1..=2 {
+                let nm = format!("s{s}b{b}c{c}");
+                qlayers.push(NativeLayer::conv(nm.clone(), 3, 3, if c == 1 { cin } else { w }, w));
+                bns.push(nm);
+            }
+            cin = w;
+        }
+    }
+    qlayers.push(NativeLayer::dense("fc", widths[2], 10));
+    NativeModel {
+        name: "resnet20".into(),
+        batch: 32,
+        input_hw: (32, 32),
+        in_ch: 3,
+        num_classes: 10,
+        qlayers,
+        act_sites: bns.clone(),
+        bn_names: bns,
+        dense_bias: vec!["fc".into()],
+        entries: RELU6_SET
+            .iter()
+            .copied()
+            .chain(PACT_SET.iter().copied())
+            .chain(LSQ_SET.iter().copied())
+            .chain(["hvp"])
+            .collect(),
+    }
+}
+
+fn resnet50_sim() -> NativeModel {
+    let (width, expansion, blocks) = (16usize, 4usize, [2usize, 2, 2]);
+    let widths: Vec<usize> = (0..blocks.len()).map(|i| width << i).collect();
+    let mut qlayers = vec![NativeLayer::conv("conv1", 3, 3, 3, width)];
+    let mut bns = vec!["conv1".to_string()];
+    let mut acts = vec!["conv1".to_string()];
+    let mut cin = width;
+    for (s, (&nb, &w)) in blocks.iter().zip(&widths).enumerate() {
+        for b in 0..nb {
+            let pre = format!("s{s}b{b}");
+            let cout = w * expansion;
+            qlayers.push(NativeLayer::conv(format!("{pre}c1"), 1, 1, cin, w));
+            qlayers.push(NativeLayer::conv(format!("{pre}c2"), 3, 3, w, w));
+            qlayers.push(NativeLayer::conv(format!("{pre}c3"), 1, 1, w, cout));
+            for c in ["c1", "c2", "c3"] {
+                bns.push(format!("{pre}{c}"));
+                acts.push(format!("{pre}{c}"));
+            }
+            if b == 0 {
+                qlayers.push(NativeLayer::conv(format!("{pre}proj"), 1, 1, cin, cout));
+                bns.push(format!("{pre}proj"));
+            }
+            cin = cout;
+        }
+    }
+    qlayers.push(NativeLayer::dense("fc", widths[2] * expansion, 100));
+    NativeModel {
+        name: "resnet50_sim".into(),
+        batch: 32,
+        input_hw: (32, 32),
+        in_ch: 3,
+        num_classes: 100,
+        qlayers,
+        bn_names: bns,
+        act_sites: acts,
+        dense_bias: vec!["fc".into()],
+        entries: RELU6_SET.to_vec(),
+    }
+}
+
+fn inception_sim() -> NativeModel {
+    fn cba(
+        q: &mut Vec<NativeLayer>,
+        s: &mut Vec<String>,
+        name: String,
+        kh: usize,
+        kw: usize,
+        cin: usize,
+        cout: usize,
+    ) {
+        q.push(NativeLayer::conv(name.clone(), kh, kw, cin, cout));
+        s.push(name);
+    }
+    let mut qlayers: Vec<NativeLayer> = Vec::new();
+    let mut sites: Vec<String> = Vec::new();
+    cba(&mut qlayers, &mut sites, "stem1".into(), 3, 3, 3, 16);
+    cba(&mut qlayers, &mut sites, "stem2".into(), 3, 3, 16, 16);
+    cba(&mut qlayers, &mut sites, "stem3".into(), 3, 3, 16, 32);
+    let mut cin = 32usize;
+    for m in 0..3 {
+        let (b1, b3r, b3, d3r, d3, pp) = (16, 12, 16, 12, 16, 8);
+        let pre = format!("mix{m}");
+        cba(&mut qlayers, &mut sites, format!("{pre}_b1"), 1, 1, cin, b1);
+        cba(&mut qlayers, &mut sites, format!("{pre}_b3r"), 1, 1, cin, b3r);
+        cba(&mut qlayers, &mut sites, format!("{pre}_b3"), 3, 3, b3r, b3);
+        cba(&mut qlayers, &mut sites, format!("{pre}_d3r"), 1, 1, cin, d3r);
+        cba(&mut qlayers, &mut sites, format!("{pre}_d3a"), 3, 3, d3r, d3);
+        cba(&mut qlayers, &mut sites, format!("{pre}_d3b"), 3, 3, d3, d3);
+        cba(&mut qlayers, &mut sites, format!("{pre}_pp"), 1, 1, cin, pp);
+        cin = b1 + b3 + d3 + pp;
+    }
+    qlayers.push(NativeLayer::dense("fc", cin, 100));
+    NativeModel {
+        name: "inception_sim".into(),
+        batch: 32,
+        input_hw: (32, 32),
+        in_ch: 3,
+        num_classes: 100,
+        qlayers,
+        bn_names: sites.clone(),
+        act_sites: sites,
+        dense_bias: vec!["fc".into()],
+        entries: RELU6_SET.to_vec(),
+    }
+}
+
+static REGISTRY: Lazy<BTreeMap<&'static str, Arc<NativeModel>>> = Lazy::new(|| {
+    let mut m = BTreeMap::new();
+    m.insert("tinynet", Arc::new(tinynet()));
+    m.insert("resnet20", Arc::new(resnet20()));
+    m.insert("resnet50_sim", Arc::new(resnet50_sim()));
+    m.insert("inception_sim", Arc::new(inception_sim()));
+    m
+});
+
+pub fn get(name: &str) -> Result<Arc<NativeModel>> {
+    REGISTRY
+        .get(name)
+        .cloned()
+        .ok_or_else(|| anyhow!("native backend has no model {name:?} (have {:?})", model_names()))
+}
+
+pub fn model_names() -> Vec<&'static str> {
+    REGISTRY.keys().copied().collect()
+}
+
+// -- forward graphs ----------------------------------------------------------
+
+/// Run the model's forward graph on the tape; returns the logits var.
+pub(crate) fn forward(model: &NativeModel, fwd: &mut Fwd, x: Var) -> Result<Var> {
+    match model.name.as_str() {
+        "tinynet" => {
+            let x = fwd.conv_bn_act(x, "conv1", 1)?;
+            let x = fwd.conv_bn_act(x, "conv2", 2)?;
+            let x = fwd.conv_bn_act(x, "conv3", 1)?;
+            let p = fwd.global_avg_pool(x)?;
+            fwd.dense(p, "fc")
+        }
+        "resnet20" => {
+            let widths = [16usize, 32, 64];
+            let mut x = fwd.conv_bn_act(x, "conv1", 1)?;
+            for (s, &w) in widths.iter().enumerate() {
+                for b in 0..3 {
+                    let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                    let sc = fwd.pad_shortcut(x, w, stride)?;
+                    let y = fwd.conv_bn_act(x, &format!("s{s}b{b}c1"), stride)?;
+                    let y = fwd.conv(y, &format!("s{s}b{b}c2"), 1)?;
+                    let y = fwd.bn(y, &format!("s{s}b{b}c2"))?;
+                    x = fwd.act(fwd.add(y, sc)?)?;
+                }
+            }
+            let p = fwd.global_avg_pool(x)?;
+            fwd.dense(p, "fc")
+        }
+        "resnet50_sim" => {
+            let blocks = [2usize, 2, 2];
+            let mut x = fwd.conv_bn_act(x, "conv1", 1)?;
+            for (s, &nb) in blocks.iter().enumerate() {
+                for b in 0..nb {
+                    let pre = format!("s{s}b{b}");
+                    let stride = if s > 0 && b == 0 { 2 } else { 1 };
+                    let sc = if b == 0 {
+                        let p = fwd.conv(x, &format!("{pre}proj"), stride)?;
+                        fwd.bn(p, &format!("{pre}proj"))?
+                    } else {
+                        x
+                    };
+                    let y = fwd.conv_bn_act(x, &format!("{pre}c1"), 1)?;
+                    let y = fwd.conv_bn_act(y, &format!("{pre}c2"), stride)?;
+                    let y = fwd.conv(y, &format!("{pre}c3"), 1)?;
+                    let y = fwd.bn(y, &format!("{pre}c3"))?;
+                    x = fwd.act(fwd.add(y, sc)?)?;
+                }
+            }
+            let p = fwd.global_avg_pool(x)?;
+            fwd.dense(p, "fc")
+        }
+        "inception_sim" => {
+            let mut x = fwd.conv_bn_act(x, "stem1", 1)?;
+            x = fwd.conv_bn_act(x, "stem2", 2)?;
+            x = fwd.conv_bn_act(x, "stem3", 1)?;
+            for m in 0..3 {
+                if m == 1 {
+                    x = fwd.subsample(x, 2)?; // stride-2 transition between blocks
+                }
+                let pre = format!("mix{m}");
+                let y1 = fwd.conv_bn_act(x, &format!("{pre}_b1"), 1)?;
+                let y3 = fwd.conv_bn_act(x, &format!("{pre}_b3r"), 1)?;
+                let y3 = fwd.conv_bn_act(y3, &format!("{pre}_b3"), 1)?;
+                let yd = fwd.conv_bn_act(x, &format!("{pre}_d3r"), 1)?;
+                let yd = fwd.conv_bn_act(yd, &format!("{pre}_d3a"), 1)?;
+                let yd = fwd.conv_bn_act(yd, &format!("{pre}_d3b"), 1)?;
+                let yp = fwd.avg_pool3x3_edge(x)?;
+                let yp = fwd.conv_bn_act(yp, &format!("{pre}_pp"), 1)?;
+                x = fwd.concat(&[y1, y3, yd, yp])?;
+            }
+            let p = fwd.global_avg_pool(x)?;
+            fwd.dense(p, "fc")
+        }
+        other => Err(anyhow!("no native forward for model {other:?}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_mirrors_python_zoo() {
+        let t = get("tinynet").unwrap();
+        assert_eq!(t.qlayers.len(), 4);
+        assert_eq!(t.batch, 16);
+        assert_eq!(t.qlayers.iter().map(|q| q.params()).sum::<usize>(), 216 + 1152 + 2304 + 160);
+
+        let r = get("resnet20").unwrap();
+        assert_eq!(r.qlayers.len(), 20);
+        assert_eq!(r.bn_names.len(), 19);
+        assert_eq!(r.act_sites.len(), 19);
+        assert!(r.entries.contains(&"bsq_train_pact"));
+        assert!(r.entries.contains(&"hvp"));
+
+        let r50 = get("resnet50_sim").unwrap();
+        // 1 stem + 6 blocks × 3 convs + 3 projections + 1 fc = 23
+        assert_eq!(r50.qlayers.len(), 23);
+        assert_eq!(r50.num_classes, 100);
+        // projections carry BN but no activation site
+        assert_eq!(r50.bn_names.len(), r50.act_sites.len() + 3);
+
+        let inc = get("inception_sim").unwrap();
+        assert_eq!(inc.qlayers.len(), 3 + 3 * 7 + 1);
+        assert_eq!(inc.layer("fc").unwrap().shape, vec![56, 100]);
+        assert!(get("nope").is_err());
+    }
+
+    #[test]
+    fn resnet20_layer_shapes_match_paper_model() {
+        let r = get("resnet20").unwrap();
+        assert_eq!(r.layer("conv1").unwrap().shape, vec![3, 3, 3, 16]);
+        assert_eq!(r.layer("s1b0c1").unwrap().shape, vec![3, 3, 16, 32]);
+        assert_eq!(r.layer("s1b0c2").unwrap().shape, vec![3, 3, 32, 32]);
+        assert_eq!(r.layer("s2b2c2").unwrap().shape, vec![3, 3, 64, 64]);
+        assert_eq!(r.layer("fc").unwrap().shape, vec![64, 10]);
+    }
+}

@@ -1,0 +1,986 @@
+//! Native execution of the manifest entry points: train / eval / hvp.
+//!
+//! One function per role, mirroring `python/compile/train.py` step for step:
+//!
+//! * **train** — forward under the entry's weight mode (fp / bit / DoReFa /
+//!   LSQ STE) and activation mode (ReLU6 / PACT), CE + α·Σ c_l·B_GL loss
+//!   (paper Eq. 5), reverse pass, PyTorch-convention SGD-momentum update
+//!   with the `[0, 2]` plane clamp, BN running-stat writeback.
+//! * **eval** — forward only; in bit mode the convolutions and the dense
+//!   head run on the bit-plane GEMM (`tensor::gemm::BitPlaneMatrix`), so
+//!   inference cost shrinks with every plane the regularizer empties and
+//!   §3.3 trims away.
+//! * **hvp** — HAWQ's Hessian-vector product, computed as the central
+//!   difference of the analytic CE gradient at `w ± εv` (the fp "ref"
+//!   graph: clip-only activations, eval-mode BN). The AOT artifact uses
+//!   forward-over-reverse autodiff; the central difference agrees to O(ε²)
+//!   and feeds the same block power iteration.
+//!
+//! STE gradient conventions (identical to `quantize.py` under
+//! `x + stop_gradient(round(x) − x)`):
+//!   bit     dL/dwp_b = +s·2^b/denom · dL/dW (− for wn), dL/ds = Σ dW·V/denom
+//!   dorefa  identity (levels ≥ 1), zero for a dead (levels < 1) layer
+//!   lsq     dL/dw masked to the un-clipped region,
+//!           dL/dstep = Σ dW·(Round(code) − code·1_inside)
+//!   act     pass-through inside (0, bound); above-bound mass → PACT clip
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Batch;
+use crate::model::state::ModelState;
+use crate::quant::bitplane::NB;
+use crate::runtime::engine::{RunInputs, RunOutputs};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::native::models::{self, NativeModel};
+use crate::runtime::native::tape::{backward, batch_stats, Tape, Var, WeightRep, BN_MOMENTUM};
+use crate::tensor::gemm::BitPlaneMatrix;
+use crate::tensor::Tensor;
+
+/// SGD momentum (paper App. A; `train.py::MOMENTUM`).
+const MOMENTUM: f32 = 0.9;
+/// Group-Lasso smoothing at the origin (`kernels/ref.py::BGL_EPS`).
+const BGL_EPS: f64 = 1e-12;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WMode {
+    Fp,
+    Bit,
+    Dorefa,
+    Lsq,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AMode {
+    Relu6,
+    Pact,
+    /// Analysis path (HVP): bare `clip(x, 0, 6)`, no quantization.
+    Ref,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Entry {
+    Train(WMode, AMode),
+    Eval(WMode, AMode),
+    Hvp,
+}
+
+impl Entry {
+    pub fn parse(name: &str) -> Result<Entry> {
+        if name == "hvp" {
+            return Ok(Entry::Hvp);
+        }
+        let (base, act) = name
+            .rsplit_once('_')
+            .ok_or_else(|| anyhow!("malformed artifact name {name:?}"))?;
+        let am = match act {
+            "relu6" => AMode::Relu6,
+            "pact" => AMode::Pact,
+            other => bail!("unknown activation mode {other:?} in {name:?}"),
+        };
+        Ok(match base {
+            "fp_train" => Entry::Train(WMode::Fp, am),
+            "fp_eval" => Entry::Eval(WMode::Fp, am),
+            "bsq_train" => Entry::Train(WMode::Bit, am),
+            "q_eval" => Entry::Eval(WMode::Bit, am),
+            "dorefa_train" => Entry::Train(WMode::Dorefa, am),
+            "dorefa_eval" => Entry::Eval(WMode::Dorefa, am),
+            "lsq_train" => Entry::Train(WMode::Lsq, am),
+            "lsq_eval" => Entry::Eval(WMode::Lsq, am),
+            other => bail!("unknown entry point {other:?}"),
+        })
+    }
+}
+
+// -- forward context ---------------------------------------------------------
+
+/// How a layer's effective-weight cotangent maps back to state-space keys.
+enum WGradMap {
+    /// `w:<l>` += dW (fp master weights; also the DoReFa STE identity).
+    Direct,
+    /// No gradient (inference reps, dead DoReFa layers).
+    Zero,
+    /// Bit representation: per-plane coefficients s·2^b/denom and the
+    /// rounded codes over denom (the dL/ds factor).
+    Bit { coef: Vec<f32>, rv_over_denom: Vec<f32> },
+    /// LSQ: clip mask for dW, per-element step cotangent factor.
+    Lsq { inside: Vec<f32>, dstep: Vec<f32> },
+}
+
+/// The forward context the model zoo's graphs are written against —
+/// the native twin of `python/compile/layers.py::Forward`.
+pub(crate) struct Fwd<'a> {
+    pub tape: Tape,
+    model: &'a NativeModel,
+    state: &'a ModelState,
+    weights: BTreeMap<String, WeightRep>,
+    actlv: Vec<f32>,
+    amode: AMode,
+    train: bool,
+    site: usize,
+    /// BN running-stat updates collected in train mode: (name, mean, var).
+    pub new_stats: Vec<(String, Vec<f32>, Vec<f32>)>,
+}
+
+impl<'a> Fwd<'a> {
+    fn new(
+        model: &'a NativeModel,
+        state: &'a ModelState,
+        weights: BTreeMap<String, WeightRep>,
+        actlv: Vec<f32>,
+        amode: AMode,
+        train: bool,
+    ) -> Fwd<'a> {
+        Fwd {
+            tape: Tape::new(),
+            model,
+            state,
+            weights,
+            actlv,
+            amode,
+            train,
+            site: 0,
+            new_stats: Vec::new(),
+        }
+    }
+
+    pub fn conv(&mut self, x: Var, name: &str, stride: usize) -> Result<Var> {
+        let rep = self
+            .weights
+            .remove(name)
+            .ok_or_else(|| anyhow!("layer {name:?} has no prepared weight (or was reused)"))?;
+        let shape = self.model.layer(name)?.shape.clone();
+        self.tape.conv(x, name, rep, &shape, stride)
+    }
+
+    pub fn dense(&mut self, x: Var, name: &str) -> Result<Var> {
+        let rep = self
+            .weights
+            .remove(name)
+            .ok_or_else(|| anyhow!("layer {name:?} has no prepared weight (or was reused)"))?;
+        let bias = self.state.get(&format!("w:{name}/b"))?.data().to_vec();
+        self.tape.dense(x, name, rep, &bias)
+    }
+
+    pub fn bn(&mut self, x: Var, name: &str) -> Result<Var> {
+        let gamma = self.state.get(&format!("bn:{name}/gamma"))?.data().to_vec();
+        let beta = self.state.get(&format!("bn:{name}/beta"))?.data().to_vec();
+        let run_m = self.state.get(&format!("bn:{name}/mean"))?.data().to_vec();
+        let run_v = self.state.get(&format!("bn:{name}/var"))?.data().to_vec();
+        if self.train {
+            let (bm, bv) = batch_stats(self.tape.value(x));
+            let nm: Vec<f32> = run_m
+                .iter()
+                .zip(&bm)
+                .map(|(&r, &b)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * b)
+                .collect();
+            let nv: Vec<f32> = run_v
+                .iter()
+                .zip(&bv)
+                .map(|(&r, &b)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * b)
+                .collect();
+            self.new_stats.push((name.to_string(), nm, nv));
+            self.tape.bn(x, name, &gamma, &beta, &bm, &bv, true)
+        } else {
+            self.tape.bn(x, name, &gamma, &beta, &run_m, &run_v, false)
+        }
+    }
+
+    /// Quantized activation; sites are numbered in call order.
+    pub fn act(&mut self, x: Var) -> Result<Var> {
+        let site = self.site;
+        self.site += 1;
+        match self.amode {
+            AMode::Ref => self.tape.act_quant(x, 6.0, 0.0, None),
+            AMode::Relu6 => {
+                let lv = *self
+                    .actlv
+                    .get(site)
+                    .ok_or_else(|| anyhow!("actlv has no entry for site {site}"))?;
+                self.tape.act_quant(x, 6.0, lv, None)
+            }
+            AMode::Pact => {
+                let lv = *self
+                    .actlv
+                    .get(site)
+                    .ok_or_else(|| anyhow!("actlv has no entry for site {site}"))?;
+                let sname = self
+                    .model
+                    .act_sites
+                    .get(site)
+                    .ok_or_else(|| anyhow!("model has no act site {site}"))?
+                    .clone();
+                let p = self.state.get(&format!("pact:{sname}"))?.item()?;
+                // keep the clip strictly positive; grad flows where p ≥ min
+                let pact = if p >= 0.05 { Some(sname) } else { None };
+                self.tape.act_quant(x, p.max(0.05), lv, pact)
+            }
+        }
+    }
+
+    pub fn conv_bn_act(&mut self, x: Var, name: &str, stride: usize) -> Result<Var> {
+        let y = self.conv(x, name, stride)?;
+        let y = self.bn(y, name)?;
+        self.act(y)
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
+        self.tape.add(a, b)
+    }
+
+    pub fn global_avg_pool(&mut self, x: Var) -> Result<Var> {
+        self.tape.global_avg_pool(x)
+    }
+
+    pub fn subsample(&mut self, x: Var, stride: usize) -> Result<Var> {
+        self.tape.subsample(x, stride)
+    }
+
+    pub fn concat(&mut self, parts: &[Var]) -> Result<Var> {
+        self.tape.concat(parts)
+    }
+
+    pub fn avg_pool3x3_edge(&mut self, x: Var) -> Result<Var> {
+        self.tape.avg_pool3x3_edge(x)
+    }
+
+    /// ResNet option-A shortcut: strided subsample + zero channel padding.
+    pub fn pad_shortcut(&mut self, x: Var, cout: usize, stride: usize) -> Result<Var> {
+        let mut v = x;
+        if stride > 1 {
+            v = self.tape.subsample(v, stride)?;
+        }
+        let cin = *self.tape.value(v).shape().last().unwrap();
+        if cout > cin {
+            v = self.tape.pad_channels(v, cout)?;
+        }
+        Ok(v)
+    }
+}
+
+// -- weight preparation ------------------------------------------------------
+
+/// Resolve every quantized layer's effective weight for one pass, plus the
+/// map from effective-weight cotangents back to state keys.
+fn prepare_weights(
+    model: &NativeModel,
+    state: &ModelState,
+    wm: WMode,
+    wlv: Option<&[f32]>,
+    bitplane_infer: bool,
+) -> Result<(BTreeMap<String, WeightRep>, BTreeMap<String, WGradMap>)> {
+    let mut reps = BTreeMap::new();
+    let mut gmaps = BTreeMap::new();
+    for (i, q) in model.qlayers.iter().enumerate() {
+        let (rep, gmap) = match wm {
+            WMode::Fp => {
+                let w = state.get(&format!("w:{}", q.name))?;
+                (WeightRep::Dense(w.clone()), WGradMap::Direct)
+            }
+            WMode::Bit => prepare_bit(state, q, bitplane_infer)?,
+            WMode::Dorefa => {
+                let w = state.get(&format!("w:{}", q.name))?;
+                let levels = wlv.and_then(|v| v.get(i)).copied().ok_or_else(|| {
+                    anyhow!("wlv has no entry for layer {} ({})", i, q.name)
+                })?;
+                if levels < 1.0 {
+                    // n = 0 layer: weight collapses to zero, no gradient
+                    (WeightRep::Dense(Tensor::zeros(&q.shape)), WGradMap::Zero)
+                } else {
+                    let s = w.max_abs().max(1e-8);
+                    let wq = w.map(|v| {
+                        let ws = v / s;
+                        s * (ws.abs() * levels).round() / levels * ws.signum_or_zero()
+                    });
+                    (WeightRep::Dense(wq), WGradMap::Direct)
+                }
+            }
+            WMode::Lsq => {
+                let w = state.get(&format!("w:{}", q.name))?;
+                let st = state.get(&format!("step:{}", q.name))?.item()?.max(1e-8);
+                let lv = wlv
+                    .and_then(|v| v.get(i))
+                    .copied()
+                    .ok_or_else(|| anyhow!("wlv has no entry for layer {} ({})", i, q.name))?
+                    .max(1.0);
+                let mut inside = vec![0.0f32; w.len()];
+                let mut dstep = vec![0.0f32; w.len()];
+                let mut wq = vec![0.0f32; w.len()];
+                for (e, &v) in w.data().iter().enumerate() {
+                    let raw = v / st;
+                    let within = (-lv..=lv).contains(&raw);
+                    let code = raw.clamp(-lv, lv);
+                    inside[e] = if within { 1.0 } else { 0.0 };
+                    dstep[e] = code.round() - if within { code } else { 0.0 };
+                    wq[e] = code.round() * st;
+                }
+                (
+                    WeightRep::Dense(Tensor::new(q.shape.clone(), wq)?),
+                    WGradMap::Lsq { inside, dstep },
+                )
+            }
+        };
+        reps.insert(q.name.clone(), rep);
+        gmaps.insert(q.name.clone(), gmap);
+    }
+    Ok((reps, gmaps))
+}
+
+/// Bit-representation weight: `W = s·Round[Σ_b mask_b (wp_b − wn_b) 2^b] /
+/// max(Σ_b mask_b 2^b, 1)` (paper Eq. 2/3). The plane accumulation runs in
+/// f64 so the rounded codes match `quant::packed` bit for bit — which keeps
+/// re-quantization an exact no-op on the represented weight here too.
+fn prepare_bit(
+    state: &ModelState,
+    q: &models::NativeLayer,
+    bitplane_infer: bool,
+) -> Result<(WeightRep, WGradMap)> {
+    let wp = state.get(&format!("wp:{}", q.name))?;
+    let wn = state.get(&format!("wn:{}", q.name))?;
+    let mask = state.get(&format!("mask:{}", q.name))?;
+    let scale = state.get(&format!("scale:{}", q.name))?.item()?;
+    let elems = wp.len() / NB;
+    if elems != q.params() {
+        bail!("layer {}: planes hold {elems} elems, shape says {}", q.name, q.params());
+    }
+
+    let mut v = vec![0.0f64; elems];
+    let mut denom = 0.0f64;
+    for (b, &m) in mask.data().iter().enumerate().take(NB) {
+        if m == 0.0 {
+            continue;
+        }
+        let w2 = (1u64 << b) as f64;
+        denom += w2;
+        for ((acc, &pv), &nv) in v.iter_mut().zip(wp.row(b, elems)).zip(wn.row(b, elems)) {
+            *acc += (pv - nv) as f64 * w2;
+        }
+    }
+    let denom = denom.max(1.0);
+
+    if bitplane_infer {
+        // |Round(v)| ≤ 2·denom ≤ 1022: fits i16, needs ≤ 10 planes.
+        let codes: Vec<i16> = v.iter().map(|a| a.round() as i16).collect();
+        let max_mag = codes.iter().map(|c| c.unsigned_abs()).max().unwrap_or(0);
+        let bits = (16 - (max_mag as u16).leading_zeros() as usize).max(1);
+        let n_out = *q.shape.last().unwrap_or(&1);
+        let k = elems / n_out;
+        let delta = (scale as f64 / denom) as f32;
+        let bpm = BitPlaneMatrix::from_codes(&codes, k, n_out, bits, delta);
+        return Ok((WeightRep::Planes(bpm), WGradMap::Zero));
+    }
+
+    let weff: Vec<f32> = v.iter().map(|a| (scale as f64 * a.round() / denom) as f32).collect();
+    let rv_over_denom: Vec<f32> = v.iter().map(|a| (a.round() / denom) as f32).collect();
+    let coef: Vec<f32> = (0..NB)
+        .map(|b| {
+            if mask.data()[b] != 0.0 {
+                (scale as f64 * (1u64 << b) as f64 / denom) as f32
+            } else {
+                0.0
+            }
+        })
+        .collect();
+    Ok((
+        WeightRep::Dense(Tensor::new(q.shape.clone(), weff)?),
+        WGradMap::Bit { coef, rv_over_denom },
+    ))
+}
+
+trait SignumOrZero {
+    fn signum_or_zero(self) -> f32;
+}
+
+impl SignumOrZero for f32 {
+    /// `jnp.sign` semantics: sign(0) = 0 (f32::signum gives ±1 at 0).
+    fn signum_or_zero(self) -> f32 {
+        if self == 0.0 {
+            0.0
+        } else {
+            self.signum()
+        }
+    }
+}
+
+/// Map `weff:<layer>` cotangents onto state keys per the layer's STE rule.
+fn map_weight_grads(
+    model: &NativeModel,
+    gmaps: BTreeMap<String, WGradMap>,
+    grads: &mut BTreeMap<String, Tensor>,
+) -> Result<()> {
+    for q in &model.qlayers {
+        let dweff = match grads.remove(&format!("weff:{}", q.name)) {
+            Some(t) => t,
+            None => continue, // layer unused by this graph
+        };
+        match gmaps.get(&q.name) {
+            Some(WGradMap::Direct) => {
+                accumulate(grads, format!("w:{}", q.name), dweff);
+            }
+            Some(WGradMap::Zero) | None => {}
+            Some(WGradMap::Bit { coef, rv_over_denom }) => {
+                let elems = dweff.len();
+                let mut dwp = vec![0.0f32; NB * elems];
+                let mut dwn = vec![0.0f32; NB * elems];
+                for (b, &c) in coef.iter().enumerate() {
+                    if c == 0.0 {
+                        continue;
+                    }
+                    for (e, &g) in dweff.data().iter().enumerate() {
+                        dwp[b * elems + e] = c * g;
+                        dwn[b * elems + e] = -c * g;
+                    }
+                }
+                let mut pshape = vec![NB];
+                pshape.extend_from_slice(&q.shape);
+                accumulate(grads, format!("wp:{}", q.name), Tensor::new(pshape.clone(), dwp)?);
+                accumulate(grads, format!("wn:{}", q.name), Tensor::new(pshape, dwn)?);
+                let dscale: f64 = dweff
+                    .data()
+                    .iter()
+                    .zip(rv_over_denom)
+                    .map(|(&g, &r)| (g * r) as f64)
+                    .sum();
+                accumulate(grads, format!("scale:{}", q.name), Tensor::scalar(dscale as f32));
+            }
+            Some(WGradMap::Lsq { inside, dstep }) => {
+                let dw: Vec<f32> = dweff.data().iter().zip(inside).map(|(&g, &m)| g * m).collect();
+                accumulate(grads, format!("w:{}", q.name), Tensor::new(q.shape.clone(), dw)?);
+                let ds: f64 = dweff.data().iter().zip(dstep).map(|(&g, &d)| (g * d) as f64).sum();
+                accumulate(grads, format!("step:{}", q.name), Tensor::scalar(ds as f32));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn accumulate(grads: &mut BTreeMap<String, Tensor>, key: String, t: Tensor) {
+    match grads.get_mut(&key) {
+        Some(dst) => {
+            for (a, &b) in dst.data_mut().iter_mut().zip(t.data()) {
+                *a += b;
+            }
+        }
+        None => {
+            grads.insert(key, t);
+        }
+    }
+}
+
+// -- loss / regularizer ------------------------------------------------------
+
+/// Softmax CE + accuracy + dL/dlogits for L = mean CE.
+fn ce_acc_grad(logits: &Tensor, y: &[i32]) -> Result<(f32, f32, Tensor)> {
+    let s = logits.shape();
+    if s.len() != 2 || s[0] != y.len() {
+        bail!("logits {s:?} vs {} labels", y.len());
+    }
+    let (n, c) = (s[0], s[1]);
+    let mut dl = vec![0.0f32; n * c];
+    let mut ce = 0.0f64;
+    let mut correct = 0usize;
+    for (i, (row, &yi)) in logits.data().chunks(c).zip(y).enumerate() {
+        let yi = yi as usize;
+        if yi >= c {
+            bail!("label {yi} out of range ({c} classes)");
+        }
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sumexp: f64 = row.iter().map(|&l| ((l - max) as f64).exp()).sum();
+        let lse = max as f64 + sumexp.ln();
+        ce += lse - row[yi] as f64;
+        let mut arg = 0usize;
+        for (j, &l) in row.iter().enumerate() {
+            if l > row[arg] {
+                arg = j;
+            }
+            let p = ((l as f64 - lse).exp()) as f32;
+            dl[i * c + j] = (p - if j == yi { 1.0 } else { 0.0 }) / n as f32;
+        }
+        if arg == yi {
+            correct += 1;
+        }
+    }
+    Ok((
+        (ce / n as f64) as f32,
+        correct as f32 / n as f32,
+        Tensor::new(vec![n, c], dl)?,
+    ))
+}
+
+/// Σ_l regw_l·B_GL(W^l) (paper Eq. 4/5) and its plane gradients, with the
+/// loss coefficient α already folded into the gradients.
+fn bgl_and_grads(
+    model: &NativeModel,
+    state: &ModelState,
+    regw: &[f32],
+    alpha: f32,
+) -> Result<(f32, BTreeMap<String, Tensor>)> {
+    let mut total = 0.0f64;
+    let mut grads = BTreeMap::new();
+    for (i, q) in model.qlayers.iter().enumerate() {
+        let rw = *regw.get(i).ok_or_else(|| anyhow!("regw has no entry {i}"))? as f64;
+        let wp = state.get(&format!("wp:{}", q.name))?;
+        let wn = state.get(&format!("wn:{}", q.name))?;
+        let mask = state.get(&format!("mask:{}", q.name))?;
+        let elems = wp.len() / NB;
+        let mut dwp = vec![0.0f32; NB * elems];
+        let mut dwn = vec![0.0f32; NB * elems];
+        for (b, &m) in mask.data().iter().enumerate().take(NB) {
+            if m == 0.0 {
+                continue;
+            }
+            let (prow, nrow) = (wp.row(b, elems), wn.row(b, elems));
+            let ssq: f64 = prow.iter().chain(nrow).map(|&v| (v as f64) * (v as f64)).sum();
+            let norm = (ssq + BGL_EPS).sqrt();
+            total += rw * norm;
+            let coef = (alpha as f64 * rw / norm) as f32;
+            for (e, (&pv, &nv)) in prow.iter().zip(nrow).enumerate() {
+                dwp[b * elems + e] = coef * pv;
+                dwn[b * elems + e] = coef * nv;
+            }
+        }
+        let mut pshape = vec![NB];
+        pshape.extend_from_slice(&q.shape);
+        grads.insert(format!("wp:{}", q.name), Tensor::new(pshape.clone(), dwp)?);
+        grads.insert(format!("wn:{}", q.name), Tensor::new(pshape, dwn)?);
+    }
+    Ok((total as f32, grads))
+}
+
+// -- optimizer ---------------------------------------------------------------
+
+/// PyTorch-convention SGD: `m ← μm + (g + wd·w); w ← w − lr·m`, with weight
+/// decay off for planes and scales and the `[0, 2]` plane clamp after every
+/// step (paper §3.1). Trainables are exactly the keys the artifact carries
+/// momentum slots for.
+fn sgd_update(
+    state: &mut ModelState,
+    spec: &ArtifactSpec,
+    grads: &mut BTreeMap<String, Tensor>,
+    lr: f32,
+    wd: f32,
+) -> Result<()> {
+    for item in &spec.inputs {
+        let Some(key) = item.name.strip_prefix("m:") else { continue };
+        let mut w = state
+            .remove(key)
+            .ok_or_else(|| anyhow!("state missing trainable {key:?}"))?;
+        let mut mom = state
+            .remove(&item.name)
+            .ok_or_else(|| anyhow!("state missing momentum {:?}", item.name))?;
+        let g = grads.remove(key);
+        if let Some(gt) = &g {
+            if gt.len() != w.len() {
+                bail!("grad for {key:?} has {} elems, want {}", gt.len(), w.len());
+            }
+        }
+        let decay = if key.starts_with("wp:") || key.starts_with("wn:") || key.starts_with("scale:")
+        {
+            0.0
+        } else {
+            wd
+        };
+        let clamp = key.starts_with("wp:") || key.starts_with("wn:");
+        let gdata = g.map(|t| t.into_data());
+        for (e, (wv, mv)) in w.data_mut().iter_mut().zip(mom.data_mut()).enumerate() {
+            let gv = gdata.as_ref().map(|d| d[e]).unwrap_or(0.0);
+            *mv = MOMENTUM * *mv + gv + decay * *wv;
+            *wv -= lr * *mv;
+            if clamp {
+                *wv = wv.clamp(0.0, 2.0);
+            }
+        }
+        state.insert(key.to_string(), w);
+        state.insert(item.name.clone(), mom);
+    }
+    Ok(())
+}
+
+// -- input plumbing ----------------------------------------------------------
+
+fn hyper(inputs: &RunInputs, name: &str) -> Result<f32> {
+    inputs.hypers.get(name).copied().ok_or_else(|| anyhow!("missing hyper {name:?}"))
+}
+
+fn vec_input(inputs: &RunInputs, name: &str, want: usize) -> Result<Vec<f32>> {
+    let v = inputs.vecs.get(name).ok_or_else(|| anyhow!("missing vec {name:?}"))?;
+    if v.len() != want {
+        bail!("vec {name}: {} entries ≠ {want}", v.len());
+    }
+    Ok(v.clone())
+}
+
+// -- entry points ------------------------------------------------------------
+
+/// Execute one artifact natively; mirrors `Executable::run` semantics
+/// (state updated in place, metrics/probes returned).
+pub fn execute(
+    model: &NativeModel,
+    spec: &ArtifactSpec,
+    state: &mut ModelState,
+    batch: Option<&Batch>,
+    inputs: &RunInputs,
+) -> Result<RunOutputs> {
+    match Entry::parse(&spec.name)? {
+        Entry::Train(wm, am) => train_step(model, spec, state, batch, inputs, wm, am),
+        Entry::Eval(wm, am) => eval_step(model, state, batch, inputs, wm, am),
+        Entry::Hvp => hvp_step(model, state, batch, inputs),
+    }
+}
+
+fn need_batch<'b>(batch: Option<&'b Batch>) -> Result<&'b Batch> {
+    batch.ok_or_else(|| anyhow!("artifact needs a batch"))
+}
+
+fn forward_pass(
+    model: &NativeModel,
+    state: &ModelState,
+    reps: BTreeMap<String, WeightRep>,
+    actlv: Vec<f32>,
+    am: AMode,
+    train: bool,
+    batch: &Batch,
+) -> Result<(Tape, Var, Vec<(String, Vec<f32>, Vec<f32>)>)> {
+    let mut fwd = Fwd::new(model, state, reps, actlv, am, train);
+    let x = fwd.tape.input(batch.x.clone());
+    let logits = models::forward(model, &mut fwd, x)?;
+    let Fwd { tape, new_stats, .. } = fwd;
+    Ok((tape, logits, new_stats))
+}
+
+fn train_step(
+    model: &NativeModel,
+    spec: &ArtifactSpec,
+    state: &mut ModelState,
+    batch: Option<&Batch>,
+    inputs: &RunInputs,
+    wm: WMode,
+    am: AMode,
+) -> Result<RunOutputs> {
+    let b = need_batch(batch)?;
+    let lr = hyper(inputs, "lr")?;
+    let wd = hyper(inputs, "wd")?;
+    let actlv = vec_input(inputs, "actlv", model.act_sites.len())?;
+    let wlv = match wm {
+        WMode::Dorefa | WMode::Lsq => Some(vec_input(inputs, "wlv", model.qlayers.len())?),
+        _ => None,
+    };
+    let (alpha, regw) = if wm == WMode::Bit {
+        (hyper(inputs, "alpha")?, vec_input(inputs, "regw", model.qlayers.len())?)
+    } else {
+        (0.0, Vec::new())
+    };
+
+    let (reps, gmaps) = prepare_weights(model, state, wm, wlv.as_deref(), false)?;
+    let (tape, logits, new_stats) = forward_pass(model, state, reps, actlv, am, true, b)?;
+    let (ce, acc, dlogits) = ce_acc_grad(tape.value(logits), b.y.data())?;
+    let mut grads = backward(&tape, logits, dlogits)?.keys;
+    drop(tape);
+    map_weight_grads(model, gmaps, &mut grads)?;
+
+    let (bgl, loss) = if wm == WMode::Bit {
+        let (bgl, bgl_grads) = bgl_and_grads(model, state, &regw, alpha)?;
+        for (k, t) in bgl_grads {
+            accumulate(&mut grads, k, t);
+        }
+        (bgl, ce + alpha * bgl)
+    } else {
+        (0.0, ce)
+    };
+
+    sgd_update(state, spec, &mut grads, lr, wd)?;
+    for (name, m, v) in new_stats {
+        state.get_mut(&format!("bn:{name}/mean"))?.data_mut().copy_from_slice(&m);
+        state.get_mut(&format!("bn:{name}/var"))?.data_mut().copy_from_slice(&v);
+    }
+
+    let mut out = RunOutputs::default();
+    out.metrics.insert("loss".into(), loss);
+    out.metrics.insert("ce".into(), ce);
+    out.metrics.insert("acc".into(), acc);
+    if wm == WMode::Bit {
+        out.metrics.insert("bgl".into(), bgl);
+    }
+    Ok(out)
+}
+
+fn eval_step(
+    model: &NativeModel,
+    state: &mut ModelState,
+    batch: Option<&Batch>,
+    inputs: &RunInputs,
+    wm: WMode,
+    am: AMode,
+) -> Result<RunOutputs> {
+    let b = need_batch(batch)?;
+    let actlv = vec_input(inputs, "actlv", model.act_sites.len())?;
+    let wlv = match wm {
+        WMode::Dorefa | WMode::Lsq => Some(vec_input(inputs, "wlv", model.qlayers.len())?),
+        _ => None,
+    };
+    // Bit mode runs on the plane bitsets: compute ∝ set weight bits. The
+    // O(NB·elems) pack repeats per batch (the engine is stateless and the
+    // planes can change between calls); it is dwarfed by the GEMMs, whose
+    // work carries the extra M = batch·spatial factor.
+    let (reps, _) = prepare_weights(model, state, wm, wlv.as_deref(), wm == WMode::Bit)?;
+    let (tape, logits, _) = forward_pass(model, state, reps, actlv, am, false, b)?;
+    let (ce, acc, _) = ce_acc_grad(tape.value(logits), b.y.data())?;
+    let mut out = RunOutputs::default();
+    out.metrics.insert("loss".into(), ce);
+    out.metrics.insert("acc".into(), acc);
+    Ok(out)
+}
+
+/// Central-difference Hessian-vector product of the fp CE loss (HAWQ).
+fn hvp_step(
+    model: &NativeModel,
+    state: &mut ModelState,
+    batch: Option<&Batch>,
+    inputs: &RunInputs,
+) -> Result<RunOutputs> {
+    let b = need_batch(batch)?;
+
+    // center loss (reported like the artifact's `loss` output)
+    let (reps, _) = prepare_weights(model, state, WMode::Fp, None, false)?;
+    let (tape, logits, _) = forward_pass(model, state, reps, Vec::new(), AMode::Ref, false, b)?;
+    let (loss, _, _) = ce_acc_grad(tape.value(logits), b.y.data())?;
+    drop(tape);
+
+    let mut out = RunOutputs::default();
+    out.metrics.insert("loss".into(), loss);
+
+    let mut vnorm2 = 0.0f64;
+    for q in &model.qlayers {
+        if let Some(v) = inputs.probes.get(&format!("v:{}", q.name)) {
+            vnorm2 += v.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+        }
+    }
+    if vnorm2.sqrt() < 1e-12 {
+        // zero probe ⇒ Hv = 0 (matches the linear-in-v artifact exactly)
+        for q in &model.qlayers {
+            out.probes.insert(format!("hv:{}", q.name), Tensor::zeros(&q.shape));
+        }
+        return Ok(out);
+    }
+    let mut wnorm2 = 0.0f64;
+    for q in &model.qlayers {
+        let w = state.get(&format!("w:{}", q.name))?;
+        wnorm2 += w.data().iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>();
+    }
+    let eps = (1e-3 * (wnorm2.sqrt() + 1.0) / vnorm2.sqrt()) as f32;
+
+    let mut sided: Vec<BTreeMap<String, Tensor>> = Vec::with_capacity(2);
+    for sign in [1.0f32, -1.0] {
+        perturb(model, state, inputs, sign * eps)?;
+        let grads = fp_ref_grads(model, state, b);
+        perturb(model, state, inputs, -sign * eps)?; // restore
+        sided.push(grads?);
+    }
+    let (gp, gm) = (&sided[0], &sided[1]);
+    for q in &model.qlayers {
+        let key = format!("weff:{}", q.name);
+        let mut hv = Tensor::zeros(&q.shape);
+        if let (Some(p), Some(m)) = (gp.get(&key), gm.get(&key)) {
+            for ((h, &a), &bv) in hv.data_mut().iter_mut().zip(p.data()).zip(m.data()) {
+                *h = (a - bv) / (2.0 * eps);
+            }
+        }
+        out.probes.insert(format!("hv:{}", q.name), hv);
+    }
+    Ok(out)
+}
+
+fn perturb(
+    model: &NativeModel,
+    state: &mut ModelState,
+    inputs: &RunInputs,
+    step: f32,
+) -> Result<()> {
+    for q in &model.qlayers {
+        if let Some(v) = inputs.probes.get(&format!("v:{}", q.name)) {
+            let w = state.get_mut(&format!("w:{}", q.name))?;
+            if w.len() != v.len() {
+                bail!("probe v:{} has {} elems, weight has {}", q.name, v.len(), w.len());
+            }
+            for (wv, &pv) in w.data_mut().iter_mut().zip(v.data()) {
+                *wv += step * pv;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Analytic CE gradient w.r.t. the fp weights on the "ref" graph
+/// (clip-only activations, eval-mode BN) — the inner kernel of the HVP.
+fn fp_ref_grads(
+    model: &NativeModel,
+    state: &ModelState,
+    b: &Batch,
+) -> Result<BTreeMap<String, Tensor>> {
+    let (reps, _) = prepare_weights(model, state, WMode::Fp, None, false)?;
+    let (tape, logits, _) = forward_pass(model, state, reps, Vec::new(), AMode::Ref, false, b)?;
+    let (_, _, dlogits) = ce_acc_grad(tape.value(logits), b.y.data())?;
+    Ok(backward(&tape, logits, dlogits)?.keys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Corpus, CorpusSpec, Loader};
+    use crate::model::state::ModelState;
+    use crate::runtime::native::manifest_for;
+    use crate::util::Pcg32;
+
+    fn tiny_setup() -> (std::sync::Arc<NativeModel>, crate::runtime::Manifest, Batch) {
+        let model = models::get("tinynet").unwrap();
+        let man = manifest_for("tinynet").unwrap();
+        let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(64, 32));
+        let mut loader = Loader::eval(&corpus.train, man.batch);
+        let batch = loader.next_batch();
+        (model, man, batch)
+    }
+
+    #[test]
+    fn entry_parse_covers_registry() {
+        assert_eq!(Entry::parse("hvp").unwrap(), Entry::Hvp);
+        assert_eq!(
+            Entry::parse("bsq_train_relu6").unwrap(),
+            Entry::Train(WMode::Bit, AMode::Relu6)
+        );
+        assert_eq!(Entry::parse("q_eval_pact").unwrap(), Entry::Eval(WMode::Bit, AMode::Pact));
+        assert_eq!(
+            Entry::parse("dorefa_eval_relu6").unwrap(),
+            Entry::Eval(WMode::Dorefa, AMode::Relu6)
+        );
+        assert!(Entry::parse("nope_relu6").is_err());
+        assert!(Entry::parse("bsq_train_tanh").is_err());
+    }
+
+    /// Finite-difference check of the smooth (fp, clip-only) backward path:
+    /// conv, BN (batch stats), dense, bias, global pool, CE.
+    #[test]
+    fn fp_gradients_match_finite_differences() {
+        let (model, man, batch) = tiny_setup();
+        let state = ModelState::init_fp(&man, 5);
+        let grads = {
+            let (reps, gmaps) = prepare_weights(&model, &state, WMode::Fp, None, false).unwrap();
+            let actlv = vec![0.0; model.act_sites.len()];
+            let (tape, logits, _) =
+                forward_pass(&model, &state, reps, actlv, AMode::Relu6, true, &batch).unwrap();
+            let (_, _, dl) = ce_acc_grad(tape.value(logits), batch.y.data()).unwrap();
+            let mut g = backward(&tape, logits, dl).unwrap().keys;
+            map_weight_grads(&model, gmaps, &mut g).unwrap();
+            g
+        };
+
+        let loss_of = |s: &ModelState| -> f32 {
+            let (reps, _) = prepare_weights(&model, s, WMode::Fp, None, false).unwrap();
+            let actlv = vec![0.0; model.act_sites.len()];
+            let (tape, logits, _) =
+                forward_pass(&model, s, reps, actlv, AMode::Relu6, true, &batch).unwrap();
+            let (ce, _, _) = ce_acc_grad(tape.value(logits), batch.y.data()).unwrap();
+            ce
+        };
+
+        let mut rng = Pcg32::seeded(9);
+        // a handful of random coordinates across parameter kinds
+        for key in ["w:conv1", "w:conv2", "w:fc", "w:fc/b", "bn:conv2/gamma", "bn:conv1/beta"] {
+            let n = state.get(key).unwrap().len();
+            for _ in 0..3 {
+                let e = rng.below(n as u32) as usize;
+                let eps = 2e-3f32;
+                let mut sp = state.clone();
+                sp.get_mut(key).unwrap().data_mut()[e] += eps;
+                let mut sm = state.clone();
+                sm.get_mut(key).unwrap().data_mut()[e] -= eps;
+                let fd = (loss_of(&sp) - loss_of(&sm)) / (2.0 * eps);
+                let an = grads.get(key).map(|t| t.data()[e]).unwrap_or(0.0);
+                // f32 forward noise bounds the agreement; the signal is
+                // catching sign/scale/structure bugs, not ulp accuracy
+                assert!(
+                    (fd - an).abs() <= 2e-2 * fd.abs().max(an.abs()).max(0.05),
+                    "{key}[{e}]: fd {fd} vs analytic {an}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bit_grad_mapping_applies_ste_coefficients() {
+        // dL/dwp_b = s·2^b/denom · dL/dW for active planes, 0 for masked
+        let (model, man, _) = tiny_setup();
+        let mut state = ModelState::init_fp(&man, 1);
+        state.to_bit_representation(&man, 4).unwrap();
+        let q = model.layer("conv1").unwrap();
+        let (_, gmaps) = prepare_weights(&model, &state, WMode::Bit, None, false).unwrap();
+        let elems = q.params();
+        let mut grads = BTreeMap::new();
+        grads.insert("weff:conv1".to_string(), Tensor::full(&q.shape, 1.0));
+        map_weight_grads(&model, gmaps, &mut grads).unwrap();
+        let scale = state.get("scale:conv1").unwrap().item().unwrap();
+        let denom = 15.0f32; // 2^4 − 1
+        let dwp = grads.get("wp:conv1").unwrap();
+        for b in 0..NB {
+            let want = if b < 4 { scale * (1 << b) as f32 / denom } else { 0.0 };
+            for e in 0..elems {
+                assert!((dwp.data()[b * elems + e] - want).abs() < 1e-6);
+            }
+        }
+        // scale grad = Σ dW·V/denom = Σ round(v)/denom over all elems
+        assert!(grads.contains_key("scale:conv1"));
+    }
+
+    #[test]
+    fn bgl_matches_reference_formula() {
+        let (model, man, _) = tiny_setup();
+        let mut state = ModelState::init_fp(&man, 2);
+        state.to_bit_representation(&man, 3).unwrap();
+        let regw = vec![1.0f32; model.qlayers.len()];
+        let (bgl, grads) = bgl_and_grads(&model, &state, &regw, 1.0).unwrap();
+        // reference: Σ_l Σ_b mask·sqrt(Σ wp²+wn² + eps)
+        let mut want = 0.0f64;
+        for q in &model.qlayers {
+            let wp = state.get(&format!("wp:{}", q.name)).unwrap();
+            let wn = state.get(&format!("wn:{}", q.name)).unwrap();
+            let elems = wp.len() / NB;
+            for b in 0..3 {
+                let ssq: f64 = wp
+                    .row(b, elems)
+                    .iter()
+                    .chain(wn.row(b, elems))
+                    .map(|&v| (v as f64) * (v as f64))
+                    .sum();
+                want += (ssq + BGL_EPS).sqrt();
+            }
+        }
+        assert!((bgl as f64 - want).abs() < 1e-3 * want.max(1.0), "{bgl} vs {want}");
+        // gradient of an active binary plane entry is wp/norm ∈ {0, 1/norm}
+        assert!(grads.get("wp:conv1").unwrap().data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn sgd_clamps_planes_and_skips_decay_on_scales() {
+        let (model, man, _) = tiny_setup();
+        let _ = &model;
+        let mut state = ModelState::init_fp(&man, 3);
+        state.to_bit_representation(&man, 8).unwrap();
+        let spec = man.artifact("bsq_train_relu6").unwrap().clone();
+        state.ensure_momenta(&crate::model::momentum_slots(&spec.inputs));
+        let scale_before = state.get("scale:conv1").unwrap().item().unwrap();
+        let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
+        // huge negative plane grad → update would exceed 2.0 without clamp
+        let wp_shape = state.get("wp:conv1").unwrap().shape().to_vec();
+        grads.insert("wp:conv1".into(), Tensor::full(&wp_shape, -100.0));
+        sgd_update(&mut state, &spec, &mut grads, 1.0, 0.5).unwrap();
+        let wp = state.get("wp:conv1").unwrap();
+        assert!(wp.data().iter().all(|&v| (0.0..=2.0).contains(&v)));
+        assert_eq!(wp.data().iter().cloned().fold(0.0f32, f32::max), 2.0);
+        // no grad + zero decay ⇒ scale unchanged
+        let scale_after = state.get("scale:conv1").unwrap().item().unwrap();
+        assert_eq!(scale_before, scale_after);
+        // decayed float bias shrank (wd = 0.5, zero grad, zero momentum)
+        // (biases start at 0 so check gamma instead: 1 → 1 − lr·wd·1 = 0.5)
+        assert!((state.get("bn:conv1/gamma").unwrap().data()[0] - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,660 @@
+//! Reverse-mode tape for the native backend.
+//!
+//! One forward pass records a topologically ordered node list; `backward`
+//! walks it in reverse, producing input-space cotangents per node plus a
+//! keyed map of parameter gradients (effective weights under `weff:<layer>`,
+//! biases, BN affines, PACT clips). The op set is exactly what the model
+//! zoo's forward graphs need — this is not a general autodiff system.
+//!
+//! Semantics mirror `python/compile` (the lowered JAX graphs) operation by
+//! operation: SAME-padded NHWC conv via im2col + the `tensor::gemm` blocked
+//! kernels, batch-norm with biased batch statistics, the fake-quant STE of
+//! `kernels/actquant.py` (pass-through inside `(0, bound)`, above-bound mass
+//! to the PACT clip), and the option-A shortcut / concat / pooling glue.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::tensor::gemm::{self, BitPlaneMatrix, ConvGeom};
+use crate::tensor::Tensor;
+
+pub const BN_MOMENTUM: f32 = 0.1;
+pub const BN_EPS: f32 = 1e-5;
+
+/// Handle to a tape node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(pub usize);
+
+/// Effective weight of a conv/dense layer for one forward pass.
+pub enum WeightRep {
+    /// Dense f32 (training paths; backward supported).
+    Dense(Tensor),
+    /// Sign-split plane bitsets (inference path; forward only, cost
+    /// proportional to set weight bits).
+    Planes(BitPlaneMatrix),
+}
+
+pub(crate) enum Op {
+    Input,
+    Conv { x: Var, layer: String, w: WeightRep, geom: ConvGeom },
+    Dense { x: Var, layer: String, w: WeightRep, in_dim: usize, out_dim: usize },
+    Bn { x: Var, name: String, gamma: Vec<f32>, mean: Vec<f32>, var: Vec<f32>, batch_stats: bool },
+    ActQuant { x: Var, bound: f32, levels: f32, pact: Option<String> },
+    Add { a: Var, b: Var },
+    GlobalAvgPool { x: Var },
+    Subsample { x: Var, stride: usize },
+    PadChannels { x: Var, cin: usize },
+    Concat { parts: Vec<(Var, usize)> },
+    AvgPool3x3Edge { x: Var },
+}
+
+pub(crate) struct Node {
+    pub op: Op,
+    pub out: Tensor,
+}
+
+#[derive(Default)]
+pub struct Tape {
+    pub(crate) nodes: Vec<Node>,
+}
+
+impl Tape {
+    pub fn new() -> Tape {
+        Tape { nodes: Vec::new() }
+    }
+
+    pub fn value(&self, v: Var) -> &Tensor {
+        &self.nodes[v.0].out
+    }
+
+    fn push(&mut self, op: Op, out: Tensor) -> Var {
+        self.nodes.push(Node { op, out });
+        Var(self.nodes.len() - 1)
+    }
+
+    pub fn input(&mut self, t: Tensor) -> Var {
+        self.push(Op::Input, t)
+    }
+
+    /// SAME-padded NHWC convolution; `kshape` is the HWIO kernel shape.
+    pub fn conv(
+        &mut self,
+        x: Var,
+        layer: &str,
+        w: WeightRep,
+        kshape: &[usize],
+        stride: usize,
+    ) -> Result<Var> {
+        if kshape.len() != 4 {
+            bail!("conv {layer}: kernel shape {kshape:?} is not HWIO");
+        }
+        let (kh, kw, cin, cout) = (kshape[0], kshape[1], kshape[2], kshape[3]);
+        let (geom, ydata) = {
+            let xt = self.value(x);
+            let s = xt.shape();
+            if s.len() != 4 || s[3] != cin {
+                bail!("conv {layer}: input {s:?} vs kernel {kshape:?}");
+            }
+            let geom = ConvGeom::same(s[0], s[1], s[2], cin, kh, kw, cout, stride);
+            let patches = gemm::im2col(xt.data(), &geom);
+            let rows = geom.rows();
+            let k = geom.kdim();
+            let ydata = match &w {
+                WeightRep::Dense(wt) => gemm::matmul(&patches, wt.data(), rows, k, cout),
+                WeightRep::Planes(bpm) => {
+                    let yt = bpm.matmul_t(&gemm::transpose(&patches, rows, k), rows);
+                    gemm::transpose(&yt, cout, rows)
+                }
+            };
+            (geom, ydata)
+        };
+        let out = Tensor::new(vec![geom.n, geom.oh, geom.ow, geom.cout], ydata)?;
+        Ok(self.push(Op::Conv { x, layer: layer.to_string(), w, geom }, out))
+    }
+
+    /// `x[N, in] · W[in, out] + b` (bias handled by the caller as a separate
+    /// keyed parameter; pass it pre-added via `bias`).
+    pub fn dense(&mut self, x: Var, layer: &str, w: WeightRep, bias: &[f32]) -> Result<Var> {
+        let (n, in_dim) = {
+            let s = self.value(x).shape();
+            if s.len() != 2 {
+                bail!("dense {layer}: input {s:?} is not [N, in]");
+            }
+            (s[0], s[1])
+        };
+        let out_dim = bias.len();
+        let ydata = {
+            let xd = self.value(x).data();
+            let mut y = match &w {
+                WeightRep::Dense(wt) => {
+                    if wt.shape() != [in_dim, out_dim] {
+                        bail!("dense {layer}: weight {:?} vs [{in_dim}, {out_dim}]", wt.shape());
+                    }
+                    gemm::matmul(xd, wt.data(), n, in_dim, out_dim)
+                }
+                WeightRep::Planes(bpm) => {
+                    let yt = bpm.matmul_t(&gemm::transpose(xd, n, in_dim), n);
+                    gemm::transpose(&yt, out_dim, n)
+                }
+            };
+            for row in y.chunks_mut(out_dim) {
+                for (v, &b) in row.iter_mut().zip(bias) {
+                    *v += b;
+                }
+            }
+            y
+        };
+        let out = Tensor::new(vec![n, out_dim], ydata)?;
+        Ok(self.push(Op::Dense { x, layer: layer.to_string(), w, in_dim, out_dim }, out))
+    }
+
+    /// Normalize with the supplied statistics. `batch_stats` says the
+    /// mean/var were computed from this very `x` (train mode) so backward
+    /// must differentiate through them; false treats them as constants
+    /// (eval / HVP running statistics).
+    pub fn bn(
+        &mut self,
+        x: Var,
+        name: &str,
+        gamma: &[f32],
+        beta: &[f32],
+        mean: &[f32],
+        var: &[f32],
+        batch_stats: bool,
+    ) -> Result<Var> {
+        let (shape, ydata) = {
+            let xt = self.value(x);
+            let c = *xt.shape().last().ok_or_else(|| anyhow!("bn {name}: scalar input"))?;
+            if [gamma.len(), beta.len(), mean.len(), var.len()] != [c, c, c, c] {
+                bail!("bn {name}: channel mismatch ({c} channels)");
+            }
+            let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+            let ydata: Vec<f32> = xt
+                .data()
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| {
+                    let ch = i % c;
+                    (v - mean[ch]) * inv[ch] * gamma[ch] + beta[ch]
+                })
+                .collect();
+            (xt.shape().to_vec(), ydata)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(
+            Op::Bn {
+                x,
+                name: name.to_string(),
+                gamma: gamma.to_vec(),
+                mean: mean.to_vec(),
+                var: var.to_vec(),
+                batch_stats,
+            },
+            out,
+        ))
+    }
+
+    /// Fake-quantized clipped activation (`kernels/actquant.py`):
+    /// `levels ≥ 1` quantizes `clip(x, 0, bound)` onto `levels` uniform
+    /// steps, `levels < 1` keeps the bare clip. `pact` names the trainable
+    /// clip parameter receiving the above-bound gradient mass (None → the
+    /// bound is the fixed ReLU6 constant).
+    pub fn act_quant(
+        &mut self,
+        x: Var,
+        bound: f32,
+        levels: f32,
+        pact: Option<String>,
+    ) -> Result<Var> {
+        let (shape, ydata) = {
+            let xt = self.value(x);
+            let ydata: Vec<f32> = if levels >= 1.0 {
+                xt.data()
+                    .iter()
+                    .map(|&v| {
+                        let xc = v.clamp(0.0, bound);
+                        (xc / bound * levels).round() / levels * bound
+                    })
+                    .collect()
+            } else {
+                xt.data().iter().map(|&v| v.clamp(0.0, bound)).collect()
+            };
+            (xt.shape().to_vec(), ydata)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(Op::ActQuant { x, bound, levels, pact }, out))
+    }
+
+    pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
+        let (shape, ydata) = {
+            let (ta, tb) = (self.value(a), self.value(b));
+            if ta.shape() != tb.shape() {
+                bail!("add: {:?} vs {:?}", ta.shape(), tb.shape());
+            }
+            let ydata: Vec<f32> = ta.data().iter().zip(tb.data()).map(|(&x, &y)| x + y).collect();
+            (ta.shape().to_vec(), ydata)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(Op::Add { a, b }, out))
+    }
+
+    /// `[N,H,W,C] → [N,C]`: mean over the spatial axes.
+    pub fn global_avg_pool(&mut self, x: Var) -> Result<Var> {
+        let (n, c, ydata) = {
+            let xt = self.value(x);
+            let s = xt.shape();
+            if s.len() != 4 {
+                bail!("global_avg_pool: input {s:?} is not NHWC");
+            }
+            let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+            let mut y = vec![0.0f32; n * c];
+            for ni in 0..n {
+                for p in 0..h * w {
+                    let src = &xt.data()[(ni * h * w + p) * c..][..c];
+                    let dst = &mut y[ni * c..(ni + 1) * c];
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d += v;
+                    }
+                }
+            }
+            let inv = 1.0 / (h * w) as f32;
+            for v in &mut y {
+                *v *= inv;
+            }
+            (n, c, y)
+        };
+        let out = Tensor::new(vec![n, c], ydata)?;
+        Ok(self.push(Op::GlobalAvgPool { x }, out))
+    }
+
+    /// `x[:, ::s, ::s, :]` — strided spatial subsample.
+    pub fn subsample(&mut self, x: Var, stride: usize) -> Result<Var> {
+        let (shape, ydata) = {
+            let xt = self.value(x);
+            let s = xt.shape();
+            if s.len() != 4 {
+                bail!("subsample: input {s:?} is not NHWC");
+            }
+            let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+            let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+            let mut y = vec![0.0f32; n * oh * ow * c];
+            for ni in 0..n {
+                for oy in 0..oh {
+                    for ox in 0..ow {
+                        let src = &xt.data()[((ni * h + oy * stride) * w + ox * stride) * c..][..c];
+                        y[((ni * oh + oy) * ow + ox) * c..][..c].copy_from_slice(src);
+                    }
+                }
+            }
+            (vec![n, oh, ow, c], y)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(Op::Subsample { x, stride }, out))
+    }
+
+    /// Zero-pad the channel axis up to `cout` (ResNet option-A shortcut).
+    pub fn pad_channels(&mut self, x: Var, cout: usize) -> Result<Var> {
+        let (shape, cin, ydata) = {
+            let xt = self.value(x);
+            let s = xt.shape();
+            let cin = *s.last().ok_or_else(|| anyhow!("pad_channels: scalar input"))?;
+            if cout < cin {
+                bail!("pad_channels: {cout} < {cin}");
+            }
+            let pix = xt.len() / cin;
+            let mut y = vec![0.0f32; pix * cout];
+            for p in 0..pix {
+                y[p * cout..p * cout + cin].copy_from_slice(&xt.data()[p * cin..(p + 1) * cin]);
+            }
+            let mut shape = s.to_vec();
+            *shape.last_mut().unwrap() = cout;
+            (shape, cin, y)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(Op::PadChannels { x, cin }, out))
+    }
+
+    /// Concatenate NHWC tensors along the channel axis.
+    pub fn concat(&mut self, vars: &[Var]) -> Result<Var> {
+        let (shape, parts, ydata) = {
+            let base = self.value(vars[0]).shape().to_vec();
+            if base.len() != 4 {
+                bail!("concat: input {base:?} is not NHWC");
+            }
+            let mut parts = Vec::with_capacity(vars.len());
+            let mut ctotal = 0usize;
+            for &v in vars {
+                let s = self.value(v).shape();
+                if s[..3] != base[..3] {
+                    bail!("concat: {s:?} vs {base:?}");
+                }
+                parts.push((v, s[3]));
+                ctotal += s[3];
+            }
+            let pix = base[0] * base[1] * base[2];
+            let mut y = vec![0.0f32; pix * ctotal];
+            let mut off = 0usize;
+            for &(v, c) in &parts {
+                let src = self.value(v).data();
+                for p in 0..pix {
+                    y[p * ctotal + off..p * ctotal + off + c]
+                        .copy_from_slice(&src[p * c..(p + 1) * c]);
+                }
+                off += c;
+            }
+            let mut shape = base;
+            shape[3] = ctotal;
+            (shape, parts, y)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(Op::Concat { parts }, out))
+    }
+
+    /// 3×3 stride-1 average pool with edge ("SAME", clamp-index) padding —
+    /// the Inception pool branch.
+    pub fn avg_pool3x3_edge(&mut self, x: Var) -> Result<Var> {
+        let (shape, ydata) = {
+            let xt = self.value(x);
+            let s = xt.shape();
+            if s.len() != 4 {
+                bail!("avg_pool3x3: input {s:?} is not NHWC");
+            }
+            let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+            let mut y = vec![0.0f32; xt.len()];
+            for ni in 0..n {
+                for oy in 0..h {
+                    for ox in 0..w {
+                        let dst = &mut y[((ni * h + oy) * w + ox) * c..][..c];
+                        for dy in 0..3 {
+                            let iy = (oy + dy).saturating_sub(1).min(h - 1);
+                            for dx in 0..3 {
+                                let ix = (ox + dx).saturating_sub(1).min(w - 1);
+                                let src = &xt.data()[((ni * h + iy) * w + ix) * c..][..c];
+                                for (d, &v) in dst.iter_mut().zip(src) {
+                                    *d += v;
+                                }
+                            }
+                        }
+                        for v in dst.iter_mut() {
+                            *v /= 9.0;
+                        }
+                    }
+                }
+            }
+            (s.to_vec(), ydata)
+        };
+        let out = Tensor::new(shape, ydata)?;
+        Ok(self.push(Op::AvgPool3x3Edge { x }, out))
+    }
+}
+
+/// Biased per-channel batch statistics over `[N, H, W, C]` (the axes JAX's
+/// `jnp.mean/var(axis=(0,1,2))` reduces).
+pub fn batch_stats(x: &Tensor) -> (Vec<f32>, Vec<f32>) {
+    let c = *x.shape().last().unwrap_or(&1);
+    let rows = x.len() / c.max(1);
+    let mut mean = vec![0.0f64; c];
+    for row in x.data().chunks(c) {
+        for (m, &v) in mean.iter_mut().zip(row) {
+            *m += v as f64;
+        }
+    }
+    for m in &mut mean {
+        *m /= rows as f64;
+    }
+    let mut var = vec![0.0f64; c];
+    for row in x.data().chunks(c) {
+        for ((vv, &v), &m) in var.iter_mut().zip(row).zip(&mean) {
+            let d = v as f64 - m;
+            *vv += d * d;
+        }
+    }
+    for v in &mut var {
+        *v /= rows as f64;
+    }
+    (mean.iter().map(|&m| m as f32).collect(), var.iter().map(|&v| v as f32).collect())
+}
+
+/// Gradients produced by one backward pass.
+#[derive(Default)]
+pub struct Grads {
+    vars: Vec<Option<Tensor>>,
+    /// Parameter-space cotangents: `weff:<layer>` (effective conv/dense
+    /// weight), `w:<layer>/b`, `bn:<n>/gamma|beta`, `pact:<site>`.
+    pub keys: BTreeMap<String, Tensor>,
+}
+
+impl Grads {
+    fn accumulate(&mut self, v: Var, g: Tensor) {
+        match self.vars[v.0].as_mut() {
+            Some(t) => {
+                for (a, &b) in t.data_mut().iter_mut().zip(g.data()) {
+                    *a += b;
+                }
+            }
+            None => self.vars[v.0] = Some(g),
+        }
+    }
+
+    fn add_key(&mut self, key: String, shape: &[usize], data: Vec<f32>) {
+        match self.keys.get_mut(&key) {
+            Some(t) => {
+                for (a, b) in t.data_mut().iter_mut().zip(data) {
+                    *a += b;
+                }
+            }
+            None => {
+                self.keys.insert(key, Tensor::new(shape.to_vec(), data).unwrap());
+            }
+        }
+    }
+}
+
+/// Reverse pass from `root` seeded with `seed = dL/d(root)`.
+pub fn backward(tape: &Tape, root: Var, seed: Tensor) -> Result<Grads> {
+    let mut g = Grads { vars: vec![None; tape.nodes.len()], keys: BTreeMap::new() };
+    if seed.shape() != tape.value(root).shape() {
+        bail!("backward: seed {:?} vs root {:?}", seed.shape(), tape.value(root).shape());
+    }
+    g.vars[root.0] = Some(seed);
+    for idx in (0..=root.0).rev() {
+        let dy = match g.vars[idx].take() {
+            Some(t) => t,
+            None => continue,
+        };
+        match &tape.nodes[idx].op {
+            Op::Input => {}
+            Op::Conv { x, layer, w, geom } => {
+                let wt = match w {
+                    WeightRep::Dense(t) => t,
+                    WeightRep::Planes(_) => {
+                        bail!("conv {layer}: bit-plane weights are inference-only (no backward)")
+                    }
+                };
+                let (rows, k, cout) = (geom.rows(), geom.kdim(), geom.cout);
+                let patches = gemm::im2col(tape.value(*x).data(), geom);
+                let dw = gemm::matmul_tn(&patches, dy.data(), rows, k, cout);
+                g.add_key(format!("weff:{layer}"), wt.shape(), dw);
+                let dpatches = gemm::matmul_nt(dy.data(), wt.data(), rows, cout, k);
+                let mut dx = vec![0.0f32; tape.value(*x).len()];
+                gemm::col2im_add(&dpatches, geom, &mut dx);
+                g.accumulate(*x, Tensor::new(tape.value(*x).shape().to_vec(), dx)?);
+            }
+            Op::Dense { x, layer, w, in_dim, out_dim } => {
+                let wt = match w {
+                    WeightRep::Dense(t) => t,
+                    WeightRep::Planes(_) => {
+                        bail!("dense {layer}: bit-plane weights are inference-only (no backward)")
+                    }
+                };
+                let n = tape.value(*x).shape()[0];
+                let dw = gemm::matmul_tn(tape.value(*x).data(), dy.data(), n, *in_dim, *out_dim);
+                g.add_key(format!("weff:{layer}"), &[*in_dim, *out_dim], dw);
+                let mut db = vec![0.0f32; *out_dim];
+                for row in dy.data().chunks(*out_dim) {
+                    for (d, &v) in db.iter_mut().zip(row) {
+                        *d += v;
+                    }
+                }
+                g.add_key(format!("w:{layer}/b"), &[*out_dim], db);
+                let dx = gemm::matmul_nt(dy.data(), wt.data(), n, *out_dim, *in_dim);
+                g.accumulate(*x, Tensor::new(vec![n, *in_dim], dx)?);
+            }
+            Op::Bn { x, name, gamma, mean, var, batch_stats } => {
+                let xt = tape.value(*x);
+                let c = gamma.len();
+                let rows = xt.len() / c;
+                let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+                // channel reductions: Σdy, Σdy·x̂ (also the affine grads)
+                let mut dbeta = vec![0.0f64; c];
+                let mut dgamma = vec![0.0f64; c];
+                for (row, dyr) in xt.data().chunks(c).zip(dy.data().chunks(c)) {
+                    for ch in 0..c {
+                        let xhat = (row[ch] - mean[ch]) * inv[ch];
+                        dbeta[ch] += dyr[ch] as f64;
+                        dgamma[ch] += (dyr[ch] * xhat) as f64;
+                    }
+                }
+                g.add_key(
+                    format!("bn:{name}/gamma"),
+                    &[c],
+                    dgamma.iter().map(|&v| v as f32).collect(),
+                );
+                g.add_key(
+                    format!("bn:{name}/beta"),
+                    &[c],
+                    dbeta.iter().map(|&v| v as f32).collect(),
+                );
+                let mut dx = vec![0.0f32; xt.len()];
+                if *batch_stats {
+                    let rinv = 1.0 / rows as f32;
+                    for (i, (row, dyr)) in
+                        xt.data().chunks(c).zip(dy.data().chunks(c)).enumerate()
+                    {
+                        for ch in 0..c {
+                            let xhat = (row[ch] - mean[ch]) * inv[ch];
+                            let dxhat = dyr[ch] * gamma[ch];
+                            dx[i * c + ch] = inv[ch]
+                                * (dxhat
+                                    - rinv * (dbeta[ch] as f32) * gamma[ch]
+                                    - rinv * xhat * (dgamma[ch] as f32) * gamma[ch]);
+                        }
+                    }
+                } else {
+                    for (i, dyr) in dy.data().chunks(c).enumerate() {
+                        for ch in 0..c {
+                            dx[i * c + ch] = dyr[ch] * gamma[ch] * inv[ch];
+                        }
+                    }
+                }
+                g.accumulate(*x, Tensor::new(xt.shape().to_vec(), dx)?);
+            }
+            Op::ActQuant { x, bound, levels: _, pact } => {
+                let xt = tape.value(*x);
+                let mut dx = vec![0.0f32; xt.len()];
+                let mut dbound = 0.0f64;
+                for ((d, &v), &gy) in dx.iter_mut().zip(xt.data()).zip(dy.data()) {
+                    if v > 0.0 && v < *bound {
+                        *d = gy;
+                    } else if v >= *bound {
+                        dbound += gy as f64;
+                    }
+                }
+                if let Some(site) = pact {
+                    g.add_key(format!("pact:{site}"), &[], vec![dbound as f32]);
+                }
+                g.accumulate(*x, Tensor::new(xt.shape().to_vec(), dx)?);
+            }
+            Op::Add { a, b } => {
+                g.accumulate(*a, dy.clone());
+                g.accumulate(*b, dy);
+            }
+            Op::GlobalAvgPool { x } => {
+                let xt = tape.value(*x);
+                let s = xt.shape();
+                let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+                let inv = 1.0 / (h * w) as f32;
+                let mut dx = vec![0.0f32; xt.len()];
+                for ni in 0..n {
+                    let dyr = &dy.data()[ni * c..(ni + 1) * c];
+                    for p in 0..h * w {
+                        let dst = &mut dx[(ni * h * w + p) * c..][..c];
+                        for (d, &v) in dst.iter_mut().zip(dyr) {
+                            *d = v * inv;
+                        }
+                    }
+                }
+                g.accumulate(*x, Tensor::new(s.to_vec(), dx)?);
+            }
+            Op::Subsample { x, stride } => {
+                let xt = tape.value(*x);
+                let s = xt.shape();
+                let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+                let (oh, ow) = (h.div_ceil(*stride), w.div_ceil(*stride));
+                let mut dx = vec![0.0f32; xt.len()];
+                for ni in 0..n {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let src = &dy.data()[((ni * oh + oy) * ow + ox) * c..][..c];
+                            dx[((ni * h + oy * stride) * w + ox * stride) * c..][..c]
+                                .copy_from_slice(src);
+                        }
+                    }
+                }
+                g.accumulate(*x, Tensor::new(s.to_vec(), dx)?);
+            }
+            Op::PadChannels { x, cin } => {
+                let xt = tape.value(*x);
+                let cout = *tape.nodes[idx].out.shape().last().unwrap();
+                let pix = xt.len() / cin;
+                let mut dx = vec![0.0f32; xt.len()];
+                for p in 0..pix {
+                    dx[p * cin..(p + 1) * cin]
+                        .copy_from_slice(&dy.data()[p * cout..p * cout + cin]);
+                }
+                g.accumulate(*x, Tensor::new(xt.shape().to_vec(), dx)?);
+            }
+            Op::Concat { parts } => {
+                let ctotal: usize = parts.iter().map(|&(_, c)| c).sum();
+                let pix = dy.len() / ctotal;
+                let mut off = 0usize;
+                for &(v, c) in parts {
+                    let xt = tape.value(v);
+                    let mut dx = vec![0.0f32; xt.len()];
+                    for p in 0..pix {
+                        dx[p * c..(p + 1) * c]
+                            .copy_from_slice(&dy.data()[p * ctotal + off..p * ctotal + off + c]);
+                    }
+                    g.accumulate(v, Tensor::new(xt.shape().to_vec(), dx)?);
+                    off += c;
+                }
+            }
+            Op::AvgPool3x3Edge { x } => {
+                let xt = tape.value(*x);
+                let s = xt.shape();
+                let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
+                let mut dx = vec![0.0f32; xt.len()];
+                for ni in 0..n {
+                    for oy in 0..h {
+                        for ox in 0..w {
+                            let src = &dy.data()[((ni * h + oy) * w + ox) * c..][..c];
+                            for ddy in 0..3 {
+                                let iy = (oy + ddy).saturating_sub(1).min(h - 1);
+                                for ddx in 0..3 {
+                                    let ix = (ox + ddx).saturating_sub(1).min(w - 1);
+                                    let dst = &mut dx[((ni * h + iy) * w + ix) * c..][..c];
+                                    for (d, &v) in dst.iter_mut().zip(src) {
+                                        *d += v / 9.0;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                g.accumulate(*x, Tensor::new(s.to_vec(), dx)?);
+            }
+        }
+    }
+    Ok(g)
+}

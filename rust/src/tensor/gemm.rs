@@ -1,0 +1,573 @@
+//! High-performance host kernels: blocked parallel f32 GEMM, im2col
+//! convolution lowering, and the bit-plane GEMM that makes inference cost
+//! scale with the bit sparsity BSQ induces (DESIGN.md §8).
+//!
+//! Two matmul families back `runtime::native`:
+//!
+//! * **Dense f32** — [`matmul`] and the transposed variants: cache-blocked
+//!   (KC×NC tiles so one B panel stays in L1/L2 across a row sweep) and
+//!   parallel over output-row chunks via `std::thread::scope`. This is the
+//!   training path and the baseline every speedup is measured against.
+//! * **Bit-plane** — [`BitPlaneMatrix::matmul_t`] consumes the sign-split
+//!   u64 plane bitsets of `quant::packed` directly and evaluates
+//!   `x·W = δ · Σ_b 2^b (x·P_b⁺ − x·P_b⁻)` by walking set bits with
+//!   trailing-zeros/clear-lowest loops. Work is exactly proportional to the
+//!   number of set weight bits: planes trimmed by §3.3 re-quantization (or
+//!   emptied by the regularizer) are skipped with a single popcount check,
+//!   so throughput grows as BSQ sparsifies the model.
+//!
+//! Layout conventions (all row-major): `matmul(a, b) = A[M,K]·B[K,N]`;
+//! activations NHWC; conv kernels HWIO, whose flattening `[kh·kw·cin, cout]`
+//! matches the im2col patch column order bit for bit.
+
+use crate::quant::packed::PackedCodes;
+
+// -- dense blocked GEMM ------------------------------------------------------
+
+/// K-tile: one `A` row segment + the matching `B` panel rows stay cache-hot.
+const KC: usize = 128;
+/// N-tile: the `B` panel width swept per K-tile (f32s; 4 KiB rows).
+const NC: usize = 1024;
+/// Below this many multiply-adds a single thread wins (spawn overhead).
+const PAR_THRESHOLD: usize = 1 << 21;
+
+fn worker_count(work: usize) -> usize {
+    if work < PAR_THRESHOLD {
+        return 1;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
+}
+
+/// C[M,N] = A[M,K] · B[K,N] (freshly allocated).
+pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// C[M,N] += A[M,K] · B[K,N], parallel over row chunks of C.
+pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A is not M×K");
+    assert_eq!(b.len(), k * n, "B is not K×N");
+    assert_eq!(c.len(), m * n, "C is not M×N");
+    if m == 0 || n == 0 {
+        return;
+    }
+    let workers = worker_count(m * k * n).min(m);
+    if workers <= 1 {
+        return gemm_block(c, a, b, m, k, n);
+    }
+    let rows_per = m.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (ci, cchunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let rows = cchunk.len() / n;
+            let achunk = &a[ci * rows_per * k..ci * rows_per * k + rows * k];
+            s.spawn(move || gemm_block(cchunk, achunk, b, rows, k, n));
+        }
+    });
+}
+
+/// Serial cache-blocked kernel: KC×NC panels, vectorizable inner j loop.
+fn gemm_block(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for nb in (0..n).step_by(NC) {
+            let nend = (nb + NC).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + nb..i * n + nend];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue; // dead rows/cols cost nothing
+                    }
+                    let brow = &b[kk * n + nb..kk * n + nend];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Out-of-place transpose: `src` is `[rows, cols]`, result is `[cols, rows]`.
+pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+    assert_eq!(src.len(), rows * cols);
+    let mut dst = vec![0.0f32; src.len()];
+    // tile to keep both access streams within a few cache lines
+    const T: usize = 32;
+    for rb in (0..rows).step_by(T) {
+        for cb in (0..cols).step_by(T) {
+            for r in rb..(rb + T).min(rows) {
+                for c in cb..(cb + T).min(cols) {
+                    dst[c * rows + r] = src[r * cols + c];
+                }
+            }
+        }
+    }
+    dst
+}
+
+/// C[M,N] = Aᵀ·B for A stored `[K, M]` (e.g. dW = patchesᵀ·dY).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    matmul(&transpose(a, k, m), b, m, k, n)
+}
+
+/// C[M,N] = A·Bᵀ for B stored `[N, K]` (e.g. dX = dY·Wᵀ).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    matmul(a, &transpose(b, n, k), m, k, n)
+}
+
+// -- im2col convolution lowering ---------------------------------------------
+
+/// Geometry of one SAME-padded strided convolution (XLA semantics:
+/// `out = ceil(in/stride)`, total padding `max((out−1)·stride + k − in, 0)`
+/// split low-side-floor).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvGeom {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub cin: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub cout: usize,
+    pub stride: usize,
+    pub oh: usize,
+    pub ow: usize,
+    pub pad_top: usize,
+    pub pad_left: usize,
+}
+
+impl ConvGeom {
+    pub fn same(
+        n: usize,
+        h: usize,
+        w: usize,
+        cin: usize,
+        kh: usize,
+        kw: usize,
+        cout: usize,
+        stride: usize,
+    ) -> ConvGeom {
+        let oh = h.div_ceil(stride);
+        let ow = w.div_ceil(stride);
+        let pad_h = ((oh - 1) * stride + kh).saturating_sub(h);
+        let pad_w = ((ow - 1) * stride + kw).saturating_sub(w);
+        ConvGeom {
+            n,
+            h,
+            w,
+            cin,
+            kh,
+            kw,
+            cout,
+            stride,
+            oh,
+            ow,
+            pad_top: pad_h / 2,
+            pad_left: pad_w / 2,
+        }
+    }
+
+    /// Patch rows R = N·OH·OW.
+    pub fn rows(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    /// Patch width K = kh·kw·cin (the HWIO flattening order).
+    pub fn kdim(&self) -> usize {
+        self.kh * self.kw * self.cin
+    }
+}
+
+/// Extract SAME-padded patches: `x` is NHWC, result is `[R, K]` with the
+/// column order matching a flattened HWIO kernel. Out-of-image taps stay 0.
+pub fn im2col(x: &[f32], g: &ConvGeom) -> Vec<f32> {
+    assert_eq!(x.len(), g.n * g.h * g.w * g.cin);
+    let kdim = g.kdim();
+    let mut out = vec![0.0f32; g.rows() * kdim];
+    for ni in 0..g.n {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let row = &mut out[((ni * g.oh + oy) * g.ow + ox) * kdim..][..kdim];
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad_top as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad_left as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let src =
+                            &x[((ni * g.h + iy as usize) * g.w + ix as usize) * g.cin..][..g.cin];
+                        row[(ky * g.kw + kx) * g.cin..][..g.cin].copy_from_slice(src);
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of [`im2col`]: scatter-add patch cotangents back onto the input
+/// image buffer (`dx` must be zero-initialized NHWC of the input shape).
+pub fn col2im_add(patches: &[f32], g: &ConvGeom, dx: &mut [f32]) {
+    assert_eq!(dx.len(), g.n * g.h * g.w * g.cin);
+    let kdim = g.kdim();
+    assert_eq!(patches.len(), g.rows() * kdim);
+    for ni in 0..g.n {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                let row = &patches[((ni * g.oh + oy) * g.ow + ox) * kdim..][..kdim];
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad_top as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad_left as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        let dst = &mut dx
+                            [((ni * g.h + iy as usize) * g.w + ix as usize) * g.cin..][..g.cin];
+                        let src = &row[(ky * g.kw + kx) * g.cin..][..g.cin];
+                        for (d, &s) in dst.iter_mut().zip(src) {
+                            *d += s;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// -- bit-plane GEMM ----------------------------------------------------------
+
+/// A quantized weight matrix held as sign-split per-plane bitsets, laid out
+/// for GEMM: for each plane `b` and output column `j`, one row of
+/// `words = ceil(K/64)` u64s whose bit `k` says weight `(k, j)` has bit `b`
+/// of its magnitude set (in `pos` for positive codes, `neg` for negative).
+///
+/// Constructed from the `quant::packed` integer codes; planes at or above
+/// `bits` (trimmed by §3.3 re-quantization) are never materialized, and
+/// empty surviving planes are skipped per multiply via `plane_pop`.
+#[derive(Debug, Clone)]
+pub struct BitPlaneMatrix {
+    k: usize,
+    n: usize,
+    words: usize,
+    bits: usize,
+    delta: f32,
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+    plane_pop: Vec<u64>,
+}
+
+impl BitPlaneMatrix {
+    /// Build from raw signed codes stored row-major `[K, N]` (the HWIO /
+    /// `[in, out]` flattening). `bits` caps the materialized planes; `delta`
+    /// is the LSB step δ = s/(2^bits − 1).
+    pub fn from_codes(codes: &[i16], k: usize, n: usize, bits: usize, delta: f32) -> Self {
+        assert_eq!(codes.len(), k * n, "codes are not K×N");
+        let words = k.div_ceil(64).max(1);
+        let bits = bits.min(16);
+        let mut pos = vec![0u64; bits * n * words];
+        let mut neg = vec![0u64; bits * n * words];
+        for (e, &c) in codes.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let kk = e / n;
+            let j = e % n;
+            let (planes, mut mag) =
+                if c > 0 { (&mut pos, c as u64) } else { (&mut neg, (c as i64).unsigned_abs()) };
+            let word = kk >> 6;
+            let bit = 1u64 << (kk & 63);
+            while mag != 0 {
+                let b = mag.trailing_zeros() as usize;
+                if b >= bits {
+                    break; // only higher bits remain
+                }
+                planes[(b * n + j) * words + word] |= bit;
+                mag &= mag - 1;
+            }
+        }
+        let plane_pop = (0..bits)
+            .map(|b| {
+                let span = b * n * words..(b + 1) * n * words;
+                let ones = |w: &u64| w.count_ones() as u64;
+                pos[span.clone()].iter().map(ones).sum::<u64>()
+                    + neg[span].iter().map(ones).sum::<u64>()
+            })
+            .collect();
+        BitPlaneMatrix { k, n, words, bits, delta, pos, neg, plane_pop }
+    }
+
+    /// Build from a packed layer: the trailing weight-shape axis is the
+    /// output dimension (cout for HWIO convs, out for `[in, out]` dense).
+    ///
+    /// Mid-training codes can run one bit wider than the layer's nominal
+    /// precision (the §3.3 n+1 growth: continuous planes reach 2.0), so the
+    /// materialized plane count covers the widest code actually present —
+    /// the product always equals `p.dequantize()`, never a truncation.
+    pub fn from_packed(p: &PackedCodes) -> Self {
+        let n = p.wshape.last().copied().unwrap_or(1).max(1);
+        let k = p.elems() / n;
+        let widest = p
+            .codes
+            .iter()
+            .map(|c| 16 - c.unsigned_abs().leading_zeros() as usize)
+            .max()
+            .unwrap_or(0);
+        Self::from_codes(&p.codes, k, n, p.bits.max(widest), p.delta() as f32)
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Active (materialized) plane count.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Total set weight bits — the exact work the multiply performs.
+    pub fn nnz_bits(&self) -> u64 {
+        self.plane_pop.iter().sum()
+    }
+
+    /// Planes that actually hold bits (empty ones are skipped wholesale).
+    pub fn occupied_planes(&self) -> usize {
+        self.plane_pop.iter().filter(|&&p| p != 0).count()
+    }
+
+    /// `C = Xᵀ·W·δ` over the bitsets: `xt` is X *transposed*, `[K, M]`
+    /// row-major (column `k` of X contiguous over the M batch rows), the
+    /// result is `[N, M]` (output-major; [`transpose`] restores `[M, N]`).
+    ///
+    /// Cost ∝ M × set bits: each set bit triggers one length-M fused
+    /// scale-add of a contiguous activation column, planes with zero
+    /// popcount cost one branch.
+    pub fn matmul_t(&self, xt: &[f32], m: usize) -> Vec<f32> {
+        assert_eq!(xt.len(), self.k * m, "Xᵀ is not K×M");
+        let mut out = vec![0.0f32; self.n * m];
+        if m == 0 || self.nnz_bits() == 0 {
+            return out;
+        }
+        let work = self.nnz_bits() as usize * m;
+        let workers = worker_count(work).min(self.n.max(1));
+        if workers <= 1 {
+            self.columns_into(&mut out, xt, m, 0);
+            return out;
+        }
+        let cols_per = self.n.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (ci, chunk) in out.chunks_mut(cols_per * m).enumerate() {
+                s.spawn(move || self.columns_into(chunk, xt, m, ci * cols_per));
+            }
+        });
+        out
+    }
+
+    /// Accumulate output columns `[j0, j0 + chunk.len()/m)` into `chunk`.
+    fn columns_into(&self, chunk: &mut [f32], xt: &[f32], m: usize, j0: usize) {
+        for (cj, col) in chunk.chunks_mut(m).enumerate() {
+            let j = j0 + cj;
+            for b in 0..self.bits {
+                if self.plane_pop[b] == 0 {
+                    continue; // trimmed or regularized-away plane: free
+                }
+                let w2 = self.delta * (1u32 << b) as f32;
+                for (planes, scale) in [(&self.pos, w2), (&self.neg, -w2)] {
+                    let row = &planes[(b * self.n + j) * self.words..][..self.words];
+                    for (wi, &word) in row.iter().enumerate() {
+                        let mut wbits = word;
+                        while wbits != 0 {
+                            let kk = (wi << 6) + wbits.trailing_zeros() as usize;
+                            wbits &= wbits - 1;
+                            let src = &xt[kk * m..][..m];
+                            for (cv, &sv) in col.iter_mut().zip(src) {
+                                *cv += scale * sv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Pcg32;
+
+    fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut c = vec![0.0f64; m * n];
+        for i in 0..m {
+            for kk in 0..k {
+                for j in 0..n {
+                    c[i * n + j] += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+            }
+        }
+        c.into_iter().map(|v| v as f32).collect()
+    }
+
+    fn close(a: &[f32], b: &[f32], tol: f32) {
+        assert_eq!(a.len(), b.len());
+        for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+            let scale = x.abs().max(y.abs()).max(1.0);
+            assert!((x - y).abs() <= tol * scale, "elem {i}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_matches_naive_over_shapes() {
+        let mut rng = Pcg32::seeded(1);
+        for &(m, k, n) in
+            &[(1, 1, 1), (3, 5, 7), (16, 63, 17), (8, 64, 9), (5, 65, 33), (130, 40, 12)]
+        {
+            let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+            close(&matmul(&a, &b, m, k, n), &naive(&a, &b, m, k, n), 1e-5);
+        }
+    }
+
+    #[test]
+    fn transposed_variants_agree() {
+        let mut rng = Pcg32::seeded(2);
+        let (m, k, n) = (9, 21, 13);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let want = naive(&a, &b, m, k, n);
+        close(&matmul_tn(&transpose(&a, m, k), &b, k, m, n), &want, 1e-5);
+        close(&matmul_nt(&a, &transpose(&b, k, n), m, k, n), &want, 1e-5);
+        // transpose is an involution
+        assert_eq!(transpose(&transpose(&a, m, k), k, m), a);
+    }
+
+    #[test]
+    fn same_geometry_matches_xla_rules() {
+        // stride 1, 3×3: pad 1/1 both sides, output = input
+        let g = ConvGeom::same(1, 16, 16, 3, 3, 3, 8, 1);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (16, 16, 1, 1));
+        // stride 2, 16→8: total pad 1, low side gets floor(1/2) = 0
+        let g = ConvGeom::same(1, 16, 16, 3, 3, 3, 8, 2);
+        assert_eq!((g.oh, g.ow, g.pad_top, g.pad_left), (8, 8, 0, 0));
+        // stride 2 on odd input 15→8: total pad = 7·2+3−15 = 2 → top 1
+        let g = ConvGeom::same(1, 15, 15, 1, 3, 3, 1, 2);
+        assert_eq!((g.oh, g.ow, g.pad_top), (8, 8, 1));
+    }
+
+    #[test]
+    fn im2col_col2im_are_adjoint() {
+        // <im2col(x), P> == <x, col2im(P)> for random P — the exact adjoint
+        // property conv backward relies on.
+        let mut rng = Pcg32::seeded(3);
+        for &stride in &[1usize, 2] {
+            let g = ConvGeom::same(2, 7, 5, 3, 3, 3, 4, stride);
+            let x: Vec<f32> = (0..g.n * g.h * g.w * g.cin).map(|_| rng.normal()).collect();
+            let p: Vec<f32> = (0..g.rows() * g.kdim()).map(|_| rng.normal()).collect();
+            let cols = im2col(&x, &g);
+            let mut dx = vec![0.0f32; x.len()];
+            col2im_add(&p, &g, &mut dx);
+            let lhs: f64 = cols.iter().zip(&p).map(|(&a, &b)| (a * b) as f64).sum();
+            let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| (a * b) as f64).sum();
+            assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+        }
+    }
+
+    fn random_codes(rng: &mut Pcg32, len: usize, bits: usize) -> Vec<i16> {
+        let cap = ((1u32 << bits) - 1) as i32;
+        (0..len)
+            .map(|_| {
+                let mag = rng.below(cap as u32 + 1) as i32;
+                if rng.bool(0.5) {
+                    mag as i16
+                } else {
+                    (-mag) as i16
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn bitplane_matmul_matches_dense() {
+        let mut rng = Pcg32::seeded(4);
+        for &(m, k, n) in &[(4, 63, 5), (3, 64, 8), (6, 65, 7), (2, 130, 3)] {
+            for bits in [1usize, 3, 8] {
+                let codes = random_codes(&mut rng, k * n, bits);
+                let delta = 0.043f32;
+                let bpm = BitPlaneMatrix::from_codes(&codes, k, n, bits, delta);
+                let dense: Vec<f32> = codes.iter().map(|&c| c as f32 * delta).collect();
+                let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+                let want = naive(&x, &dense, m, k, n);
+                let got_t = bpm.matmul_t(&transpose(&x, m, k), m);
+                close(&transpose(&got_t, n, m), &want, 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn trimmed_planes_are_skipped() {
+        let mut rng = Pcg32::seeded(5);
+        let (k, n) = (70, 6);
+        let codes = random_codes(&mut rng, k * n, 8);
+        // sign-magnitude right shift simulates a 3-plane LSB trim
+        let shifted: Vec<i16> = codes
+            .iter()
+            .map(|&c| {
+                let m = (c.unsigned_abs() >> 3) as i16;
+                if c < 0 {
+                    -m
+                } else {
+                    m
+                }
+            })
+            .collect();
+        let full = BitPlaneMatrix::from_codes(&codes, k, n, 8, 1.0);
+        let trimmed = BitPlaneMatrix::from_codes(&shifted, k, n, 5, 8.0);
+        assert!(trimmed.nnz_bits() < full.nnz_bits());
+        assert!(trimmed.occupied_planes() <= 5);
+        // value equivalence of the trim: codes>>3 at δ=8 ≈ dropping low bits
+        let x: Vec<f32> = (0..2 * k).map(|_| rng.normal()).collect();
+        let xt = transpose(&x, 2, k);
+        let yt = trimmed.matmul_t(&xt, 2);
+        let dense: Vec<f32> = shifted.iter().map(|&c| c as f32 * 8.0).collect();
+        close(&transpose(&yt, n, 2), &naive(&x, &dense, 2, k, n), 1e-4);
+    }
+
+    #[test]
+    fn empty_matrix_multiplies_to_zero() {
+        let bpm = BitPlaneMatrix::from_codes(&[0i16; 12], 4, 3, 8, 1.0);
+        assert_eq!(bpm.nnz_bits(), 0);
+        let out = bpm.matmul_t(&[1.0f32; 8], 2);
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn from_packed_uses_trailing_axis_as_output() {
+        use crate::quant::to_bitplanes;
+        use crate::tensor::Tensor;
+        let mut rng = Pcg32::seeded(6);
+        let w = Tensor::randn(&[3, 3, 2, 5], 0.4, &mut rng);
+        let packed = to_bitplanes(&w, 6).unwrap().pack();
+        let bpm = BitPlaneMatrix::from_packed(&packed);
+        assert_eq!((bpm.k(), bpm.n()), (18, 5));
+        let dense = packed.dequantize();
+        let x: Vec<f32> = (0..4 * 18).map(|_| rng.normal()).collect();
+        let want = naive(&x, dense.data(), 4, 18, 5);
+        let got = transpose(&bpm.matmul_t(&transpose(&x, 4, 18), 4), 5, 4);
+        close(&got, &want, 1e-4);
+    }
+}

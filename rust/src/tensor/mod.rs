@@ -9,6 +9,8 @@ use anyhow::{bail, Result};
 
 use crate::util::Pcg32;
 
+pub mod gemm;
+
 /// Dense row-major f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {

@@ -1,0 +1,225 @@
+//! Differential tests for `tensor::gemm`: the blocked dense kernels, the
+//! im2col convolution lowering and the bit-plane GEMM are all checked
+//! against a naive f64 reference across randomized shapes, sign patterns,
+//! word-boundary sizes and 0–8 trimmed planes.
+
+use bsq::quant::{requantize, to_bitplanes};
+use bsq::tensor::gemm::{
+    col2im_add, im2col, matmul, matmul_nt, matmul_tn, transpose, BitPlaneMatrix, ConvGeom,
+};
+use bsq::tensor::Tensor;
+use bsq::util::Pcg32;
+
+fn naive(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for kk in 0..k {
+            let aik = a[i * k + kk] as f64;
+            for j in 0..n {
+                c[i * n + j] += aik * b[kk * n + j] as f64;
+            }
+        }
+    }
+    c.into_iter().map(|v| v as f32).collect()
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+        let scale = g.abs().max(w.abs()).max(1.0);
+        assert!((g - w).abs() <= tol * scale, "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+#[test]
+fn dense_gemm_matches_naive_across_random_shapes() {
+    let mut rng = Pcg32::seeded(11);
+    for case in 0..40 {
+        let m = 1 + rng.below(40) as usize;
+        let k = 1 + rng.below(200) as usize;
+        let n = 1 + rng.below(90) as usize;
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let want = naive(&a, &b, m, k, n);
+        assert_close(&matmul(&a, &b, m, k, n), &want, 1e-4, &format!("case {case}"));
+        assert_close(
+            &matmul_tn(&transpose(&a, m, k), &b, k, m, n),
+            &want,
+            1e-4,
+            &format!("tn case {case}"),
+        );
+        assert_close(
+            &matmul_nt(&a, &transpose(&b, k, n), m, k, n),
+            &want,
+            1e-4,
+            &format!("nt case {case}"),
+        );
+    }
+}
+
+fn random_codes(rng: &mut Pcg32, len: usize, bits: usize) -> Vec<i16> {
+    let cap = (1u32 << bits) - 1;
+    (0..len)
+        .map(|_| {
+            let mag = rng.below(cap + 1) as i16;
+            if rng.bool(0.5) {
+                mag
+            } else {
+                -mag
+            }
+        })
+        .collect()
+}
+
+/// The issue's core differential claim: bit-plane GEMM ≡ naive f32 GEMM on
+/// the dequantized weights, within 1e-4, over randomized shapes, random
+/// sign patterns, word-boundary K (63/64/65) and every plane width.
+#[test]
+fn bitplane_gemm_matches_naive_reference() {
+    let mut rng = Pcg32::seeded(12);
+    let mut ks = vec![63usize, 64, 65];
+    for _ in 0..9 {
+        ks.push(1 + rng.below(190) as usize);
+    }
+    for (case, &k) in ks.iter().enumerate() {
+        let m = 1 + rng.below(9) as usize;
+        let n = 1 + rng.below(24) as usize;
+        let bits = 1 + (case % 8);
+        let codes = random_codes(&mut rng, k * n, bits);
+        let delta = rng.range(0.001, 0.3);
+        let bpm = BitPlaneMatrix::from_codes(&codes, k, n, bits, delta);
+        let dense: Vec<f32> = codes.iter().map(|&c| c as f32 * delta).collect();
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let got_t = bpm.matmul_t(&transpose(&x, m, k), m);
+        assert_close(
+            &transpose(&got_t, n, m),
+            &naive(&x, &dense, m, k, n),
+            1e-4,
+            &format!("k={k} bits={bits}"),
+        );
+    }
+}
+
+/// Sweep 0..=8 trimmed planes: values must keep matching the dense
+/// reference, and the kernel's work metric (set bits) must shrink
+/// monotonically toward zero.
+#[test]
+fn trim_sweep_keeps_exactness_and_shrinks_work() {
+    let mut rng = Pcg32::seeded(13);
+    let (m, k, n) = (6usize, 130usize, 12usize);
+    let codes = random_codes(&mut rng, k * n, 8);
+    let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+    let xt = transpose(&x, m, k);
+    // sign-magnitude LSB drop (what drop_low_planes does): |c| >> t, sign kept
+    let shr_mag = |c: i16, t: usize| -> i16 {
+        let m = (c.unsigned_abs() >> t) as i16;
+        if c < 0 {
+            -m
+        } else {
+            m
+        }
+    };
+    let mut last_nnz = u64::MAX;
+    for t in 0..=8usize {
+        let shifted: Vec<i16> = codes.iter().map(|&c| shr_mag(c, t)).collect();
+        let delta = (1u32 << t) as f32 * 0.01;
+        let bpm = BitPlaneMatrix::from_codes(&shifted, k, n, 8 - t, delta);
+        assert!(bpm.nnz_bits() <= last_nnz, "t={t}: set bits grew");
+        assert!(bpm.occupied_planes() <= 8 - t, "t={t}: too many live planes");
+        last_nnz = bpm.nnz_bits();
+        let dense: Vec<f32> = shifted.iter().map(|&c| c as f32 * delta).collect();
+        let got = transpose(&bpm.matmul_t(&xt, m), n, m);
+        assert_close(&got, &naive(&x, &dense, m, k, n), 1e-4, &format!("trim {t}"));
+    }
+    assert_eq!(last_nnz, 0, "8 trimmed planes must leave no work");
+}
+
+/// End-to-end bridge from the quant layer: a trained-then-requantized layer
+/// packed via `quant::packed` multiplies identically to its dequantized
+/// dense form.
+#[test]
+fn packed_layer_multiplies_like_its_dequantization() {
+    let mut rng = Pcg32::seeded(14);
+    for n_bits in [3usize, 6, 8] {
+        let w = Tensor::randn(&[3, 3, 7, 9], 0.4, &mut rng);
+        let mut rep = to_bitplanes(&w, n_bits).unwrap();
+        // perturb into continuous mid-training planes, then requantize
+        for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+            *v = (*v + rng.range(-0.3, 0.3)).clamp(0.0, 2.0);
+        }
+        requantize(&mut rep);
+        let packed = rep.pack();
+        let bpm = BitPlaneMatrix::from_packed(&packed);
+        let dense = packed.dequantize();
+        let (k, n) = (63usize, 9usize); // 3·3·7 = 63: word-boundary K
+        let m = 5usize;
+        let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let got = transpose(&bpm.matmul_t(&transpose(&x, m, k), m), n, m);
+        assert_close(&got, &naive(&x, dense.data(), m, k, n), 1e-4, "packed bridge");
+    }
+}
+
+fn naive_conv(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
+    let mut y = vec![0.0f64; g.rows() * g.cout];
+    for ni in 0..g.n {
+        for oy in 0..g.oh {
+            for ox in 0..g.ow {
+                for ky in 0..g.kh {
+                    let iy = (oy * g.stride + ky) as isize - g.pad_top as isize;
+                    if iy < 0 || iy >= g.h as isize {
+                        continue;
+                    }
+                    for kx in 0..g.kw {
+                        let ix = (ox * g.stride + kx) as isize - g.pad_left as isize;
+                        if ix < 0 || ix >= g.w as isize {
+                            continue;
+                        }
+                        for ci in 0..g.cin {
+                            let xv = x[((ni * g.h + iy as usize) * g.w + ix as usize) * g.cin + ci]
+                                as f64;
+                            for co in 0..g.cout {
+                                let wv = w[((ky * g.kw + kx) * g.cin + ci) * g.cout + co] as f64;
+                                y[((ni * g.oh + oy) * g.ow + ox) * g.cout + co] += xv * wv;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    y.into_iter().map(|v| v as f32).collect()
+}
+
+/// Property: im2col + GEMM is exactly a SAME-padded convolution, and
+/// col2im is its adjoint (the identity conv backward depends on).
+#[test]
+fn im2col_roundtrip_properties() {
+    let mut rng = Pcg32::seeded(15);
+    for case in 0..12 {
+        let n = 1 + rng.below(3) as usize;
+        let h = 3 + rng.below(12) as usize;
+        let w = 3 + rng.below(12) as usize;
+        let cin = 1 + rng.below(5) as usize;
+        let cout = 1 + rng.below(6) as usize;
+        let stride = 1 + (case % 2);
+        let g = ConvGeom::same(n, h, w, cin, 3, 3, cout, stride);
+        let x: Vec<f32> = (0..n * h * w * cin).map(|_| rng.normal()).collect();
+        let wmat: Vec<f32> = (0..g.kdim() * cout).map(|_| rng.normal()).collect();
+
+        // conv equivalence
+        let patches = im2col(&x, &g);
+        let got = matmul(&patches, &wmat, g.rows(), g.kdim(), cout);
+        assert_close(&got, &naive_conv(&x, &wmat, &g), 1e-4, &format!("conv case {case}"));
+
+        // adjoint: <im2col(x), P> == <x, col2im(P)>
+        let p: Vec<f32> = (0..g.rows() * g.kdim()).map(|_| rng.normal()).collect();
+        let mut dx = vec![0.0f32; x.len()];
+        col2im_add(&p, &g, &mut dx);
+        let lhs: f64 = patches.iter().zip(&p).map(|(&a, &b)| (a * b) as f64).sum();
+        let rhs: f64 = x.iter().zip(&dx).map(|(&a, &b)| (a * b) as f64).sum();
+        assert!(
+            (lhs - rhs).abs() <= 1e-3 * lhs.abs().max(1.0),
+            "adjoint case {case}: {lhs} vs {rhs}"
+        );
+    }
+}

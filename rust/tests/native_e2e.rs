@@ -1,0 +1,205 @@
+//! Integration: the full pipeline through `runtime::native` — no AOT
+//! artifacts, no PJRT, no Python. These are the native counterparts of
+//! `runtime_e2e.rs` / `pipeline_e2e.rs` (which stay gated on disk
+//! artifacts for the real-XLA path).
+
+use bsq::baselines::{self, HawqConfig, QatConfig};
+use bsq::coordinator::{run_bsq, BsqConfig, Session};
+use bsq::data::{Corpus, CorpusSpec, Loader};
+use bsq::model::{momentum_slots, ModelState};
+use bsq::quant::{reg_weights, QuantScheme, Reweigh};
+use bsq::runtime::{Engine, RunInputs};
+
+fn tiny_cfg() -> BsqConfig {
+    let mut cfg = BsqConfig::for_model("tinynet");
+    cfg.pretrain_epochs = 2;
+    cfg.bsq_epochs = 3;
+    cfg.finetune_epochs = 1;
+    cfg.requant_interval = 1;
+    cfg.train_size = 128;
+    cfg.test_size = 64;
+    cfg.eval_batches = 2;
+    cfg.alpha = 1e-4; // tinynet scale (≈50× below the resnet20 α axis)
+    cfg.cache_pretrained = false;
+    cfg
+}
+
+#[test]
+fn fp_train_step_decreases_loss() {
+    let engine = Engine::cpu().unwrap();
+    assert!(engine.is_native(), "offline build must come up on the native backend");
+    let man = engine.manifest("tinynet").unwrap();
+    let exe = engine.load(man.artifact("fp_train_relu6").unwrap()).unwrap();
+
+    let mut state = ModelState::init_fp(&man, 0);
+    state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+    state.check_against(&exe.spec.inputs).unwrap();
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(man.batch * 4, 64));
+    let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 1);
+    let inputs = RunInputs::default()
+        .hyper("lr", 0.05)
+        .hyper("wd", 1e-4)
+        .vec("actlv", vec![0.0; man.act_sites.len()]);
+
+    let mut losses = vec![];
+    for _ in 0..8 {
+        let batch = loader.next_batch();
+        let out = exe.run(&mut state, Some(&batch), &inputs).unwrap();
+        losses.push(out.metric("loss").unwrap());
+    }
+    assert!(losses.iter().all(|l| l.is_finite()), "{losses:?}");
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "loss did not decrease: {losses:?}"
+    );
+}
+
+#[test]
+fn bsq_train_shrinks_plane_norms_and_evals() {
+    let engine = Engine::native();
+    let man = engine.manifest("tinynet").unwrap();
+    let train = engine.load(man.artifact("bsq_train_relu6").unwrap()).unwrap();
+    let eval = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+
+    let mut state = ModelState::init_fp(&man, 7);
+    state.to_bit_representation(&man, 8).unwrap();
+    state.ensure_momenta(&momentum_slots(&train.spec.inputs));
+    state.check_against(&train.spec.inputs).unwrap();
+
+    let scheme = {
+        let bits = state.bits_by_layer(&man).unwrap();
+        QuantScheme::new(
+            man.qlayers
+                .iter()
+                .zip(bits)
+                .map(|(q, b)| bsq::quant::LayerPrec {
+                    name: q.name.clone(),
+                    params: q.params,
+                    bits: b,
+                })
+                .collect(),
+        )
+    };
+    assert_eq!(scheme.bits_per_param(), 8.0);
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(man.batch * 4, man.batch * 2));
+    let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 2);
+    let regw = reg_weights(&scheme, Reweigh::MemoryAware);
+    let actlv = vec![15.0; man.act_sites.len()];
+    let inputs = RunInputs::default()
+        .hyper("lr", 0.05)
+        .hyper("wd", 1e-4)
+        .hyper("alpha", 1e-2)
+        .vec("regw", regw)
+        .vec("actlv", actlv.clone());
+
+    let mut bgl = vec![];
+    for _ in 0..6 {
+        let b = loader.next_batch();
+        let out = train.run(&mut state, Some(&b), &inputs).unwrap();
+        bgl.push(out.metric("bgl").unwrap());
+        assert!(out.metric("loss").unwrap().is_finite());
+    }
+    // regularizer pressure must shrink the plane norms
+    assert!(bgl.last().unwrap() < bgl.first().unwrap(), "{bgl:?}");
+
+    // planes stayed clamped in [0, 2]
+    for q in &man.qlayers {
+        let wp = state.get(&format!("wp:{}", q.name)).unwrap();
+        assert!(wp.data().iter().all(|&v| (0.0..=2.0).contains(&v)));
+    }
+
+    // eval runs on the same state, through the bit-plane GEMM path
+    let mut ev = Loader::eval(&corpus.test, man.batch);
+    let einputs = RunInputs::default().vec("actlv", actlv);
+    let out = eval.run(&mut state, Some(&ev.next_batch()), &einputs).unwrap();
+    let acc = out.metric("acc").unwrap();
+    assert!((0.0..=1.0).contains(&acc));
+}
+
+#[test]
+fn requantization_does_not_change_eval_loss() {
+    // Paper §3.3: sWq is unchanged by re-quantization + precision
+    // adjustment, so the (bit-plane GEMM) eval loss must agree before and
+    // after, up to the f32 scale store.
+    let engine = Engine::native();
+    let man = engine.manifest("tinynet").unwrap();
+    let eval = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+
+    let mut state = ModelState::init_fp(&man, 21);
+    state.to_bit_representation(&man, 8).unwrap();
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(64, man.batch));
+    let mut ev = Loader::eval(&corpus.test, man.batch);
+    let batch = ev.next_batch();
+    let inputs = RunInputs::default().vec("actlv", vec![15.0; man.act_sites.len()]);
+
+    let before = eval.run(&mut state, Some(&batch), &inputs).unwrap().metric("loss").unwrap();
+    for q in &man.qlayers {
+        let mut rep = state.bitrep(&q.name).unwrap();
+        bsq::quant::requantize(&mut rep);
+        state.install_bitrep(&q.name, rep);
+    }
+    let after = eval.run(&mut state, Some(&batch), &inputs).unwrap().metric("loss").unwrap();
+    assert!(
+        (before - after).abs() < 1e-3 * before.abs().max(1.0),
+        "requantization changed eval loss: {before} → {after}"
+    );
+}
+
+#[test]
+fn run_bsq_tiny_executes_end_to_end() {
+    // The acceptance path: the full pipeline (pretrain → BSQ → requant →
+    // finetune) on the tiny() synthetic profile, entirely on the native
+    // backend — no stub error anywhere.
+    let engine = Engine::cpu().unwrap();
+    let outcome = run_bsq(&engine, &tiny_cfg()).unwrap();
+
+    assert_eq!(outcome.scheme.layers.len(), 4);
+    assert!(outcome.scheme.layers.iter().all(|l| l.bits <= 9));
+    assert!(outcome.bits_per_param >= 0.0 && outcome.bits_per_param <= 9.0);
+    assert!((0.0..=1.0).contains(&outcome.acc_before_ft));
+    assert!((0.0..=1.0).contains(&outcome.acc_after_ft));
+    assert!(outcome.compression.is_finite() || outcome.bits_per_param == 0.0);
+    for phase in ["pretrain", "bsq", "finetune"] {
+        assert!(outcome.history.last_of(phase).is_some(), "missing {phase}");
+    }
+}
+
+#[test]
+fn dorefa_from_scratch_runs_natively() {
+    let engine = Engine::native();
+    let session = Session::open(&engine, "tinynet", 128, 64, 0).unwrap();
+    let names: Vec<(String, usize)> =
+        session.man.qlayers.iter().map(|q| (q.name.clone(), q.params)).collect();
+    let scheme = QuantScheme::uniform(&names, 3);
+    let out =
+        baselines::dorefa::train_from_scratch(&session, &scheme, &QatConfig::from_scratch(4, 4, 0))
+            .unwrap();
+    assert!(out.final_acc.is_finite());
+    // collapse guard, not a benchmark: random is 0.10 on 10 classes
+    assert!(out.final_acc > 0.05, "dorefa collapsed: {}", out.final_acc);
+    assert!(out.best_acc >= out.final_acc);
+}
+
+#[test]
+fn hawq_power_iteration_ranks_layers_natively() {
+    let engine = Engine::native();
+    let session = Session::open(&engine, "tinynet", 128, 64, 0).unwrap();
+    let state = ModelState::init_fp(&session.man, 3);
+    let report = baselines::hawq::analyze(
+        &session,
+        &state,
+        &HawqConfig { power_iters: 4, batches: 1, seed: 1 },
+    )
+    .unwrap();
+    assert_eq!(report.eigenvalues.len(), 4);
+    assert!(report.eigenvalues.iter().all(|l| l.is_finite() && *l >= 0.0));
+    let mut r = report.ranking.clone();
+    r.sort();
+    assert_eq!(r, vec![0, 1, 2, 3]);
+
+    let scheme = baselines::hawq::assign_scheme(&session, &report, 4.0, &[8, 4, 2]);
+    assert!(scheme.bits_per_param() > 1.0 && scheme.bits_per_param() < 9.0);
+}
