@@ -1,0 +1,77 @@
+//! Batched serving throughput: the closed-loop sweep behind the BSQ
+//! deployment story, as a bench target (the CLI twin is `bsq-repro
+//! serve-bench`; both share `serve::sweep` and the `BENCH_serve.json`
+//! schema).
+//!
+//! A deterministic quantized tinynet checkpoint is synthesized, loaded
+//! through the serving registry (prebuilt bit-plane weights + per-layer
+//! effective precision), and driven through a {batch} × {workers} grid of
+//! closed-loop pools. The record carries throughput, p50/p99 latency, mean
+//! batch occupancy and set-weight-bits-per-sample per cell — the serving
+//! half of the sparsity-vs-speedup story EXPERIMENTS.md §Serving tracks.
+//!
+//! `BSQ_BENCH_QUICK=1` shrinks the request count for the CI smoke.
+
+use std::time::Duration;
+
+use bsq::runtime::Engine;
+use bsq::serve::{self, Registry};
+
+fn main() {
+    let quick = std::env::var_os("BSQ_BENCH_QUICK").is_some();
+    let requests = if quick { 96 } else { 512 };
+    let batches = [1usize, 8, 32];
+    let workers = [1usize, 4];
+    let seed = 0u64;
+
+    let engine = Engine::cpu().expect("engine");
+    let dir = std::env::temp_dir().join(format!("bsq_serve_bench_{}", std::process::id()));
+    let ckpt = dir.join("tinynet_serve.ckpt");
+    serve::synthesize_quantized_checkpoint(&engine, "tinynet", 8, seed, &ckpt)
+        .expect("synthesize checkpoint");
+
+    let registry = Registry::new(&engine);
+    let servable = registry.load("tinynet", &ckpt, 4, 8).expect("load servable");
+    println!(
+        "== serve: tinynet, {} set weight bits/sample, {requests} requests/cell ==",
+        servable.weight_bits()
+    );
+
+    let cells = serve::sweep(
+        &servable,
+        &batches,
+        &workers,
+        requests,
+        Duration::from_millis(2),
+        seed,
+    )
+    .expect("sweep");
+    for cell in &cells {
+        println!(
+            "batch {:>3} × {} workers: {}",
+            cell.max_batch,
+            cell.workers,
+            cell.summary.report()
+        );
+    }
+    for &w in &workers {
+        let tp = |b: usize| {
+            cells
+                .iter()
+                .find(|c| c.workers == w && c.max_batch == b)
+                .map(|c| c.summary.throughput_rps)
+                .unwrap_or(0.0)
+        };
+        println!(
+            "    -> workers {w}: batch 32 is {:.2}x batch 1 throughput",
+            tp(32) / tp(1).max(1e-9)
+        );
+    }
+
+    let json = serve::sweep_json(&servable, &cells);
+    match serve::write_bench_json(&json) {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench json: {e}"),
+    }
+    std::fs::remove_dir_all(dir).ok();
+}

@@ -19,6 +19,8 @@
 //! * [`coordinator`] — training pipelines (pretrain → BSQ → finetune)
 //! * [`baselines`] — DoReFa / PACT / LSQ / HAWQ comparators
 //! * [`experiments`] — per-table/figure harnesses
+//! * [`serve`] — batched quantized-inference serving (registry → batcher →
+//!   worker pool over the bit-plane GEMM eval path)
 
 pub mod baselines;
 pub mod coordinator;
@@ -27,5 +29,6 @@ pub mod experiments;
 pub mod model;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -1,18 +1,25 @@
 //! bsq-repro — leader binary for the BSQ (ICLR 2021) reproduction.
 //!
 //! Subcommands:
-//!   bsq        run the full BSQ pipeline on one model/α
-//!   dorefa     DoReFa QAT from scratch at a uniform precision
-//!   hawq       Hessian-importance analysis of a pretrained model
-//!   eval       evaluate a checkpoint
-//!   experiment regenerate a paper table/figure (table1…table7, fig2…fig9, all)
-//!   info       list models/artifacts and their shapes
+//!   bsq         run the full BSQ pipeline on one model/α
+//!   dorefa      DoReFa QAT from scratch at a uniform precision
+//!   hawq        Hessian-importance analysis of a pretrained model
+//!   eval        evaluate a checkpoint
+//!   experiment  regenerate a paper table/figure (table1…table7, fig2…fig9, all)
+//!   info        list models/artifacts and their shapes; with --checkpoint,
+//!               the serving registry's per-layer effective-precision map
+//!   serve-bench closed-loop batched-serving sweep → BENCH_serve.json
 //!
 //! Examples:
 //!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4
 //!   bsq-repro experiment table1 --alphas 3e-3,5e-3,2e-2
 //!   bsq-repro experiment all --epochs-scale 0.5
 //!   bsq-repro hawq --model resnet20
+//!   bsq-repro serve-bench --model tinynet --batches 1,8,32 --workers 1,4
+//!   bsq-repro info --model tinynet --checkpoint results/ckpt/serve.ckpt
+
+use std::path::PathBuf;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 use bsq::baselines::{self, QatConfig};
@@ -21,6 +28,7 @@ use bsq::experiments::{self, ExpOpts};
 use bsq::model::ModelState;
 use bsq::quant::{QuantScheme, Reweigh};
 use bsq::runtime::Engine;
+use bsq::serve;
 use bsq::util::cli::Args;
 
 fn main() {
@@ -33,7 +41,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info> [flags]\n\
+        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench> [flags]\n\
          run `bsq-repro <cmd> --help` conceptually via README.md §CLI"
     );
     std::process::exit(2);
@@ -52,6 +60,7 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(args),
         "experiment" => cmd_experiment(args),
         "info" => cmd_info(args),
+        "serve-bench" => cmd_serve_bench(args),
         _ => usage(),
     }
 }
@@ -200,15 +209,127 @@ fn cmd_experiment(mut args: Args) -> Result<()> {
     experiments::run(&engine, &id, &opts)
 }
 
-fn cmd_info(args: Args) -> Result<()> {
+/// Per-layer effective-precision table of a loaded servable — the
+/// registry-backed half of `info` and the header of `serve-bench`.
+fn print_precision_map(sv: &serve::ServableModel) {
+    println!(
+        "{} @ {}  (serving registry)",
+        sv.model_name,
+        sv.checkpoint.display()
+    );
+    println!(
+        "{:<12} {:>6} {:>9} {:>8} {:>10} {:>9} {:>10} {:>12}",
+        "layer", "kind", "params", "nominal", "effective", "occupied", "set-bits", "bits/weight"
+    );
+    for l in &sv.layers {
+        println!(
+            "{:<12} {:>6} {:>9} {:>8} {:>10} {:>9} {:>10} {:>12.3}",
+            l.name,
+            l.kind,
+            l.params,
+            l.nominal_bits,
+            l.effective_bits,
+            l.occupied_planes,
+            l.nnz_bits,
+            l.bits_per_weight()
+        );
+    }
+    println!(
+        "total: {} set weight bits/sample, {:.2} mean effective bits/param",
+        sv.weight_bits(),
+        sv.mean_effective_bits()
+    );
+}
+
+fn cmd_serve_bench(mut args: Args) -> Result<()> {
+    let model = args.str_or("model", "tinynet")?;
+    let ckpt = args.opt_str("checkpoint")?;
+    let batches = args.list::<usize>("batches")?.unwrap_or_else(|| vec![1, 8, 32]);
+    let workers = args.list::<usize>("workers")?.unwrap_or_else(|| vec![1, 4]);
+    let requests: usize = args.get_or("requests", 256)?;
+    let max_wait_ms: f64 = args.get_or("max-wait-ms", 2.0)?;
+    let act_bits: usize = args.get_or("act-bits", 4)?;
+    let bits: usize = args.get_or("bits", 8)?; // synthesis precision
+    let seed: u64 = args.get_or("seed", 0)?;
+    let out = args.opt_str("out")?;
+    args.finish()?;
+    if batches.is_empty() || workers.is_empty() || requests == 0 {
+        bail!("need non-empty --batches/--workers and --requests > 0");
+    }
+
+    let engine = Engine::cpu()?;
+    let ckpt_path = match ckpt {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let p = PathBuf::from(format!("results/ckpt/serve_{model}_b{bits}_s{seed}.ckpt"));
+            if !p.exists() {
+                println!(
+                    "no --checkpoint given; synthesizing a quantized {model} checkpoint at {}",
+                    p.display()
+                );
+                serve::synthesize_quantized_checkpoint(&engine, &model, bits, seed, &p)?;
+            }
+            p
+        }
+    };
+    let registry = serve::Registry::new(&engine);
+    let servable = registry.load(&model, &ckpt_path, act_bits, 8)?;
+    print_precision_map(&servable);
+
+    println!("== serve-bench: closed-loop sweep ({requests} requests per cell) ==");
+    let cells = serve::sweep(
+        &servable,
+        &batches,
+        &workers,
+        requests,
+        Duration::from_secs_f64(max_wait_ms / 1e3),
+        seed,
+    )?;
+    for cell in &cells {
+        println!(
+            "batch {:>3} × {} workers: {}",
+            cell.max_batch,
+            cell.workers,
+            cell.summary.report()
+        );
+    }
+
+    let json = serve::sweep_json(&servable, &cells);
+    let path = match out {
+        Some(p) => {
+            let p = PathBuf::from(p);
+            std::fs::write(&p, json.to_string_pretty() + "\n")?;
+            p
+        }
+        None => serve::write_bench_json(&json)?,
+    };
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+fn cmd_info(mut args: Args) -> Result<()> {
+    let ckpt = args.opt_str("checkpoint")?;
+    let model_flag = args.opt_str("model")?;
+    let act_bits: usize = args.get_or("act-bits", 4)?;
     args.finish()?;
     let engine = Engine::cpu()?;
+    if let Some(ckpt) = ckpt {
+        let model = model_flag.as_deref().unwrap_or("tinynet");
+        let registry = serve::Registry::new(&engine);
+        let sv = registry.load(model, std::path::Path::new(&ckpt), act_bits, 8)?;
+        print_precision_map(&sv);
+        return Ok(());
+    }
+    // Without --checkpoint, --model narrows the listing to one model.
     let manifests: Vec<bsq::runtime::Manifest> = if engine.is_native() {
         println!("backend: native (PJRT stub; manifests synthesized from the model zoo)");
-        bsq::runtime::native::models::model_names()
-            .into_iter()
-            .map(|m| engine.manifest(m))
-            .collect::<Result<_>>()?
+        match &model_flag {
+            Some(m) => vec![engine.manifest(m)?],
+            None => bsq::runtime::native::models::model_names()
+                .into_iter()
+                .map(|m| engine.manifest(m))
+                .collect::<Result<_>>()?,
+        }
     } else {
         let root = bsq::runtime::artifacts_root();
         if !root.exists() {
@@ -217,9 +338,15 @@ fn cmd_info(args: Args) -> Result<()> {
         let mut out = Vec::new();
         for entry in std::fs::read_dir(&root)? {
             let dir = entry?.path();
-            if dir.join("manifest.json").exists() {
+            let keep = model_flag
+                .as_deref()
+                .map_or(true, |m| dir.file_name().map_or(false, |n| n == m));
+            if keep && dir.join("manifest.json").exists() {
                 out.push(bsq::runtime::Manifest::load(&dir)?);
             }
+        }
+        if let (Some(m), true) = (model_flag.as_deref(), out.is_empty()) {
+            bail!("no artifacts for model {m:?} under {}", root.display());
         }
         out
     };

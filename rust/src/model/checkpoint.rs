@@ -18,6 +18,10 @@ use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"BSQCKPT1";
 
+/// Per-entry element cap (2^31 ≈ 8 GiB of f32): a corrupt header must fail
+/// with a clear error, not an absurd allocation.
+const MAX_ELEMS: usize = 1 << 31;
+
 pub fn save(state: &ModelState, path: &Path, meta: &Json) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
@@ -71,7 +75,15 @@ pub fn load(path: &Path) -> Result<ModelState> {
             r.read_exact(&mut b)?;
             shape.push(u64::from_le_bytes(b) as usize);
         }
-        let n: usize = shape.iter().product();
+        // Overflow-checked element count: huge dims must not wrap into a
+        // small (mis-sized) allocation that then misreads the stream.
+        let n = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .filter(|&n| n <= MAX_ELEMS)
+            .ok_or_else(|| {
+                anyhow::anyhow!("corrupt checkpoint: entry {key:?} claims shape {shape:?}")
+            })?;
         let mut data = vec![0f32; n];
         let bytes = unsafe {
             std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
@@ -79,7 +91,13 @@ pub fn load(path: &Path) -> Result<ModelState> {
         r.read_exact(bytes)?;
         state.insert(key, Tensor::new(shape, data)?);
     }
-    Ok(state)
+    // A checkpoint is exactly its declared entries: trailing bytes mean a
+    // corrupt entry count (or concatenated files) and used to load silently.
+    let mut probe = [0u8; 1];
+    match r.read(&mut probe)? {
+        0 => Ok(state),
+        _ => bail!("corrupt checkpoint: trailing bytes after {count} entries"),
+    }
 }
 
 pub fn load_meta(path: &Path) -> Result<Json> {
@@ -124,6 +142,40 @@ mod tests {
         let path = dir.join(format!("bsq_not_ckpt_{}", std::process::id()));
         std::fs::write(&path, b"garbage!").unwrap();
         assert!(load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_trailing_bytes() {
+        let mut s = ModelState::new();
+        s.insert("w".into(), Tensor::scalar(1.0));
+        let dir = std::env::temp_dir().join(format!("bsq_ckpt_trail_{}", std::process::id()));
+        let path = dir.join("t.ckpt");
+        save(&s, &path, &Json::obj(vec![])).unwrap();
+        assert!(load(&path).is_ok());
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.push(0);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("trailing"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn rejects_absurd_entry_shapes() {
+        // magic | count 1 | key "w" | ndim 2 | dims [u64::MAX, u64::MAX]
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'w');
+        bytes.extend_from_slice(&2u32.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let path = std::env::temp_dir().join(format!("bsq_ckpt_huge_{}", std::process::id()));
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("corrupt checkpoint"), "{err}");
         std::fs::remove_file(path).ok();
     }
 }

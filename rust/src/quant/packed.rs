@@ -62,6 +62,19 @@ impl PackedCodes {
         PlaneBits::from_codes(&self.codes)
     }
 
+    /// Effective precision: highest occupied plane + 1 (word-level
+    /// OR-reduction over the bitsets), 0 for an all-zero layer. After a
+    /// §3.3 adjustment this equals `bits`; mid-training it can run below
+    /// (unused MSBs not yet trimmed) or one above (the n+1 growth).
+    pub fn effective_bits(&self) -> usize {
+        let occ = self.plane_bits().occupancy();
+        if occ == 0 {
+            0
+        } else {
+            32 - occ.leading_zeros() as usize
+        }
+    }
+
     /// Represented float weights W = δ·V. Matches `from_bitplanes` bitwise
     /// whenever the codes were within the ±[`CODE_CAP`] clamp.
     pub fn dequantize(&self) -> Tensor {
@@ -357,6 +370,22 @@ mod tests {
         for (a, b) in deq.data().iter().zip(rec.data()) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn effective_bits_tracks_occupancy() {
+        let mk = |codes: Vec<i16>, bits: usize| PackedCodes {
+            wshape: vec![codes.len()],
+            codes,
+            bits,
+            scale: 1.0,
+        };
+        assert_eq!(mk(vec![0, 0, 0], 5).effective_bits(), 0);
+        assert_eq!(mk(vec![1, -1], 5).effective_bits(), 1);
+        // 12 = 0b1100 → highest plane 3 → 4 effective bits despite bits = 8
+        assert_eq!(mk(vec![12, -2], 8).effective_bits(), 4);
+        // the n+1 growth: a code past 2^bits − 1 reads one plane wider
+        assert_eq!(mk(vec![9], 3).effective_bits(), 4);
     }
 
     #[test]

@@ -137,6 +137,25 @@ impl Engine {
         }
     }
 
+    /// The native model graph behind `model` — the serving layer drives the
+    /// host forward kernels directly (prebuilt bit-plane weights, dynamic
+    /// batch sizes), which only the native backend supports. A real PJRT
+    /// stack compiles artifacts at a fixed batch size, so serving on it
+    /// needs a padding front-end that is not wired yet: fail loudly rather
+    /// than silently computing on a backend the operator did not configure.
+    pub fn native_model(
+        &self,
+        model: &str,
+    ) -> Result<Arc<crate::runtime::native::models::NativeModel>> {
+        match &self.backend {
+            Backend::Native(_) => crate::runtime::native::models::get(model),
+            Backend::Pjrt(_) => bail!(
+                "serving requires the native backend (the PJRT path compiles \
+                 fixed-batch artifacts; no serving front-end for it yet)"
+            ),
+        }
+    }
+
     /// Load + compile an artifact (cached by file path).
     pub fn load(&self, spec: &ArtifactSpec) -> Result<Arc<Executable>> {
         let mut cache = self.cache.lock().unwrap();

@@ -25,6 +25,7 @@
 //!   act     pass-through inside (0, bound); above-bound mass → PACT clip
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -327,15 +328,10 @@ fn prepare_weights(
     Ok((reps, gmaps))
 }
 
-/// Bit-representation weight: `W = s·Round[Σ_b mask_b (wp_b − wn_b) 2^b] /
-/// max(Σ_b mask_b 2^b, 1)` (paper Eq. 2/3). The plane accumulation runs in
-/// f64 so the rounded codes match `quant::packed` bit for bit — which keeps
-/// re-quantization an exact no-op on the represented weight here too.
-fn prepare_bit(
-    state: &ModelState,
-    q: &models::NativeLayer,
-    bitplane_infer: bool,
-) -> Result<(WeightRep, WGradMap)> {
+/// Shared f64 plane accumulation for the bit representation: per-element
+/// weighted plane sums `v`, the level denominator `max(Σ_b mask_b 2^b, 1)`,
+/// and the dynamic-range scale.
+fn bit_accumulate(state: &ModelState, q: &models::NativeLayer) -> Result<(Vec<f64>, f64, f32)> {
     let wp = state.get(&format!("wp:{}", q.name))?;
     let wn = state.get(&format!("wn:{}", q.name))?;
     let mask = state.get(&format!("mask:{}", q.name))?;
@@ -357,19 +353,43 @@ fn prepare_bit(
             *acc += (pv - nv) as f64 * w2;
         }
     }
-    let denom = denom.max(1.0);
+    Ok((v, denom.max(1.0), scale))
+}
 
+/// Build one layer's inference-path bit-plane weight from its state planes.
+///
+/// This is the single code path behind both the engine's `q_eval_*`
+/// artifacts and the serving registry's prebuilt weights — sharing it keeps
+/// a served checkpoint bit-identical to the engine eval of the same state.
+pub fn bitplane_weight(
+    state: &ModelState,
+    q: &models::NativeLayer,
+) -> Result<Arc<BitPlaneMatrix>> {
+    let (v, denom, scale) = bit_accumulate(state, q)?;
+    // |Round(v)| ≤ 2·denom ≤ 1022: fits i16, needs ≤ 10 planes.
+    let codes: Vec<i16> = v.iter().map(|a| a.round() as i16).collect();
+    let max_mag = codes.iter().map(|c| c.unsigned_abs()).max().unwrap_or(0);
+    let bits = (16 - (max_mag as u16).leading_zeros() as usize).max(1);
+    let n_out = *q.shape.last().unwrap_or(&1);
+    let k = codes.len() / n_out;
+    let delta = (scale as f64 / denom) as f32;
+    Ok(Arc::new(BitPlaneMatrix::from_codes(&codes, k, n_out, bits, delta)))
+}
+
+/// Bit-representation weight: `W = s·Round[Σ_b mask_b (wp_b − wn_b) 2^b] /
+/// max(Σ_b mask_b 2^b, 1)` (paper Eq. 2/3). The plane accumulation runs in
+/// f64 so the rounded codes match `quant::packed` bit for bit — which keeps
+/// re-quantization an exact no-op on the represented weight here too.
+fn prepare_bit(
+    state: &ModelState,
+    q: &models::NativeLayer,
+    bitplane_infer: bool,
+) -> Result<(WeightRep, WGradMap)> {
     if bitplane_infer {
-        // |Round(v)| ≤ 2·denom ≤ 1022: fits i16, needs ≤ 10 planes.
-        let codes: Vec<i16> = v.iter().map(|a| a.round() as i16).collect();
-        let max_mag = codes.iter().map(|c| c.unsigned_abs()).max().unwrap_or(0);
-        let bits = (16 - (max_mag as u16).leading_zeros() as usize).max(1);
-        let n_out = *q.shape.last().unwrap_or(&1);
-        let k = elems / n_out;
-        let delta = (scale as f64 / denom) as f32;
-        let bpm = BitPlaneMatrix::from_codes(&codes, k, n_out, bits, delta);
-        return Ok((WeightRep::Planes(bpm), WGradMap::Zero));
+        return Ok((WeightRep::Planes(bitplane_weight(state, q)?), WGradMap::Zero));
     }
+    let (v, denom, scale) = bit_accumulate(state, q)?;
+    let mask = state.get(&format!("mask:{}", q.name))?;
 
     let weff: Vec<f32> = v.iter().map(|a| (scale as f64 * a.round() / denom) as f32).collect();
     let rv_over_denom: Vec<f32> = v.iter().map(|a| (a.round() / denom) as f32).collect();
@@ -703,6 +723,29 @@ fn train_step(
         out.metrics.insert("bgl".into(), bgl);
     }
     Ok(out)
+}
+
+/// Forward-only inference to raw logits, on caller-supplied effective
+/// weights — the serving hot path (`serve::registry`).
+///
+/// Unlike [`execute`]'s eval role this takes the input tensor directly (any
+/// leading batch dimension; the native kernels derive their geometry from
+/// the input shape) and the per-layer [`WeightRep`]s prebuilt — a serving
+/// layer builds the bit-plane weights once per checkpoint via
+/// [`bitplane_weight`] and shares them (`Arc`) across every batch, instead
+/// of re-packing the planes per call like the stateless engine path.
+pub fn infer_logits(
+    model: &NativeModel,
+    state: &ModelState,
+    reps: BTreeMap<String, WeightRep>,
+    actlv: Vec<f32>,
+    am: AMode,
+    x: Tensor,
+) -> Result<Tensor> {
+    let mut fwd = Fwd::new(model, state, reps, actlv, am, false);
+    let xv = fwd.tape.input(x);
+    let logits = models::forward(model, &mut fwd, xv)?;
+    Ok(fwd.tape.value(logits).clone())
 }
 
 fn eval_step(

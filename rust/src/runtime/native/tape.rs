@@ -13,6 +13,7 @@
 //! to the PACT clip), and the option-A shortcut / concat / pooling glue.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -31,8 +32,9 @@ pub enum WeightRep {
     /// Dense f32 (training paths; backward supported).
     Dense(Tensor),
     /// Sign-split plane bitsets (inference path; forward only, cost
-    /// proportional to set weight bits).
-    Planes(BitPlaneMatrix),
+    /// proportional to set weight bits). Behind `Arc` so a serving layer
+    /// can prebuild the bitsets once and share them across every batch.
+    Planes(Arc<BitPlaneMatrix>),
 }
 
 pub(crate) enum Op {

@@ -1,0 +1,135 @@
+//! Dynamic batching: coalesce single-sample requests into fixed-deadline
+//! batches.
+//!
+//! Policy semantics (DESIGN.md §9): a batch opens when the first request
+//! arrives and closes when either `max_batch` requests have been collected
+//! or `max_wait` has elapsed since the first arrival — the deadline is
+//! *fixed* at batch-open time, so a trickle of late arrivals cannot starve
+//! the requests already waiting. Already-queued requests are drained
+//! without waiting (`try_recv` before any timed block), so a backlogged
+//! queue produces full batches with zero added latency.
+//!
+//! The collector is generic over the item type so the policy logic is
+//! testable without the worker pool around it.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
+use std::time::{Duration, Instant};
+
+/// Batch-closing policy: size cap + fixed deadline from first arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> BatchPolicy {
+        BatchPolicy { max_batch: max_batch.max(1), max_wait }
+    }
+}
+
+/// Collect the next batch from `rx` under `policy`.
+///
+/// Blocks until the first item arrives (this is the idle state of the
+/// batcher thread — no spinning), then fills the batch per the policy.
+/// Returns `None` only when every sender is gone and the queue is empty —
+/// the pool's shutdown signal.
+pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let deadline = Instant::now() + policy.max_wait;
+    let mut batch = Vec::with_capacity(policy.max_batch);
+    batch.push(first);
+    while batch.len() < policy.max_batch {
+        match rx.try_recv() {
+            Ok(item) => batch.push(item),
+            Err(TryRecvError::Disconnected) => break,
+            Err(TryRecvError::Empty) => {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(item) => batch.push(item),
+                    Err(RecvTimeoutError::Timeout) | Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy::new(max_batch, Duration::from_millis(wait_ms))
+    }
+
+    #[test]
+    fn drains_backlog_up_to_cap_without_waiting() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, &policy(4, 5_000)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        // a backlogged queue must never pay the deadline
+        assert!(t0.elapsed() < Duration::from_millis(500));
+        // the remainder stays queued for the next batch
+        let b2 = collect_batch(&rx, &policy(16, 0)).unwrap();
+        assert_eq!(b2, vec![4, 5, 6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn deadline_closes_a_partial_batch() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        let b = collect_batch(&rx, &policy(8, 30)).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn zero_wait_still_takes_whatever_is_ready() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        let b = collect_batch(&rx, &policy(8, 0)).unwrap();
+        assert_eq!(b, vec![1, 2]);
+    }
+
+    #[test]
+    fn disconnect_flushes_then_signals_shutdown() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        // the queued item still comes out as a final batch...
+        assert_eq!(collect_batch(&rx, &policy(8, 1_000)), Some(vec![7]));
+        // ...and only then does the collector report shutdown
+        assert_eq!(collect_batch::<i32>(&rx, &policy(8, 1_000)), None);
+    }
+
+    #[test]
+    fn senders_can_feed_mid_collection() {
+        let (tx, rx) = channel();
+        tx.send(0).unwrap();
+        let feeder = std::thread::spawn(move || {
+            for i in 1..4 {
+                std::thread::sleep(Duration::from_millis(5));
+                tx.send(i).unwrap();
+            }
+        });
+        let b = collect_batch(&rx, &policy(4, 2_000)).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]); // closed by the size cap, not the deadline
+        feeder.join().unwrap();
+    }
+
+    #[test]
+    fn policy_clamps_zero_batch() {
+        assert_eq!(policy(0, 1).max_batch, 1);
+    }
+}

@@ -1,0 +1,84 @@
+//! `serve` — the batched quantized-inference serving layer (DESIGN.md §9).
+//!
+//! BSQ's payoff is a mixed-precision model whose inference cost shrinks
+//! with bit-level sparsity; this subsystem turns that into an end-to-end
+//! throughput story. A [`Registry`] loads quantized checkpoints into
+//! immutable [`ServableModel`]s with per-layer bit-plane weights prebuilt
+//! once, a batcher coalesces single-sample requests into fixed-deadline
+//! dynamic batches ([`BatchPolicy`]), and a scoped worker pool dispatches
+//! them through the bit-plane GEMM eval path — per-sample results are
+//! bit-identical to the engine's `q_eval_*` artifacts and independent of
+//! batch composition. [`stats`] digests latency percentiles, throughput,
+//! and the set-weight-bits-per-sample observable that makes the
+//! sparsity-vs-speedup trade visible in production terms.
+//!
+//! Entry points: `bsq-repro serve-bench` (closed-loop sweep →
+//! `BENCH_serve.json`), `bsq-repro info --checkpoint` (the registry's
+//! effective-precision map), and `benches/serve.rs` (the CI smoke twin).
+
+pub mod batcher;
+pub mod registry;
+pub mod stats;
+pub mod worker;
+
+use std::io;
+use std::path::PathBuf;
+
+pub use batcher::{collect_batch, BatchPolicy};
+pub use registry::{
+    act_levels, synthesize_quantized_checkpoint, LayerPrecision, Registry, ServableModel,
+};
+pub use stats::{ServeStats, ServeSummary};
+pub use worker::{
+    run_closed_loop, sweep, synthetic_input, PoolConfig, ServeRequest, ServeResponse, SweepCell,
+};
+
+use crate::util::json::Json;
+
+/// Assemble the `BENCH_serve.json` payload: the servable's precision map,
+/// every sweep cell, and per-worker-count speedups of the largest batch
+/// size over the smallest (the batching win the acceptance gate tracks).
+pub fn sweep_json(servable: &ServableModel, cells: &[SweepCell]) -> Json {
+    let mut speedups: Vec<(String, Json)> = Vec::new();
+    let mut worker_counts: Vec<usize> = cells.iter().map(|c| c.workers).collect();
+    worker_counts.sort_unstable();
+    worker_counts.dedup();
+    for &w in &worker_counts {
+        let mut at_w: Vec<&SweepCell> = cells.iter().filter(|c| c.workers == w).collect();
+        at_w.sort_by_key(|c| c.max_batch);
+        if let (Some(lo), Some(hi)) = (at_w.first(), at_w.last()) {
+            if lo.max_batch != hi.max_batch {
+                speedups.push((
+                    format!("workers{w}_batch{}_over_batch{}", hi.max_batch, lo.max_batch),
+                    Json::num(
+                        hi.summary.throughput_rps / lo.summary.throughput_rps.max(1e-9),
+                    ),
+                ));
+            }
+        }
+    }
+    Json::obj(vec![
+        ("target", Json::str("serve")),
+        ("model", Json::str(servable.model_name.clone())),
+        ("checkpoint", Json::str(servable.checkpoint.display().to_string())),
+        ("weight_bits_per_sample", Json::num(servable.weight_bits() as f64)),
+        ("mean_effective_bits", Json::num(servable.mean_effective_bits())),
+        (
+            "layers",
+            Json::Arr(servable.layers.iter().map(LayerPrecision::to_json).collect()),
+        ),
+        ("cells", Json::Arr(cells.iter().map(SweepCell::to_json).collect())),
+        ("speedups", Json::Obj(speedups)),
+    ])
+}
+
+/// Write the serve bench record: `BENCH_serve.json` in the working
+/// directory, or wherever `BSQ_BENCH_OUT` points (same contract as
+/// `util::bench::JsonReport`).
+pub fn write_bench_json(json: &Json) -> io::Result<PathBuf> {
+    let path = std::env::var_os("BSQ_BENCH_OUT")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("BENCH_serve.json"));
+    std::fs::write(&path, json.to_string_pretty() + "\n")?;
+    Ok(path)
+}

@@ -1,0 +1,355 @@
+//! Checkpoint registry: quantized checkpoints → immutable servable models.
+//!
+//! A [`ServableModel`] is the deployment image of one BSQ run: the
+//! checkpoint's bit-representation state loaded once, every layer's
+//! sign-split plane bitsets prebuilt into [`BitPlaneMatrix`] weights
+//! (shared `Arc`s — no per-batch re-packing like the stateless engine eval
+//! path), and the per-layer effective-precision map derived from the
+//! trimmed-plane bitsets. The weight build goes through the *same*
+//! `native::step::bitplane_weight` code path as the engine's `q_eval_*`
+//! artifacts, so a served checkpoint is bit-identical to an engine eval of
+//! the same state — `tests/serve_e2e.rs` enforces this.
+//!
+//! The [`Registry`] caches servables by `(model, checkpoint path)` behind a
+//! mutex, so concurrent load requests for the same checkpoint share one
+//! immutable instance.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{checkpoint, ModelState};
+use crate::runtime::native::models::NativeModel;
+use crate::runtime::native::step::{self, AMode};
+use crate::runtime::native::tape::WeightRep;
+use crate::runtime::Engine;
+use crate::tensor::gemm::BitPlaneMatrix;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// One layer's precision as actually deployed, read off the plane bitsets.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LayerPrecision {
+    pub name: String,
+    pub kind: String,
+    pub params: usize,
+    /// Active planes per the checkpoint's bottom-packed mask.
+    pub nominal_bits: usize,
+    /// Width of the widest code actually present (0 for a dead layer).
+    pub effective_bits: usize,
+    /// Planes holding at least one set bit (empty ones are skipped free).
+    pub occupied_planes: usize,
+    /// Total set weight bits — the work one output position costs.
+    pub nnz_bits: u64,
+}
+
+impl LayerPrecision {
+    pub fn bits_per_weight(&self) -> f64 {
+        self.nnz_bits as f64 / self.params.max(1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("kind", Json::str(self.kind.clone())),
+            ("params", Json::num(self.params as f64)),
+            ("nominal_bits", Json::num(self.nominal_bits as f64)),
+            ("effective_bits", Json::num(self.effective_bits as f64)),
+            ("occupied_planes", Json::num(self.occupied_planes as f64)),
+            ("nnz_bits", Json::num(self.nnz_bits as f64)),
+            ("bits_per_weight", Json::num(self.bits_per_weight())),
+        ])
+    }
+}
+
+/// An immutable, thread-shareable quantized model ready to serve.
+pub struct ServableModel {
+    pub model_name: String,
+    pub checkpoint: PathBuf,
+    pub layers: Vec<LayerPrecision>,
+    model: Arc<NativeModel>,
+    /// Prebuilt bit-plane weights, one per quantized layer.
+    weights: BTreeMap<String, Arc<BitPlaneMatrix>>,
+    /// Frozen non-plane state the forward needs: biases, BN statistics,
+    /// PACT clips, plus the planes themselves (kept for precision queries).
+    state: ModelState,
+    actlv: Vec<f32>,
+    am: AMode,
+    input_hw: (usize, usize),
+    in_ch: usize,
+    num_classes: usize,
+}
+
+// Servables are shared by reference across the batcher/worker/client
+// threads of the pool; fail the build loudly if a field ever breaks that.
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ServableModel>();
+};
+
+impl ServableModel {
+    /// Load a quantized checkpoint for `model_name` and prebuild its
+    /// serving weights. `act_bits`/`act_first_last` pick the activation
+    /// quantization levels (the paper pins first/last sites to 8).
+    pub fn load(
+        engine: &Engine,
+        model_name: &str,
+        ckpt: &Path,
+        act_bits: usize,
+        act_first_last: usize,
+    ) -> Result<ServableModel> {
+        let man = engine.manifest(model_name)?;
+        let model = engine.native_model(model_name)?;
+        let state = checkpoint::load(ckpt)
+            .with_context(|| format!("loading servable checkpoint {}", ckpt.display()))?;
+
+        let first = &man.qlayers[0].name;
+        if !state.contains(&format!("wp:{first}")) {
+            bail!(
+                "{} is not a bit-representation checkpoint (no wp:{first}); \
+                 serving runs the quantized eval path only",
+                ckpt.display()
+            );
+        }
+        let am = if man.act_sites.iter().any(|s| state.contains(&format!("pact:{s}"))) {
+            AMode::Pact
+        } else {
+            AMode::Relu6
+        };
+        // Validate the state against the engine's eval contract up front so
+        // a malformed checkpoint fails at load time, not mid-request.
+        let suffix = if am == AMode::Pact { "pact" } else { "relu6" };
+        let spec = man.artifact(&format!("q_eval_{suffix}"))?;
+        state.check_against(&spec.inputs)?;
+
+        let mut weights = BTreeMap::new();
+        let mut layers = Vec::with_capacity(man.qlayers.len());
+        for q in &man.qlayers {
+            let bpm = step::bitplane_weight(&state, model.layer(&q.name)?)?;
+            let mask = state.get(&format!("mask:{}", q.name))?;
+            let nnz = bpm.nnz_bits();
+            layers.push(LayerPrecision {
+                name: q.name.clone(),
+                kind: q.kind.clone(),
+                params: q.params,
+                nominal_bits: mask.data().iter().filter(|&&m| m != 0.0).count(),
+                effective_bits: if nnz == 0 { 0 } else { bpm.bits() },
+                occupied_planes: bpm.occupied_planes(),
+                nnz_bits: nnz,
+            });
+            weights.insert(q.name.clone(), bpm);
+        }
+
+        Ok(ServableModel {
+            model_name: model_name.to_string(),
+            checkpoint: ckpt.to_path_buf(),
+            layers,
+            model,
+            weights,
+            state,
+            actlv: act_levels(man.act_sites.len(), act_bits, act_first_last),
+            am,
+            input_hw: man.input_hw,
+            in_ch: man.in_ch,
+            num_classes: man.num_classes,
+        })
+    }
+
+    pub fn input_hw(&self) -> (usize, usize) {
+        self.input_hw
+    }
+
+    pub fn in_ch(&self) -> usize {
+        self.in_ch
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Elements of one input sample (`h·w·c`).
+    pub fn sample_elems(&self) -> usize {
+        self.input_hw.0 * self.input_hw.1 * self.in_ch
+    }
+
+    /// Total set weight bits across layers — proportional to the bit-plane
+    /// GEMM work one sample costs, the serving-side sparsity observable.
+    pub fn weight_bits(&self) -> u64 {
+        self.layers.iter().map(|l| l.nnz_bits).sum()
+    }
+
+    /// Params-weighted mean effective precision (the scheme's bits/param).
+    pub fn mean_effective_bits(&self) -> f64 {
+        let params: usize = self.layers.iter().map(|l| l.params).sum();
+        let weighted: f64 =
+            self.layers.iter().map(|l| (l.effective_bits * l.params) as f64).sum();
+        weighted / params.max(1) as f64
+    }
+
+    /// Run one batch `[m, h, w, c]` to logits `[m, classes]` on the
+    /// prebuilt bit-plane weights. Per-sample results are bit-identical
+    /// regardless of batch composition (every kernel accumulates per output
+    /// element in a fixed order independent of the batch dimension), which
+    /// is what lets the batcher coalesce requests freely.
+    pub fn infer(&self, x: Tensor) -> Result<Tensor> {
+        let s = x.shape();
+        if s.len() != 4 || (s[1], s[2]) != self.input_hw || s[3] != self.in_ch {
+            bail!(
+                "input {s:?} does not match {} geometry [m, {}, {}, {}]",
+                self.model_name,
+                self.input_hw.0,
+                self.input_hw.1,
+                self.in_ch
+            );
+        }
+        let reps: BTreeMap<String, WeightRep> = self
+            .weights
+            .iter()
+            .map(|(k, v)| (k.clone(), WeightRep::Planes(v.clone())))
+            .collect();
+        step::infer_logits(&self.model, &self.state, reps, self.actlv.clone(), self.am, x)
+    }
+}
+
+/// Per-site activation levels (2^a − 1), first/last pinned — the serving
+/// twin of `Session::act_levels` (no corpus needed here).
+pub fn act_levels(sites: usize, bits: usize, first_last: usize) -> Vec<f32> {
+    let lv = |b: usize| if b == 0 { 0.0 } else { ((1u64 << b) - 1) as f32 };
+    (0..sites)
+        .map(|i| if i == 0 || i + 1 == sites { lv(first_last) } else { lv(bits) })
+        .collect()
+}
+
+/// Loads checkpoints into immutable [`ServableModel`]s, cached by
+/// `(model, checkpoint path)`.
+pub struct Registry<'e> {
+    engine: &'e Engine,
+    cache: Mutex<BTreeMap<String, Arc<ServableModel>>>,
+}
+
+impl<'e> Registry<'e> {
+    pub fn new(engine: &'e Engine) -> Registry<'e> {
+        Registry { engine, cache: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Load (or return the cached) servable for a checkpoint. The cache
+    /// key includes the activation precision: the same checkpoint served
+    /// at different act bits is a different servable (different actlv).
+    pub fn load(
+        &self,
+        model: &str,
+        ckpt: &Path,
+        act_bits: usize,
+        act_first_last: usize,
+    ) -> Result<Arc<ServableModel>> {
+        let key = format!("{model}@{}#a{act_bits}f{act_first_last}", ckpt.display());
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        // Build outside the lock: checkpoint I/O and bitset packing are the
+        // slow part and must not serialize unrelated loads.
+        let built = Arc::new(ServableModel::load(
+            self.engine,
+            model,
+            ckpt,
+            act_bits,
+            act_first_last,
+        )?);
+        let mut cache = self.cache.lock().unwrap();
+        Ok(cache.entry(key).or_insert(built).clone())
+    }
+
+    /// Keys of everything currently loaded.
+    pub fn loaded(&self) -> Vec<String> {
+        self.cache.lock().unwrap().keys().cloned().collect()
+    }
+}
+
+/// Write a deterministic quantized checkpoint for `model`: He-initialized
+/// weights converted to the bit representation at `bits` and §3.3-adjusted
+/// per layer. Gives `serve-bench` and the serving tests a self-contained
+/// checkpoint source when no trained run is at hand.
+pub fn synthesize_quantized_checkpoint(
+    engine: &Engine,
+    model: &str,
+    bits: usize,
+    seed: u64,
+    path: &Path,
+) -> Result<()> {
+    let man = engine.manifest(model)?;
+    let mut state = ModelState::init_fp(&man, seed);
+    state.to_bit_representation(&man, bits)?;
+    for q in &man.qlayers {
+        let mut rep = state.take_bitrep(&q.name)?;
+        crate::quant::requantize(&mut rep);
+        state.install_bitrep(&q.name, rep);
+    }
+    let meta = Json::obj(vec![
+        ("model", Json::str(model)),
+        ("phase", Json::str("synthetic-serve")),
+        ("bits", Json::num(bits as f64)),
+        ("seed", Json::num(seed as f64)),
+    ]);
+    checkpoint::save(&state, path, &meta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn act_levels_pin_first_and_last() {
+        assert_eq!(act_levels(4, 4, 8), vec![255.0, 15.0, 15.0, 255.0]);
+        assert_eq!(act_levels(1, 4, 8), vec![255.0]);
+        // bits 0 disables quantization mid-model
+        assert_eq!(act_levels(3, 0, 8), vec![255.0, 0.0, 255.0]);
+    }
+
+    #[test]
+    fn registry_caches_and_rejects_fp_checkpoints() {
+        let engine = Engine::native();
+        let dir = std::env::temp_dir().join(format!("bsq_registry_{}", std::process::id()));
+        let path = dir.join("tiny_q.ckpt");
+        synthesize_quantized_checkpoint(&engine, "tinynet", 6, 0, &path).unwrap();
+
+        let reg = Registry::new(&engine);
+        let a = reg.load("tinynet", &path, 4, 8).unwrap();
+        let b = reg.load("tinynet", &path, 4, 8).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
+        assert_eq!(reg.loaded().len(), 1);
+        // same checkpoint at a different activation precision is a
+        // different servable, not a cache hit
+        let c = reg.load("tinynet", &path, 8, 8).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(reg.loaded().len(), 2);
+        assert_eq!(a.layers.len(), 4);
+        assert!(a.layers.iter().all(|l| l.nominal_bits >= 1 && l.nnz_bits > 0));
+        assert!(a.weight_bits() > 0);
+
+        // a float checkpoint must be refused with a clear error
+        let man = engine.manifest("tinynet").unwrap();
+        let fp = ModelState::init_fp(&man, 0);
+        let fp_path = dir.join("tiny_fp.ckpt");
+        checkpoint::save(&fp, &fp_path, &Json::obj(vec![])).unwrap();
+        let err = reg.load("tinynet", &fp_path, 4, 8).unwrap_err().to_string();
+        assert!(err.contains("bit-representation"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn servable_infer_checks_geometry() {
+        let engine = Engine::native();
+        let dir = std::env::temp_dir().join(format!("bsq_registry_g_{}", std::process::id()));
+        let path = dir.join("tiny_q.ckpt");
+        synthesize_quantized_checkpoint(&engine, "tinynet", 4, 1, &path).unwrap();
+        let sv = ServableModel::load(&engine, "tinynet", &path, 4, 8).unwrap();
+        assert_eq!(sv.input_hw(), (16, 16));
+        assert_eq!(sv.sample_elems(), 16 * 16 * 3);
+        let logits = sv.infer(Tensor::zeros(&[2, 16, 16, 3])).unwrap();
+        assert_eq!(logits.shape(), &[2, 10]);
+        assert!(sv.infer(Tensor::zeros(&[2, 8, 8, 3])).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

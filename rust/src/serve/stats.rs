@@ -1,0 +1,167 @@
+//! Serving telemetry: latency percentiles, throughput, batch occupancy,
+//! and the bits-processed-per-sample observable that ties serving speed to
+//! BSQ's bit-level sparsity (fewer set weight bits → less bit-plane GEMM
+//! work → higher throughput at fixed hardware).
+
+use std::time::Duration;
+
+use crate::util::bench::{fmt_dur, percentile};
+use crate::util::json::Json;
+
+/// Raw per-run serving measurements.
+#[derive(Debug, Clone)]
+pub struct ServeStats {
+    pub requested: usize,
+    pub completed: usize,
+    /// Wall time of the whole closed-loop run (clients + pool).
+    pub wall: Duration,
+    /// Per-request queue-to-response latencies, ascending.
+    pub latencies: Vec<Duration>,
+    /// Size of every batch the workers executed, in dispatch order.
+    pub batch_sizes: Vec<usize>,
+    /// Σ set weight bits across layers: per-sample work ∝ this number.
+    pub weight_bits_per_sample: u64,
+}
+
+impl ServeStats {
+    pub fn new(
+        requested: usize,
+        mut latencies: Vec<Duration>,
+        batch_sizes: Vec<usize>,
+        wall: Duration,
+        weight_bits_per_sample: u64,
+    ) -> ServeStats {
+        latencies.sort();
+        ServeStats {
+            requested,
+            completed: latencies.len(),
+            wall,
+            latencies,
+            batch_sizes,
+            weight_bits_per_sample,
+        }
+    }
+
+    pub fn summary(&self) -> ServeSummary {
+        let us = |d: Option<Duration>| d.map(|d| d.as_nanos() as f64 / 1e3).unwrap_or(0.0);
+        let mean = if self.latencies.is_empty() {
+            0.0
+        } else {
+            self.latencies.iter().map(|d| d.as_nanos() as f64 / 1e3).sum::<f64>()
+                / self.latencies.len() as f64
+        };
+        let mean_batch = if self.batch_sizes.is_empty() {
+            0.0
+        } else {
+            self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+        };
+        ServeSummary {
+            requested: self.requested,
+            completed: self.completed,
+            throughput_rps: self.completed as f64 / self.wall.as_secs_f64().max(1e-9),
+            p50_us: us(percentile(&self.latencies, 0.5)),
+            p99_us: us(percentile(&self.latencies, 0.99)),
+            mean_us: mean,
+            max_us: us(self.latencies.last().copied()),
+            batches: self.batch_sizes.len(),
+            mean_batch,
+            max_batch_observed: self.batch_sizes.iter().copied().max().unwrap_or(0),
+            weight_bits_per_sample: self.weight_bits_per_sample,
+        }
+    }
+}
+
+/// One serving configuration's digested numbers — what `BENCH_serve.json`
+/// records per sweep cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServeSummary {
+    pub requested: usize,
+    pub completed: usize,
+    pub throughput_rps: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    pub max_us: f64,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub max_batch_observed: usize,
+    pub weight_bits_per_sample: u64,
+}
+
+impl ServeSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requested", Json::num(self.requested as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("throughput_rps", Json::num(self.throughput_rps)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("max_us", Json::num(self.max_us)),
+            ("batches", Json::num(self.batches as f64)),
+            ("mean_batch", Json::num(self.mean_batch)),
+            ("max_batch_observed", Json::num(self.max_batch_observed as f64)),
+            ("weight_bits_per_sample", Json::num(self.weight_bits_per_sample as f64)),
+        ])
+    }
+
+    /// One human line, criterion-report style.
+    pub fn report(&self) -> String {
+        let d = |us: f64| fmt_dur(Duration::from_nanos((us * 1e3) as u64));
+        format!(
+            "{:>9.1} req/s  p50 {:>9} p99 {:>9}  mean batch {:>5.1}  {} bits/sample  ({}/{})",
+            self.throughput_rps,
+            d(self.p50_us),
+            d(self.p99_us),
+            self.mean_batch,
+            self.weight_bits_per_sample,
+            self.completed,
+            self.requested,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_digests_latencies_and_batches() {
+        let lats: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
+        let s = ServeStats::new(100, lats, vec![4, 4, 2], Duration::from_secs(2), 1234);
+        assert_eq!(s.completed, 100);
+        let sum = s.summary();
+        assert_eq!(sum.throughput_rps, 50.0);
+        assert_eq!(sum.p50_us, 50_000.0);
+        assert_eq!(sum.p99_us, 99_000.0);
+        assert_eq!(sum.max_us, 100_000.0);
+        assert_eq!(sum.batches, 3);
+        assert!((sum.mean_batch - 10.0 / 3.0).abs() < 1e-9);
+        assert_eq!(sum.max_batch_observed, 4);
+        assert_eq!(sum.weight_bits_per_sample, 1234);
+        let j = sum.to_json();
+        assert_eq!(j.req("completed").unwrap().as_usize().unwrap(), 100);
+        assert!(sum.report().contains("req/s"));
+    }
+
+    #[test]
+    fn empty_run_is_well_defined() {
+        let s = ServeStats::new(0, vec![], vec![], Duration::from_millis(1), 0);
+        let sum = s.summary();
+        assert_eq!(sum.completed, 0);
+        assert_eq!(sum.p50_us, 0.0);
+        assert_eq!(sum.mean_batch, 0.0);
+    }
+
+    #[test]
+    fn unsorted_latencies_are_sorted_on_ingest() {
+        let s = ServeStats::new(
+            3,
+            vec![Duration::from_millis(30), Duration::from_millis(10), Duration::from_millis(20)],
+            vec![3],
+            Duration::from_secs(1),
+            0,
+        );
+        assert!(s.latencies.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,286 @@
+//! The serving pool: batcher thread + scoped worker threads over one
+//! immutable [`ServableModel`], plus the closed-loop load harness behind
+//! `bsq-repro serve-bench` and `benches/serve.rs`.
+//!
+//! Topology (DESIGN.md §9):
+//!
+//! ```text
+//!  clients ──bounded mpsc──► batcher ──mpsc──► workers ──reply──► clients
+//!            (backpressure)   (deadline          (bit-plane GEMM,
+//!                              coalescing)        shared model)
+//! ```
+//!
+//! Everything runs inside one `std::thread::scope`, so the pool borrows the
+//! model and engine instead of cloning them, and shutdown is structural:
+//! clients finishing drops the request senders, the batcher flushes its
+//! final batch and drops the batch sender, the workers drain and exit —
+//! no stop flags, no leaked threads.
+
+use std::sync::mpsc::{channel, sync_channel, Sender};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::serve::batcher::{collect_batch, BatchPolicy};
+use crate::serve::registry::ServableModel;
+use crate::serve::stats::{ServeStats, ServeSummary};
+use crate::tensor::Tensor;
+use crate::util::Pcg32;
+
+/// Request-queue depth in batches: senders block (backpressure) once this
+/// many batches' worth of requests are already waiting.
+const QUEUE_BATCHES: usize = 4;
+
+/// Pool shape: worker count + the batcher's coalescing policy.
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+/// One enqueued inference request.
+pub struct ServeRequest {
+    pub client: usize,
+    pub index: usize,
+    /// Flattened `[h, w, c]` sample.
+    pub x: Vec<f32>,
+    pub enqueued: Instant,
+    reply: Sender<ServeResponse>,
+}
+
+/// One completed request.
+#[derive(Debug, Clone)]
+pub struct ServeResponse {
+    pub client: usize,
+    pub index: usize,
+    pub argmax: usize,
+    pub logits: Vec<f32>,
+    /// Queue-to-response latency.
+    pub latency: Duration,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+/// Deterministic synthetic sample for client `c`, request `i` — public so
+/// tests can regenerate a request's input and check the served logits
+/// against a direct single-sample inference.
+pub fn synthetic_input(seed: u64, client: usize, index: usize, elems: usize) -> Vec<f32> {
+    let mut rng = Pcg32::new(
+        seed ^ ((client as u64) << 40) ^ ((index as u64) << 8),
+        0x5e2e,
+    );
+    (0..elems).map(|_| rng.normal()).collect()
+}
+
+/// Execute one batch on the shared model and answer every rider.
+fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
+    let m = jobs.len();
+    let (h, w) = model.input_hw();
+    let c = model.in_ch();
+    let pix = h * w * c;
+    let mut xb = Vec::with_capacity(m * pix);
+    for j in &jobs {
+        if j.x.len() != pix {
+            bail!(
+                "request {}/{} carries {} elements, model wants {pix}",
+                j.client,
+                j.index,
+                j.x.len()
+            );
+        }
+        xb.extend_from_slice(&j.x);
+    }
+    let logits = model.infer(Tensor::new(vec![m, h, w, c], xb)?)?;
+    let classes = logits.shape()[1];
+    let data = logits.data();
+    for (ji, j) in jobs.into_iter().enumerate() {
+        let row = data[ji * classes..(ji + 1) * classes].to_vec();
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        let resp = ServeResponse {
+            client: j.client,
+            index: j.index,
+            argmax,
+            logits: row,
+            latency: j.enqueued.elapsed(),
+            batch_size: m,
+        };
+        let _ = j.reply.send(resp); // requester may have given up; not fatal
+    }
+    Ok(())
+}
+
+/// Drive `total` requests through a freshly spun-up pool from `clients`
+/// closed-loop client threads (each sends its next request only after the
+/// previous one answered — offered load matches capacity, the standard
+/// serving-bench discipline). Returns the run's stats plus every response,
+/// so callers can verify payloads; responses arrive in client-completion
+/// order, keyed by `(client, index)`.
+pub fn run_closed_loop(
+    model: &ServableModel,
+    cfg: &PoolConfig,
+    total: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<(ServeStats, Vec<ServeResponse>)> {
+    if total == 0 || clients == 0 {
+        bail!("closed loop needs at least one request and one client");
+    }
+    let workers = cfg.workers.max(1);
+    let policy = cfg.policy;
+    let pix = model.sample_elems();
+
+    let (req_tx, req_rx) = sync_channel::<ServeRequest>(policy.max_batch * QUEUE_BATCHES);
+    let (batch_tx, batch_rx) = channel::<Vec<ServeRequest>>();
+    let batch_rx = Mutex::new(batch_rx);
+    let batch_log: Mutex<Vec<usize>> = Mutex::new(Vec::new());
+    let failure: Mutex<Option<String>> = Mutex::new(None);
+
+    let mut responses: Vec<ServeResponse> = Vec::with_capacity(total);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        // Batcher: owns the request receiver; exits when every client
+        // sender is gone and the queue is drained.
+        s.spawn(move || {
+            while let Some(batch) = collect_batch(&req_rx, &policy) {
+                if batch_tx.send(batch).is_err() {
+                    break; // every worker died; nobody left to serve
+                }
+            }
+        });
+
+        // Workers: share the batch receiver behind a mutex (the lock is
+        // held across the blocking recv, which only serializes *waiting* —
+        // exactly one worker can pop the next batch either way).
+        //
+        // On a process_batch error the worker records the first failure and
+        // keeps *draining* batches without executing them: dropping a job
+        // drops its reply sender, which unblocks its client with an error,
+        // which stops that client from sending more — the structural
+        // shutdown then unwinds as usual. Breaking out instead would leave
+        // queued batches holding reply senders forever (the batch receiver
+        // lives in this frame, so the batcher's send never fails) and the
+        // clients would hang.
+        for _ in 0..workers {
+            let batch_rx = &batch_rx;
+            let batch_log = &batch_log;
+            let failure = &failure;
+            s.spawn(move || loop {
+                let got = batch_rx.lock().unwrap().recv();
+                let jobs = match got {
+                    Ok(jobs) => jobs,
+                    Err(_) => break, // batcher gone: shutdown
+                };
+                if failure.lock().unwrap().is_some() {
+                    continue; // failed pool: drain and drop to unblock clients
+                }
+                batch_log.lock().unwrap().push(jobs.len());
+                if let Err(e) = process_batch(model, jobs) {
+                    let mut slot = failure.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(format!("{e:#}"));
+                    }
+                }
+            });
+        }
+
+        // Closed-loop clients.
+        let mut handles = Vec::with_capacity(clients);
+        for c in 0..clients {
+            let tx = req_tx.clone();
+            handles.push(s.spawn(move || {
+                let quota = total / clients + usize::from(c < total % clients);
+                let mut done = Vec::with_capacity(quota);
+                for i in 0..quota {
+                    let (rtx, rrx) = channel();
+                    let req = ServeRequest {
+                        client: c,
+                        index: i,
+                        x: synthetic_input(seed, c, i, pix),
+                        enqueued: Instant::now(),
+                        reply: rtx,
+                    };
+                    if tx.send(req).is_err() {
+                        break; // pool tore down under us
+                    }
+                    match rrx.recv() {
+                        Ok(resp) => done.push(resp),
+                        Err(_) => break, // reply dropped: worker failed
+                    }
+                }
+                done
+            }));
+        }
+        drop(req_tx); // clients hold the only senders now
+        for h in handles {
+            responses.extend(h.join().expect("serve client thread panicked"));
+        }
+    });
+    let wall = t0.elapsed();
+
+    if let Some(msg) = failure.into_inner().unwrap() {
+        bail!("serve worker failed: {msg}");
+    }
+    if responses.len() != total {
+        bail!("closed loop completed {}/{} requests", responses.len(), total);
+    }
+    let latencies = responses.iter().map(|r| r.latency).collect();
+    let stats = ServeStats::new(
+        total,
+        latencies,
+        batch_log.into_inner().unwrap(),
+        wall,
+        model.weight_bits(),
+    );
+    Ok((stats, responses))
+}
+
+/// One cell of the serve-bench sweep grid.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub max_batch: usize,
+    pub workers: usize,
+    pub summary: ServeSummary,
+}
+
+impl SweepCell {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut kv = vec![
+            ("max_batch".to_string(), Json::num(self.max_batch as f64)),
+            ("workers".to_string(), Json::num(self.workers as f64)),
+        ];
+        if let Json::Obj(fields) = self.summary.to_json() {
+            kv.extend(fields);
+        }
+        Json::Obj(kv)
+    }
+}
+
+/// Closed-loop sweep over batch-size × worker-count cells (each cell a
+/// fresh pool; clients = 2×max_batch keep the queue fed so the batcher can
+/// actually fill batches).
+pub fn sweep(
+    model: &ServableModel,
+    batches: &[usize],
+    workers: &[usize],
+    requests: usize,
+    max_wait: Duration,
+    seed: u64,
+) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::with_capacity(batches.len() * workers.len());
+    for &w in workers {
+        for &b in batches {
+            let cfg = PoolConfig { workers: w, policy: BatchPolicy::new(b, max_wait) };
+            let clients = (2 * b.max(1)).min(requests.max(1));
+            let (stats, _) = run_closed_loop(model, &cfg, requests, clients, seed)?;
+            cells.push(SweepCell { max_batch: b.max(1), workers: w, summary: stats.summary() });
+        }
+    }
+    Ok(cells)
+}

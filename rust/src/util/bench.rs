@@ -233,6 +233,17 @@ impl JsonReport {
     }
 }
 
+/// Nearest-rank percentile of an ascending-sorted sample slice (`q` in
+/// [0, 1]; q = 0.5 is the median, q = 0.99 the p99). `None` on empty input.
+/// Shared by the bench harness and the serving stats (`serve::stats`).
+pub fn percentile<T: Copy>(sorted: &[T], q: f64) -> Option<T> {
+    if sorted.is_empty() {
+        return None;
+    }
+    let rank = (q.clamp(0.0, 1.0) * sorted.len() as f64).ceil() as usize;
+    Some(sorted[rank.max(1) - 1])
+}
+
 /// Prevent the optimizer from discarding a computed value.
 pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
@@ -305,6 +316,17 @@ mod tests {
         assert_eq!(results[0].req("name").unwrap().as_str().unwrap(), "spin2");
         assert!(results[0].req("ns_per_elem").unwrap().as_f64().unwrap() >= 0.0);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn percentile_nearest_rank() {
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile(&v, 0.5), Some(50));
+        assert_eq!(percentile(&v, 0.99), Some(99));
+        assert_eq!(percentile(&v, 1.0), Some(100));
+        assert_eq!(percentile(&v, 0.0), Some(1));
+        assert_eq!(percentile(&[7u64], 0.99), Some(7));
+        assert_eq!(percentile::<u64>(&[], 0.5), None);
     }
 
     #[test]

@@ -116,15 +116,60 @@ impl Args {
         }
     }
 
-    /// Error on any `--key` that no accessor consumed (typo guard).
+    /// Error on any `--key` that no accessor consumed (typo guard), with a
+    /// did-you-mean suggestion against the flags the command actually asked
+    /// for and the full list of those flags — a typo'd `serve-bench
+    /// --bathces 1,8` must fail loudly and helpfully, never run a sweep at
+    /// silently-defaulted settings.
     pub fn finish(self) -> Result<()> {
-        let unknown: Vec<_> =
+        let unknown: Vec<&String> =
             self.pairs.iter().map(|(k, _)| k).filter(|k| !self.used.contains(*k)).collect();
-        if !unknown.is_empty() {
-            bail!("unknown flags: {unknown:?}");
+        if unknown.is_empty() {
+            return Ok(());
         }
-        Ok(())
+        let described: Vec<String> = unknown
+            .iter()
+            .map(|k| match nearest(k.as_str(), &self.used) {
+                Some(sugg) => format!("--{k} (did you mean --{sugg}?)"),
+                None => format!("--{k}"),
+            })
+            .collect();
+        let known: Vec<String> = self.used.iter().map(|k| format!("--{k}")).collect();
+        if known.is_empty() {
+            bail!("unknown flags: {} (this command takes no flags)", described.join(", "));
+        }
+        bail!(
+            "unknown flags: {}; this command accepts: {}",
+            described.join(", "),
+            known.join(" ")
+        );
     }
+}
+
+/// Closest consumed flag within edit distance 2 (ties broken by the
+/// candidates' sorted order — `used` is a BTreeSet).
+fn nearest<'a>(key: &str, candidates: &'a BTreeSet<String>) -> Option<&'a str> {
+    candidates
+        .iter()
+        .map(|c| (edit_distance(key, c), c.as_str()))
+        .min_by_key(|&(d, _)| d)
+        .filter(|&(d, _)| d <= 2)
+        .map(|(_, c)| c)
+}
+
+/// Levenshtein distance, O(|a|·|b|) with a rolling row.
+fn edit_distance(a: &str, b: &str) -> usize {
+    let (a, b): (Vec<char>, Vec<char>) = (a.chars().collect(), b.chars().collect());
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, &ca) in a.iter().enumerate() {
+        let mut cur = vec![i + 1];
+        for (j, &cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            cur.push(sub.min(prev[j + 1] + 1).min(cur[j] + 1));
+        }
+        prev = cur;
+    }
+    prev[b.len()]
 }
 
 #[cfg(test)]
@@ -168,6 +213,44 @@ mod tests {
         let mut a = args("--model m --typo 3");
         let _ = a.opt_str("model");
         assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn unknown_flag_suggests_nearest_known() {
+        // the serve-bench regression: a typo'd multi-flag invocation must
+        // name the offender, suggest the intended flag, and list the rest
+        let mut a = args("serve-bench --bathces 1,8,32 --workers 1,4 --requests 64");
+        let _ = a.list::<usize>("batches");
+        let _ = a.list::<usize>("workers");
+        let _ = a.get_or("requests", 0usize);
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--bathces"), "{err}");
+        assert!(err.contains("did you mean --batches?"), "{err}");
+        assert!(err.contains("--workers") && err.contains("--requests"), "{err}");
+    }
+
+    #[test]
+    fn unknown_flag_without_close_match_lists_known() {
+        let mut a = args("--model m --zzzzzzzz 1");
+        let _ = a.opt_str("model");
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--zzzzzzzz") && !err.contains("did you mean"), "{err}");
+        assert!(err.contains("accepts: --model"), "{err}");
+    }
+
+    #[test]
+    fn flagless_command_reports_no_flags_taken() {
+        let a = args("info --bogus");
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("takes no flags"), "{err}");
+    }
+
+    #[test]
+    fn edit_distance_basics() {
+        assert_eq!(edit_distance("batches", "batches"), 0);
+        assert_eq!(edit_distance("bathces", "batches"), 2); // transposition = 2 edits
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(edit_distance("kitten", "sitting"), 3);
     }
 
     #[test]

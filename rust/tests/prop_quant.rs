@@ -1,0 +1,202 @@
+//! Seeded property-test harness for the quantization engine (no external
+//! crates — `util::rng::Pcg32` drives a hand-rolled generator).
+//!
+//! Two properties, ~200 randomized cases each, sweeping random shapes
+//! (including the 63/64/65/128/130 word boundaries), scales, continuous
+//! mid-training plane values, and plane-trim masks (bottom-packed *and*
+//! gapped):
+//!
+//! 1. **Packed ⇄ reference bit-identity** — every packed-engine routine
+//!    (`to_bitplanes`, `integer_codes`, `from_bitplanes`, `requantize`)
+//!    reproduces the retained scalar path in `quant::reference` bit for
+//!    bit: same codes, same planes, same masks, same scale *bits*.
+//! 2. **Re-quantization idempotence** — `requantize(requantize(x))` is a
+//!    no-op on the planes/mask and moves the scale by at most the one
+//!    f64→f32 store ulp (`requantize(requantize(x)) == requantize(x)`).
+//!
+//! Everything is keyed off fixed seeds, so two consecutive `cargo test`
+//! runs produce identical results — the CI gate runs this under
+//! `--release` to keep the sweeps fast.
+
+use bsq::quant::bitplane::integer_codes;
+use bsq::quant::{from_bitplanes, reference, requantize, to_bitplanes, BitRep, NB};
+use bsq::tensor::Tensor;
+use bsq::util::Pcg32;
+
+const CASES: usize = 200;
+
+/// Random element count, biased toward u64-word boundaries.
+fn random_elems(rng: &mut Pcg32) -> usize {
+    const EDGES: [usize; 9] = [1, 2, 7, 63, 64, 65, 127, 128, 130];
+    if rng.bool(0.4) {
+        EDGES[rng.below(EDGES.len() as u32) as usize]
+    } else {
+        1 + rng.below(200) as usize
+    }
+}
+
+/// Random 1-D or 2-D weight shape with the given element count flavor.
+fn random_shape(rng: &mut Pcg32) -> Vec<usize> {
+    let elems = random_elems(rng);
+    if rng.bool(0.3) && elems % 2 == 0 {
+        vec![2, elems / 2]
+    } else {
+        vec![elems]
+    }
+}
+
+/// A mid-training-flavored `BitRep`: quantized random weights whose planes
+/// are then perturbed into continuous `[0, 2]` values, with a random scale
+/// and (sometimes) a gapped plane mask or a dead layer.
+fn random_rep(rng: &mut Pcg32) -> BitRep {
+    let shape = random_shape(rng);
+    let n = 1 + rng.below(8) as usize;
+    let w = Tensor::randn(&shape, rng.range(0.05, 1.5), rng);
+    let mut rep = to_bitplanes(&w, n).unwrap();
+    for v in rep.wp.data_mut().iter_mut().chain(rep.wn.data_mut()) {
+        *v = (*v + rng.range(-0.45, 0.45)).clamp(0.0, 2.0);
+    }
+    rep.scale = rng.range(0.01, 4.0);
+    if rng.bool(0.15) {
+        // gapped plane-trim mask: any subset of planes may be active (at
+        // least one — an all-zero mask is the dead-layer no-op, covered
+        // separately below)
+        let mut m = vec![0.0f32; NB];
+        for slot in m.iter_mut() {
+            if rng.bool(0.5) {
+                *slot = 1.0;
+            }
+        }
+        if m.iter().all(|&x| x == 0.0) {
+            m[0] = 1.0;
+        }
+        rep.mask = Tensor::new(vec![NB], m).unwrap();
+    }
+    if rng.bool(0.04) {
+        // dead layer: every plane zero (the large-α pruning regime)
+        rep.wp.data_mut().fill(0.0);
+        rep.wn.data_mut().fill(0.0);
+    }
+    rep
+}
+
+fn assert_tensors_bit_equal(a: &Tensor, b: &Tensor, what: &str, case: usize) {
+    assert_eq!(a.shape(), b.shape(), "case {case}: {what} shapes");
+    for (i, (x, y)) in a.data().iter().zip(b.data()).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "case {case}: {what}[{i}]: {x} vs {y}");
+    }
+}
+
+#[test]
+fn prop_packed_matches_reference_bit_for_bit() {
+    let mut rng = Pcg32::seeded(0xB50);
+    for case in 0..CASES {
+        let rep = random_rep(&mut rng);
+
+        // code extraction
+        let packed_codes = integer_codes(&rep);
+        let ref_codes = reference::integer_codes(&rep);
+        assert_eq!(packed_codes, ref_codes, "case {case}: integer_codes");
+
+        // reconstruction
+        let packed_w = from_bitplanes(&rep);
+        let ref_w = reference::from_bitplanes(&rep);
+        assert_tensors_bit_equal(&packed_w, &ref_w, "from_bitplanes", case);
+
+        // re-quantization + precision adjustment
+        let mut packed_rep = rep.clone();
+        let mut ref_rep = rep.clone();
+        let pr = requantize(&mut packed_rep);
+        let rr = reference::requantize(&mut ref_rep);
+        assert_eq!(pr, rr, "case {case}: AdjustReport");
+        assert_tensors_bit_equal(&packed_rep.wp, &ref_rep.wp, "requantized wp", case);
+        assert_tensors_bit_equal(&packed_rep.wn, &ref_rep.wn, "requantized wn", case);
+        assert_tensors_bit_equal(&packed_rep.mask, &ref_rep.mask, "requantized mask", case);
+        assert_eq!(
+            packed_rep.scale.to_bits(),
+            ref_rep.scale.to_bits(),
+            "case {case}: requantized scale {} vs {}",
+            packed_rep.scale,
+            ref_rep.scale
+        );
+    }
+}
+
+#[test]
+fn prop_to_bitplanes_matches_reference() {
+    let mut rng = Pcg32::seeded(0x70B1);
+    for case in 0..CASES {
+        let shape = random_shape(&mut rng);
+        let n = 1 + rng.below(8) as usize;
+        let w = Tensor::randn(&shape, rng.range(0.05, 2.0), &mut rng);
+        let packed = to_bitplanes(&w, n).unwrap();
+        let refr = reference::to_bitplanes(&w, n).unwrap();
+        assert_tensors_bit_equal(&packed.wp, &refr.wp, "to_bitplanes wp", case);
+        assert_tensors_bit_equal(&packed.wn, &refr.wn, "to_bitplanes wn", case);
+        assert_tensors_bit_equal(&packed.mask, &refr.mask, "to_bitplanes mask", case);
+        assert_eq!(packed.scale.to_bits(), refr.scale.to_bits(), "case {case}: scale");
+    }
+}
+
+#[test]
+fn prop_requantize_idempotent() {
+    let mut rng = Pcg32::seeded(0x1DE0);
+    for case in 0..CASES {
+        let mut rep = random_rep(&mut rng);
+        requantize(&mut rep);
+        let wp = rep.wp.clone();
+        let wn = rep.wn.clone();
+        let mask = rep.mask.clone();
+        let scale = rep.scale;
+
+        let r2 = requantize(&mut rep);
+        assert_eq!(
+            r2.bits_before, r2.bits_after,
+            "case {case}: second adjustment changed precision"
+        );
+        assert_eq!(r2.lsb_trimmed, 0, "case {case}: second adjustment trimmed LSBs");
+        assert_tensors_bit_equal(&rep.wp, &wp, "idempotent wp", case);
+        assert_tensors_bit_equal(&rep.wn, &wn, "idempotent wn", case);
+        assert_tensors_bit_equal(&rep.mask, &mask, "idempotent mask", case);
+        // scale: the only rounding is the f64→f32 store (≤ 1 ulp per pass)
+        assert!(
+            (rep.scale - scale).abs() <= 1e-6 * scale.abs().max(1e-6),
+            "case {case}: scale drifted {} → {}",
+            scale,
+            rep.scale
+        );
+
+        // the adjusted layer is canonical: bottom-packed mask, binary
+        // planes, and (unless dead) an occupied LSB plane
+        let n_after = rep.bits();
+        let m = rep.mask.data();
+        assert!(m.iter().take(n_after).all(|&x| x == 1.0), "case {case}");
+        assert!(m.iter().skip(n_after).all(|&x| x == 0.0), "case {case}");
+        assert!(rep.wp.data().iter().all(|&v| v == 0.0 || v == 1.0), "case {case}");
+        assert!(rep.wn.data().iter().all(|&v| v == 0.0 || v == 1.0), "case {case}");
+        let packed = rep.pack();
+        assert_eq!(
+            packed.effective_bits(),
+            n_after,
+            "case {case}: effective bits disagree with the adjusted mask"
+        );
+    }
+}
+
+#[test]
+fn prop_requantize_preserves_represented_weight() {
+    // Paper Eq. 6: δ·V is invariant across the adjustment (codes shift
+    // exactly; only the f32 scale store rounds).
+    let mut rng = Pcg32::seeded(0xE06);
+    for case in 0..CASES {
+        let rep0 = random_rep(&mut rng);
+        let before = from_bitplanes(&rep0);
+        let mut rep = rep0;
+        requantize(&mut rep);
+        let after = from_bitplanes(&rep);
+        for (i, (a, b)) in before.data().iter().zip(after.data()).enumerate() {
+            let tol = 1e-5 * a.abs().max(1e-5);
+            assert!((a - b).abs() <= tol, "case {case} elem {i}: {a} vs {b}");
+        }
+    }
+}

@@ -1,0 +1,253 @@
+//! Integration tests for the serving layer and the guarantees it leans on:
+//! checkpoint round-trips are bit-exact, one engine/servable is safe to
+//! share across threads (bit-identical outputs), and the batcher → worker
+//! pool answers every request with exactly what a single-sample inference
+//! would have produced (batch-composition independence).
+//!
+//! Deterministic under fixed seeds; CI runs this under `--release`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bsq::data::{Corpus, CorpusSpec, Loader};
+use bsq::model::{checkpoint, ModelState};
+use bsq::runtime::{Engine, RunInputs};
+use bsq::serve::{
+    self, run_closed_loop, synthetic_input, BatchPolicy, PoolConfig, Registry, ServableModel,
+};
+use bsq::tensor::Tensor;
+use bsq::util::{Json, Pcg32};
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bsq_serve_e2e_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn tiny_servable(engine: &Engine, dir: &std::path::Path, seed: u64) -> ServableModel {
+    let ckpt = dir.join(format!("tiny_s{seed}.ckpt"));
+    serve::synthesize_quantized_checkpoint(engine, "tinynet", 6, seed, &ckpt).unwrap();
+    ServableModel::load(engine, "tinynet", &ckpt, 4, 8).unwrap()
+}
+
+fn random_batch(rng: &mut Pcg32, m: usize, sv: &ServableModel) -> Tensor {
+    let (h, w) = sv.input_hw();
+    let c = sv.in_ch();
+    let data: Vec<f32> = (0..m * h * w * c).map(|_| rng.normal()).collect();
+    Tensor::new(vec![m, h, w, c], data).unwrap()
+}
+
+#[test]
+fn checkpoint_roundtrip_is_bit_identical() {
+    let engine = Engine::native();
+    let dir = scratch("rt");
+    let path_a = dir.join("a.ckpt");
+    serve::synthesize_quantized_checkpoint(&engine, "tinynet", 6, 3, &path_a).unwrap();
+
+    // save → load → save: the reloaded state serves identically
+    let state = checkpoint::load(&path_a).unwrap();
+    let path_b = dir.join("b.ckpt");
+    checkpoint::save(&state, &path_b, &Json::obj(vec![("phase", Json::str("rt"))])).unwrap();
+
+    let reg = Registry::new(&engine);
+    let a = reg.load("tinynet", &path_a, 4, 8).unwrap();
+    let b = reg.load("tinynet", &path_b, 4, 8).unwrap();
+
+    // identical per-layer precision map
+    assert_eq!(a.layers, b.layers);
+    assert_eq!(a.weight_bits(), b.weight_bits());
+
+    // bit-identical logits through the serving path
+    let mut rng = Pcg32::seeded(5);
+    let x = random_batch(&mut rng, 4, a.as_ref());
+    let la = a.infer(x.clone()).unwrap();
+    let lb = b.infer(x).unwrap();
+    for (p, q) in la.data().iter().zip(lb.data()) {
+        assert_eq!(p.to_bits(), q.to_bits());
+    }
+
+    // and through the engine's q_eval artifact: same loss/acc bits
+    let man = engine.manifest("tinynet").unwrap();
+    let exe = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(64, 32));
+    let batch = Loader::eval(&corpus.test, man.batch).next_batch();
+    let inputs = RunInputs::default().vec("actlv", vec![255.0, 15.0, 255.0]);
+    let mut sa = checkpoint::load(&path_a).unwrap();
+    let mut sb = checkpoint::load(&path_b).unwrap();
+    let oa = exe.run(&mut sa, Some(&batch), &inputs).unwrap();
+    let ob = exe.run(&mut sb, Some(&batch), &inputs).unwrap();
+    for key in ["loss", "acc"] {
+        assert_eq!(
+            oa.metric(key).unwrap().to_bits(),
+            ob.metric(key).unwrap().to_bits(),
+            "{key} drifted across the checkpoint round-trip"
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn engine_eval_is_deterministic_across_eight_threads() {
+    // One Engine + one Arc<Executable> shared across 8 scoped threads, each
+    // evaluating the same batch on its own copy of the same state, must
+    // produce bit-identical metrics — the guard on the Arc<Executable>
+    // cache and the serve worker pool sharing one engine.
+    let engine = Engine::native();
+    let man = engine.manifest("tinynet").unwrap();
+    let exe = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+
+    let mut base = ModelState::init_fp(&man, 11);
+    base.to_bit_representation(&man, 8).unwrap();
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(64, 32));
+    let batch = Loader::eval(&corpus.test, man.batch).next_batch();
+    let inputs = RunInputs::default().vec("actlv", vec![255.0, 15.0, 255.0]);
+
+    let results: Vec<(u32, u32)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (exe, base, batch, inputs) = (&exe, &base, &batch, &inputs);
+                s.spawn(move || {
+                    let mut state = base.clone();
+                    let out = exe.run(&mut state, Some(batch), inputs).unwrap();
+                    (
+                        out.metric("loss").unwrap().to_bits(),
+                        out.metric("acc").unwrap().to_bits(),
+                    )
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(
+        results.windows(2).all(|w| w[0] == w[1]),
+        "threads disagreed: {results:?}"
+    );
+
+    // the second load of the same artifact is the same cached executable
+    let again = engine.load(man.artifact("q_eval_relu6").unwrap()).unwrap();
+    assert!(Arc::ptr_eq(&exe, &again));
+}
+
+#[test]
+fn servable_inference_is_batch_invariant_and_thread_deterministic() {
+    let engine = Engine::native();
+    let dir = scratch("inv");
+    let sv = tiny_servable(&engine, &dir, 7);
+    let mut rng = Pcg32::seeded(21);
+    let x = random_batch(&mut rng, 6, &sv);
+    let full = sv.infer(x.clone()).unwrap();
+    let classes = sv.num_classes();
+
+    // per-sample rows are independent of batch composition
+    let (h, w) = sv.input_hw();
+    let c = sv.in_ch();
+    let pix = h * w * c;
+    for i in 0..6 {
+        let xi =
+            Tensor::new(vec![1, h, w, c], x.data()[i * pix..(i + 1) * pix].to_vec()).unwrap();
+        let row = sv.infer(xi).unwrap();
+        for (a, b) in row.data().iter().zip(&full.data()[i * classes..(i + 1) * classes]) {
+            assert_eq!(a.to_bits(), b.to_bits(), "sample {i} changed with batch size");
+        }
+    }
+
+    // 8 threads over the same immutable servable agree bit for bit
+    let logits: Vec<Vec<u32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let (sv, x) = (&sv, &x);
+                s.spawn(move || {
+                    sv.infer(x.clone()).unwrap().data().iter().map(|v| v.to_bits()).collect()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert!(logits.windows(2).all(|w| w[0] == w[1]));
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn closed_loop_serving_answers_every_request_exactly() {
+    let engine = Engine::native();
+    let dir = scratch("loop");
+    let sv = tiny_servable(&engine, &dir, 9);
+    let seed = 13u64;
+    let total = 48;
+    let cfg = PoolConfig {
+        workers: 4,
+        policy: BatchPolicy::new(8, Duration::from_millis(200)),
+    };
+    let (stats, responses) = run_closed_loop(&sv, &cfg, total, 16, seed).unwrap();
+
+    assert_eq!(stats.completed, total);
+    assert_eq!(responses.len(), total);
+    assert_eq!(stats.batch_sizes.iter().sum::<usize>(), total);
+    assert!(stats.batch_sizes.iter().all(|&b| (1..=8).contains(&b)));
+    assert!(stats.wall > Duration::ZERO);
+    assert_eq!(stats.weight_bits_per_sample, sv.weight_bits());
+    let summary = stats.summary();
+    assert!(summary.throughput_rps > 0.0);
+    assert!(summary.p50_us > 0.0 && summary.p99_us >= summary.p50_us);
+
+    // every served answer equals a direct single-sample inference of the
+    // same request payload — batching must never change results
+    let (h, w) = sv.input_hw();
+    let c = sv.in_ch();
+    for r in &responses {
+        let x = synthetic_input(seed, r.client, r.index, sv.sample_elems());
+        let direct = sv.infer(Tensor::new(vec![1, h, w, c], x).unwrap()).unwrap();
+        assert_eq!(r.logits.len(), direct.len());
+        for (a, b) in r.logits.iter().zip(direct.data()) {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "request {}/{} served different logits than direct inference",
+                r.client,
+                r.index
+            );
+        }
+        let want = direct
+            .data()
+            .iter()
+            .enumerate()
+            .max_by(|p, q| p.1.total_cmp(q.1))
+            .map(|(i, _)| i)
+            .unwrap();
+        assert_eq!(r.argmax, want);
+    }
+
+    // two runs under the same seed serve identical payloads
+    let (_, responses2) = run_closed_loop(&sv, &cfg, total, 16, seed).unwrap();
+    let key = |r: &serve::ServeResponse| (r.client, r.index);
+    let mut a: Vec<_> = responses.iter().map(|r| (key(r), r.argmax)).collect();
+    let mut b: Vec<_> = responses2.iter().map(|r| (key(r), r.argmax)).collect();
+    a.sort();
+    b.sort();
+    assert_eq!(a, b);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn sweep_covers_grid_and_records_full_completion() {
+    let engine = Engine::native();
+    let dir = scratch("sweep");
+    let sv = tiny_servable(&engine, &dir, 1);
+    let cells =
+        serve::sweep(&sv, &[1, 4], &[1, 2], 24, Duration::from_millis(5), 0).unwrap();
+    assert_eq!(cells.len(), 4);
+    for cell in &cells {
+        assert_eq!(cell.summary.completed, 24);
+        assert!(cell.summary.throughput_rps > 0.0);
+        assert!(cell.summary.max_batch_observed <= cell.max_batch);
+    }
+    let json = serve::sweep_json(&sv, &cells);
+    assert_eq!(json.req("target").unwrap().as_str().unwrap(), "serve");
+    assert_eq!(json.req("cells").unwrap().as_arr().unwrap().len(), 4);
+    assert_eq!(json.req("layers").unwrap().as_arr().unwrap().len(), 4);
+    // speedup keys exist per worker count (batch 4 over batch 1)
+    let sp = json.req("speedups").unwrap().as_obj().unwrap();
+    assert_eq!(sp.len(), 2);
+    std::fs::remove_dir_all(dir).ok();
+}
