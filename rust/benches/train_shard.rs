@@ -1,0 +1,78 @@
+//! Data-parallel shard scaling of the native train step: shards ∈
+//! {1, 2, 4, 8} over the synthetic corpora, fp and BSQ entries, on the
+//! small (tinynet) and medium (resnet20 / CIFAR-profile) models.
+//!
+//! Training results are bit-identical at every shard count (see
+//! `tests/shard_train.rs`), so the only question this answers is wall
+//! clock: the `speedup_over_1shard` map in `BENCH_train_shard.json` is the
+//! record EXPERIMENTS.md §Shard-scaling tracks, and CI's bench gate diffs
+//! the smoke version against `ci/baselines/`.
+
+use bsq::coordinator::corpus_for_model;
+use bsq::data::Loader;
+use bsq::model::{momentum_slots, ModelState};
+use bsq::runtime::{Engine, RunInputs};
+use bsq::util::bench::{Bench, JsonReport};
+use bsq::util::json::Json;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+    let mut report = JsonReport::new("train_shard");
+    let mut speedups: Vec<(String, Json)> = Vec::new();
+    println!("== train_shard: data-parallel scaling of the native train step ==");
+
+    for (model, entry) in [
+        ("tinynet", "fp_train_relu6"),
+        ("tinynet", "bsq_train_relu6"),
+        ("resnet20", "fp_train_relu6"),
+        ("resnet20", "bsq_train_relu6"),
+    ] {
+        let mut base_mean: Option<f64> = None;
+        for &shards in &SHARD_COUNTS {
+            let engine = Engine::native_with_shards(shards);
+            let man = engine.manifest(model)?;
+            let exe = engine.load(man.artifact(entry)?)?;
+
+            let spec = corpus_for_model(model, 0).with_sizes(man.batch * 2, man.batch);
+            let corpus = bsq::data::Corpus::generate(spec);
+            let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 1);
+            let batch = loader.next_batch();
+
+            let mut state = ModelState::init_fp(&man, 0);
+            if entry.starts_with("bsq") {
+                state.to_bit_representation(&man, 8)?;
+            }
+            state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+            let inputs = RunInputs::default()
+                .hyper("lr", 0.05)
+                .hyper("wd", 1e-4)
+                .hyper("alpha", 1e-3)
+                .vec("regw", vec![1.0; man.qlayers.len()])
+                .vec("actlv", vec![15.0; man.act_sites.len()]);
+
+            let label = format!("{model}/{entry}/shards{shards}");
+            let s = bench.run_elems(&label, man.batch as u64, || {
+                exe.run(&mut state, Some(&batch), &inputs).unwrap();
+            });
+            report.push(&s);
+            let mean = s.mean.as_secs_f64();
+            let speedup = match base_mean {
+                None => {
+                    base_mean = Some(mean);
+                    1.0
+                }
+                Some(base) => base / mean,
+            };
+            println!("{}  ({speedup:.2}x over 1 shard)", s.report());
+            speedups.push((label, Json::num(speedup)));
+        }
+    }
+
+    report.extra("speedup_over_1shard", Json::Obj(speedups));
+    report.extra("host_parallelism", Json::num(bsq::tensor::gemm::max_parallelism() as f64));
+    let path = report.write()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -383,7 +383,7 @@ pub fn requantize_all(session: &Session, state: &mut ModelState) -> Result<()> {
         .unwrap_or(1)
         .min(reps.len())
         .max(1);
-    let chunk = (reps.len() + workers - 1) / workers;
+    let chunk = reps.len().div_ceil(workers);
     if chunk > 0 {
         std::thread::scope(|s| {
             for part in reps.chunks_mut(chunk) {
@@ -481,6 +481,11 @@ pub fn run_bsq(engine: &Engine, cfg: &BsqConfig) -> Result<BsqOutcome> {
         bail!("PACT artifacts are lowered for resnet20 only (act_bits {} < 4)", cfg.act_bits);
     }
     let session = Session::open(engine, &cfg.model, cfg.train_size, cfg.test_size, cfg.seed)?;
+    log::info!(
+        "train steps fan across {} data-parallel shard(s); results are \
+         shard-count invariant",
+        session.shards()
+    );
     let mut history = History::default();
 
     let state = pretrain(&session, cfg, &mut history)?;

@@ -42,6 +42,13 @@ impl<'e> Session<'e> {
         self.engine.load(self.man.artifact(name)?)
     }
 
+    /// Resolved data-parallel shard count every train step of this session
+    /// fans across (native backend; 1 on PJRT). Purely a throughput knob:
+    /// training results are bit-identical at any count.
+    pub fn shards(&self) -> usize {
+        self.engine.shards()
+    }
+
     /// Per-site activation level vector (2^a − 1): the paper pins the first
     /// and last sites to `first_last` bits (8 on CIFAR/ResNet; pass the same
     /// value as `bits` for Inception's uniform 6-bit setting). `bits == 0`
@@ -99,6 +106,11 @@ pub struct EpochMetrics {
 }
 
 /// Run one epoch of a train artifact over the loader.
+///
+/// On the native backend each `exe.run` is a data-parallel sharded step
+/// (`runtime::native::shard`): the minibatch fans across the engine's shard
+/// count and the gradients come back through the deterministic fixed-order
+/// tree reduce, so the epoch's numbers do not depend on the shard count.
 pub fn train_epoch(
     exe: &Executable,
     loader: &mut Loader,

@@ -9,14 +9,22 @@
 //!   info        list models/artifacts and their shapes; with --checkpoint,
 //!               the serving registry's per-layer effective-precision map
 //!   serve-bench closed-loop batched-serving sweep → BENCH_serve.json
+//!   bench-diff  compare two BENCH_*.json records, exit non-zero on a
+//!               regression past --tolerance-pct (CI's bench gate)
+//!
+//! Training commands take `--shards N` (0 = auto: available parallelism) —
+//! the native train step fans each minibatch across N data-parallel shards
+//! with bit-identical results at any N (DESIGN.md §10).
 //!
 //! Examples:
-//!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4
+//!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4 --shards 4
 //!   bsq-repro experiment table1 --alphas 3e-3,5e-3,2e-2
 //!   bsq-repro experiment all --epochs-scale 0.5
 //!   bsq-repro hawq --model resnet20
 //!   bsq-repro serve-bench --model tinynet --batches 1,8,32 --workers 1,4
 //!   bsq-repro info --model tinynet --checkpoint results/ckpt/serve.ckpt
+//!   bsq-repro bench-diff ci/baselines/BENCH_gemm.smoke.json \
+//!       rust/BENCH_gemm.smoke.json --tolerance-pct 25
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -41,7 +49,7 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench> [flags]\n\
+        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench|bench-diff> [flags]\n\
          run `bsq-repro <cmd> --help` conceptually via README.md §CLI"
     );
     std::process::exit(2);
@@ -61,8 +69,17 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(args),
         "info" => cmd_info(args),
         "serve-bench" => cmd_serve_bench(args),
+        "bench-diff" => cmd_bench_diff(args),
         _ => usage(),
     }
+}
+
+/// Engine for a training command: CPU backend with the `--shards` knob
+/// applied (0 = auto: available parallelism; results are shard-count
+/// invariant, so this only trades threads for wall clock).
+fn training_engine(args: &mut Args) -> Result<Engine> {
+    let shards: usize = args.get_or("shards", 0)?;
+    Ok(Engine::cpu()?.with_shards(shards))
 }
 
 fn bsq_cfg_from_args(args: &mut Args) -> Result<BsqConfig> {
@@ -94,8 +111,8 @@ fn bsq_cfg_from_args(args: &mut Args) -> Result<BsqConfig> {
 fn cmd_bsq(mut args: Args) -> Result<()> {
     let cfg = bsq_cfg_from_args(&mut args)?;
     let out = args.str_or("out", "results/bsq_run.json")?;
+    let engine = training_engine(&mut args)?;
     args.finish()?;
-    let engine = Engine::cpu()?;
     let outcome = run_bsq(&engine, &cfg)?;
     println!("{}", outcome.scheme);
     println!(
@@ -118,9 +135,9 @@ fn cmd_dorefa(mut args: Args) -> Result<()> {
     let train_size: usize = args.get_or("train-size", 1024)?;
     let test_size: usize = args.get_or("test-size", 512)?;
     let seed: u64 = args.get_or("seed", 0)?;
+    let engine = training_engine(&mut args)?;
     args.finish()?;
 
-    let engine = Engine::cpu()?;
     let session = Session::open(&engine, &model, train_size, test_size, seed)?;
     let names: Vec<(String, usize)> =
         session.man.qlayers.iter().map(|q| (q.name.clone(), q.params)).collect();
@@ -204,9 +221,36 @@ fn cmd_experiment(mut args: Args) -> Result<()> {
     if let Some(out) = args.opt_str("out-dir")? {
         opts.out_dir = out.into();
     }
+    let engine = training_engine(&mut args)?;
     args.finish()?;
-    let engine = Engine::cpu()?;
     experiments::run(&engine, &id, &opts)
+}
+
+fn cmd_bench_diff(mut args: Args) -> Result<()> {
+    let baseline = args
+        .take_positional(1)
+        .context("usage: bsq-repro bench-diff <baseline.json> <current.json>")?;
+    let current = args
+        .take_positional(2)
+        .context("usage: bsq-repro bench-diff <baseline.json> <current.json>")?;
+    let tolerance: f64 = args.get_or("tolerance-pct", 25.0)?;
+    args.finish()?;
+    let report = bsq::util::benchdiff::compare_files(
+        std::path::Path::new(&baseline),
+        std::path::Path::new(&current),
+        tolerance,
+    )?;
+    print!("{}", report.table());
+    if report.failed() {
+        bail!(
+            "bench gate failed: {} regression(s) past +{tolerance}% and {} missing metric(s) \
+             against {baseline}",
+            report.regressions(),
+            report.missing.len()
+        );
+    }
+    println!("bench gate passed ({} metrics within +{tolerance}%)", report.rows.len());
+    Ok(())
 }
 
 /// Per-layer effective-precision table of a loaded servable — the

@@ -119,9 +119,45 @@ impl Engine {
         }
     }
 
-    /// The native host backend, explicitly.
+    /// The native host backend, explicitly (auto shard count).
     pub fn native() -> Engine {
         Engine { backend: Backend::Native(NativeBackend::new()), cache: Mutex::new(HashMap::new()) }
+    }
+
+    /// The native host backend with an explicit data-parallel shard count
+    /// for the training step (0 = auto). Any value produces bit-identical
+    /// training results — the knob only trades threads for wall clock.
+    pub fn native_with_shards(shards: usize) -> Engine {
+        Engine {
+            backend: Backend::Native(NativeBackend::with_shards(shards)),
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    /// Rebuild this engine with the given shard count (native backend only;
+    /// a PJRT engine is returned unchanged). The executable cache is
+    /// dropped so already-loaded artifacts pick the new count up.
+    pub fn with_shards(self, shards: usize) -> Engine {
+        match self.backend {
+            Backend::Native(_) => Engine::native_with_shards(shards),
+            backend => {
+                if shards != 0 {
+                    log::warn!(
+                        "--shards {shards} ignored: the PJRT backend owns its own parallelism"
+                    );
+                }
+                Engine { backend, cache: self.cache }
+            }
+        }
+    }
+
+    /// Resolved data-parallel shard count of the native training step
+    /// (1 on the PJRT path — the device owns its own parallelism).
+    pub fn shards(&self) -> usize {
+        match &self.backend {
+            Backend::Native(b) => crate::runtime::native::shard::resolve_shards(b.shards()),
+            Backend::Pjrt(_) => 1,
+        }
     }
 
     pub fn is_native(&self) -> bool {
@@ -174,7 +210,7 @@ impl Engine {
                 info!("compiled {} in {:.2}s", spec.name, t0.elapsed().as_secs_f64());
                 ExecImpl::Pjrt(exe)
             }
-            Backend::Native(_) => ExecImpl::Native(NativeExec::for_spec(spec)?),
+            Backend::Native(b) => ExecImpl::Native(NativeExec::for_spec(spec, b.shards())?),
         };
         let wrapped = Arc::new(Executable { imp, spec: spec.clone() });
         cache.insert(spec.file.clone(), wrapped.clone());
@@ -359,6 +395,16 @@ mod tests {
         let b = engine.load(spec).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "second load must hit the cache");
         assert_eq!(a.spec.name, "fp_train_relu6");
+    }
+
+    #[test]
+    fn shards_knob_resolves_and_survives_rebuild() {
+        let e = Engine::native_with_shards(3);
+        assert_eq!(e.shards(), 3);
+        let e = e.with_shards(5);
+        assert_eq!(e.shards(), 5);
+        // 0 = auto: resolves to at least one shard
+        assert!(Engine::native().shards() >= 1);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! [`Engine`]: crate::runtime::Engine
 
 pub mod models;
+pub mod shard;
 pub mod step;
 pub mod tape;
 
@@ -37,14 +38,28 @@ use self::step::{AMode, Entry, WMode};
 /// keys; nothing is read from disk).
 const NATIVE_ROOT: &str = "native";
 
-/// The native backend: stateless — models are a static registry and every
-/// executable is derived from its artifact spec.
+/// The native backend: models are a static registry and every executable is
+/// derived from its artifact spec. The one piece of configuration is the
+/// data-parallel shard count of the training step (`0` = auto: available
+/// parallelism) — results are bit-identical at any value, so the knob only
+/// trades threads for wall clock (DESIGN.md §10).
 #[derive(Debug, Default, Clone, Copy)]
-pub struct NativeBackend;
+pub struct NativeBackend {
+    shards: usize,
+}
 
 impl NativeBackend {
     pub fn new() -> NativeBackend {
-        NativeBackend
+        NativeBackend { shards: 0 }
+    }
+
+    pub fn with_shards(shards: usize) -> NativeBackend {
+        NativeBackend { shards }
+    }
+
+    /// Requested shard count (0 = auto).
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     /// Synthesize the manifest for `model` (the disk-artifact counterpart
@@ -55,14 +70,15 @@ impl NativeBackend {
 }
 
 /// A compiled-equivalent native executable: the model plus a validated
-/// entry point.
+/// entry point, carrying the backend's shard configuration.
 pub struct NativeExec {
     model: Arc<NativeModel>,
+    shards: usize,
 }
 
 impl NativeExec {
     /// Resolve the model + entry from a synthesized spec (`native/<m>/<e>`).
-    pub fn for_spec(spec: &ArtifactSpec) -> Result<NativeExec> {
+    pub fn for_spec(spec: &ArtifactSpec, shards: usize) -> Result<NativeExec> {
         let model_name = spec
             .file
             .parent()
@@ -71,7 +87,7 @@ impl NativeExec {
             .ok_or_else(|| anyhow!("not a native artifact path: {}", spec.file.display()))?;
         let model = models::get(model_name)?;
         Entry::parse(&spec.name)?; // fail at load time, not step time
-        Ok(NativeExec { model })
+        Ok(NativeExec { model, shards })
     }
 
     pub fn run(
@@ -81,7 +97,7 @@ impl NativeExec {
         batch: Option<&Batch>,
         inputs: &RunInputs,
     ) -> Result<RunOutputs> {
-        step::execute(&self.model, spec, state, batch, inputs)
+        step::execute(&self.model, spec, state, batch, inputs, self.shards)
     }
 }
 
@@ -400,7 +416,7 @@ mod tests {
     fn exec_resolves_model_from_spec_path() {
         let man = manifest_for("tinynet").unwrap();
         let spec = man.artifact("q_eval_relu6").unwrap();
-        let exe = NativeExec::for_spec(spec).unwrap();
+        let exe = NativeExec::for_spec(spec, 0).unwrap();
         assert_eq!(exe.model.name, "tinynet");
         let bogus = ArtifactSpec {
             name: "q_eval_relu6".into(),
@@ -408,6 +424,6 @@ mod tests {
             inputs: vec![],
             outputs: vec![],
         };
-        assert!(NativeExec::for_spec(&bogus).is_err());
+        assert!(NativeExec::for_spec(&bogus, 0).is_err());
     }
 }

@@ -1,0 +1,578 @@
+//! Data-parallel sharded training for the native backend (DESIGN.md §10).
+//!
+//! [`train_step`] splits each minibatch across `N` contiguous sample shards
+//! and runs the reverse-mode tape forward/backward per shard on scoped
+//! worker threads (the same `std::thread::scope` idiom as `serve::worker`
+//! and `tensor::gemm`). Every reduction that couples samples across the
+//! batch is computed at **per-sample granularity** and combined through a
+//! **deterministic fixed-order tree fold** ([`tree_fold`]) whose shape
+//! depends only on the global batch size — never on the shard count or on
+//! thread scheduling. Concretely:
+//!
+//! * per-row forward/backward kernels are already partition-invariant (the
+//!   blocked GEMM accumulates each output element in a fixed K order);
+//! * BN batch statistics and the BN-backward Σdy / Σdy·x̂ sums are
+//!   exchanged as per-sample f64 partials at lockstep barrier points;
+//! * leaf gradients (dW, db, dγ/dβ, dPACT) are deposited per sample and
+//!   tree-reduced on the coordinating thread before the unchanged
+//!   single-threaded STE mapping + B_GL regularizer + SGD tail.
+//!
+//! The single-shard path runs the *same* canonical reductions, so training
+//! is bit-identical at any shard count — the same bit-identity discipline
+//! `tests/packed_diff.rs` established for quantization, now guaranteed for
+//! the gradient step (asserted by `tests/shard_train.rs`).
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::Batch;
+use crate::model::state::ModelState;
+use crate::runtime::engine::{RunInputs, RunOutputs};
+use crate::runtime::manifest::ArtifactSpec;
+use crate::runtime::native::models::{self, NativeModel};
+use crate::runtime::native::step::{self, AMode, Fwd, WMode};
+use crate::runtime::native::tape::{backward_sharded, ShardHook, WeightRep};
+use crate::tensor::{gemm, IntTensor, Tensor};
+
+/// Sentinel message for workers unwound by a peer's failure; filtered when
+/// picking the error to report.
+const ABORTED: &str = "shard aborted by a peer worker";
+
+/// Resolve a requested shard count: 0 means "auto" (available parallelism).
+pub fn resolve_shards(requested: usize) -> usize {
+    if requested != 0 {
+        return requested;
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Contiguous, non-empty sample ranges covering `samples`. The effective
+/// shard count is `min(shards, samples)` — a batch smaller than the shard
+/// count must never spawn empty-range workers (they would deadlock the
+/// lockstep barriers and waste threads).
+pub fn shard_ranges(samples: usize, shards: usize) -> Vec<Range<usize>> {
+    let e = shards.max(1).min(samples.max(1));
+    let base = samples / e;
+    let rem = samples % e;
+    let mut ranges = Vec::with_capacity(e);
+    let mut start = 0usize;
+    for i in 0..e {
+        let len = base + usize::from(i < rem);
+        ranges.push(start..start + len);
+        start += len;
+    }
+    ranges
+}
+
+/// Deterministic fixed-order pairwise tree fold: level by level, adjacent
+/// items are combined `(0,1), (2,3), …` with an odd tail carried unchanged.
+/// The reduction shape depends only on `items.len()`, so any partition of
+/// the items across producers yields the same bits — unlike atomic or
+/// arrival-order accumulation. Returns `None` on empty input.
+pub fn tree_fold<T>(mut items: Vec<T>, mut combine: impl FnMut(&mut T, &T)) -> Option<T> {
+    while items.len() > 1 {
+        let mut next = Vec::with_capacity(items.len().div_ceil(2));
+        let mut it = items.into_iter();
+        while let Some(mut a) = it.next() {
+            if let Some(b) = it.next() {
+                combine(&mut a, &b);
+            }
+            next.push(a);
+        }
+        items = next;
+    }
+    items.pop()
+}
+
+fn tree_add_f64(items: Vec<Vec<f64>>) -> Option<Vec<f64>> {
+    tree_fold(items, |a, b| {
+        for (x, y) in a.iter_mut().zip(b) {
+            *x += y;
+        }
+    })
+}
+
+fn tree_add_tensors(items: Vec<Tensor>) -> Option<Tensor> {
+    tree_fold(items, |a, b| {
+        for (x, &y) in a.data_mut().iter_mut().zip(b.data()) {
+            *x += y;
+        }
+    })
+}
+
+// -- abortable lockstep barrier ----------------------------------------------
+
+/// A reusable barrier whose waiters can be released with an error when a
+/// peer fails: a worker hitting a `Result::Err` between sync points must
+/// not leave the others blocked forever (std's `Barrier` has no unhappy
+/// path).
+struct AbortBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    parties: usize,
+}
+
+struct BarrierState {
+    arrived: usize,
+    generation: u64,
+    aborted: bool,
+}
+
+impl AbortBarrier {
+    fn new(parties: usize) -> AbortBarrier {
+        AbortBarrier {
+            state: Mutex::new(BarrierState { arrived: 0, generation: 0, aborted: false }),
+            cv: Condvar::new(),
+            parties,
+        }
+    }
+
+    fn wait(&self) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.aborted {
+            bail!("{ABORTED}");
+        }
+        st.arrived += 1;
+        if st.arrived == self.parties {
+            st.arrived = 0;
+            st.generation += 1;
+            self.cv.notify_all();
+            return Ok(());
+        }
+        let gen = st.generation;
+        st = self.cv.wait_while(st, |s| s.generation == gen && !s.aborted).unwrap();
+        if st.aborted {
+            bail!("{ABORTED}");
+        }
+        Ok(())
+    }
+
+    /// Sticky: every current and future waiter errors out.
+    fn abort(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.aborted = true;
+        self.cv.notify_all();
+    }
+}
+
+// -- shared reduction state ---------------------------------------------------
+
+/// Exchange buffer for in-flight per-sample partials (BN statistics and
+/// BN-backward sums): one slot per global sample, reused across sync
+/// points — all workers hit the same sequence of exchanges because every
+/// shard executes the same graph.
+struct SyncShared {
+    barrier: AbortBarrier,
+    slots: Mutex<Vec<Option<Vec<f64>>>>,
+    /// The current round's folded result, computed once by whichever worker
+    /// reaches it first (keyed by round number so no clearing pass is
+    /// needed); the rest clone the channel-sized result instead of each
+    /// redundantly re-folding all N slots under the lock.
+    folded: Mutex<(u64, Vec<f64>)>,
+}
+
+impl SyncShared {
+    fn new(parties: usize, samples: usize) -> SyncShared {
+        SyncShared {
+            barrier: AbortBarrier::new(parties),
+            slots: Mutex::new(vec![None; samples]),
+            folded: Mutex::new((0, Vec::new())),
+        }
+    }
+}
+
+/// One worker's view of the shared reduction state — the [`ShardHook`] the
+/// tape calls into. Leaf-gradient deposits buffer in a worker-local map
+/// (no cross-thread contention — shards own disjoint sample ranges; the
+/// coordinating thread merges and reduces after joins); only the BN
+/// exchanges synchronize.
+struct WorkerCtx<'a> {
+    shared: &'a SyncShared,
+    range: Range<usize>,
+    total: usize,
+    /// Exchange round counter; every worker runs the same sequence of
+    /// exchanges, so the counters agree by construction.
+    round: Cell<u64>,
+    /// Per-key `(global sample, partial)` deposits from this shard.
+    local_grads: RefCell<BTreeMap<String, Vec<(usize, Tensor)>>>,
+}
+
+impl<'a> WorkerCtx<'a> {
+    fn new(shared: &'a SyncShared, range: Range<usize>, total: usize) -> WorkerCtx<'a> {
+        WorkerCtx {
+            shared,
+            range,
+            total,
+            round: Cell::new(0),
+            local_grads: RefCell::new(BTreeMap::new()),
+        }
+    }
+
+    fn abort(&self) {
+        self.shared.barrier.abort();
+    }
+
+    fn take_deposits(&self) -> BTreeMap<String, Vec<(usize, Tensor)>> {
+        std::mem::take(&mut *self.local_grads.borrow_mut())
+    }
+}
+
+impl ShardHook for WorkerCtx<'_> {
+    fn global_samples(&self) -> usize {
+        self.total
+    }
+
+    fn sample_base(&self) -> usize {
+        self.range.start
+    }
+
+    fn exchange(&self, local: Vec<Vec<f64>>) -> Result<Vec<f64>> {
+        if local.len() != self.range.len() {
+            self.abort();
+            bail!("exchange: {} partials for a {}-sample shard", local.len(), self.range.len());
+        }
+        {
+            let mut slots = self.shared.slots.lock().unwrap();
+            for (i, v) in local.into_iter().enumerate() {
+                slots[self.range.start + i] = Some(v);
+            }
+        }
+        self.shared.barrier.wait()?; // every shard's partials are visible
+        let round = self.round.get() + 1;
+        self.round.set(round);
+        let folded = {
+            let mut cache = self.shared.folded.lock().unwrap();
+            if cache.0 != round {
+                // First worker past the barrier folds for everyone. Taking
+                // (not cloning) the slots also clears them, so the
+                // empty-slot guard stays meaningful on every round.
+                let mut slots = self.shared.slots.lock().unwrap();
+                let all: Option<Vec<Vec<f64>>> = slots.iter_mut().map(Option::take).collect();
+                match all.and_then(tree_add_f64) {
+                    Some(v) => *cache = (round, v),
+                    None => {
+                        self.abort();
+                        bail!("exchange: a sample slot was left empty");
+                    }
+                }
+            }
+            cache.1.clone()
+        };
+        self.shared.barrier.wait()?; // all read before the slots are reused
+        Ok(folded)
+    }
+
+    fn deposit(&self, key: String, sample: usize, grad: Tensor) {
+        self.local_grads.borrow_mut().entry(key).or_default().push((sample, grad));
+    }
+}
+
+/// Global biased batch statistics from per-sample partials: the sharded
+/// twin of `tape::batch_stats`, two fixed-order exchanges (channel sums,
+/// then mean-centered squares) so mean and variance depend only on the
+/// global batch.
+pub(crate) fn sharded_batch_stats(
+    hook: &dyn ShardHook,
+    x: &Tensor,
+) -> Result<(Vec<f32>, Vec<f32>)> {
+    let c = *x.shape().last().unwrap_or(&1);
+    let n_local = x.shape().first().copied().unwrap_or(1).max(1);
+    let r_per = x.len() / c.max(1) / n_local;
+    let rows_g = (r_per * hook.global_samples()) as f64;
+
+    let mut sums = Vec::with_capacity(n_local);
+    for si in 0..n_local {
+        let mut s = vec![0.0f64; c];
+        for row in x.data()[si * r_per * c..(si + 1) * r_per * c].chunks(c) {
+            for (a, &v) in s.iter_mut().zip(row) {
+                *a += v as f64;
+            }
+        }
+        sums.push(s);
+    }
+    let mean: Vec<f64> = hook.exchange(sums)?.into_iter().map(|s| s / rows_g).collect();
+
+    let mut sqs = Vec::with_capacity(n_local);
+    for si in 0..n_local {
+        let mut s = vec![0.0f64; c];
+        for row in x.data()[si * r_per * c..(si + 1) * r_per * c].chunks(c) {
+            for (a, (&v, m)) in s.iter_mut().zip(row.iter().zip(&mean)) {
+                let d = v as f64 - m;
+                *a += d * d;
+            }
+        }
+        sqs.push(s);
+    }
+    let var: Vec<f64> = hook.exchange(sqs)?.into_iter().map(|s| s / rows_g).collect();
+
+    Ok((
+        mean.into_iter().map(|v| v as f32).collect(),
+        var.into_iter().map(|v| v as f32).collect(),
+    ))
+}
+
+// -- the sharded train step ---------------------------------------------------
+
+struct WorkerOut {
+    /// Per-sample CE terms, in shard order.
+    ce_rows: Vec<f64>,
+    correct: usize,
+    /// BN running-stat updates (identical on every worker — computed from
+    /// the exchanged global statistics).
+    new_stats: Vec<(String, Vec<f32>, Vec<f32>)>,
+    /// This shard's per-key `(global sample, partial)` leaf gradients.
+    deposits: BTreeMap<String, Vec<(usize, Tensor)>>,
+}
+
+fn clone_reps(reps: &BTreeMap<String, WeightRep>) -> BTreeMap<String, WeightRep> {
+    reps.iter()
+        .map(|(k, v)| {
+            let rep = match v {
+                WeightRep::Dense(t) => WeightRep::Dense(t.clone()),
+                WeightRep::Planes(p) => WeightRep::Planes(p.clone()),
+            };
+            (k.clone(), rep)
+        })
+        .collect()
+}
+
+fn slice_batch(b: &Batch, r: &Range<usize>) -> Result<Batch> {
+    let s = b.x.shape();
+    let pix: usize = s[1..].iter().product();
+    let mut shape = s.to_vec();
+    shape[0] = r.len();
+    Ok(Batch {
+        x: Tensor::new(shape, b.x.data()[r.start * pix..r.end * pix].to_vec())?,
+        y: IntTensor::new(vec![r.len()], b.y.data()[r.start..r.end].to_vec())?,
+    })
+}
+
+fn worker_body(
+    model: &NativeModel,
+    state: &ModelState,
+    reps: BTreeMap<String, WeightRep>,
+    actlv: Vec<f32>,
+    am: AMode,
+    sub: Batch,
+    ctx: &WorkerCtx,
+) -> Result<WorkerOut> {
+    let mut fwd = Fwd::with_hook(model, state, reps, actlv, am, true, Some(ctx));
+    let x = fwd.tape.input(sub.x);
+    let logits = models::forward(model, &mut fwd, x)?;
+    let (tape, new_stats) = fwd.into_tape_and_stats();
+    let (ce_rows, correct, dlogits) =
+        step::ce_rows(tape.value(logits), sub.y.data(), ctx.global_samples())?;
+    backward_sharded(&tape, logits, dlogits, ctx)?;
+    Ok(WorkerOut { ce_rows, correct, new_stats, deposits: ctx.take_deposits() })
+}
+
+/// One data-parallel training step: the native backend's train entry point
+/// (`fp_train` / `bsq_train` / `dorefa_train` / `lsq_train`), bit-identical
+/// at any `shards` (0 = auto: available parallelism).
+pub(crate) fn train_step(
+    model: &NativeModel,
+    spec: &ArtifactSpec,
+    state: &mut ModelState,
+    batch: Option<&Batch>,
+    inputs: &RunInputs,
+    wm: WMode,
+    am: AMode,
+    shards: usize,
+) -> Result<RunOutputs> {
+    let b = step::need_batch(batch)?;
+    let lr = step::hyper(inputs, "lr")?;
+    let wd = step::hyper(inputs, "wd")?;
+    let actlv = step::vec_input(inputs, "actlv", model.act_sites.len())?;
+    let wlv = match wm {
+        WMode::Dorefa | WMode::Lsq => Some(step::vec_input(inputs, "wlv", model.qlayers.len())?),
+        _ => None,
+    };
+    let (alpha, regw) = if wm == WMode::Bit {
+        (step::hyper(inputs, "alpha")?, step::vec_input(inputs, "regw", model.qlayers.len())?)
+    } else {
+        (0.0, Vec::new())
+    };
+
+    let n = *b.x.shape().first().unwrap_or(&0);
+    if n == 0 {
+        bail!("train step on an empty batch");
+    }
+    let ranges = shard_ranges(n, resolve_shards(shards));
+    let e = ranges.len();
+
+    // One weight preparation for every shard (the reps are consumed by the
+    // forward graph, so each worker gets its own clone).
+    let (reps, gmaps) = step::prepare_weights(model, state, wm, wlv.as_deref(), false)?;
+
+    let shared = SyncShared::new(e, n);
+    // Keep the inner GEMM fan-out within the host budget: E shard workers
+    // each get their slice of the cores instead of 16 threads apiece.
+    let gemm_cap = (gemm::max_parallelism() / e).max(1);
+
+    // Slice every sub-batch before any worker exists: a failure here must
+    // never strand already-running peers at a barrier.
+    let subs: Vec<Batch> = ranges.iter().map(|r| slice_batch(b, r)).collect::<Result<_>>()?;
+
+    let state_ref: &ModelState = state;
+    let mut outs: Vec<Result<WorkerOut>> = Vec::with_capacity(e);
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(e);
+        for (r, sub) in ranges.iter().zip(subs) {
+            let reps_w = clone_reps(&reps);
+            let actlv_w = actlv.clone();
+            let ctx = WorkerCtx::new(&shared, r.clone(), n);
+            handles.push(s.spawn(move || {
+                gemm::set_thread_parallelism_cap(gemm_cap);
+                let out = catch_unwind(AssertUnwindSafe(|| {
+                    worker_body(model, state_ref, reps_w, actlv_w, am, sub, &ctx)
+                }))
+                .unwrap_or_else(|_| Err(anyhow!("shard worker panicked")));
+                if out.is_err() {
+                    ctx.abort(); // release peers blocked at a barrier
+                }
+                out
+            }));
+        }
+        for h in handles {
+            outs.push(h.join().expect("shard worker thread vanished"));
+        }
+    });
+
+    // Prefer the root-cause error over the peers' abort notifications.
+    if outs.iter().any(|o| o.is_err()) {
+        let mut aborted_only = None;
+        for o in outs {
+            if let Err(err) = o {
+                if err.to_string().contains(ABORTED) {
+                    aborted_only.get_or_insert(err);
+                } else {
+                    return Err(err);
+                }
+            }
+        }
+        return Err(aborted_only.unwrap());
+    }
+    let mut results: Vec<WorkerOut> = outs.into_iter().map(|o| o.unwrap()).collect();
+
+    // Metrics: canonical tree fold over the per-sample CE terms; the
+    // correct-prediction count is an exact integer sum.
+    let mut ce_rows: Vec<f64> = Vec::with_capacity(n);
+    let mut correct = 0usize;
+    for r in &results {
+        ce_rows.extend(&r.ce_rows);
+        correct += r.correct;
+    }
+    let ce = (tree_fold(ce_rows, |a, b| *a += *b).unwrap_or(0.0) / n as f64) as f32;
+    let acc = correct as f32 / n as f32;
+
+    // Leaf gradients: merge every shard's deposits into per-key slot
+    // vectors (indexed by global sample — shards own disjoint ranges),
+    // then fixed-order tree reduce.
+    let mut slots_by_key: BTreeMap<String, Vec<Option<Tensor>>> = BTreeMap::new();
+    for r in &mut results {
+        for (key, parts) in std::mem::take(&mut r.deposits) {
+            let slots = slots_by_key.entry(key).or_insert_with(|| vec![None; n]);
+            for (sample, t) in parts {
+                slots[sample] = Some(t);
+            }
+        }
+    }
+    let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
+    for (key, slots) in slots_by_key {
+        let parts: Vec<Tensor> = slots
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| t.ok_or_else(|| anyhow!("no gradient partial for {key:?} sample {i}")))
+            .collect::<Result<_>>()?;
+        let total =
+            tree_add_tensors(parts).ok_or_else(|| anyhow!("empty partial set for {key:?}"))?;
+        grads.insert(key, total);
+    }
+
+    // From here on the step is single-threaded and identical to the
+    // pre-sharding implementation: STE mapping, regularizer, SGD, BN
+    // running-stat writeback.
+    step::map_weight_grads(model, gmaps, &mut grads)?;
+    let (bgl, loss) = if wm == WMode::Bit {
+        let (bgl, bgl_grads) = step::bgl_and_grads(model, state, &regw, alpha)?;
+        for (k, t) in bgl_grads {
+            step::accumulate(&mut grads, k, t);
+        }
+        (bgl, ce + alpha * bgl)
+    } else {
+        (0.0, ce)
+    };
+    step::sgd_update(state, spec, &mut grads, lr, wd)?;
+    for (name, m, v) in results.remove(0).new_stats {
+        state.get_mut(&format!("bn:{name}/mean"))?.data_mut().copy_from_slice(&m);
+        state.get_mut(&format!("bn:{name}/var"))?.data_mut().copy_from_slice(&v);
+    }
+
+    let mut out = RunOutputs::default();
+    out.metrics.insert("loss".into(), loss);
+    out.metrics.insert("ce".into(), ce);
+    out.metrics.insert("acc".into(), acc);
+    if wm == WMode::Bit {
+        out.metrics.insert("bgl".into(), bgl);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_ranges_cover_contiguously_with_no_empties() {
+        for (samples, shards) in
+            [(16, 1), (16, 4), (7, 3), (1, 8), (5, 5), (5, 9), (32, 6), (3, 2)]
+        {
+            let ranges = shard_ranges(samples, shards);
+            assert_eq!(ranges.len(), shards.min(samples).max(1), "{samples}/{shards}");
+            let mut next = 0usize;
+            for r in &ranges {
+                assert!(!r.is_empty(), "{samples}/{shards}: empty range {r:?}");
+                assert_eq!(r.start, next);
+                next = r.end;
+            }
+            assert_eq!(next, samples);
+            // balanced within one sample
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (lo, hi) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(hi - lo <= 1, "{lens:?}");
+        }
+    }
+
+    #[test]
+    fn tree_fold_shape_depends_only_on_count() {
+        // 7 items: ((0+1)+(2+3)) + ((4+5)+6) under pairwise rounds
+        let order = tree_fold(
+            (0..7).map(|i| vec![i]).collect::<Vec<_>>(),
+            |a: &mut Vec<i32>, b: &Vec<i32>| {
+                let merged = [&a[..], &b[..]].concat();
+                *a = merged;
+            },
+        )
+        .unwrap();
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5, 6]);
+        assert!(tree_fold(Vec::<i32>::new(), |_, _| {}).is_none());
+        assert_eq!(tree_fold(vec![42], |_, _| unreachable!()), Some(42));
+    }
+
+    #[test]
+    fn abort_barrier_releases_waiters() {
+        let b = std::sync::Arc::new(AbortBarrier::new(2));
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || b2.wait());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        b.abort();
+        assert!(waiter.join().unwrap().is_err());
+        // sticky for late arrivals too
+        assert!(b.wait().is_err());
+    }
+}

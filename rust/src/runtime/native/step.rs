@@ -35,7 +35,10 @@ use crate::quant::bitplane::NB;
 use crate::runtime::engine::{RunInputs, RunOutputs};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::native::models::{self, NativeModel};
-use crate::runtime::native::tape::{backward, batch_stats, Tape, Var, WeightRep, BN_MOMENTUM};
+use crate::runtime::native::shard::{self, sharded_batch_stats};
+use crate::runtime::native::tape::{
+    backward, batch_stats, ShardHook, Tape, Var, WeightRep, BN_MOMENTUM,
+};
 use crate::tensor::gemm::BitPlaneMatrix;
 use crate::tensor::Tensor;
 
@@ -120,6 +123,10 @@ pub(crate) struct Fwd<'a> {
     amode: AMode,
     train: bool,
     site: usize,
+    /// Cross-shard reduction hook (data-parallel training): when set, BN
+    /// batch statistics come from the canonical per-sample exchange instead
+    /// of this shard's local rows.
+    hook: Option<&'a dyn ShardHook>,
     /// BN running-stat updates collected in train mode: (name, mean, var).
     pub new_stats: Vec<(String, Vec<f32>, Vec<f32>)>,
 }
@@ -133,6 +140,18 @@ impl<'a> Fwd<'a> {
         amode: AMode,
         train: bool,
     ) -> Fwd<'a> {
+        Fwd::with_hook(model, state, weights, actlv, amode, train, None)
+    }
+
+    pub(crate) fn with_hook(
+        model: &'a NativeModel,
+        state: &'a ModelState,
+        weights: BTreeMap<String, WeightRep>,
+        actlv: Vec<f32>,
+        amode: AMode,
+        train: bool,
+        hook: Option<&'a dyn ShardHook>,
+    ) -> Fwd<'a> {
         Fwd {
             tape: Tape::new(),
             model,
@@ -142,8 +161,14 @@ impl<'a> Fwd<'a> {
             amode,
             train,
             site: 0,
+            hook,
             new_stats: Vec::new(),
         }
+    }
+
+    /// Tear down into the recorded tape and the collected BN stat updates.
+    pub(crate) fn into_tape_and_stats(self) -> (Tape, Vec<(String, Vec<f32>, Vec<f32>)>) {
+        (self.tape, self.new_stats)
     }
 
     pub fn conv(&mut self, x: Var, name: &str, stride: usize) -> Result<Var> {
@@ -170,7 +195,10 @@ impl<'a> Fwd<'a> {
         let run_m = self.state.get(&format!("bn:{name}/mean"))?.data().to_vec();
         let run_v = self.state.get(&format!("bn:{name}/var"))?.data().to_vec();
         if self.train {
-            let (bm, bv) = batch_stats(self.tape.value(x));
+            let (bm, bv) = match self.hook {
+                Some(h) => sharded_batch_stats(h, self.tape.value(x))?,
+                None => batch_stats(self.tape.value(x)),
+            };
             let nm: Vec<f32> = run_m
                 .iter()
                 .zip(&bm)
@@ -264,7 +292,7 @@ impl<'a> Fwd<'a> {
 
 /// Resolve every quantized layer's effective weight for one pass, plus the
 /// map from effective-weight cotangents back to state keys.
-fn prepare_weights(
+pub(crate) fn prepare_weights(
     model: &NativeModel,
     state: &ModelState,
     wm: WMode,
@@ -424,7 +452,7 @@ impl SignumOrZero for f32 {
 }
 
 /// Map `weff:<layer>` cotangents onto state keys per the layer's STE rule.
-fn map_weight_grads(
+pub(crate) fn map_weight_grads(
     model: &NativeModel,
     gmaps: BTreeMap<String, WGradMap>,
     grads: &mut BTreeMap<String, Tensor>,
@@ -475,7 +503,7 @@ fn map_weight_grads(
     Ok(())
 }
 
-fn accumulate(grads: &mut BTreeMap<String, Tensor>, key: String, t: Tensor) {
+pub(crate) fn accumulate(grads: &mut BTreeMap<String, Tensor>, key: String, t: Tensor) {
     match grads.get_mut(&key) {
         Some(dst) => {
             for (a, &b) in dst.data_mut().iter_mut().zip(t.data()) {
@@ -490,15 +518,23 @@ fn accumulate(grads: &mut BTreeMap<String, Tensor>, key: String, t: Tensor) {
 
 // -- loss / regularizer ------------------------------------------------------
 
-/// Softmax CE + accuracy + dL/dlogits for L = mean CE.
-fn ce_acc_grad(logits: &Tensor, y: &[i32]) -> Result<(f32, f32, Tensor)> {
+/// Per-sample softmax-CE terms, correct-prediction count, and dL/dlogits
+/// for `L = (Σ ce_i) / n_global`. `n_global` is the full-batch sample count
+/// (equal to `y.len()` on the unsharded path; the data-parallel shards pass
+/// the global batch size so dL/dlogits carries the right mean factor while
+/// the CE terms stay sample-granular for the canonical reduce).
+pub(crate) fn ce_rows(
+    logits: &Tensor,
+    y: &[i32],
+    n_global: usize,
+) -> Result<(Vec<f64>, usize, Tensor)> {
     let s = logits.shape();
-    if s.len() != 2 || s[0] != y.len() {
-        bail!("logits {s:?} vs {} labels", y.len());
+    if s.len() != 2 || s[0] != y.len() || n_global == 0 {
+        bail!("logits {s:?} vs {} labels (global {n_global})", y.len());
     }
     let (n, c) = (s[0], s[1]);
     let mut dl = vec![0.0f32; n * c];
-    let mut ce = 0.0f64;
+    let mut ce = Vec::with_capacity(n);
     let mut correct = 0usize;
     for (i, (row, &yi)) in logits.data().chunks(c).zip(y).enumerate() {
         let yi = yi as usize;
@@ -508,29 +544,34 @@ fn ce_acc_grad(logits: &Tensor, y: &[i32]) -> Result<(f32, f32, Tensor)> {
         let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let sumexp: f64 = row.iter().map(|&l| ((l - max) as f64).exp()).sum();
         let lse = max as f64 + sumexp.ln();
-        ce += lse - row[yi] as f64;
+        ce.push(lse - row[yi] as f64);
         let mut arg = 0usize;
         for (j, &l) in row.iter().enumerate() {
             if l > row[arg] {
                 arg = j;
             }
             let p = ((l as f64 - lse).exp()) as f32;
-            dl[i * c + j] = (p - if j == yi { 1.0 } else { 0.0 }) / n as f32;
+            dl[i * c + j] = (p - if j == yi { 1.0 } else { 0.0 }) / n_global as f32;
         }
         if arg == yi {
             correct += 1;
         }
     }
-    Ok((
-        (ce / n as f64) as f32,
-        correct as f32 / n as f32,
-        Tensor::new(vec![n, c], dl)?,
-    ))
+    Ok((ce, correct, Tensor::new(vec![n, c], dl)?))
+}
+
+/// Softmax CE + accuracy + dL/dlogits for L = mean CE (single-shard view).
+fn ce_acc_grad(logits: &Tensor, y: &[i32]) -> Result<(f32, f32, Tensor)> {
+    let (ce, correct, dl) = ce_rows(logits, y, y.len())?;
+    let n = y.len().max(1);
+    // sequential sum in sample order — the pre-sharding accumulation order
+    let total: f64 = ce.iter().sum();
+    Ok(((total / n as f64) as f32, correct as f32 / n as f32, dl))
 }
 
 /// Σ_l regw_l·B_GL(W^l) (paper Eq. 4/5) and its plane gradients, with the
 /// loss coefficient α already folded into the gradients.
-fn bgl_and_grads(
+pub(crate) fn bgl_and_grads(
     model: &NativeModel,
     state: &ModelState,
     regw: &[f32],
@@ -574,7 +615,7 @@ fn bgl_and_grads(
 /// decay off for planes and scales and the `[0, 2]` plane clamp after every
 /// step (paper §3.1). Trainables are exactly the keys the artifact carries
 /// momentum slots for.
-fn sgd_update(
+pub(crate) fn sgd_update(
     state: &mut ModelState,
     spec: &ArtifactSpec,
     grads: &mut BTreeMap<String, Tensor>,
@@ -619,11 +660,11 @@ fn sgd_update(
 
 // -- input plumbing ----------------------------------------------------------
 
-fn hyper(inputs: &RunInputs, name: &str) -> Result<f32> {
+pub(crate) fn hyper(inputs: &RunInputs, name: &str) -> Result<f32> {
     inputs.hypers.get(name).copied().ok_or_else(|| anyhow!("missing hyper {name:?}"))
 }
 
-fn vec_input(inputs: &RunInputs, name: &str, want: usize) -> Result<Vec<f32>> {
+pub(crate) fn vec_input(inputs: &RunInputs, name: &str, want: usize) -> Result<Vec<f32>> {
     let v = inputs.vecs.get(name).ok_or_else(|| anyhow!("missing vec {name:?}"))?;
     if v.len() != want {
         bail!("vec {name}: {} entries ≠ {want}", v.len());
@@ -634,22 +675,28 @@ fn vec_input(inputs: &RunInputs, name: &str, want: usize) -> Result<Vec<f32>> {
 // -- entry points ------------------------------------------------------------
 
 /// Execute one artifact natively; mirrors `Executable::run` semantics
-/// (state updated in place, metrics/probes returned).
+/// (state updated in place, metrics/probes returned). Train entries run the
+/// data-parallel sharded step (`shards` = 0 means auto; any value yields
+/// bit-identical results — see `runtime::native::shard`); eval and HVP are
+/// per-sample independent already and stay single-tape.
 pub fn execute(
     model: &NativeModel,
     spec: &ArtifactSpec,
     state: &mut ModelState,
     batch: Option<&Batch>,
     inputs: &RunInputs,
+    shards: usize,
 ) -> Result<RunOutputs> {
     match Entry::parse(&spec.name)? {
-        Entry::Train(wm, am) => train_step(model, spec, state, batch, inputs, wm, am),
+        Entry::Train(wm, am) => {
+            shard::train_step(model, spec, state, batch, inputs, wm, am, shards)
+        }
         Entry::Eval(wm, am) => eval_step(model, state, batch, inputs, wm, am),
         Entry::Hvp => hvp_step(model, state, batch, inputs),
     }
 }
 
-fn need_batch<'b>(batch: Option<&'b Batch>) -> Result<&'b Batch> {
+pub(crate) fn need_batch<'b>(batch: Option<&'b Batch>) -> Result<&'b Batch> {
     batch.ok_or_else(|| anyhow!("artifact needs a batch"))
 }
 
@@ -667,62 +714,6 @@ fn forward_pass(
     let logits = models::forward(model, &mut fwd, x)?;
     let Fwd { tape, new_stats, .. } = fwd;
     Ok((tape, logits, new_stats))
-}
-
-fn train_step(
-    model: &NativeModel,
-    spec: &ArtifactSpec,
-    state: &mut ModelState,
-    batch: Option<&Batch>,
-    inputs: &RunInputs,
-    wm: WMode,
-    am: AMode,
-) -> Result<RunOutputs> {
-    let b = need_batch(batch)?;
-    let lr = hyper(inputs, "lr")?;
-    let wd = hyper(inputs, "wd")?;
-    let actlv = vec_input(inputs, "actlv", model.act_sites.len())?;
-    let wlv = match wm {
-        WMode::Dorefa | WMode::Lsq => Some(vec_input(inputs, "wlv", model.qlayers.len())?),
-        _ => None,
-    };
-    let (alpha, regw) = if wm == WMode::Bit {
-        (hyper(inputs, "alpha")?, vec_input(inputs, "regw", model.qlayers.len())?)
-    } else {
-        (0.0, Vec::new())
-    };
-
-    let (reps, gmaps) = prepare_weights(model, state, wm, wlv.as_deref(), false)?;
-    let (tape, logits, new_stats) = forward_pass(model, state, reps, actlv, am, true, b)?;
-    let (ce, acc, dlogits) = ce_acc_grad(tape.value(logits), b.y.data())?;
-    let mut grads = backward(&tape, logits, dlogits)?.keys;
-    drop(tape);
-    map_weight_grads(model, gmaps, &mut grads)?;
-
-    let (bgl, loss) = if wm == WMode::Bit {
-        let (bgl, bgl_grads) = bgl_and_grads(model, state, &regw, alpha)?;
-        for (k, t) in bgl_grads {
-            accumulate(&mut grads, k, t);
-        }
-        (bgl, ce + alpha * bgl)
-    } else {
-        (0.0, ce)
-    };
-
-    sgd_update(state, spec, &mut grads, lr, wd)?;
-    for (name, m, v) in new_stats {
-        state.get_mut(&format!("bn:{name}/mean"))?.data_mut().copy_from_slice(&m);
-        state.get_mut(&format!("bn:{name}/var"))?.data_mut().copy_from_slice(&v);
-    }
-
-    let mut out = RunOutputs::default();
-    out.metrics.insert("loss".into(), loss);
-    out.metrics.insert("ce".into(), ce);
-    out.metrics.insert("acc".into(), acc);
-    if wm == WMode::Bit {
-        out.metrics.insert("bgl".into(), bgl);
-    }
-    Ok(out)
 }
 
 /// Forward-only inference to raw logits, on caller-supplied effective

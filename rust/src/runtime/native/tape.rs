@@ -27,6 +27,29 @@ pub const BN_EPS: f32 = 1e-5;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(pub usize);
 
+/// Cross-shard reduction hooks for data-parallel training
+/// (`runtime::native::shard`, DESIGN.md §10).
+///
+/// The tape calls these at every point where the math couples samples
+/// across the batch. Implementations must return values that depend only on
+/// the *global* batch — per-sample partials combined in a canonical
+/// fixed-order tree — never on how samples were partitioned into shards;
+/// that contract is what makes sharded training bit-identical to the
+/// single-shard path at any shard count.
+pub trait ShardHook {
+    /// Total sample count across all shards.
+    fn global_samples(&self) -> usize;
+    /// Global index of this shard's first sample.
+    fn sample_base(&self) -> usize;
+    /// Exchange one f64 vector per local sample (in shard order) against
+    /// the other shards; returns the canonical fixed-order tree fold over
+    /// all global samples. Errors if a peer shard aborted.
+    fn exchange(&self, local: Vec<Vec<f64>>) -> Result<Vec<f64>>;
+    /// Deposit one per-sample leaf-gradient partial under `key` for the
+    /// given *global* sample index (reduced later in canonical order).
+    fn deposit(&self, key: String, sample: usize, grad: Tensor);
+}
+
 /// Effective weight of a conv/dense layer for one forward pass.
 pub enum WeightRep {
     /// Dense f32 (training paths; backward supported).
@@ -455,6 +478,31 @@ impl Grads {
 
 /// Reverse pass from `root` seeded with `seed = dL/d(root)`.
 pub fn backward(tape: &Tape, root: Var, seed: Tensor) -> Result<Grads> {
+    backward_impl(tape, root, seed, None)
+}
+
+/// Reverse pass for one shard of a data-parallel step: batch-summed leaf
+/// gradients (dW, db, dγ/dβ, dPACT) are handed to `hook` as per-sample
+/// partials instead of being accumulated locally, and the train-mode BN
+/// input cotangent is computed from the *global* Σdy / Σdy·x̂ obtained via
+/// `hook.exchange` — so every per-element result is independent of the
+/// shard partition. `Grads.keys` comes back empty in this mode; the
+/// orchestrator reduces the deposits instead.
+pub fn backward_sharded(
+    tape: &Tape,
+    root: Var,
+    seed: Tensor,
+    hook: &dyn ShardHook,
+) -> Result<Grads> {
+    backward_impl(tape, root, seed, Some(hook))
+}
+
+fn backward_impl(
+    tape: &Tape,
+    root: Var,
+    seed: Tensor,
+    hook: Option<&dyn ShardHook>,
+) -> Result<Grads> {
     let mut g = Grads { vars: vec![None; tape.nodes.len()], keys: BTreeMap::new() };
     if seed.shape() != tape.value(root).shape() {
         bail!("backward: seed {:?} vs root {:?}", seed.shape(), tape.value(root).shape());
@@ -476,8 +524,25 @@ pub fn backward(tape: &Tape, root: Var, seed: Tensor) -> Result<Grads> {
                 };
                 let (rows, k, cout) = (geom.rows(), geom.kdim(), geom.cout);
                 let patches = gemm::im2col(tape.value(*x).data(), geom);
-                let dw = gemm::matmul_tn(&patches, dy.data(), rows, k, cout);
-                g.add_key(format!("weff:{layer}"), wt.shape(), dw);
+                if let Some(h) = hook {
+                    // Per-sample dW partials: same total flops as the one
+                    // big GEMM, but each partial depends only on its own
+                    // sample — the canonical reduce happens downstream.
+                    let spp = geom.oh * geom.ow;
+                    for si in 0..geom.n {
+                        let pr = &patches[si * spp * k..(si + 1) * spp * k];
+                        let dr = &dy.data()[si * spp * cout..(si + 1) * spp * cout];
+                        let dwi = gemm::matmul_tn(pr, dr, spp, k, cout);
+                        h.deposit(
+                            format!("weff:{layer}"),
+                            h.sample_base() + si,
+                            Tensor::new(wt.shape().to_vec(), dwi)?,
+                        );
+                    }
+                } else {
+                    let dw = gemm::matmul_tn(&patches, dy.data(), rows, k, cout);
+                    g.add_key(format!("weff:{layer}"), wt.shape(), dw);
+                }
                 let dpatches = gemm::matmul_nt(dy.data(), wt.data(), rows, cout, k);
                 let mut dx = vec![0.0f32; tape.value(*x).len()];
                 gemm::col2im_add(&dpatches, geom, &mut dx);
@@ -491,15 +556,35 @@ pub fn backward(tape: &Tape, root: Var, seed: Tensor) -> Result<Grads> {
                     }
                 };
                 let n = tape.value(*x).shape()[0];
-                let dw = gemm::matmul_tn(tape.value(*x).data(), dy.data(), n, *in_dim, *out_dim);
-                g.add_key(format!("weff:{layer}"), &[*in_dim, *out_dim], dw);
-                let mut db = vec![0.0f32; *out_dim];
-                for row in dy.data().chunks(*out_dim) {
-                    for (d, &v) in db.iter_mut().zip(row) {
-                        *d += v;
+                if let Some(h) = hook {
+                    let xd = tape.value(*x).data();
+                    for si in 0..n {
+                        let xr = &xd[si * in_dim..(si + 1) * in_dim];
+                        let dr = &dy.data()[si * out_dim..(si + 1) * out_dim];
+                        let dwi = gemm::matmul_tn(xr, dr, 1, *in_dim, *out_dim);
+                        h.deposit(
+                            format!("weff:{layer}"),
+                            h.sample_base() + si,
+                            Tensor::new(vec![*in_dim, *out_dim], dwi)?,
+                        );
+                        h.deposit(
+                            format!("w:{layer}/b"),
+                            h.sample_base() + si,
+                            Tensor::new(vec![*out_dim], dr.to_vec())?,
+                        );
                     }
+                } else {
+                    let dw =
+                        gemm::matmul_tn(tape.value(*x).data(), dy.data(), n, *in_dim, *out_dim);
+                    g.add_key(format!("weff:{layer}"), &[*in_dim, *out_dim], dw);
+                    let mut db = vec![0.0f32; *out_dim];
+                    for row in dy.data().chunks(*out_dim) {
+                        for (d, &v) in db.iter_mut().zip(row) {
+                            *d += v;
+                        }
+                    }
+                    g.add_key(format!("w:{layer}/b"), &[*out_dim], db);
                 }
-                g.add_key(format!("w:{layer}/b"), &[*out_dim], db);
                 let dx = gemm::matmul_nt(dy.data(), wt.data(), n, *out_dim, *in_dim);
                 g.accumulate(*x, Tensor::new(vec![n, *in_dim], dx)?);
             }
@@ -511,26 +596,67 @@ pub fn backward(tape: &Tape, root: Var, seed: Tensor) -> Result<Grads> {
                 // channel reductions: Σdy, Σdy·x̂ (also the affine grads)
                 let mut dbeta = vec![0.0f64; c];
                 let mut dgamma = vec![0.0f64; c];
-                for (row, dyr) in xt.data().chunks(c).zip(dy.data().chunks(c)) {
-                    for ch in 0..c {
-                        let xhat = (row[ch] - mean[ch]) * inv[ch];
-                        dbeta[ch] += dyr[ch] as f64;
-                        dgamma[ch] += (dyr[ch] * xhat) as f64;
+                let mut rows_for_dx = rows;
+                if let Some(h) = hook {
+                    // Per-sample partials: deposit the affine grads for the
+                    // canonical downstream reduce, and (train mode) obtain
+                    // the global Σdy / Σdy·x̂ the dx formula needs via the
+                    // fixed-order exchange.
+                    let n_local = xt.shape()[0];
+                    let r_per = rows / n_local.max(1);
+                    let mut partials: Vec<Vec<f64>> = Vec::with_capacity(n_local);
+                    for si in 0..n_local {
+                        let mut p = vec![0.0f64; 2 * c];
+                        let span = si * r_per * c..(si + 1) * r_per * c;
+                        for (row, dyr) in
+                            xt.data()[span.clone()].chunks(c).zip(dy.data()[span].chunks(c))
+                        {
+                            for ch in 0..c {
+                                let xhat = (row[ch] - mean[ch]) * inv[ch];
+                                p[ch] += dyr[ch] as f64;
+                                p[c + ch] += (dyr[ch] * xhat) as f64;
+                            }
+                        }
+                        h.deposit(
+                            format!("bn:{name}/beta"),
+                            h.sample_base() + si,
+                            Tensor::new(vec![c], p[..c].iter().map(|&v| v as f32).collect())?,
+                        );
+                        h.deposit(
+                            format!("bn:{name}/gamma"),
+                            h.sample_base() + si,
+                            Tensor::new(vec![c], p[c..].iter().map(|&v| v as f32).collect())?,
+                        );
+                        partials.push(p);
                     }
+                    if *batch_stats {
+                        let global = h.exchange(partials)?;
+                        dbeta = global[..c].to_vec();
+                        dgamma = global[c..].to_vec();
+                        rows_for_dx = r_per * h.global_samples();
+                    }
+                } else {
+                    for (row, dyr) in xt.data().chunks(c).zip(dy.data().chunks(c)) {
+                        for ch in 0..c {
+                            let xhat = (row[ch] - mean[ch]) * inv[ch];
+                            dbeta[ch] += dyr[ch] as f64;
+                            dgamma[ch] += (dyr[ch] * xhat) as f64;
+                        }
+                    }
+                    g.add_key(
+                        format!("bn:{name}/gamma"),
+                        &[c],
+                        dgamma.iter().map(|&v| v as f32).collect(),
+                    );
+                    g.add_key(
+                        format!("bn:{name}/beta"),
+                        &[c],
+                        dbeta.iter().map(|&v| v as f32).collect(),
+                    );
                 }
-                g.add_key(
-                    format!("bn:{name}/gamma"),
-                    &[c],
-                    dgamma.iter().map(|&v| v as f32).collect(),
-                );
-                g.add_key(
-                    format!("bn:{name}/beta"),
-                    &[c],
-                    dbeta.iter().map(|&v| v as f32).collect(),
-                );
                 let mut dx = vec![0.0f32; xt.len()];
                 if *batch_stats {
-                    let rinv = 1.0 / rows as f32;
+                    let rinv = 1.0 / rows_for_dx as f32;
                     for (i, (row, dyr)) in
                         xt.data().chunks(c).zip(dy.data().chunks(c)).enumerate()
                     {
@@ -555,16 +681,39 @@ pub fn backward(tape: &Tape, root: Var, seed: Tensor) -> Result<Grads> {
             Op::ActQuant { x, bound, levels: _, pact } => {
                 let xt = tape.value(*x);
                 let mut dx = vec![0.0f32; xt.len()];
-                let mut dbound = 0.0f64;
                 for ((d, &v), &gy) in dx.iter_mut().zip(xt.data()).zip(dy.data()) {
                     if v > 0.0 && v < *bound {
                         *d = gy;
-                    } else if v >= *bound {
-                        dbound += gy as f64;
                     }
                 }
                 if let Some(site) = pact {
-                    g.add_key(format!("pact:{site}"), &[], vec![dbound as f32]);
+                    // above-bound gradient mass flows to the PACT clip
+                    let dbound_over = |lo: usize, hi: usize| -> f64 {
+                        xt.data()[lo..hi]
+                            .iter()
+                            .zip(&dy.data()[lo..hi])
+                            .filter(|(&v, _)| v >= *bound)
+                            .map(|(_, &gy)| gy as f64)
+                            .sum()
+                    };
+                    match hook {
+                        Some(h) => {
+                            let n_local = xt.shape()[0];
+                            let per = xt.len() / n_local.max(1);
+                            for si in 0..n_local {
+                                let db = dbound_over(si * per, (si + 1) * per);
+                                h.deposit(
+                                    format!("pact:{site}"),
+                                    h.sample_base() + si,
+                                    Tensor::scalar(db as f32),
+                                );
+                            }
+                        }
+                        None => {
+                            let db = dbound_over(0, xt.len()) as f32;
+                            g.add_key(format!("pact:{site}"), &[], vec![db]);
+                        }
+                    }
                 }
                 g.accumulate(*x, Tensor::new(xt.shape().to_vec(), dx)?);
             }

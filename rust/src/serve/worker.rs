@@ -131,7 +131,10 @@ pub fn run_closed_loop(
     if total == 0 || clients == 0 {
         bail!("closed loop needs at least one request and one client");
     }
-    let workers = cfg.workers.max(1);
+    // Same audit as the trainer's empty-shard fix: never spin up more
+    // workers than there are requests — the surplus threads could only ever
+    // idle on the batch queue until shutdown.
+    let workers = cfg.workers.max(1).min(total);
     let policy = cfg.policy;
     let pix = model.sample_elems();
 

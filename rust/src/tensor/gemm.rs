@@ -31,11 +31,31 @@ const NC: usize = 1024;
 /// Below this many multiply-adds a single thread wins (spawn overhead).
 const PAR_THRESHOLD: usize = 1 << 21;
 
+std::thread_local! {
+    /// Per-thread cap on the GEMM worker fan-out. The data-parallel shard
+    /// workers (`runtime::native::shard`) lower it to their slice of the
+    /// cores so E shards × inner GEMM threads never oversubscribe the host.
+    /// Capping never changes results: the row split only partitions work,
+    /// each output element keeps its fixed accumulation order.
+    static PAR_CAP: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
+}
+
+/// Cap this thread's GEMM fan-out (minimum 1). Thread-local: scoped worker
+/// threads set their own budget without touching their neighbours'.
+pub fn set_thread_parallelism_cap(cap: usize) {
+    PAR_CAP.with(|c| c.set(cap.max(1)));
+}
+
+/// Host parallelism the kernels would use uncapped.
+pub fn max_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 fn worker_count(work: usize) -> usize {
     if work < PAR_THRESHOLD {
         return 1;
     }
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).clamp(1, 16)
+    max_parallelism().clamp(1, 16).min(PAR_CAP.with(|c| c.get()))
 }
 
 /// C[M,N] = A[M,K] · B[K,N] (freshly allocated).
@@ -441,6 +461,20 @@ mod tests {
             let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
             close(&matmul(&a, &b, m, k, n), &naive(&a, &b, m, k, n), 1e-5);
         }
+    }
+
+    #[test]
+    fn parallelism_cap_does_not_change_results() {
+        let mut rng = Pcg32::seeded(9);
+        // large enough to clear PAR_THRESHOLD so the cap actually bites
+        let (m, k, n) = (64, 256, 160);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let uncapped = matmul(&a, &b, m, k, n);
+        set_thread_parallelism_cap(1);
+        let capped = matmul(&a, &b, m, k, n);
+        set_thread_parallelism_cap(usize::MAX);
+        assert_eq!(uncapped, capped, "row-chunked GEMM must be bit-stable under the cap");
     }
 
     #[test]

@@ -1,0 +1,209 @@
+//! Bench-record regression diffing — the engine behind `bsq-repro
+//! bench-diff <baseline> <current> --tolerance-pct N` and CI's bench-gate
+//! job (EXPERIMENTS.md §Shard-scaling runbook).
+//!
+//! Both inputs are `BENCH_*.json` records written by
+//! [`JsonReport`](crate::util::bench::JsonReport): a `results` array of
+//! per-benchmark stats. Metrics are
+//! matched by `name` and compared on `mean_ns`; a metric is a regression
+//! when the current mean exceeds the baseline by more than the tolerance.
+//! Improvements and newly added metrics never fail the gate; a metric that
+//! *disappeared* from the current record does — silently dropping a bench
+//! is how perf regressions hide.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// One metric's baseline-vs-current comparison.
+#[derive(Debug, Clone)]
+pub struct MetricDiff {
+    pub name: String,
+    pub base_ns: f64,
+    pub cur_ns: f64,
+    /// Signed change in percent (positive = slower than baseline).
+    pub delta_pct: f64,
+    pub regressed: bool,
+}
+
+/// Full comparison of two bench records.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub target: String,
+    pub tolerance_pct: f64,
+    pub rows: Vec<MetricDiff>,
+    /// Metrics present in the baseline but missing from the current record.
+    pub missing: Vec<String>,
+    /// Metrics new in the current record (informational only).
+    pub added: Vec<String>,
+}
+
+impl DiffReport {
+    /// Does this comparison fail the gate?
+    pub fn failed(&self) -> bool {
+        !self.missing.is_empty() || self.rows.iter().any(|r| r.regressed)
+    }
+
+    pub fn regressions(&self) -> usize {
+        self.rows.iter().filter(|r| r.regressed).count()
+    }
+
+    /// Human-readable per-metric table.
+    pub fn table(&self) -> String {
+        let mut out = format!(
+            "bench-diff [{}], tolerance +{:.0}%\n{:<44} {:>14} {:>14} {:>9}  verdict\n",
+            self.target, self.tolerance_pct, "metric", "baseline", "current", "delta"
+        );
+        for r in &self.rows {
+            let verdict = if r.regressed {
+                "REGRESSED"
+            } else if r.delta_pct < 0.0 {
+                "improved"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "{:<44} {:>12.0}ns {:>12.0}ns {:>+8.1}%  {}\n",
+                r.name, r.base_ns, r.cur_ns, r.delta_pct, verdict
+            ));
+        }
+        for m in &self.missing {
+            out.push_str(&format!("{m:<44} {:>14} {:>14} {:>9}  MISSING\n", "-", "-", "-"));
+        }
+        for m in &self.added {
+            out.push_str(&format!("{m:<44} {:>14} {:>14} {:>9}  new\n", "-", "-", "-"));
+        }
+        out
+    }
+}
+
+fn metric_means(record: &Json) -> Result<BTreeMap<String, f64>> {
+    let mut means = BTreeMap::new();
+    for entry in record.req("results")?.as_arr()? {
+        let name = entry.req("name")?.as_str()?.to_string();
+        let mean = entry.req("mean_ns")?.as_f64()?;
+        if mean <= 0.0 || !mean.is_finite() {
+            bail!("metric {name:?} has a non-positive mean ({mean})");
+        }
+        means.insert(name, mean);
+    }
+    Ok(means)
+}
+
+/// Compare two parsed bench records at the given tolerance.
+pub fn compare(baseline: &Json, current: &Json, tolerance_pct: f64) -> Result<DiffReport> {
+    if tolerance_pct < 0.0 {
+        bail!("tolerance must be non-negative, got {tolerance_pct}");
+    }
+    let target = baseline
+        .get("target")
+        .and_then(|t| t.as_str().ok())
+        .unwrap_or("unknown")
+        .to_string();
+    let base = metric_means(baseline)?;
+    let cur = metric_means(current)?;
+    if base.is_empty() {
+        bail!("baseline record carries no metrics — refusing to vacuously pass");
+    }
+
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for (name, &base_ns) in &base {
+        match cur.get(name) {
+            Some(&cur_ns) => {
+                let delta_pct = (cur_ns - base_ns) / base_ns * 100.0;
+                rows.push(MetricDiff {
+                    name: name.clone(),
+                    base_ns,
+                    cur_ns,
+                    delta_pct,
+                    regressed: delta_pct > tolerance_pct,
+                });
+            }
+            None => missing.push(name.clone()),
+        }
+    }
+    let added = cur.keys().filter(|k| !base.contains_key(*k)).cloned().collect();
+    Ok(DiffReport { target, tolerance_pct, rows, missing, added })
+}
+
+/// Compare two bench-record files on disk.
+pub fn compare_files(baseline: &Path, current: &Path, tolerance_pct: f64) -> Result<DiffReport> {
+    let read = |p: &Path| -> Result<Json> {
+        let text = std::fs::read_to_string(p)
+            .with_context(|| format!("reading bench record {}", p.display()))?;
+        json::parse(&text).with_context(|| format!("parsing bench record {}", p.display()))
+    };
+    compare(&read(baseline)?, &read(current)?, tolerance_pct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(pairs: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("target", Json::str("t")),
+            (
+                "results",
+                Json::Arr(
+                    pairs
+                        .iter()
+                        .map(|&(n, m)| {
+                            Json::obj(vec![("name", Json::str(n)), ("mean_ns", Json::num(m))])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn within_tolerance_passes_and_reports_deltas() {
+        let base = record(&[("a", 100.0), ("b", 200.0)]);
+        let cur = record(&[("a", 110.0), ("b", 150.0)]);
+        let rep = compare(&base, &cur, 25.0).unwrap();
+        assert!(!rep.failed(), "{}", rep.table());
+        assert_eq!(rep.rows.len(), 2);
+        assert!((rep.rows[0].delta_pct - 10.0).abs() < 1e-9);
+        assert!(rep.rows[1].delta_pct < 0.0); // improvement
+        assert!(rep.table().contains("improved"));
+    }
+
+    #[test]
+    fn regression_past_tolerance_fails() {
+        let base = record(&[("a", 100.0)]);
+        let cur = record(&[("a", 126.0)]);
+        let rep = compare(&base, &cur, 25.0).unwrap();
+        assert!(rep.failed());
+        assert_eq!(rep.regressions(), 1);
+        assert!(rep.table().contains("REGRESSED"));
+        // exactly at tolerance still passes (strict inequality)
+        let rep = compare(&base, &record(&[("a", 125.0)]), 25.0).unwrap();
+        assert!(!rep.failed());
+    }
+
+    #[test]
+    fn missing_metric_fails_and_added_metric_is_informational() {
+        let base = record(&[("a", 100.0), ("gone", 50.0)]);
+        let cur = record(&[("a", 100.0), ("fresh", 70.0)]);
+        let rep = compare(&base, &cur, 25.0).unwrap();
+        assert!(rep.failed());
+        assert_eq!(rep.missing, vec!["gone".to_string()]);
+        assert_eq!(rep.added, vec!["fresh".to_string()]);
+        assert!(rep.table().contains("MISSING"));
+    }
+
+    #[test]
+    fn degenerate_records_are_rejected() {
+        let empty = record(&[]);
+        assert!(compare(&empty, &empty, 25.0).is_err());
+        let bad = record(&[("a", 0.0)]);
+        assert!(compare(&bad, &bad, 25.0).is_err());
+        let base = record(&[("a", 1.0)]);
+        assert!(compare(&base, &base, -1.0).is_err());
+    }
+}

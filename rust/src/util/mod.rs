@@ -5,6 +5,7 @@
 //! here from scratch (DESIGN.md §5).
 
 pub mod bench;
+pub mod benchdiff;
 pub mod cli;
 pub mod json;
 pub mod logging;

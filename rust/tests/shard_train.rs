@@ -1,0 +1,213 @@
+//! Shard-determinism suite for data-parallel training
+//! (`runtime::native::shard`, DESIGN.md §10).
+//!
+//! The contract under test: the native train step is **bit-identical** at
+//! any shard count — including counts that do not divide the batch and
+//! counts larger than the batch — because every batch-coupled reduction
+//! runs at per-sample granularity through a fixed-order tree fold whose
+//! shape depends only on the global batch size.
+
+use bsq::coordinator::{run_bsq, BsqConfig};
+use bsq::data::{Batch, Corpus, CorpusSpec, Loader};
+use bsq::model::{momentum_slots, ModelState};
+use bsq::runtime::native::shard::{shard_ranges, tree_fold};
+use bsq::runtime::{Engine, RunInputs};
+use bsq::tensor::{IntTensor, Tensor};
+use bsq::util::Pcg32;
+
+/// Run `steps` train steps of `entry` on a fresh tinynet at `shards`,
+/// returning the final state and the per-step (loss, ce, acc, bgl).
+fn run_steps(entry: &str, shards: usize, steps: usize) -> (ModelState, Vec<[f32; 4]>) {
+    let engine = Engine::native_with_shards(shards);
+    let man = engine.manifest("tinynet").unwrap();
+    let exe = engine.load(man.artifact(entry).unwrap()).unwrap();
+
+    let mut state = ModelState::init_fp(&man, 7);
+    let bit = entry.starts_with("bsq");
+    if bit {
+        state.to_bit_representation(&man, 8).unwrap();
+    }
+    state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+    state.check_against(&exe.spec.inputs).unwrap();
+
+    let corpus = Corpus::generate(CorpusSpec::tiny().with_sizes(man.batch * 4, 32));
+    let mut loader = Loader::new(&corpus.train, man.batch, Default::default(), 11);
+    let mut inputs = RunInputs::default()
+        .hyper("lr", 0.05)
+        .hyper("wd", 1e-4)
+        .vec("actlv", vec![15.0; man.act_sites.len()]);
+    if bit {
+        inputs = inputs.hyper("alpha", 1e-3).vec("regw", vec![1.0; man.qlayers.len()]);
+    }
+
+    let mut metrics = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        let b = loader.next_batch();
+        let out = exe.run(&mut state, Some(&b), &inputs).unwrap();
+        metrics.push([
+            out.metric("loss").unwrap(),
+            out.metric("ce").unwrap(),
+            out.metric("acc").unwrap(),
+            out.metrics.get("bgl").copied().unwrap_or(0.0),
+        ]);
+    }
+    (state, metrics)
+}
+
+fn assert_states_identical(a: &ModelState, b: &ModelState, ctx: &str) {
+    let ka: Vec<&String> = a.keys().collect();
+    let kb: Vec<&String> = b.keys().collect();
+    assert_eq!(ka, kb, "{ctx}: state key sets differ");
+    for key in ka {
+        let (ta, tb) = (a.get(key).unwrap(), b.get(key).unwrap());
+        assert_eq!(ta.shape(), tb.shape(), "{ctx}: {key} shape");
+        assert_eq!(ta.data(), tb.data(), "{ctx}: {key} diverged bitwise");
+    }
+}
+
+/// (a) fp training: loss/gradient effects/updated weights after K steps are
+/// bit-identical for shards ∈ {1, 2, 3, 8} — including 3, which does not
+/// divide the batch of 16.
+#[test]
+fn fp_training_is_bit_identical_across_shard_counts() {
+    let (ref_state, ref_metrics) = run_steps("fp_train_relu6", 1, 3);
+    for shards in [2usize, 3, 8] {
+        let (state, metrics) = run_steps("fp_train_relu6", shards, 3);
+        assert_eq!(ref_metrics, metrics, "fp metrics diverged at {shards} shards");
+        assert_states_identical(&ref_state, &state, &format!("fp shards={shards}"));
+    }
+}
+
+/// (a) the bit path too: STE plane gradients, scale gradients and the B_GL
+/// regularizer all flow through the same canonical reduce.
+#[test]
+fn bsq_training_is_bit_identical_across_shard_counts() {
+    let (ref_state, ref_metrics) = run_steps("bsq_train_relu6", 1, 3);
+    for shards in [2usize, 3, 8] {
+        let (state, metrics) = run_steps("bsq_train_relu6", shards, 3);
+        assert_eq!(ref_metrics, metrics, "bsq metrics diverged at {shards} shards");
+        assert_states_identical(&ref_state, &state, &format!("bsq shards={shards}"));
+    }
+}
+
+/// Empty-shard edge: a batch smaller than the shard count must not spawn
+/// empty-range workers — batch=1 with shards=8 trains, and identically to
+/// shards=1.
+#[test]
+fn single_sample_batch_with_more_shards_than_samples() {
+    let mut rng = Pcg32::seeded(21);
+    let x: Vec<f32> = (0..16 * 16 * 3).map(|_| rng.normal()).collect();
+    let batch = Batch {
+        x: Tensor::new(vec![1, 16, 16, 3], x).unwrap(),
+        y: IntTensor::new(vec![1], vec![3]).unwrap(),
+    };
+
+    let mut states = Vec::new();
+    for shards in [1usize, 8] {
+        let engine = Engine::native_with_shards(shards);
+        let man = engine.manifest("tinynet").unwrap();
+        let exe = engine.load(man.artifact("fp_train_relu6").unwrap()).unwrap();
+        let mut state = ModelState::init_fp(&man, 3);
+        state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+        let inputs = RunInputs::default()
+            .hyper("lr", 0.05)
+            .hyper("wd", 1e-4)
+            .vec("actlv", vec![0.0; man.act_sites.len()]);
+        for _ in 0..2 {
+            let out = exe.run(&mut state, Some(&batch), &inputs).unwrap();
+            assert!(out.metric("loss").unwrap().is_finite());
+        }
+        states.push(state);
+    }
+    assert_states_identical(&states[0], &states[1], "batch=1 shards 1 vs 8");
+}
+
+/// (b) The fixed-order tree reduce: equals a sequential fold wherever f32
+/// addition is exact, and its result is a function of the per-sample
+/// partials alone — unlike per-shard sequential subtotals, which shift with
+/// the partition on adversarial (catastrophically cancelling) inputs.
+#[test]
+fn tree_fold_is_canonical_on_adversarial_f32_inputs() {
+    // exact regime: powers of two — tree and sequential fold agree bitwise
+    let exact: Vec<f32> = (0..13).map(|i| (1 << (i % 7)) as f32).collect();
+    let tree = tree_fold(exact.clone(), |a, b| *a += *b).unwrap();
+    let seq = exact.iter().fold(0.0f32, |s, &v| s + v);
+    assert_eq!(tree.to_bits(), seq.to_bits());
+
+    // adversarial regime: large magnitudes with cancellation
+    let adversarial: Vec<f32> =
+        vec![1.0e8, 1.0, -1.0e8, 3.0e-4, 7.0e7, -7.0e7, 1.0, -1.0, 2.5e-4, 1.0e8, -1.0e8];
+    let canon = tree_fold(adversarial.clone(), |a, b| *a += *b).unwrap();
+    // the tree is deterministic: same inputs, same bits, every time
+    for _ in 0..10 {
+        let again = tree_fold(adversarial.clone(), |a, b| *a += *b).unwrap();
+        assert_eq!(canon.to_bits(), again.to_bits());
+    }
+    // whereas folding per-shard subtotals shifts with the partition — the
+    // reason gradients reduce at sample granularity, never shard granularity
+    let partition_fold = |chunks: &[&[f32]]| -> f32 {
+        chunks.iter().map(|c| c.iter().fold(0.0f32, |s, &v| s + v)).fold(0.0, |s, v| s + v)
+    };
+    let two = partition_fold(&[&adversarial[..4], &adversarial[4..]]);
+    let three = partition_fold(&[&adversarial[..3], &adversarial[3..7], &adversarial[7..]]);
+    assert_ne!(
+        two.to_bits(),
+        three.to_bits(),
+        "expected the adversarial inputs to expose partition-dependent rounding"
+    );
+}
+
+/// Shard planning: contiguous cover, never an empty range, balanced to
+/// within one sample (regression for the empty-shard edge).
+#[test]
+fn shard_ranges_are_total_and_never_empty() {
+    for (samples, shards) in [(1usize, 8usize), (16, 3), (16, 16), (16, 40), (2, 2), (9, 4)] {
+        let ranges = shard_ranges(samples, shards);
+        assert!(!ranges.is_empty());
+        assert!(ranges.iter().all(|r| !r.is_empty()), "{samples}/{shards}: {ranges:?}");
+        assert_eq!(ranges.first().unwrap().start, 0);
+        assert_eq!(ranges.last().unwrap().end, samples);
+        for w in ranges.windows(2) {
+            assert_eq!(w[0].end, w[1].start);
+        }
+    }
+}
+
+/// (c) The full pipeline: `run_bsq` at shards=4 reproduces the shards=1
+/// per-epoch bit-group-length (bgl) and loss trajectory exactly, along with
+/// the final per-layer precision scheme.
+#[test]
+fn run_bsq_trajectory_is_identical_at_4_shards() {
+    let mut cfg = BsqConfig::for_model("tinynet");
+    cfg.pretrain_epochs = 1;
+    cfg.bsq_epochs = 2;
+    cfg.finetune_epochs = 1;
+    cfg.requant_interval = 1;
+    cfg.train_size = 96;
+    cfg.test_size = 48;
+    cfg.eval_batches = 2;
+    cfg.alpha = 1e-4;
+    cfg.cache_pretrained = false; // a cached fp checkpoint would mask drift
+
+    let base = run_bsq(&Engine::native_with_shards(1), &cfg).unwrap();
+    let sharded = run_bsq(&Engine::native_with_shards(4), &cfg).unwrap();
+
+    assert_eq!(base.scheme.bits_vec(), sharded.scheme.bits_vec());
+    assert_eq!(base.acc_before_ft.to_bits(), sharded.acc_before_ft.to_bits());
+    assert_eq!(base.acc_after_ft.to_bits(), sharded.acc_after_ft.to_bits());
+    assert_eq!(base.history.records.len(), sharded.history.records.len());
+    for (a, b) in base.history.records.iter().zip(&sharded.history.records) {
+        assert_eq!(a.phase, b.phase);
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "[{}] epoch {} loss", a.phase, a.epoch);
+        assert_eq!(a.bgl.to_bits(), b.bgl.to_bits(), "[{}] epoch {} bgl", a.phase, a.epoch);
+        assert_eq!(a.acc.to_bits(), b.acc.to_bits(), "[{}] epoch {} acc", a.phase, a.epoch);
+        assert_eq!(
+            a.bits_per_param.to_bits(),
+            b.bits_per_param.to_bits(),
+            "[{}] epoch {} bits/param",
+            a.phase,
+            a.epoch
+        );
+    }
+}
