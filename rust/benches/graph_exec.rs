@@ -1,0 +1,104 @@
+//! Planned-executor forward throughput: {tinynet, resnet20} ×
+//! {planned-arena vs. alloc-per-pass}, plus the memory planner's
+//! arena-vs-naive activation footprint → `BENCH_graph.json`.
+//!
+//! `planned_arena` is the production configuration: one persistent arena,
+//! zero steady-state allocations. `alloc_per_pass` runs the *same* bound
+//! plan but hands every pass a fresh arena — the allocation discipline of
+//! the pre-IR per-pass graph walk, and the baseline the planner's win is
+//! measured against. CI runs the quick mode and diffs the record against
+//! `ci/baselines/BENCH_graph.smoke.json`.
+
+use bsq::ir::{self, Arena};
+use bsq::model::ModelState;
+use bsq::runtime::native::manifest_for;
+use bsq::runtime::native::models;
+use bsq::runtime::native::step::{eval_weights, AMode, WMode};
+use bsq::tensor::Tensor;
+use bsq::util::bench::{black_box, Bench, JsonReport};
+use bsq::util::json::Json;
+use bsq::util::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+    let mut report = JsonReport::new("graph");
+    let mut extras: Vec<(String, Json)> = Vec::new();
+    let mut speedups: Vec<(String, Json)> = Vec::new();
+    println!("== graph_exec: planned-arena forward vs alloc-per-pass ==");
+
+    for model_name in ["tinynet", "resnet20"] {
+        let man = manifest_for(model_name)?;
+        let model = models::get(model_name)?;
+        let plans = ir::plans_for(model_name)?;
+
+        // Quantized state on the sparsity-proportional bit-plane path —
+        // the configuration the serving layer runs.
+        let mut state = ModelState::init_fp(&man, 0);
+        state.to_bit_representation(&man, 6)?;
+        let actlv = vec![15.0f32; model.act_sites.len()];
+        let reps = eval_weights(&model, &state, WMode::Bit, None, true)?;
+        let bound = ir::bind(&plans.infer, &model, &state, reps, &actlv, AMode::Relu6)?;
+
+        let m = man.batch;
+        let mut rng = Pcg32::seeded(9);
+        let x = Tensor::new(
+            vec![m, man.input_hw.0, man.input_hw.1, man.in_ch],
+            (0..m * man.input_hw.0 * man.input_hw.1 * man.in_ch).map(|_| rng.normal()).collect(),
+        )?;
+
+        let plan = bound.plan();
+        let (arena_b, naive_b, scratch_b) =
+            (plan.arena_bytes(m), plan.naive_bytes(m), plan.scratch_bytes(m));
+        assert!(
+            arena_b < naive_b,
+            "{model_name}: arena {arena_b} B must be strictly below naive {naive_b} B"
+        );
+        println!(
+            "{model_name}: {} nodes, {} fused, arena {arena_b} B vs naive {naive_b} B \
+             ({:.1}x reuse), scratch {scratch_b} B  [batch {m}]",
+            plan.schedule_len(),
+            plan.fused,
+            naive_b as f64 / arena_b.max(1) as f64
+        );
+        extras.push((
+            format!("{model_name}_memory"),
+            Json::obj(vec![
+                ("arena_bytes", Json::num(arena_b as f64)),
+                ("naive_bytes", Json::num(naive_b as f64)),
+                ("scratch_bytes", Json::num(scratch_b as f64)),
+                ("fused_nodes", Json::num(plan.fused as f64)),
+                ("reuse_factor", Json::num(naive_b as f64 / arena_b.max(1) as f64)),
+            ]),
+        ));
+
+        // Production shape: one persistent arena, grown once.
+        let mut arena = Arena::default();
+        let s_planned = bench.run_elems(&format!("{model_name}/planned_arena"), m as u64, || {
+            let logits = bound.execute(x.data(), m, &mut arena).unwrap();
+            black_box(logits[0]);
+        });
+        println!("{}", s_planned.report());
+        report.push(&s_planned);
+
+        // Baseline: the same plan paying a fresh allocation every pass.
+        let s_alloc = bench.run_elems(&format!("{model_name}/alloc_per_pass"), m as u64, || {
+            let mut fresh = Arena::default();
+            let logits = bound.execute(x.data(), m, &mut fresh).unwrap();
+            black_box(logits[0]);
+        });
+        println!("{}", s_alloc.report());
+        report.push(&s_alloc);
+
+        let speedup = s_alloc.mean.as_secs_f64() / s_planned.mean.as_secs_f64().max(1e-12);
+        println!("{model_name}: planned arena {speedup:.2}x over alloc-per-pass");
+        speedups.push((format!("{model_name}_planned_over_alloc"), Json::num(speedup)));
+    }
+
+    for (k, v) in extras {
+        report.extra(&k, v);
+    }
+    report.extra("speedups", Json::Obj(speedups));
+    let path = report.write()?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

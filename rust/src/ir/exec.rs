@@ -1,0 +1,971 @@
+//! Plan execution (DESIGN.md §11): one set of forward kernels behind two
+//! drivers.
+//!
+//! * [`run_on_tape`] — the training/HVP driver. Walks a train-mode plan,
+//!   evaluates every node with the shared slice kernels, and records one
+//!   tape node per graph node, so `Var(i)` equals graph node `i` and the
+//!   reverse pass deposits leaf gradients under stable node-id slots
+//!   (`tape::DepositSlot`). This is the direct descendant of the deleted
+//!   imperative `Fwd` walk: same kernels, same evaluation order, same
+//!   bits.
+//! * [`BoundPlan::execute`] — the inference driver. [`bind`] resolves a
+//!   plan against one model state (weights, biases, BN statistics with
+//!   precomputed `1/√(σ²+ε)`, PACT clips, activation levels) into a list
+//!   of bound ops with no name lookups left; `execute` then runs the
+//!   schedule inside a caller-owned [`Arena`] — every activation lives at
+//!   its planned offset (scaled by the batch size), conv→bn→act triples
+//!   apply BN and the activation in place over the conv output, and a
+//!   layer whose plane bitsets are fully trimmed short-circuits to a
+//!   zero-fill (dead-layer elision). In steady state (arena grown once,
+//!   thread GEMM cap at 1) a forward pass performs **zero heap
+//!   allocations** — `tests/serve_alloc.rs` asserts this with a counting
+//!   allocator.
+//!
+//! The per-node safety story for the arena: the planner guarantees a
+//! node's output range never overlaps any live input, so the executor
+//! splits the buffer at the output range and reads inputs from the two
+//! remaining shared halves — entirely safe Rust, no aliasing.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::ops::Range;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::ir::graph::{GraphOp, NodeId};
+use crate::ir::plan::{CompiledPlan, PlanMode};
+use crate::model::state::ModelState;
+use crate::runtime::native::models::NativeModel;
+use crate::runtime::native::shard::sharded_batch_stats;
+use crate::runtime::native::step::AMode;
+use crate::runtime::native::tape::{
+    batch_stats, Op, ShardHook, Tape, Var, WeightRep, BN_EPS, BN_MOMENTUM,
+};
+use crate::tensor::gemm::{self, BitPlaneMatrix, ConvGeom};
+use crate::tensor::Tensor;
+
+// -- scratch + arena ---------------------------------------------------------
+
+/// Grow-only kernel scratch: im2col patches, their transpose (also the
+/// dense-layer input transpose), and the column-major bit-plane output.
+/// Separate buffers (not arena ranges) so conv kernels can borrow all
+/// three mutably alongside the activation buffer without unsafe.
+#[derive(Default)]
+pub struct Scratch {
+    patches: Vec<f32>,
+    transposed: Vec<f32>,
+    colmajor: Vec<f32>,
+}
+
+impl Scratch {
+    fn ensure(&mut self, patches: usize, transposed: usize, colmajor: usize) {
+        if self.patches.len() < patches {
+            self.patches.resize(patches, 0.0);
+        }
+        if self.transposed.len() < transposed {
+            self.transposed.resize(transposed, 0.0);
+        }
+        if self.colmajor.len() < colmajor {
+            self.colmajor.resize(colmajor, 0.0);
+        }
+    }
+}
+
+/// One reusable activation arena + kernel scratch. Grow-only: after the
+/// first pass at a given batch size every later pass allocates nothing.
+#[derive(Default)]
+pub struct Arena {
+    buf: Vec<f32>,
+    scratch: Scratch,
+}
+
+impl Arena {
+    pub fn prepare(&mut self, plan: &CompiledPlan, m: usize) {
+        let need = plan.arena_elems * m;
+        if self.buf.len() < need {
+            self.buf.resize(need, 0.0);
+        }
+        let s = plan.scratch;
+        self.scratch.ensure(s.patches * m, s.transposed * m, s.colmajor * m);
+    }
+
+    /// Currently reserved bytes (arena + scratch) — observability only.
+    pub fn bytes(&self) -> usize {
+        4 * (self.buf.len()
+            + self.scratch.patches.len()
+            + self.scratch.transposed.len()
+            + self.scratch.colmajor.len())
+    }
+}
+
+std::thread_local! {
+    static TL_ARENA: RefCell<Arena> = RefCell::new(Arena::default());
+}
+
+/// Run `f` against this thread's persistent arena — the serving workers'
+/// zero-steady-state-allocation entry point.
+pub fn with_thread_arena<R>(f: impl FnOnce(&mut Arena) -> R) -> R {
+    TL_ARENA.with(|a| f(&mut a.borrow_mut()))
+}
+
+// -- shared forward kernels --------------------------------------------------
+
+enum WRef<'a> {
+    Dense(&'a Tensor),
+    Planes(&'a BitPlaneMatrix),
+}
+
+impl WeightRep {
+    fn view(&self) -> WRef<'_> {
+        match self {
+            WeightRep::Dense(t) => WRef::Dense(t),
+            WeightRep::Planes(p) => WRef::Planes(p),
+        }
+    }
+}
+
+fn conv_apply(xd: &[f32], geom: &ConvGeom, w: WRef, scratch: &mut Scratch, out: &mut [f32]) {
+    let (rows, k, cout) = (geom.rows(), geom.kdim(), geom.cout);
+    match w {
+        WRef::Dense(wt) => {
+            scratch.ensure(rows * k, 0, 0);
+            let patches = &mut scratch.patches[..rows * k];
+            gemm::im2col_into(xd, geom, patches);
+            out.fill(0.0);
+            gemm::matmul_into(out, patches, wt.data(), rows, k, cout);
+        }
+        WRef::Planes(bpm) => {
+            scratch.ensure(rows * k, rows * k, cout * rows);
+            let Scratch { patches, transposed, colmajor } = scratch;
+            let patches = &mut patches[..rows * k];
+            let transposed = &mut transposed[..rows * k];
+            let colmajor = &mut colmajor[..cout * rows];
+            gemm::im2col_into(xd, geom, patches);
+            gemm::transpose_into(transposed, patches, rows, k);
+            bpm.matmul_t_into(colmajor, transposed, rows);
+            gemm::transpose_into(out, colmajor, cout, rows);
+        }
+    }
+}
+
+fn dense_apply(
+    xd: &[f32],
+    n: usize,
+    in_dim: usize,
+    out_dim: usize,
+    w: WRef,
+    scratch: &mut Scratch,
+    out: &mut [f32],
+) {
+    match w {
+        WRef::Dense(wt) => {
+            out.fill(0.0);
+            gemm::matmul_into(out, xd, wt.data(), n, in_dim, out_dim);
+        }
+        WRef::Planes(bpm) => {
+            scratch.ensure(0, n * in_dim, n * out_dim);
+            let Scratch { transposed, colmajor, .. } = scratch;
+            let tr = &mut transposed[..n * in_dim];
+            let cm = &mut colmajor[..n * out_dim];
+            gemm::transpose_into(tr, xd, n, in_dim);
+            bpm.matmul_t_into(cm, tr, n);
+            gemm::transpose_into(out, cm, out_dim, n);
+        }
+    }
+}
+
+fn bias_apply(xd: &[f32], b: &[f32], out: &mut [f32]) {
+    for (orow, xrow) in out.chunks_mut(b.len()).zip(xd.chunks(b.len())) {
+        for ((o, &x), &bv) in orow.iter_mut().zip(xrow).zip(b) {
+            *o = x + bv;
+        }
+    }
+}
+
+/// `(v − μ)·inv·γ + β` in place — `inv = 1/√(σ²+ε)` precomputed, the same
+/// expression (and element order) the tape path evaluates; row-chunked so
+/// the hot loop carries no per-element modulo.
+fn bn_inplace(data: &mut [f32], gamma: &[f32], beta: &[f32], mean: &[f32], inv: &[f32]) {
+    let c = gamma.len();
+    for row in data.chunks_mut(c) {
+        for (ch, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean[ch]) * inv[ch] * gamma[ch] + beta[ch];
+        }
+    }
+}
+
+/// Fake-quant clipped activation in place (`kernels/actquant.py`):
+/// `levels ≥ 1` rounds `clip(x, 0, bound)` onto `levels` uniform steps,
+/// `levels < 1` keeps the bare clip.
+fn act_inplace(data: &mut [f32], bound: f32, levels: f32) {
+    if levels >= 1.0 {
+        for v in data.iter_mut() {
+            let xc = v.clamp(0.0, bound);
+            *v = (xc / bound * levels).round() / levels * bound;
+        }
+    } else {
+        for v in data.iter_mut() {
+            *v = v.clamp(0.0, bound);
+        }
+    }
+}
+
+fn add_apply(a: &[f32], b: &[f32], out: &mut [f32]) {
+    for ((o, &x), &y) in out.iter_mut().zip(a).zip(b) {
+        *o = x + y;
+    }
+}
+
+fn subsample_apply(
+    xd: &[f32],
+    n: usize,
+    h: usize,
+    w: usize,
+    c: usize,
+    stride: usize,
+    out: &mut [f32],
+) {
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let src = &xd[((ni * h + oy * stride) * w + ox * stride) * c..][..c];
+                out[((ni * oh + oy) * ow + ox) * c..][..c].copy_from_slice(src);
+            }
+        }
+    }
+}
+
+fn pad_channels_apply(xd: &[f32], pix: usize, cin: usize, cout: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for p in 0..pix {
+        out[p * cout..p * cout + cin].copy_from_slice(&xd[p * cin..(p + 1) * cin]);
+    }
+}
+
+fn global_avg_pool_apply(xd: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for ni in 0..n {
+        for p in 0..h * w {
+            let src = &xd[(ni * h * w + p) * c..][..c];
+            let dst = &mut out[ni * c..(ni + 1) * c];
+            for (d, &v) in dst.iter_mut().zip(src) {
+                *d += v;
+            }
+        }
+    }
+    let inv = 1.0 / (h * w) as f32;
+    for v in out.iter_mut() {
+        *v *= inv;
+    }
+}
+
+fn avg_pool3x3_edge_apply(xd: &[f32], n: usize, h: usize, w: usize, c: usize, out: &mut [f32]) {
+    out.fill(0.0);
+    for ni in 0..n {
+        for oy in 0..h {
+            for ox in 0..w {
+                let dst = &mut out[((ni * h + oy) * w + ox) * c..][..c];
+                for dy in 0..3 {
+                    let iy = (oy + dy).saturating_sub(1).min(h - 1);
+                    for dx in 0..3 {
+                        let ix = (ox + dx).saturating_sub(1).min(w - 1);
+                        let src = &xd[((ni * h + iy) * w + ix) * c..][..c];
+                        for (d, &v) in dst.iter_mut().zip(src) {
+                            *d += v;
+                        }
+                    }
+                }
+                for v in dst.iter_mut() {
+                    *v /= 9.0;
+                }
+            }
+        }
+    }
+}
+
+// -- parameter resolution ----------------------------------------------------
+
+fn bn_state(state: &ModelState, name: &str) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>)> {
+    Ok((
+        state.get(&format!("bn:{name}/gamma"))?.data().to_vec(),
+        state.get(&format!("bn:{name}/beta"))?.data().to_vec(),
+        state.get(&format!("bn:{name}/mean"))?.data().to_vec(),
+        state.get(&format!("bn:{name}/var"))?.data().to_vec(),
+    ))
+}
+
+/// Resolve one activation site's `(bound, levels, pact-key)` — the exact
+/// rules of the deleted `Fwd::act`.
+fn act_site_params(
+    model: &NativeModel,
+    state: &ModelState,
+    am: AMode,
+    site: usize,
+    actlv: &[f32],
+) -> Result<(f32, f32, Option<String>)> {
+    match am {
+        AMode::Ref => Ok((6.0, 0.0, None)),
+        AMode::Relu6 => {
+            let lv = *actlv
+                .get(site)
+                .ok_or_else(|| anyhow!("actlv has no entry for site {site}"))?;
+            Ok((6.0, lv, None))
+        }
+        AMode::Pact => {
+            let lv = *actlv
+                .get(site)
+                .ok_or_else(|| anyhow!("actlv has no entry for site {site}"))?;
+            let sname = model
+                .act_sites
+                .get(site)
+                .ok_or_else(|| anyhow!("model has no act site {site}"))?
+                .clone();
+            let p = state.get(&format!("pact:{sname}"))?.item()?;
+            // keep the clip strictly positive; grad flows where p ≥ min
+            let pact = if p >= 0.05 { Some(sname) } else { None };
+            Ok((p.max(0.05), lv, pact))
+        }
+    }
+}
+
+fn take_rep(reps: &mut BTreeMap<String, WeightRep>, layer: &str) -> Result<WeightRep> {
+    reps.remove(layer)
+        .ok_or_else(|| anyhow!("layer {layer:?} has no prepared weight (or was reused)"))
+}
+
+// -- the tape driver (training / HVP gradients) ------------------------------
+
+pub(crate) struct TrainRun {
+    pub tape: Tape,
+    pub logits: Var,
+    /// BN running-stat updates collected in train mode: (name, mean, var).
+    pub new_stats: Vec<(String, Vec<f32>, Vec<f32>)>,
+}
+
+/// Execute a train-mode plan while recording the reverse-mode tape —
+/// one tape node per graph node, in schedule order.
+pub(crate) fn run_on_tape(
+    plan: &CompiledPlan,
+    model: &NativeModel,
+    state: &ModelState,
+    mut reps: BTreeMap<String, WeightRep>,
+    actlv: &[f32],
+    am: AMode,
+    train: bool,
+    x: Tensor,
+    hook: Option<&dyn ShardHook>,
+) -> Result<TrainRun> {
+    if plan.mode != PlanMode::Train {
+        bail!("tape execution needs a train-mode plan (fused nodes have no backward)");
+    }
+    let mut tape = Tape::new();
+    let mut new_stats: Vec<(String, Vec<f32>, Vec<f32>)> = Vec::new();
+    let mut scratch = Scratch::default();
+    let mut input = Some(x);
+    for node in &plan.graph.nodes {
+        let arg = |i: usize| Var(node.inputs[i]);
+        match &node.op {
+            GraphOp::Input => {
+                let t = input.take().ok_or_else(|| anyhow!("graph has two input nodes"))?;
+                tape.push(Op::Input, t);
+            }
+            GraphOp::Conv { layer, stride } => {
+                let rep = take_rep(&mut reps, layer)?;
+                let kshape = model.layer(layer)?.shape.clone();
+                let (geom, out) = {
+                    let xt = tape.value(arg(0));
+                    let s = xt.shape();
+                    if s.len() != 4 || s[3] != kshape[2] {
+                        bail!("conv {layer}: input {s:?} vs kernel {kshape:?}");
+                    }
+                    let geom = ConvGeom::same(
+                        s[0], s[1], s[2], kshape[2], kshape[0], kshape[1], kshape[3], *stride,
+                    );
+                    let mut out = Tensor::zeros(&[geom.n, geom.oh, geom.ow, geom.cout]);
+                    conv_apply(xt.data(), &geom, rep.view(), &mut scratch, out.data_mut());
+                    (geom, out)
+                };
+                tape.push(Op::Conv { x: arg(0), layer: layer.clone(), w: rep, geom }, out);
+            }
+            GraphOp::Dense { layer } => {
+                let rep = take_rep(&mut reps, layer)?;
+                let kshape = model.layer(layer)?.shape.clone();
+                if kshape.len() != 2 {
+                    bail!("dense {layer}: weight shape {kshape:?} is not [in, out]");
+                }
+                let (in_dim, out_dim) = (kshape[0], kshape[1]);
+                if let WeightRep::Dense(wt) = &rep {
+                    if wt.shape() != [in_dim, out_dim] {
+                        bail!("dense {layer}: weight {:?} vs [{in_dim}, {out_dim}]", wt.shape());
+                    }
+                }
+                let out = {
+                    let xt = tape.value(arg(0));
+                    let s = xt.shape();
+                    if s.len() != 2 || s[1] != in_dim {
+                        bail!("dense {layer}: input {s:?} is not [N, {in_dim}]");
+                    }
+                    let mut out = Tensor::zeros(&[s[0], out_dim]);
+                    dense_apply(
+                        xt.data(),
+                        s[0],
+                        in_dim,
+                        out_dim,
+                        rep.view(),
+                        &mut scratch,
+                        out.data_mut(),
+                    );
+                    out
+                };
+                tape.push(
+                    Op::Dense { x: arg(0), layer: layer.clone(), w: rep, in_dim, out_dim },
+                    out,
+                );
+            }
+            GraphOp::Bias { layer } => {
+                let b = state.get(&format!("w:{layer}/b"))?.data().to_vec();
+                let out = {
+                    let xt = tape.value(arg(0));
+                    if xt.shape().last() != Some(&b.len()) {
+                        bail!("bias {layer}: input {:?} vs bias [{}]", xt.shape(), b.len());
+                    }
+                    let mut out = Tensor::zeros(xt.shape());
+                    bias_apply(xt.data(), &b, out.data_mut());
+                    out
+                };
+                tape.push(Op::Bias { x: arg(0), layer: layer.clone(), out_dim: b.len() }, out);
+            }
+            GraphOp::Bn { name } => {
+                let (gamma, beta, run_m, run_v) = bn_state(state, name)?;
+                let (mean, var, use_batch) = if train {
+                    let (bm, bv) = match hook {
+                        Some(h) => sharded_batch_stats(h, tape.value(arg(0)))?,
+                        None => batch_stats(tape.value(arg(0))),
+                    };
+                    let nm: Vec<f32> = run_m
+                        .iter()
+                        .zip(&bm)
+                        .map(|(&r, &b)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * b)
+                        .collect();
+                    let nv: Vec<f32> = run_v
+                        .iter()
+                        .zip(&bv)
+                        .map(|(&r, &b)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * b)
+                        .collect();
+                    new_stats.push((name.clone(), nm, nv));
+                    (bm, bv, true)
+                } else {
+                    (run_m, run_v, false)
+                };
+                let out = {
+                    let xt = tape.value(arg(0));
+                    let c = *xt.shape().last().unwrap_or(&0);
+                    if [gamma.len(), beta.len(), mean.len(), var.len()] != [c, c, c, c] {
+                        bail!("bn {name}: channel mismatch ({c} channels)");
+                    }
+                    let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+                    let mut out = Tensor::zeros(xt.shape());
+                    out.data_mut().copy_from_slice(xt.data());
+                    bn_inplace(out.data_mut(), &gamma, &beta, &mean, &inv);
+                    out
+                };
+                let op = Op::Bn {
+                    x: arg(0),
+                    name: name.clone(),
+                    gamma,
+                    mean,
+                    var,
+                    batch_stats: use_batch,
+                };
+                tape.push(op, out);
+            }
+            GraphOp::ActQuant { site } => {
+                let (bound, levels, pact) = act_site_params(model, state, am, *site, actlv)?;
+                let out = {
+                    let xt = tape.value(arg(0));
+                    let mut out = Tensor::zeros(xt.shape());
+                    out.data_mut().copy_from_slice(xt.data());
+                    act_inplace(out.data_mut(), bound, levels);
+                    out
+                };
+                tape.push(Op::ActQuant { x: arg(0), bound, levels, pact }, out);
+            }
+            GraphOp::Add => {
+                let out = {
+                    let (ta, tb) = (tape.value(arg(0)), tape.value(arg(1)));
+                    if ta.shape() != tb.shape() {
+                        bail!("add: {:?} vs {:?}", ta.shape(), tb.shape());
+                    }
+                    let mut out = Tensor::zeros(ta.shape());
+                    add_apply(ta.data(), tb.data(), out.data_mut());
+                    out
+                };
+                tape.push(Op::Add { a: arg(0), b: arg(1) }, out);
+            }
+            GraphOp::Subsample { stride } => {
+                let out = {
+                    let xt = tape.value(arg(0));
+                    let s = xt.shape();
+                    if s.len() != 4 {
+                        bail!("subsample: input {s:?} is not NHWC");
+                    }
+                    let (oh, ow) = (s[1].div_ceil(*stride), s[2].div_ceil(*stride));
+                    let mut out = Tensor::zeros(&[s[0], oh, ow, s[3]]);
+                    subsample_apply(xt.data(), s[0], s[1], s[2], s[3], *stride, out.data_mut());
+                    out
+                };
+                tape.push(Op::Subsample { x: arg(0), stride: *stride }, out);
+            }
+            GraphOp::PadShortcut { cout } => {
+                let (cin, out) = {
+                    let xt = tape.value(arg(0));
+                    let s = xt.shape();
+                    let cin = *s.last().ok_or_else(|| anyhow!("pad_channels: scalar input"))?;
+                    if *cout < cin {
+                        bail!("pad_channels: {cout} < {cin}");
+                    }
+                    let pix = xt.len() / cin;
+                    let mut shape = s.to_vec();
+                    *shape.last_mut().unwrap() = *cout;
+                    let mut out = Tensor::zeros(&shape);
+                    pad_channels_apply(xt.data(), pix, cin, *cout, out.data_mut());
+                    (cin, out)
+                };
+                tape.push(Op::PadChannels { x: arg(0), cin }, out);
+            }
+            GraphOp::Concat => {
+                let (parts, out) = {
+                    let base = tape.value(arg(0)).shape().to_vec();
+                    if base.len() != 4 {
+                        bail!("concat: input {base:?} is not NHWC");
+                    }
+                    let mut parts = Vec::with_capacity(node.inputs.len());
+                    let mut ctotal = 0usize;
+                    for &p in &node.inputs {
+                        let s = tape.value(Var(p)).shape();
+                        if s[..3] != base[..3] {
+                            bail!("concat: {s:?} vs {base:?}");
+                        }
+                        parts.push((Var(p), s[3]));
+                        ctotal += s[3];
+                    }
+                    let pix = base[0] * base[1] * base[2];
+                    let mut shape = base;
+                    shape[3] = ctotal;
+                    let mut out = Tensor::zeros(&shape);
+                    let mut off = 0usize;
+                    for &(v, c) in &parts {
+                        let src = tape.value(v).data();
+                        for p in 0..pix {
+                            out.data_mut()[p * ctotal + off..p * ctotal + off + c]
+                                .copy_from_slice(&src[p * c..(p + 1) * c]);
+                        }
+                        off += c;
+                    }
+                    (parts, out)
+                };
+                tape.push(Op::Concat { parts }, out);
+            }
+            GraphOp::GlobalAvgPool => {
+                let out = {
+                    let xt = tape.value(arg(0));
+                    let s = xt.shape();
+                    if s.len() != 4 {
+                        bail!("global_avg_pool: input {s:?} is not NHWC");
+                    }
+                    let mut out = Tensor::zeros(&[s[0], s[3]]);
+                    global_avg_pool_apply(xt.data(), s[0], s[1], s[2], s[3], out.data_mut());
+                    out
+                };
+                tape.push(Op::GlobalAvgPool { x: arg(0) }, out);
+            }
+            GraphOp::AvgPool3x3Edge => {
+                let out = {
+                    let xt = tape.value(arg(0));
+                    let s = xt.shape();
+                    if s.len() != 4 {
+                        bail!("avg_pool3x3: input {s:?} is not NHWC");
+                    }
+                    let mut out = Tensor::zeros(s);
+                    avg_pool3x3_edge_apply(xt.data(), s[0], s[1], s[2], s[3], out.data_mut());
+                    out
+                };
+                tape.push(Op::AvgPool3x3Edge { x: arg(0) }, out);
+            }
+            GraphOp::FusedConvBnAct { .. } => {
+                bail!("fused node in a train-mode plan (planner invariant broken)")
+            }
+        }
+    }
+    Ok(TrainRun { tape, logits: Var(plan.graph.output), new_stats })
+}
+
+/// Forward a train-mode plan to logits on the tape path and return them —
+/// the reference executor `tests/prop_ir.rs` holds the arena executor to
+/// (this path is the direct descendant of the pre-IR `Fwd` walk).
+pub fn tape_logits(
+    model: &NativeModel,
+    state: &ModelState,
+    reps: BTreeMap<String, WeightRep>,
+    actlv: &[f32],
+    am: AMode,
+    x: Tensor,
+) -> Result<Tensor> {
+    let plan = crate::ir::plan::cached(model, PlanMode::Train)?;
+    let run = run_on_tape(&plan, model, state, reps, actlv, am, false, x, None)?;
+    Ok(run.tape.value(run.logits).clone())
+}
+
+// -- the bound inference plan ------------------------------------------------
+
+struct BnParams {
+    gamma: Vec<f32>,
+    beta: Vec<f32>,
+    mean: Vec<f32>,
+    inv: Vec<f32>,
+}
+
+impl BnParams {
+    fn resolve(state: &ModelState, name: &str, c: usize) -> Result<BnParams> {
+        let (gamma, beta, mean, var) = bn_state(state, name)?;
+        if [gamma.len(), beta.len(), mean.len(), var.len()] != [c, c, c, c] {
+            bail!("bn {name}: channel mismatch ({c} channels)");
+        }
+        let inv = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
+        Ok(BnParams { gamma, beta, mean, inv })
+    }
+}
+
+struct ActParams {
+    bound: f32,
+    levels: f32,
+}
+
+struct ConvSpec {
+    w: WeightRep,
+    h: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+    cout: usize,
+    stride: usize,
+    /// Plane bitsets fully trimmed: the GEMM is skipped, output zero-filled.
+    dead: bool,
+}
+
+enum BoundOp {
+    Input,
+    Conv(ConvSpec),
+    FusedConvBnAct { conv: ConvSpec, bn: BnParams, act: ActParams },
+    Bn(BnParams),
+    Act(ActParams),
+    Dense { w: WeightRep, in_dim: usize, out_dim: usize, dead: bool },
+    Bias { b: Vec<f32> },
+    Add,
+    Subsample { h: usize, w: usize, c: usize, stride: usize },
+    PadChannels { pix: usize, cin: usize, cout: usize },
+    Concat { pix: usize, widths: Vec<usize> },
+    GlobalAvgPool { h: usize, w: usize, c: usize },
+    AvgPool3x3Edge { h: usize, w: usize, c: usize },
+}
+
+/// An infer-mode plan resolved against one model state: every parameter
+/// fetched, every weight bound, nothing left to look up per pass. Shared
+/// read-only across serving threads (`Send + Sync`).
+pub struct BoundPlan {
+    plan: Arc<CompiledPlan>,
+    ops: Vec<BoundOp>,
+    sample_elems: usize,
+    classes: usize,
+    elided: usize,
+}
+
+const _: () = {
+    const fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<BoundPlan>();
+};
+
+fn conv_spec(
+    model: &NativeModel,
+    reps: &mut BTreeMap<String, WeightRep>,
+    layer: &str,
+    stride: usize,
+    in_shape: &[usize],
+) -> Result<ConvSpec> {
+    let w = take_rep(reps, layer)?;
+    let kshape = model.layer(layer)?.shape.clone();
+    if kshape.len() != 4 {
+        bail!("conv {layer}: kernel shape {kshape:?} is not HWIO");
+    }
+    if in_shape.len() != 3 || in_shape[2] != kshape[2] {
+        bail!("conv {layer}: input {in_shape:?} vs kernel {kshape:?}");
+    }
+    if let WeightRep::Dense(wt) = &w {
+        if wt.shape() != kshape.as_slice() {
+            bail!("conv {layer}: weight {:?} vs kernel {kshape:?}", wt.shape());
+        }
+    }
+    let dead = matches!(&w, WeightRep::Planes(p) if p.nnz_bits() == 0);
+    Ok(ConvSpec {
+        w,
+        h: in_shape[0],
+        wd: in_shape[1],
+        kh: kshape[0],
+        kw: kshape[1],
+        cin: kshape[2],
+        cout: kshape[3],
+        stride,
+        dead,
+    })
+}
+
+/// Resolve an infer-mode plan against a model state — the "link" step
+/// between compile and execute. Consumes the prepared weights (a serving
+/// layer binds once per checkpoint and shares the result).
+pub fn bind(
+    plan: &Arc<CompiledPlan>,
+    model: &NativeModel,
+    state: &ModelState,
+    mut reps: BTreeMap<String, WeightRep>,
+    actlv: &[f32],
+    am: AMode,
+) -> Result<BoundPlan> {
+    if plan.mode != PlanMode::Infer {
+        bail!("bind needs an infer-mode plan");
+    }
+    let graph = &plan.graph;
+    let mut ops = Vec::with_capacity(graph.nodes.len());
+    let mut elided = 0usize;
+    for node in &graph.nodes {
+        let in_shape = |i: usize| graph.nodes[node.inputs[i]].shape.as_slice();
+        let op = match &node.op {
+            GraphOp::Input => BoundOp::Input,
+            GraphOp::Conv { layer, stride } => {
+                let spec = conv_spec(model, &mut reps, layer, *stride, in_shape(0))?;
+                elided += usize::from(spec.dead);
+                BoundOp::Conv(spec)
+            }
+            GraphOp::FusedConvBnAct { layer, stride, site } => {
+                let spec = conv_spec(model, &mut reps, layer, *stride, in_shape(0))?;
+                elided += usize::from(spec.dead);
+                let bn = BnParams::resolve(state, layer, spec.cout)?;
+                let (bound, levels, _) = act_site_params(model, state, am, *site, actlv)?;
+                BoundOp::FusedConvBnAct { conv: spec, bn, act: ActParams { bound, levels } }
+            }
+            GraphOp::Bn { name } => {
+                let c = *node.shape.last().unwrap_or(&0);
+                BoundOp::Bn(BnParams::resolve(state, name, c)?)
+            }
+            GraphOp::ActQuant { site } => {
+                let (bound, levels, _) = act_site_params(model, state, am, *site, actlv)?;
+                BoundOp::Act(ActParams { bound, levels })
+            }
+            GraphOp::Dense { layer } => {
+                let w = take_rep(&mut reps, layer)?;
+                let kshape = model.layer(layer)?.shape.clone();
+                if kshape.len() != 2 {
+                    bail!("dense {layer}: weight shape {kshape:?} is not [in, out]");
+                }
+                if let WeightRep::Dense(wt) = &w {
+                    if wt.shape() != kshape.as_slice() {
+                        bail!("dense {layer}: weight {:?} vs {kshape:?}", wt.shape());
+                    }
+                }
+                let dead = matches!(&w, WeightRep::Planes(p) if p.nnz_bits() == 0);
+                elided += usize::from(dead);
+                BoundOp::Dense { w, in_dim: kshape[0], out_dim: kshape[1], dead }
+            }
+            GraphOp::Bias { layer } => {
+                let b = state.get(&format!("w:{layer}/b"))?.data().to_vec();
+                if node.shape.last() != Some(&b.len()) {
+                    bail!("bias {layer}: node {:?} vs bias [{}]", node.shape, b.len());
+                }
+                BoundOp::Bias { b }
+            }
+            GraphOp::Add => BoundOp::Add,
+            GraphOp::Subsample { stride } => {
+                let s = in_shape(0);
+                BoundOp::Subsample { h: s[0], w: s[1], c: s[2], stride: *stride }
+            }
+            GraphOp::PadShortcut { cout } => {
+                let s = in_shape(0);
+                BoundOp::PadChannels { pix: s[0] * s[1], cin: s[2], cout: *cout }
+            }
+            GraphOp::Concat => {
+                let widths: Vec<usize> =
+                    (0..node.inputs.len()).map(|i| in_shape(i)[2]).collect();
+                BoundOp::Concat { pix: node.shape[0] * node.shape[1], widths }
+            }
+            GraphOp::GlobalAvgPool => {
+                let s = in_shape(0);
+                BoundOp::GlobalAvgPool { h: s[0], w: s[1], c: s[2] }
+            }
+            GraphOp::AvgPool3x3Edge => {
+                let s = in_shape(0);
+                BoundOp::AvgPool3x3Edge { h: s[0], w: s[1], c: s[2] }
+            }
+        };
+        ops.push(op);
+    }
+    Ok(BoundPlan {
+        sample_elems: graph.nodes[0].elems(),
+        classes: graph.nodes[graph.output].elems(),
+        plan: plan.clone(),
+        ops,
+        elided,
+    })
+}
+
+impl BoundPlan {
+    pub fn plan(&self) -> &CompiledPlan {
+        &self.plan
+    }
+
+    /// Elements of one input sample (`h·w·c`).
+    pub fn sample_elems(&self) -> usize {
+        self.sample_elems
+    }
+
+    pub fn classes(&self) -> usize {
+        self.classes
+    }
+
+    /// Layers whose plane bitsets were fully trimmed — their GEMMs are
+    /// elided (zero-fill) by the executor.
+    pub fn elided_layers(&self) -> usize {
+        self.elided
+    }
+
+    /// Run one batch of `m` samples; returns the logits slice `[m·classes]`
+    /// living inside the arena. Zero heap allocations once the arena has
+    /// seen this batch size (and the thread GEMM cap is 1).
+    pub fn execute<'a>(&self, x: &[f32], m: usize, arena: &'a mut Arena) -> Result<&'a [f32]> {
+        let r = self.run(x, m, arena)?;
+        Ok(&arena.buf[r])
+    }
+
+    /// Like [`BoundPlan::execute`] but appends the logits to `out` — the
+    /// serving workers' marshalling-free variant.
+    pub fn execute_into(
+        &self,
+        x: &[f32],
+        m: usize,
+        arena: &mut Arena,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let r = self.run(x, m, arena)?;
+        out.extend_from_slice(&arena.buf[r]);
+        Ok(())
+    }
+
+    fn run(&self, x: &[f32], m: usize, arena: &mut Arena) -> Result<Range<usize>> {
+        if m == 0 {
+            bail!("empty batch");
+        }
+        if x.len() != m * self.sample_elems {
+            bail!(
+                "input carries {} elements, want {} ({} samples × {})",
+                x.len(),
+                m * self.sample_elems,
+                m,
+                self.sample_elems
+            );
+        }
+        arena.prepare(&self.plan, m);
+        let Arena { buf, scratch } = arena;
+        let offsets = &self.plan.offsets;
+        let nodes = &self.plan.graph.nodes;
+        for (id, op) in self.ops.iter().enumerate() {
+            let start = offsets[id] * m;
+            let end = start + nodes[id].elems() * m;
+            // The planner guarantees live ranges never alias, so inputs sit
+            // entirely left or entirely right of this node's output range.
+            let (left, rest) = buf.split_at_mut(start);
+            let (out, right) = rest.split_at_mut(end - start);
+            let (left, right): (&[f32], &[f32]) = (left, right);
+            let read = move |p: NodeId| {
+                let ps = offsets[p] * m;
+                let pe = ps + nodes[p].elems() * m;
+                debug_assert!(pe <= start || ps >= end, "live-range aliasing");
+                if pe <= start {
+                    &left[ps..pe]
+                } else {
+                    &right[ps - end..pe - end]
+                }
+            };
+            let arg = |i: usize| read(nodes[id].inputs[i]);
+            match op {
+                BoundOp::Input => out.copy_from_slice(x),
+                BoundOp::Conv(spec) => {
+                    let geom = ConvGeom::same(
+                        m, spec.h, spec.wd, spec.cin, spec.kh, spec.kw, spec.cout, spec.stride,
+                    );
+                    if spec.dead {
+                        out.fill(0.0);
+                    } else {
+                        conv_apply(arg(0), &geom, spec.w.view(), scratch, out);
+                    }
+                }
+                BoundOp::FusedConvBnAct { conv, bn, act } => {
+                    let geom = ConvGeom::same(
+                        m, conv.h, conv.wd, conv.cin, conv.kh, conv.kw, conv.cout, conv.stride,
+                    );
+                    if conv.dead {
+                        out.fill(0.0);
+                    } else {
+                        conv_apply(arg(0), &geom, conv.w.view(), scratch, out);
+                    }
+                    bn_inplace(out, &bn.gamma, &bn.beta, &bn.mean, &bn.inv);
+                    act_inplace(out, act.bound, act.levels);
+                }
+                BoundOp::Bn(p) => {
+                    out.copy_from_slice(arg(0));
+                    bn_inplace(out, &p.gamma, &p.beta, &p.mean, &p.inv);
+                }
+                BoundOp::Act(p) => {
+                    out.copy_from_slice(arg(0));
+                    act_inplace(out, p.bound, p.levels);
+                }
+                BoundOp::Dense { w, in_dim, out_dim, dead } => {
+                    if *dead {
+                        out.fill(0.0);
+                    } else {
+                        dense_apply(arg(0), m, *in_dim, *out_dim, w.view(), scratch, out);
+                    }
+                }
+                BoundOp::Bias { b } => bias_apply(arg(0), b, out),
+                BoundOp::Add => add_apply(arg(0), arg(1), out),
+                BoundOp::Subsample { h, w, c, stride } => {
+                    subsample_apply(arg(0), m, *h, *w, *c, *stride, out)
+                }
+                BoundOp::PadChannels { pix, cin, cout } => {
+                    pad_channels_apply(arg(0), m * pix, *cin, *cout, out)
+                }
+                BoundOp::Concat { pix, widths } => {
+                    let ctotal: usize = widths.iter().sum();
+                    let rows = m * pix;
+                    let mut off = 0usize;
+                    for (i, &c) in widths.iter().enumerate() {
+                        let src = read(nodes[id].inputs[i]);
+                        for p in 0..rows {
+                            out[p * ctotal + off..p * ctotal + off + c]
+                                .copy_from_slice(&src[p * c..(p + 1) * c]);
+                        }
+                        off += c;
+                    }
+                }
+                BoundOp::GlobalAvgPool { h, w, c } => {
+                    global_avg_pool_apply(arg(0), m, *h, *w, *c, out)
+                }
+                BoundOp::AvgPool3x3Edge { h, w, c } => {
+                    avg_pool3x3_edge_apply(arg(0), m, *h, *w, *c, out)
+                }
+            }
+        }
+        let o = self.plan.graph.output;
+        Ok(offsets[o] * m..offsets[o] * m + nodes[o].elems() * m)
+    }
+}

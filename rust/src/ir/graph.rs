@@ -1,0 +1,334 @@
+//! Layer-graph IR: typed nodes with explicit edges (DESIGN.md §11).
+//!
+//! A [`Graph`] is the *structure* of one model's forward computation,
+//! constructed once per model and shared by every execution mode — the
+//! training tape, the engine's eval entries, HVP, and the serving hot
+//! path. Node ids are assigned at construction, never at execution, so
+//! they are stable keys: the sharded trainer keys its gradient deposits by
+//! node id (`tape::DepositSlot`) instead of call order, and the planner
+//! (`ir::plan`) attaches liveness and arena offsets to the very ids the
+//! executor (`ir::exec`) walks.
+//!
+//! Shape inference runs *during* construction: every node records its
+//! per-sample output shape (`[h, w, c]` NHWC, `[c]` once pooled), with no
+//! batch axis — every op's output scales linearly in the batch dimension,
+//! so one compiled plan serves any batch size.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::runtime::native::models::NativeModel;
+
+/// Index of a node in its graph; stable across executions by construction.
+pub type NodeId = usize;
+
+/// The typed op set — exactly what the model zoo's four forwards need.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GraphOp {
+    Input,
+    Conv { layer: String, stride: usize },
+    Bn { name: String },
+    /// Quantized activation; `site` indexes `model.act_sites` and is fixed
+    /// at construction (the deleted `Fwd` shim numbered sites per call, at
+    /// run time).
+    ActQuant { site: usize },
+    Dense { layer: String },
+    /// Adds the `w:<layer>/b` vector (kept separate from [`GraphOp::Dense`]
+    /// so the matmul and the bias add have their own liveness).
+    Bias { layer: String },
+    Add,
+    Subsample { stride: usize },
+    /// Channel zero-pad — the tail of the ResNet option-A shortcut.
+    PadShortcut { cout: usize },
+    Concat,
+    GlobalAvgPool,
+    AvgPool3x3Edge,
+    /// conv→bn→act collapsed by the eval/serve fusion pass (`ir::plan`);
+    /// never present in training graphs. The BN name equals the conv layer
+    /// name (true throughout the model zoo; the pass checks it).
+    FusedConvBnAct { layer: String, stride: usize, site: usize },
+}
+
+impl GraphOp {
+    /// Display name for per-kind node counts (`bsq-repro info`).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            GraphOp::Input => "input",
+            GraphOp::Conv { .. } => "conv",
+            GraphOp::Bn { .. } => "bn",
+            GraphOp::ActQuant { .. } => "act-quant",
+            GraphOp::Dense { .. } => "dense",
+            GraphOp::Bias { .. } => "bias",
+            GraphOp::Add => "add",
+            GraphOp::Subsample { .. } => "subsample",
+            GraphOp::PadShortcut { .. } => "pad-shortcut",
+            GraphOp::Concat => "concat",
+            GraphOp::GlobalAvgPool => "global-avg-pool",
+            GraphOp::AvgPool3x3Edge => "avg-pool",
+            GraphOp::FusedConvBnAct { .. } => "fused-conv-bn-act",
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct GraphNode {
+    pub op: GraphOp,
+    pub inputs: Vec<NodeId>,
+    /// Per-sample output shape (no batch axis).
+    pub shape: Vec<usize>,
+}
+
+impl GraphNode {
+    /// Per-sample element count of this node's activation.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One model's forward structure: nodes in topological order (every input
+/// id is smaller than its consumer — the builder appends).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    pub model: String,
+    pub nodes: Vec<GraphNode>,
+    pub output: NodeId,
+    /// Activation-quant sites consumed (== `model.act_sites.len()`).
+    pub act_sites: usize,
+}
+
+impl Graph {
+    /// Consumer lists per node (edges reversed).
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut out = vec![Vec::new(); self.nodes.len()];
+        for (i, n) in self.nodes.iter().enumerate() {
+            for &p in &n.inputs {
+                out[p].push(i);
+            }
+        }
+        out
+    }
+
+    /// `(kind, count)` pairs in first-appearance order.
+    pub fn kind_counts(&self) -> Vec<(&'static str, usize)> {
+        let mut counts: Vec<(&'static str, usize)> = Vec::new();
+        for n in &self.nodes {
+            let k = n.op.kind();
+            match counts.iter_mut().find(|(name, _)| *name == k) {
+                Some((_, c)) => *c += 1,
+                None => counts.push((k, 1)),
+            }
+        }
+        counts
+    }
+}
+
+/// Records a model's forward as a graph, inferring per-sample shapes as it
+/// goes — the declarative twin of the deleted imperative `Fwd` walker,
+/// with the same method names so the zoo's builders read unchanged.
+pub struct GraphBuilder<'m> {
+    model: &'m NativeModel,
+    nodes: Vec<GraphNode>,
+    sites: usize,
+}
+
+impl<'m> GraphBuilder<'m> {
+    pub fn new(model: &'m NativeModel) -> GraphBuilder<'m> {
+        let (h, w) = model.input_hw;
+        let nodes = vec![GraphNode {
+            op: GraphOp::Input,
+            inputs: Vec::new(),
+            shape: vec![h, w, model.in_ch],
+        }];
+        GraphBuilder { model, nodes, sites: 0 }
+    }
+
+    /// The input node (always node 0).
+    pub fn input(&self) -> NodeId {
+        0
+    }
+
+    fn shape(&self, id: NodeId) -> &[usize] {
+        &self.nodes[id].shape
+    }
+
+    fn push(&mut self, op: GraphOp, inputs: Vec<NodeId>, shape: Vec<usize>) -> NodeId {
+        self.nodes.push(GraphNode { op, inputs, shape });
+        self.nodes.len() - 1
+    }
+
+    pub fn conv(&mut self, x: NodeId, name: &str, stride: usize) -> Result<NodeId> {
+        let kshape = self.model.layer(name)?.shape.clone();
+        if kshape.len() != 4 {
+            bail!("conv {name}: kernel shape {kshape:?} is not HWIO");
+        }
+        let s = self.shape(x).to_vec();
+        if s.len() != 3 || s[2] != kshape[2] {
+            bail!("conv {name}: input {s:?} vs kernel {kshape:?}");
+        }
+        let out = vec![s[0].div_ceil(stride), s[1].div_ceil(stride), kshape[3]];
+        Ok(self.push(GraphOp::Conv { layer: name.to_string(), stride }, vec![x], out))
+    }
+
+    pub fn bn(&mut self, x: NodeId, name: &str) -> Result<NodeId> {
+        if !self.model.bn_names.iter().any(|n| n == name) {
+            bail!("model {} has no BN group {name:?}", self.model.name);
+        }
+        let shape = self.shape(x).to_vec();
+        Ok(self.push(GraphOp::Bn { name: name.to_string() }, vec![x], shape))
+    }
+
+    /// Quantized activation; sites are numbered in construction order,
+    /// matching the zoo's definition order (the old call-order contract).
+    pub fn act(&mut self, x: NodeId) -> Result<NodeId> {
+        let site = self.sites;
+        if site >= self.model.act_sites.len() {
+            bail!("model {} has no act site {site}", self.model.name);
+        }
+        self.sites += 1;
+        let shape = self.shape(x).to_vec();
+        Ok(self.push(GraphOp::ActQuant { site }, vec![x], shape))
+    }
+
+    pub fn conv_bn_act(&mut self, x: NodeId, name: &str, stride: usize) -> Result<NodeId> {
+        let y = self.conv(x, name, stride)?;
+        let y = self.bn(y, name)?;
+        self.act(y)
+    }
+
+    /// Dense head: a matmul node plus its bias node (`w:<name>/b`).
+    pub fn dense(&mut self, x: NodeId, name: &str) -> Result<NodeId> {
+        let kshape = self.model.layer(name)?.shape.clone();
+        if kshape.len() != 2 {
+            bail!("dense {name}: weight shape {kshape:?} is not [in, out]");
+        }
+        let s = self.shape(x).to_vec();
+        if s.len() != 1 || s[0] != kshape[0] {
+            bail!("dense {name}: input {s:?} vs weight {kshape:?}");
+        }
+        let d = self.push(GraphOp::Dense { layer: name.to_string() }, vec![x], vec![kshape[1]]);
+        Ok(self.push(GraphOp::Bias { layer: name.to_string() }, vec![d], vec![kshape[1]]))
+    }
+
+    pub fn add(&mut self, a: NodeId, b: NodeId) -> Result<NodeId> {
+        let (sa, sb) = (self.shape(a).to_vec(), self.shape(b));
+        if sa != sb {
+            bail!("add: {sa:?} vs {sb:?}");
+        }
+        Ok(self.push(GraphOp::Add, vec![a, b], sa))
+    }
+
+    pub fn global_avg_pool(&mut self, x: NodeId) -> Result<NodeId> {
+        let s = self.shape(x).to_vec();
+        if s.len() != 3 {
+            bail!("global_avg_pool: input {s:?} is not [h, w, c]");
+        }
+        Ok(self.push(GraphOp::GlobalAvgPool, vec![x], vec![s[2]]))
+    }
+
+    pub fn subsample(&mut self, x: NodeId, stride: usize) -> Result<NodeId> {
+        let s = self.shape(x).to_vec();
+        if s.len() != 3 {
+            bail!("subsample: input {s:?} is not [h, w, c]");
+        }
+        let out = vec![s[0].div_ceil(stride), s[1].div_ceil(stride), s[2]];
+        Ok(self.push(GraphOp::Subsample { stride }, vec![x], out))
+    }
+
+    pub fn concat(&mut self, parts: &[NodeId]) -> Result<NodeId> {
+        let base = self.shape(parts[0]).to_vec();
+        if base.len() != 3 {
+            bail!("concat: input {base:?} is not [h, w, c]");
+        }
+        let mut ctotal = 0usize;
+        for &p in parts {
+            let s = self.shape(p);
+            if s[..2] != base[..2] {
+                bail!("concat: {s:?} vs {base:?}");
+            }
+            ctotal += s[2];
+        }
+        Ok(self.push(GraphOp::Concat, parts.to_vec(), vec![base[0], base[1], ctotal]))
+    }
+
+    pub fn avg_pool3x3_edge(&mut self, x: NodeId) -> Result<NodeId> {
+        let s = self.shape(x).to_vec();
+        if s.len() != 3 {
+            bail!("avg_pool3x3: input {s:?} is not [h, w, c]");
+        }
+        Ok(self.push(GraphOp::AvgPool3x3Edge, vec![x], s))
+    }
+
+    /// ResNet option-A shortcut: strided subsample + zero channel padding.
+    pub fn pad_shortcut(&mut self, x: NodeId, cout: usize, stride: usize) -> Result<NodeId> {
+        let mut v = x;
+        if stride > 1 {
+            v = self.subsample(v, stride)?;
+        }
+        let s = self.shape(v).to_vec();
+        let cin = *s.last().ok_or_else(|| anyhow!("pad_shortcut: scalar input"))?;
+        if cout > cin {
+            let shape = vec![s[0], s[1], cout];
+            v = self.push(GraphOp::PadShortcut { cout }, vec![v], shape);
+        }
+        Ok(v)
+    }
+
+    pub fn finish(self, output: NodeId) -> Result<Graph> {
+        if self.sites != self.model.act_sites.len() {
+            bail!(
+                "graph for {} consumed {} act sites, model declares {}",
+                self.model.name,
+                self.sites,
+                self.model.act_sites.len()
+            );
+        }
+        Ok(Graph {
+            model: self.model.name.clone(),
+            nodes: self.nodes,
+            output,
+            act_sites: self.sites,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::native::models;
+
+    #[test]
+    fn builder_infers_shapes_and_sites() {
+        let m = models::get("tinynet").unwrap();
+        let g = models::graph(&m).unwrap();
+        assert_eq!(g.nodes[0].shape, vec![16, 16, 3]);
+        assert_eq!(g.act_sites, 3);
+        // conv2 runs at stride 2: its triple lives at 16×16 → 8×8
+        let conv2 = g
+            .nodes
+            .iter()
+            .find(|n| matches!(&n.op, GraphOp::Conv { layer, .. } if layer == "conv2"))
+            .unwrap();
+        assert_eq!(conv2.shape, vec![8, 8, 16]);
+        // the head: global pool to [16], dense+bias to [10]
+        assert_eq!(g.nodes[g.output].shape, vec![10]);
+        assert_eq!(g.nodes[g.output].op.kind(), "bias");
+        // topological by construction
+        for (i, n) in g.nodes.iter().enumerate() {
+            assert!(n.inputs.iter().all(|&p| p < i));
+        }
+    }
+
+    #[test]
+    fn every_zoo_model_builds_a_graph() {
+        for name in models::model_names() {
+            let m = models::get(name).unwrap();
+            let g = models::graph(&m).unwrap();
+            assert_eq!(g.act_sites, m.act_sites.len(), "{name}");
+            assert!(g.nodes.len() > m.qlayers.len(), "{name}");
+            let counts = g.kind_counts();
+            let get = |k: &str| counts.iter().find(|(n, _)| *n == k).map_or(0, |(_, c)| *c);
+            assert_eq!(get("conv") + get("dense"), m.qlayers.len(), "{name}");
+            assert_eq!(get("act-quant"), m.act_sites.len(), "{name}");
+            assert_eq!(get("bias"), 1, "{name}");
+        }
+    }
+}

@@ -1,0 +1,23 @@
+//! `ir` — the layer-graph intermediate representation (DESIGN.md §11).
+//!
+//! BSQ's runtime invariant is that a model's *structure* is fixed while
+//! its per-layer bit content shrinks underneath it. This subsystem makes
+//! that split explicit: [`graph`] records each zoo model's forward once as
+//! typed nodes with explicit edges and construction-time shape inference,
+//! [`plan`] compiles a graph into a schedule plus a liveness-based
+//! activation arena (with conv→bn→act fusion and dead-layer elision on
+//! eval/serve plans), and [`exec`] runs compiled plans — on the
+//! reverse-mode tape for training (one tape node per graph node, stable
+//! node-id gradient slots) or inside a reusable arena for inference with
+//! zero steady-state heap allocations.
+//!
+//! Every native entry point — train, eval, HVP, and serving — executes a
+//! compiled plan; there is no imperative per-pass graph walk left.
+
+pub mod exec;
+pub mod graph;
+pub mod plan;
+
+pub use exec::{bind, tape_logits, with_thread_arena, Arena, BoundPlan};
+pub use graph::{Graph, GraphBuilder, GraphOp, NodeId};
+pub use plan::{compile, plans_for, CompiledPlan, ModelPlans, PlanMode};

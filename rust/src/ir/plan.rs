@@ -1,0 +1,369 @@
+//! Plan compilation: fusion, liveness, and the static activation-memory
+//! arena (DESIGN.md §11).
+//!
+//! `compile` turns a model's [`Graph`] into a [`CompiledPlan`]: the
+//! schedule (the graph's topological order), per-node arena offsets from a
+//! liveness scan, and the scratch high-water marks the executor needs.
+//! Everything is in **per-sample f32 elements** — every activation scales
+//! linearly with the batch axis, so one plan serves any batch size and the
+//! executor multiplies offsets by `m` at run time (interval disjointness
+//! is preserved under that scaling).
+//!
+//! Two modes:
+//!
+//! * [`PlanMode::Train`] — every activation is retained to the end of the
+//!   pass (the reverse-mode tape reads them all), so liveness degenerates
+//!   to a flat layout and no fusion runs (BN backward needs the conv
+//!   output, act backward the BN output).
+//! * [`PlanMode::Infer`] — forward-only. The conv→bn→act fusion pass
+//!   collapses each triple into one node (three same-shaped buffers become
+//!   one, with BN and the activation applied in place), and buffers are
+//!   recycled the moment their last consumer retires: a first-fit free
+//!   list with coalescing assigns offsets so that two simultaneously-live
+//!   values never alias.
+//!
+//! Plans are cached behind `Arc` per `(model, mode)` — the native
+//! executables, the serving registry, and `bsq-repro info` all share the
+//! same compiled instance, exactly like the engine's `Executable` cache.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+use once_cell::sync::Lazy;
+
+use crate::ir::graph::{Graph, GraphNode, GraphOp, NodeId};
+use crate::runtime::native::models::{self, NativeModel};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlanMode {
+    /// Retain-all layout for tape execution (train, HVP gradients).
+    Train,
+    /// Liveness-reused arena + conv→bn→act fusion (eval, serving).
+    Infer,
+}
+
+/// Scratch high-water marks in per-sample f32 elements: im2col patches,
+/// their transpose (also the dense bit-plane input transpose), and the
+/// column-major bit-plane GEMM output.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ScratchSpec {
+    pub patches: usize,
+    pub transposed: usize,
+    pub colmajor: usize,
+}
+
+impl ScratchSpec {
+    pub fn total(&self) -> usize {
+        self.patches + self.transposed + self.colmajor
+    }
+}
+
+/// One `(model, mode)`'s compiled execution plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompiledPlan {
+    pub graph: Graph,
+    pub mode: PlanMode,
+    /// Per-node arena offset (per-sample f32 elements).
+    pub offsets: Vec<usize>,
+    /// Index of each node's last consumer; `usize::MAX` keeps a buffer
+    /// live to the end (the logits, and everything in train mode).
+    pub last_use: Vec<usize>,
+    /// Arena high-water mark (per-sample f32 elements).
+    pub arena_elems: usize,
+    /// Sum of every activation's size — what an alloc-per-node pass pays.
+    pub naive_elems: usize,
+    pub scratch: ScratchSpec,
+    /// conv→bn→act triples collapsed by the fusion pass (0 in train mode).
+    pub fused: usize,
+}
+
+impl CompiledPlan {
+    pub fn schedule_len(&self) -> usize {
+        self.graph.nodes.len()
+    }
+
+    pub fn arena_bytes(&self, batch: usize) -> usize {
+        self.arena_elems * 4 * batch
+    }
+
+    pub fn naive_bytes(&self, batch: usize) -> usize {
+        self.naive_elems * 4 * batch
+    }
+
+    pub fn scratch_bytes(&self, batch: usize) -> usize {
+        self.scratch.total() * 4 * batch
+    }
+}
+
+/// The conv→bn→act fusion pass (infer plans only): each triple where the
+/// conv feeds exactly the BN of the same layer and the BN feeds exactly
+/// one act-quant collapses into a [`GraphOp::FusedConvBnAct`] node. BN and
+/// the activation are elementwise, so applying them in place over the conv
+/// output is bit-identical to the unfused three-node chain — the win is
+/// one arena buffer instead of three.
+fn fuse_conv_bn_act(graph: Graph) -> (Graph, usize) {
+    let cons = graph.consumers();
+    let n = graph.nodes.len();
+    let mut absorbed = vec![false; n];
+    let mut fuse_with: Vec<Option<(NodeId, NodeId)>> = vec![None; n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        let GraphOp::Conv { layer, .. } = &node.op else { continue };
+        let &[b] = cons[i].as_slice() else { continue };
+        let GraphOp::Bn { name } = &graph.nodes[b].op else { continue };
+        if name != layer {
+            continue;
+        }
+        let &[a] = cons[b].as_slice() else { continue };
+        let GraphOp::ActQuant { .. } = &graph.nodes[a].op else { continue };
+        fuse_with[i] = Some((b, a));
+        absorbed[b] = true;
+        absorbed[a] = true;
+    }
+
+    let mut remap = vec![usize::MAX; n];
+    let mut nodes: Vec<GraphNode> = Vec::with_capacity(n);
+    let mut fused = 0usize;
+    for (i, node) in graph.nodes.iter().enumerate() {
+        if absorbed[i] {
+            continue;
+        }
+        let inputs: Vec<NodeId> = node.inputs.iter().map(|&p| remap[p]).collect();
+        let id = nodes.len();
+        match (&node.op, fuse_with[i]) {
+            (GraphOp::Conv { layer, stride }, Some((b, a))) => {
+                let GraphOp::ActQuant { site } = &graph.nodes[a].op else { unreachable!() };
+                nodes.push(GraphNode {
+                    op: GraphOp::FusedConvBnAct {
+                        layer: layer.clone(),
+                        stride: *stride,
+                        site: *site,
+                    },
+                    inputs,
+                    shape: node.shape.clone(),
+                });
+                remap[i] = id;
+                remap[b] = id;
+                remap[a] = id;
+                fused += 1;
+            }
+            (op, _) => {
+                nodes.push(GraphNode { op: op.clone(), inputs, shape: node.shape.clone() });
+                remap[i] = id;
+            }
+        }
+    }
+    let output = remap[graph.output];
+    (
+        Graph { model: graph.model, nodes, output, act_sites: graph.act_sites },
+        fused,
+    )
+}
+
+/// First-fit block allocator over a sorted, coalescing free list; extends
+/// the high-water mark when nothing fits. Fully deterministic.
+fn arena_alloc(free: &mut Vec<(usize, usize)>, high: &mut usize, need: usize) -> usize {
+    for idx in 0..free.len() {
+        let (off, len) = free[idx];
+        if len >= need {
+            if len == need {
+                free.remove(idx);
+            } else {
+                free[idx] = (off + need, len - need);
+            }
+            return off;
+        }
+    }
+    let off = *high;
+    *high += need;
+    off
+}
+
+fn arena_free(free: &mut Vec<(usize, usize)>, off: usize, len: usize) {
+    let pos = free.partition_point(|&(o, _)| o < off);
+    free.insert(pos, (off, len));
+    if pos + 1 < free.len() && free[pos].0 + free[pos].1 == free[pos + 1].0 {
+        free[pos].1 += free[pos + 1].1;
+        free.remove(pos + 1);
+    }
+    if pos > 0 && free[pos - 1].0 + free[pos - 1].1 == free[pos].0 {
+        free[pos - 1].1 += free[pos].1;
+        free.remove(pos);
+    }
+}
+
+/// Compile `(model, mode)` into a plan. Deterministic: the same inputs
+/// yield the same plan, bit for bit (`tests/prop_ir.rs` asserts this).
+pub fn compile(model: &NativeModel, mode: PlanMode) -> Result<CompiledPlan> {
+    let base = models::graph(model)?;
+    let (graph, fused) = match mode {
+        PlanMode::Train => (base, 0),
+        PlanMode::Infer => fuse_conv_bn_act(base),
+    };
+    let n = graph.nodes.len();
+
+    // Liveness: a buffer is live from its defining node through its last
+    // consumer (inclusive). Output and train-mode buffers live forever.
+    let mut last_use = vec![0usize; n];
+    for (i, node) in graph.nodes.iter().enumerate() {
+        last_use[i] = i;
+        for &p in &node.inputs {
+            last_use[p] = last_use[p].max(i);
+        }
+    }
+    last_use[graph.output] = usize::MAX;
+    if mode == PlanMode::Train {
+        for lu in &mut last_use {
+            *lu = usize::MAX;
+        }
+    }
+
+    // Offsets: allocate at definition, free after the last consumer ran.
+    // A node's inputs all have `last_use >= current`, so they are still
+    // allocated when its output is placed — live buffers never alias.
+    let mut dying: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for (i, &lu) in last_use.iter().enumerate() {
+        if lu != usize::MAX {
+            dying[lu].push(i);
+        }
+    }
+    let mut offsets = vec![0usize; n];
+    let mut high = 0usize;
+    let mut free: Vec<(usize, usize)> = Vec::new();
+    for i in 0..n {
+        offsets[i] = arena_alloc(&mut free, &mut high, graph.nodes[i].elems());
+        for &d in &dying[i] {
+            arena_free(&mut free, offsets[d], graph.nodes[d].elems());
+        }
+    }
+
+    let naive_elems = graph.nodes.iter().map(GraphNode::elems).sum();
+    let scratch = scratch_spec(model, &graph)?;
+    Ok(CompiledPlan {
+        graph,
+        mode,
+        offsets,
+        last_use,
+        arena_elems: high,
+        naive_elems,
+        scratch,
+        fused,
+    })
+}
+
+fn scratch_spec(model: &NativeModel, graph: &Graph) -> Result<ScratchSpec> {
+    let mut spec = ScratchSpec::default();
+    for node in &graph.nodes {
+        match &node.op {
+            GraphOp::Conv { layer, .. } | GraphOp::FusedConvBnAct { layer, .. } => {
+                let k = model.layer(layer)?;
+                let kdim = k.shape[0] * k.shape[1] * k.shape[2];
+                let rows = node.shape[0] * node.shape[1]; // per-sample oh·ow
+                spec.patches = spec.patches.max(rows * kdim);
+                spec.transposed = spec.transposed.max(rows * kdim);
+                spec.colmajor = spec.colmajor.max(rows * k.shape[3]);
+            }
+            GraphOp::Dense { layer } => {
+                let k = model.layer(layer)?;
+                spec.transposed = spec.transposed.max(k.shape[0]);
+                spec.colmajor = spec.colmajor.max(k.shape[1]);
+            }
+            _ => {}
+        }
+    }
+    Ok(spec)
+}
+
+/// The two plans every native model needs, shared `Arc`s from the global
+/// cache.
+#[derive(Clone)]
+pub struct ModelPlans {
+    pub train: Arc<CompiledPlan>,
+    pub infer: Arc<CompiledPlan>,
+}
+
+static PLAN_CACHE: Lazy<Mutex<HashMap<(String, PlanMode), Arc<CompiledPlan>>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Cached compile: one `Arc<CompiledPlan>` per `(model, mode)` process-wide.
+pub fn cached(model: &NativeModel, mode: PlanMode) -> Result<Arc<CompiledPlan>> {
+    let key = (model.name.clone(), mode);
+    if let Some(hit) = PLAN_CACHE.lock().unwrap().get(&key) {
+        return Ok(hit.clone());
+    }
+    // Compile outside the lock; the entry API keeps the first instance.
+    let built = Arc::new(compile(model, mode)?);
+    let mut cache = PLAN_CACHE.lock().unwrap();
+    Ok(cache.entry(key).or_insert(built).clone())
+}
+
+pub fn model_plans(model: &NativeModel) -> Result<ModelPlans> {
+    Ok(ModelPlans {
+        train: cached(model, PlanMode::Train)?,
+        infer: cached(model, PlanMode::Infer)?,
+    })
+}
+
+/// Plans by model name (the CLI / serving entry point).
+pub fn plans_for(name: &str) -> Result<ModelPlans> {
+    model_plans(&models::get(name)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn infer_plan_reuses_memory_and_fuses() {
+        let m = models::get("resnet20").unwrap();
+        let train = compile(&m, PlanMode::Train).unwrap();
+        let infer = compile(&m, PlanMode::Infer).unwrap();
+        assert_eq!(train.fused, 0);
+        assert_eq!(train.arena_elems, train.naive_elems, "train retains everything");
+        assert!(infer.fused >= 10, "resnet20 has {} fused triples", infer.fused);
+        assert!(
+            infer.arena_elems < infer.naive_elems / 4,
+            "liveness reuse must beat naive by a wide margin: {} vs {}",
+            infer.arena_elems,
+            infer.naive_elems
+        );
+        // fusion shortens the schedule by 2 nodes per triple
+        assert_eq!(
+            infer.graph.nodes.len() + 2 * infer.fused,
+            train.graph.nodes.len()
+        );
+    }
+
+    // The no-aliasing property over every (model, mode) lives in
+    // `tests/prop_ir.rs::arena_plan_never_aliases_live_buffers` — one
+    // copy, kept with the rest of the IR property suite.
+
+    #[test]
+    fn cache_returns_shared_arcs() {
+        let m = models::get("tinynet").unwrap();
+        let a = cached(&m, PlanMode::Infer).unwrap();
+        let b = cached(&m, PlanMode::Infer).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let plans = plans_for("tinynet").unwrap();
+        assert!(Arc::ptr_eq(&plans.infer, &a));
+        assert!(!Arc::ptr_eq(&plans.train, &a));
+    }
+
+    #[test]
+    fn allocator_first_fit_coalesces() {
+        let mut free = Vec::new();
+        let mut high = 0usize;
+        let a = arena_alloc(&mut free, &mut high, 10);
+        let b = arena_alloc(&mut free, &mut high, 5);
+        let c = arena_alloc(&mut free, &mut high, 7);
+        assert_eq!((a, b, c, high), (0, 10, 15, 22));
+        arena_free(&mut free, a, 10);
+        arena_free(&mut free, b, 5);
+        // coalesced into [0, 15): a 12-elem request fits without growth
+        let d = arena_alloc(&mut free, &mut high, 12);
+        assert_eq!((d, high), (0, 22));
+        // remaining sliver [12, 15) serves a 3-elem request
+        assert_eq!(arena_alloc(&mut free, &mut high, 3), 12);
+        assert_eq!(high, 22);
+    }
+}

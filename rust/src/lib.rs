@@ -11,6 +11,8 @@
 //! Layout:
 //! * [`util`] — offline substrates (JSON, PRNG, CLI, bench harness, logging)
 //! * [`tensor`] — host tensors
+//! * [`ir`] — layer-graph IR: graphs, compiled activation-memory plans,
+//!   and the planned executors every native entry runs through
 //! * [`quant`] — bit planes, re-quantization/precision adjustment (§3.3),
 //!   scheme accounting, Eq. 5 reweighing
 //! * [`data`] — synthetic corpora + augmentation + loaders
@@ -39,6 +41,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod ir;
 pub mod model;
 pub mod quant;
 pub mod runtime;

@@ -6,8 +6,10 @@
 //!   hawq        Hessian-importance analysis of a pretrained model
 //!   eval        evaluate a checkpoint
 //!   experiment  regenerate a paper table/figure (table1…table7, fig2…fig9, all)
-//!   info        list models/artifacts and their shapes; with --checkpoint,
-//!               the serving registry's per-layer effective-precision map
+//!   info        list models/artifacts and their shapes plus the compiled
+//!               layer-graph summary (node kinds, fusion, arena-vs-naive
+//!               activation bytes); with --checkpoint, the serving
+//!               registry's per-layer effective-precision map
 //!   serve-bench closed-loop batched-serving sweep → BENCH_serve.json
 //!   bench-diff  compare two BENCH_*.json records, exit non-zero on a
 //!               regression past --tolerance-pct (CI's bench gate)
@@ -283,6 +285,16 @@ fn print_precision_map(sv: &serve::ServableModel) {
         sv.weight_bits(),
         sv.mean_effective_bits()
     );
+    let p = sv.plan();
+    println!(
+        "serve plan: {} nodes ({} fused conv-bn-act, {} dead layers elided), arena {} f32/sample \
+         vs naive {} f32/sample",
+        p.schedule_len(),
+        p.fused,
+        sv.elided_layers(),
+        p.arena_elems,
+        p.naive_elems
+    );
 }
 
 fn cmd_serve_bench(mut args: Args) -> Result<()> {
@@ -406,6 +418,46 @@ fn cmd_info(mut args: Args) -> Result<()> {
         for (name, a) in &man.artifacts {
             println!("    {:<22} {:>3} in / {:>3} out", name, a.inputs.len(), a.outputs.len());
         }
+        if engine.is_native() {
+            print_graph_summary(&engine, man)?;
+        }
     }
+    Ok(())
+}
+
+fn fmt_bytes(b: usize) -> String {
+    if b >= 1 << 20 {
+        format!("{:.1} MiB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.1} KiB", b as f64 / (1 << 10) as f64)
+    }
+}
+
+/// Compiled-graph summary of one native model: node count per op kind,
+/// schedule length, and the memory planner's arena-vs-naive savings at the
+/// model's manifest batch size.
+fn print_graph_summary(engine: &Engine, man: &bsq::runtime::Manifest) -> Result<()> {
+    let plans = engine.native_plans(&man.model)?;
+    let counts = plans
+        .train
+        .graph
+        .kind_counts()
+        .into_iter()
+        .map(|(k, c)| format!("{k} {c}"))
+        .collect::<Vec<_>>()
+        .join(", ");
+    println!("    graph: {} nodes ({counts})", plans.train.schedule_len());
+    let p = &plans.infer;
+    println!(
+        "    eval plan: schedule {} steps ({} fused conv-bn-act), arena {} vs naive {} \
+         ({:.1}x reuse) + scratch {}  [batch {}]",
+        p.schedule_len(),
+        p.fused,
+        fmt_bytes(p.arena_bytes(man.batch)),
+        fmt_bytes(p.naive_bytes(man.batch)),
+        p.naive_elems as f64 / p.arena_elems.max(1) as f64,
+        fmt_bytes(p.scratch_bytes(man.batch)),
+        man.batch
+    );
     Ok(())
 }

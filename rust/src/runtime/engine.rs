@@ -11,7 +11,10 @@
 //!
 //! Executables are cached per artifact path behind `Arc`, and `Engine` is
 //! `Send + Sync`, so compiled artifacts can be shared across the parallel
-//! backend's worker threads.
+//! backend's worker threads. On the native backend every executable also
+//! carries its model's compiled layer-graph plans (`ir::plan`, cached
+//! behind `Arc` per `(model, mode)` exactly like the executables), so
+//! structure is compiled once and every step only executes.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -188,6 +191,19 @@ impl Engine {
             Backend::Pjrt(_) => bail!(
                 "serving requires the native backend (the PJRT path compiles \
                  fixed-batch artifacts; no serving front-end for it yet)"
+            ),
+        }
+    }
+
+    /// Compiled layer-graph plans for a native model (train + eval/serve)
+    /// — shared `Arc`s from the same global cache the native executables
+    /// use, so the serving registry and the CLI never recompile.
+    pub fn native_plans(&self, model: &str) -> Result<crate::ir::plan::ModelPlans> {
+        match &self.backend {
+            Backend::Native(_) => crate::ir::plan::plans_for(model),
+            Backend::Pjrt(_) => bail!(
+                "compiled layer-graph plans exist only on the native backend \
+                 (the PJRT path executes AOT artifacts)"
             ),
         }
     }

@@ -69,15 +69,19 @@ impl NativeBackend {
     }
 }
 
-/// A compiled-equivalent native executable: the model plus a validated
+/// A compiled native executable: the model, its compiled layer-graph
+/// plans (shared `Arc`s from the global `ir::plan` cache), and a validated
 /// entry point, carrying the backend's shard configuration.
 pub struct NativeExec {
     model: Arc<NativeModel>,
+    plans: crate::ir::plan::ModelPlans,
     shards: usize,
 }
 
 impl NativeExec {
-    /// Resolve the model + entry from a synthesized spec (`native/<m>/<e>`).
+    /// Resolve the model + entry from a synthesized spec (`native/<m>/<e>`)
+    /// and compile its plans — graph build, fusion, and the arena layout
+    /// all fail here, at load time, not at step time.
     pub fn for_spec(spec: &ArtifactSpec, shards: usize) -> Result<NativeExec> {
         let model_name = spec
             .file
@@ -87,7 +91,8 @@ impl NativeExec {
             .ok_or_else(|| anyhow!("not a native artifact path: {}", spec.file.display()))?;
         let model = models::get(model_name)?;
         Entry::parse(&spec.name)?; // fail at load time, not step time
-        Ok(NativeExec { model, shards })
+        let plans = crate::ir::plan::model_plans(&model)?;
+        Ok(NativeExec { model, plans, shards })
     }
 
     pub fn run(
@@ -97,7 +102,7 @@ impl NativeExec {
         batch: Option<&Batch>,
         inputs: &RunInputs,
     ) -> Result<RunOutputs> {
-        step::execute(&self.model, spec, state, batch, inputs, self.shards)
+        step::execute(&self.model, &self.plans, spec, state, batch, inputs, self.shards)
     }
 }
 

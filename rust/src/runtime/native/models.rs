@@ -1,10 +1,11 @@
 //! Native model zoo — the Rust twin of `python/compile/models.py`.
 //!
 //! Same four architectures, same layer names/shapes/order, same BN groups
-//! and activation-site numbering (sites are counted in forward call order,
-//! which matches definition order in every model). The metadata feeds the
-//! synthesized manifests; the `forward` builders drive the tape in
-//! `runtime::native::step`.
+//! and activation-site numbering (sites are numbered in builder call
+//! order, which matches definition order in every model). The metadata
+//! feeds the synthesized manifests; the [`graph`] constructors record each
+//! architecture as a layer-graph IR (`ir::graph`) that the planner
+//! compiles and every executor — train tape, engine eval, serving — runs.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
@@ -12,8 +13,7 @@ use std::sync::Arc;
 use anyhow::{anyhow, Result};
 use once_cell::sync::Lazy;
 
-use crate::runtime::native::step::Fwd;
-use crate::runtime::native::tape::Var;
+use crate::ir::graph::{Graph, GraphBuilder};
 
 #[derive(Debug, Clone)]
 pub struct NativeLayer {
@@ -240,79 +240,85 @@ pub fn model_names() -> Vec<&'static str> {
 
 // -- forward graphs ----------------------------------------------------------
 
-/// Run the model's forward graph on the tape; returns the logits var.
-pub(crate) fn forward(model: &NativeModel, fwd: &mut Fwd, x: Var) -> Result<Var> {
-    match model.name.as_str() {
+/// Build the model's forward as a layer graph — the declarative twin of
+/// the old per-pass `Fwd` walk, recorded once and compiled by `ir::plan`.
+pub fn graph(model: &NativeModel) -> Result<Graph> {
+    let mut g = GraphBuilder::new(model);
+    let x0 = g.input();
+    let out = match model.name.as_str() {
         "tinynet" => {
-            let x = fwd.conv_bn_act(x, "conv1", 1)?;
-            let x = fwd.conv_bn_act(x, "conv2", 2)?;
-            let x = fwd.conv_bn_act(x, "conv3", 1)?;
-            let p = fwd.global_avg_pool(x)?;
-            fwd.dense(p, "fc")
+            let x = g.conv_bn_act(x0, "conv1", 1)?;
+            let x = g.conv_bn_act(x, "conv2", 2)?;
+            let x = g.conv_bn_act(x, "conv3", 1)?;
+            let p = g.global_avg_pool(x)?;
+            g.dense(p, "fc")?
         }
         "resnet20" => {
             let widths = [16usize, 32, 64];
-            let mut x = fwd.conv_bn_act(x, "conv1", 1)?;
+            let mut x = g.conv_bn_act(x0, "conv1", 1)?;
             for (s, &w) in widths.iter().enumerate() {
                 for b in 0..3 {
                     let stride = if s > 0 && b == 0 { 2 } else { 1 };
-                    let sc = fwd.pad_shortcut(x, w, stride)?;
-                    let y = fwd.conv_bn_act(x, &format!("s{s}b{b}c1"), stride)?;
-                    let y = fwd.conv(y, &format!("s{s}b{b}c2"), 1)?;
-                    let y = fwd.bn(y, &format!("s{s}b{b}c2"))?;
-                    x = fwd.act(fwd.add(y, sc)?)?;
+                    let sc = g.pad_shortcut(x, w, stride)?;
+                    let y = g.conv_bn_act(x, &format!("s{s}b{b}c1"), stride)?;
+                    let y = g.conv(y, &format!("s{s}b{b}c2"), 1)?;
+                    let y = g.bn(y, &format!("s{s}b{b}c2"))?;
+                    let y = g.add(y, sc)?;
+                    x = g.act(y)?;
                 }
             }
-            let p = fwd.global_avg_pool(x)?;
-            fwd.dense(p, "fc")
+            let p = g.global_avg_pool(x)?;
+            g.dense(p, "fc")?
         }
         "resnet50_sim" => {
             let blocks = [2usize, 2, 2];
-            let mut x = fwd.conv_bn_act(x, "conv1", 1)?;
+            let mut x = g.conv_bn_act(x0, "conv1", 1)?;
             for (s, &nb) in blocks.iter().enumerate() {
                 for b in 0..nb {
                     let pre = format!("s{s}b{b}");
                     let stride = if s > 0 && b == 0 { 2 } else { 1 };
                     let sc = if b == 0 {
-                        let p = fwd.conv(x, &format!("{pre}proj"), stride)?;
-                        fwd.bn(p, &format!("{pre}proj"))?
+                        let p = g.conv(x, &format!("{pre}proj"), stride)?;
+                        g.bn(p, &format!("{pre}proj"))?
                     } else {
                         x
                     };
-                    let y = fwd.conv_bn_act(x, &format!("{pre}c1"), 1)?;
-                    let y = fwd.conv_bn_act(y, &format!("{pre}c2"), stride)?;
-                    let y = fwd.conv(y, &format!("{pre}c3"), 1)?;
-                    let y = fwd.bn(y, &format!("{pre}c3"))?;
-                    x = fwd.act(fwd.add(y, sc)?)?;
+                    let y = g.conv_bn_act(x, &format!("{pre}c1"), 1)?;
+                    let y = g.conv_bn_act(y, &format!("{pre}c2"), stride)?;
+                    let y = g.conv(y, &format!("{pre}c3"), 1)?;
+                    let y = g.bn(y, &format!("{pre}c3"))?;
+                    let y = g.add(y, sc)?;
+                    x = g.act(y)?;
                 }
             }
-            let p = fwd.global_avg_pool(x)?;
-            fwd.dense(p, "fc")
+            let p = g.global_avg_pool(x)?;
+            g.dense(p, "fc")?
         }
         "inception_sim" => {
-            let mut x = fwd.conv_bn_act(x, "stem1", 1)?;
-            x = fwd.conv_bn_act(x, "stem2", 2)?;
-            x = fwd.conv_bn_act(x, "stem3", 1)?;
+            let mut x = g.conv_bn_act(x0, "stem1", 1)?;
+            x = g.conv_bn_act(x, "stem2", 2)?;
+            x = g.conv_bn_act(x, "stem3", 1)?;
             for m in 0..3 {
                 if m == 1 {
-                    x = fwd.subsample(x, 2)?; // stride-2 transition between blocks
+                    x = g.subsample(x, 2)?; // stride-2 transition between blocks
                 }
                 let pre = format!("mix{m}");
-                let y1 = fwd.conv_bn_act(x, &format!("{pre}_b1"), 1)?;
-                let y3 = fwd.conv_bn_act(x, &format!("{pre}_b3r"), 1)?;
-                let y3 = fwd.conv_bn_act(y3, &format!("{pre}_b3"), 1)?;
-                let yd = fwd.conv_bn_act(x, &format!("{pre}_d3r"), 1)?;
-                let yd = fwd.conv_bn_act(yd, &format!("{pre}_d3a"), 1)?;
-                let yd = fwd.conv_bn_act(yd, &format!("{pre}_d3b"), 1)?;
-                let yp = fwd.avg_pool3x3_edge(x)?;
-                let yp = fwd.conv_bn_act(yp, &format!("{pre}_pp"), 1)?;
-                x = fwd.concat(&[y1, y3, yd, yp])?;
+                let y1 = g.conv_bn_act(x, &format!("{pre}_b1"), 1)?;
+                let y3 = g.conv_bn_act(x, &format!("{pre}_b3r"), 1)?;
+                let y3 = g.conv_bn_act(y3, &format!("{pre}_b3"), 1)?;
+                let yd = g.conv_bn_act(x, &format!("{pre}_d3r"), 1)?;
+                let yd = g.conv_bn_act(yd, &format!("{pre}_d3a"), 1)?;
+                let yd = g.conv_bn_act(yd, &format!("{pre}_d3b"), 1)?;
+                let yp = g.avg_pool3x3_edge(x)?;
+                let yp = g.conv_bn_act(yp, &format!("{pre}_pp"), 1)?;
+                x = g.concat(&[y1, y3, yd, yp])?;
             }
-            let p = fwd.global_avg_pool(x)?;
-            fwd.dense(p, "fc")
+            let p = g.global_avg_pool(x)?;
+            g.dense(p, "fc")?
         }
-        other => Err(anyhow!("no native forward for model {other:?}")),
-    }
+        other => return Err(anyhow!("no native forward for model {other:?}")),
+    };
+    g.finish(out)
 }
 
 #[cfg(test)]

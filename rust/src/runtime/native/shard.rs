@@ -31,12 +31,14 @@ use std::sync::{Condvar, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::Batch;
+use crate::ir::exec;
+use crate::ir::plan::CompiledPlan;
 use crate::model::state::ModelState;
 use crate::runtime::engine::{RunInputs, RunOutputs};
 use crate::runtime::manifest::ArtifactSpec;
-use crate::runtime::native::models::{self, NativeModel};
-use crate::runtime::native::step::{self, AMode, Fwd, WMode};
-use crate::runtime::native::tape::{backward_sharded, ShardHook, WeightRep};
+use crate::runtime::native::models::NativeModel;
+use crate::runtime::native::step::{self, AMode, WMode};
+use crate::runtime::native::tape::{backward_sharded, DepositSlot, ShardHook, WeightRep};
 use crate::tensor::{gemm, IntTensor, Tensor};
 
 /// Sentinel message for workers unwound by a peer's failure; filtered when
@@ -198,8 +200,10 @@ struct WorkerCtx<'a> {
     /// Exchange round counter; every worker runs the same sequence of
     /// exchanges, so the counters agree by construction.
     round: Cell<u64>,
-    /// Per-key `(global sample, partial)` deposits from this shard.
-    local_grads: RefCell<BTreeMap<String, Vec<(usize, Tensor)>>>,
+    /// Per-slot `(global sample, partial)` deposits from this shard. Slots
+    /// are keyed by compiled-graph node id + state key, so every shard
+    /// addresses the same parameter identically regardless of partition.
+    local_grads: RefCell<BTreeMap<DepositSlot, Vec<(usize, Tensor)>>>,
 }
 
 impl<'a> WorkerCtx<'a> {
@@ -217,7 +221,7 @@ impl<'a> WorkerCtx<'a> {
         self.shared.barrier.abort();
     }
 
-    fn take_deposits(&self) -> BTreeMap<String, Vec<(usize, Tensor)>> {
+    fn take_deposits(&self) -> BTreeMap<DepositSlot, Vec<(usize, Tensor)>> {
         std::mem::take(&mut *self.local_grads.borrow_mut())
     }
 }
@@ -267,8 +271,8 @@ impl ShardHook for WorkerCtx<'_> {
         Ok(folded)
     }
 
-    fn deposit(&self, key: String, sample: usize, grad: Tensor) {
-        self.local_grads.borrow_mut().entry(key).or_default().push((sample, grad));
+    fn deposit(&self, slot: DepositSlot, sample: usize, grad: Tensor) {
+        self.local_grads.borrow_mut().entry(slot).or_default().push((sample, grad));
     }
 }
 
@@ -325,8 +329,8 @@ struct WorkerOut {
     /// BN running-stat updates (identical on every worker — computed from
     /// the exchanged global statistics).
     new_stats: Vec<(String, Vec<f32>, Vec<f32>)>,
-    /// This shard's per-key `(global sample, partial)` leaf gradients.
-    deposits: BTreeMap<String, Vec<(usize, Tensor)>>,
+    /// This shard's per-slot `(global sample, partial)` leaf gradients.
+    deposits: BTreeMap<DepositSlot, Vec<(usize, Tensor)>>,
 }
 
 fn clone_reps(reps: &BTreeMap<String, WeightRep>) -> BTreeMap<String, WeightRep> {
@@ -353,6 +357,7 @@ fn slice_batch(b: &Batch, r: &Range<usize>) -> Result<Batch> {
 }
 
 fn worker_body(
+    plan: &CompiledPlan,
     model: &NativeModel,
     state: &ModelState,
     reps: BTreeMap<String, WeightRep>,
@@ -361,21 +366,21 @@ fn worker_body(
     sub: Batch,
     ctx: &WorkerCtx,
 ) -> Result<WorkerOut> {
-    let mut fwd = Fwd::with_hook(model, state, reps, actlv, am, true, Some(ctx));
-    let x = fwd.tape.input(sub.x);
-    let logits = models::forward(model, &mut fwd, x)?;
-    let (tape, new_stats) = fwd.into_tape_and_stats();
+    let run = exec::run_on_tape(plan, model, state, reps, &actlv, am, true, sub.x, Some(ctx))?;
     let (ce_rows, correct, dlogits) =
-        step::ce_rows(tape.value(logits), sub.y.data(), ctx.global_samples())?;
-    backward_sharded(&tape, logits, dlogits, ctx)?;
-    Ok(WorkerOut { ce_rows, correct, new_stats, deposits: ctx.take_deposits() })
+        step::ce_rows(run.tape.value(run.logits), sub.y.data(), ctx.global_samples())?;
+    backward_sharded(&run.tape, run.logits, dlogits, ctx)?;
+    Ok(WorkerOut { ce_rows, correct, new_stats: run.new_stats, deposits: ctx.take_deposits() })
 }
 
 /// One data-parallel training step: the native backend's train entry point
 /// (`fp_train` / `bsq_train` / `dorefa_train` / `lsq_train`), bit-identical
-/// at any `shards` (0 = auto: available parallelism).
+/// at any `shards` (0 = auto: available parallelism). Every worker walks
+/// the same compiled train plan, so gradient deposit slots agree across
+/// shards by construction.
 pub(crate) fn train_step(
     model: &NativeModel,
+    plan: &CompiledPlan,
     spec: &ArtifactSpec,
     state: &mut ModelState,
     batch: Option<&Batch>,
@@ -429,7 +434,7 @@ pub(crate) fn train_step(
             handles.push(s.spawn(move || {
                 gemm::set_thread_parallelism_cap(gemm_cap);
                 let out = catch_unwind(AssertUnwindSafe(|| {
-                    worker_body(model, state_ref, reps_w, actlv_w, am, sub, &ctx)
+                    worker_body(plan, model, state_ref, reps_w, actlv_w, am, sub, &ctx)
                 }))
                 .unwrap_or_else(|_| Err(anyhow!("shard worker panicked")));
                 if out.is_err() {
@@ -470,28 +475,31 @@ pub(crate) fn train_step(
     let ce = (tree_fold(ce_rows, |a, b| *a += *b).unwrap_or(0.0) / n as f64) as f32;
     let acc = correct as f32 / n as f32;
 
-    // Leaf gradients: merge every shard's deposits into per-key slot
+    // Leaf gradients: merge every shard's deposits into per-slot sample
     // vectors (indexed by global sample — shards own disjoint ranges),
-    // then fixed-order tree reduce.
-    let mut slots_by_key: BTreeMap<String, Vec<Option<Tensor>>> = BTreeMap::new();
+    // then fixed-order tree reduce. Slots carry the compiled-graph node id
+    // plus the state key; the reduced total lands under the key.
+    let mut samples_by_slot: BTreeMap<DepositSlot, Vec<Option<Tensor>>> = BTreeMap::new();
     for r in &mut results {
-        for (key, parts) in std::mem::take(&mut r.deposits) {
-            let slots = slots_by_key.entry(key).or_insert_with(|| vec![None; n]);
+        for (slot, parts) in std::mem::take(&mut r.deposits) {
+            let slots = samples_by_slot.entry(slot).or_insert_with(|| vec![None; n]);
             for (sample, t) in parts {
                 slots[sample] = Some(t);
             }
         }
     }
     let mut grads: BTreeMap<String, Tensor> = BTreeMap::new();
-    for (key, slots) in slots_by_key {
-        let parts: Vec<Tensor> = slots
+    for (slot, samples) in samples_by_slot {
+        let parts: Vec<Tensor> = samples
             .into_iter()
             .enumerate()
-            .map(|(i, t)| t.ok_or_else(|| anyhow!("no gradient partial for {key:?} sample {i}")))
+            .map(|(i, t)| {
+                t.ok_or_else(|| anyhow!("no gradient partial for {:?} sample {i}", slot.key))
+            })
             .collect::<Result<_>>()?;
-        let total =
-            tree_add_tensors(parts).ok_or_else(|| anyhow!("empty partial set for {key:?}"))?;
-        grads.insert(key, total);
+        let total = tree_add_tensors(parts)
+            .ok_or_else(|| anyhow!("empty partial set for {:?}", slot.key))?;
+        step::accumulate(&mut grads, slot.key, total);
     }
 
     // From here on the step is single-threaded and identical to the

@@ -1,5 +1,12 @@
 //! Native execution of the manifest entry points: train / eval / hvp.
 //!
+//! Every role executes a compiled layer-graph plan (`ir::plan`): train
+//! drives the reverse-mode tape over the retain-all train plan (via the
+//! data-parallel shard orchestrator), eval and the HVP center loss run the
+//! fused infer plan inside the thread-local activation arena. This module
+//! owns what surrounds the plan: weight preparation per quantization mode,
+//! the STE gradient mapping, the loss/regularizer, and the optimizer.
+//!
 //! One function per role, mirroring `python/compile/train.py` step for step:
 //!
 //! * **train** — forward under the entry's weight mode (fp / bit / DoReFa /
@@ -30,15 +37,15 @@ use std::sync::Arc;
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::Batch;
+use crate::ir::exec;
+use crate::ir::plan::ModelPlans;
 use crate::model::state::ModelState;
 use crate::quant::bitplane::NB;
 use crate::runtime::engine::{RunInputs, RunOutputs};
 use crate::runtime::manifest::ArtifactSpec;
 use crate::runtime::native::models::{self, NativeModel};
-use crate::runtime::native::shard::{self, sharded_batch_stats};
-use crate::runtime::native::tape::{
-    backward, batch_stats, ShardHook, Tape, Var, WeightRep, BN_MOMENTUM,
-};
+use crate::runtime::native::shard;
+use crate::runtime::native::tape::{backward, WeightRep};
 use crate::tensor::gemm::BitPlaneMatrix;
 use crate::tensor::Tensor;
 
@@ -97,10 +104,10 @@ impl Entry {
     }
 }
 
-// -- forward context ---------------------------------------------------------
+// -- weight gradient mapping -------------------------------------------------
 
 /// How a layer's effective-weight cotangent maps back to state-space keys.
-enum WGradMap {
+pub(crate) enum WGradMap {
     /// `w:<l>` += dW (fp master weights; also the DoReFa STE identity).
     Direct,
     /// No gradient (inference reps, dead DoReFa layers).
@@ -112,183 +119,20 @@ enum WGradMap {
     Lsq { inside: Vec<f32>, dstep: Vec<f32> },
 }
 
-/// The forward context the model zoo's graphs are written against —
-/// the native twin of `python/compile/layers.py::Forward`.
-pub(crate) struct Fwd<'a> {
-    pub tape: Tape,
-    model: &'a NativeModel,
-    state: &'a ModelState,
-    weights: BTreeMap<String, WeightRep>,
-    actlv: Vec<f32>,
-    amode: AMode,
-    train: bool,
-    site: usize,
-    /// Cross-shard reduction hook (data-parallel training): when set, BN
-    /// batch statistics come from the canonical per-sample exchange instead
-    /// of this shard's local rows.
-    hook: Option<&'a dyn ShardHook>,
-    /// BN running-stat updates collected in train mode: (name, mean, var).
-    pub new_stats: Vec<(String, Vec<f32>, Vec<f32>)>,
-}
-
-impl<'a> Fwd<'a> {
-    fn new(
-        model: &'a NativeModel,
-        state: &'a ModelState,
-        weights: BTreeMap<String, WeightRep>,
-        actlv: Vec<f32>,
-        amode: AMode,
-        train: bool,
-    ) -> Fwd<'a> {
-        Fwd::with_hook(model, state, weights, actlv, amode, train, None)
-    }
-
-    pub(crate) fn with_hook(
-        model: &'a NativeModel,
-        state: &'a ModelState,
-        weights: BTreeMap<String, WeightRep>,
-        actlv: Vec<f32>,
-        amode: AMode,
-        train: bool,
-        hook: Option<&'a dyn ShardHook>,
-    ) -> Fwd<'a> {
-        Fwd {
-            tape: Tape::new(),
-            model,
-            state,
-            weights,
-            actlv,
-            amode,
-            train,
-            site: 0,
-            hook,
-            new_stats: Vec::new(),
-        }
-    }
-
-    /// Tear down into the recorded tape and the collected BN stat updates.
-    pub(crate) fn into_tape_and_stats(self) -> (Tape, Vec<(String, Vec<f32>, Vec<f32>)>) {
-        (self.tape, self.new_stats)
-    }
-
-    pub fn conv(&mut self, x: Var, name: &str, stride: usize) -> Result<Var> {
-        let rep = self
-            .weights
-            .remove(name)
-            .ok_or_else(|| anyhow!("layer {name:?} has no prepared weight (or was reused)"))?;
-        let shape = self.model.layer(name)?.shape.clone();
-        self.tape.conv(x, name, rep, &shape, stride)
-    }
-
-    pub fn dense(&mut self, x: Var, name: &str) -> Result<Var> {
-        let rep = self
-            .weights
-            .remove(name)
-            .ok_or_else(|| anyhow!("layer {name:?} has no prepared weight (or was reused)"))?;
-        let bias = self.state.get(&format!("w:{name}/b"))?.data().to_vec();
-        self.tape.dense(x, name, rep, &bias)
-    }
-
-    pub fn bn(&mut self, x: Var, name: &str) -> Result<Var> {
-        let gamma = self.state.get(&format!("bn:{name}/gamma"))?.data().to_vec();
-        let beta = self.state.get(&format!("bn:{name}/beta"))?.data().to_vec();
-        let run_m = self.state.get(&format!("bn:{name}/mean"))?.data().to_vec();
-        let run_v = self.state.get(&format!("bn:{name}/var"))?.data().to_vec();
-        if self.train {
-            let (bm, bv) = match self.hook {
-                Some(h) => sharded_batch_stats(h, self.tape.value(x))?,
-                None => batch_stats(self.tape.value(x)),
-            };
-            let nm: Vec<f32> = run_m
-                .iter()
-                .zip(&bm)
-                .map(|(&r, &b)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * b)
-                .collect();
-            let nv: Vec<f32> = run_v
-                .iter()
-                .zip(&bv)
-                .map(|(&r, &b)| (1.0 - BN_MOMENTUM) * r + BN_MOMENTUM * b)
-                .collect();
-            self.new_stats.push((name.to_string(), nm, nv));
-            self.tape.bn(x, name, &gamma, &beta, &bm, &bv, true)
-        } else {
-            self.tape.bn(x, name, &gamma, &beta, &run_m, &run_v, false)
-        }
-    }
-
-    /// Quantized activation; sites are numbered in call order.
-    pub fn act(&mut self, x: Var) -> Result<Var> {
-        let site = self.site;
-        self.site += 1;
-        match self.amode {
-            AMode::Ref => self.tape.act_quant(x, 6.0, 0.0, None),
-            AMode::Relu6 => {
-                let lv = *self
-                    .actlv
-                    .get(site)
-                    .ok_or_else(|| anyhow!("actlv has no entry for site {site}"))?;
-                self.tape.act_quant(x, 6.0, lv, None)
-            }
-            AMode::Pact => {
-                let lv = *self
-                    .actlv
-                    .get(site)
-                    .ok_or_else(|| anyhow!("actlv has no entry for site {site}"))?;
-                let sname = self
-                    .model
-                    .act_sites
-                    .get(site)
-                    .ok_or_else(|| anyhow!("model has no act site {site}"))?
-                    .clone();
-                let p = self.state.get(&format!("pact:{sname}"))?.item()?;
-                // keep the clip strictly positive; grad flows where p ≥ min
-                let pact = if p >= 0.05 { Some(sname) } else { None };
-                self.tape.act_quant(x, p.max(0.05), lv, pact)
-            }
-        }
-    }
-
-    pub fn conv_bn_act(&mut self, x: Var, name: &str, stride: usize) -> Result<Var> {
-        let y = self.conv(x, name, stride)?;
-        let y = self.bn(y, name)?;
-        self.act(y)
-    }
-
-    pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
-        self.tape.add(a, b)
-    }
-
-    pub fn global_avg_pool(&mut self, x: Var) -> Result<Var> {
-        self.tape.global_avg_pool(x)
-    }
-
-    pub fn subsample(&mut self, x: Var, stride: usize) -> Result<Var> {
-        self.tape.subsample(x, stride)
-    }
-
-    pub fn concat(&mut self, parts: &[Var]) -> Result<Var> {
-        self.tape.concat(parts)
-    }
-
-    pub fn avg_pool3x3_edge(&mut self, x: Var) -> Result<Var> {
-        self.tape.avg_pool3x3_edge(x)
-    }
-
-    /// ResNet option-A shortcut: strided subsample + zero channel padding.
-    pub fn pad_shortcut(&mut self, x: Var, cout: usize, stride: usize) -> Result<Var> {
-        let mut v = x;
-        if stride > 1 {
-            v = self.tape.subsample(v, stride)?;
-        }
-        let cin = *self.tape.value(v).shape().last().unwrap();
-        if cout > cin {
-            v = self.tape.pad_channels(v, cout)?;
-        }
-        Ok(v)
-    }
-}
-
 // -- weight preparation ------------------------------------------------------
+
+/// Forward-only weight resolution: [`prepare_weights`] minus the gradient
+/// maps — what an inference bind (`ir::exec::bind`) consumes. Public so
+/// the serving layer, benches, and the IR property tests share one path.
+pub fn eval_weights(
+    model: &NativeModel,
+    state: &ModelState,
+    wm: WMode,
+    wlv: Option<&[f32]>,
+    bitplane_infer: bool,
+) -> Result<BTreeMap<String, WeightRep>> {
+    Ok(prepare_weights(model, state, wm, wlv, bitplane_infer)?.0)
+}
 
 /// Resolve every quantized layer's effective weight for one pass, plus the
 /// map from effective-weight cotangents back to state keys.
@@ -675,12 +519,14 @@ pub(crate) fn vec_input(inputs: &RunInputs, name: &str, want: usize) -> Result<V
 // -- entry points ------------------------------------------------------------
 
 /// Execute one artifact natively; mirrors `Executable::run` semantics
-/// (state updated in place, metrics/probes returned). Train entries run the
-/// data-parallel sharded step (`shards` = 0 means auto; any value yields
-/// bit-identical results — see `runtime::native::shard`); eval and HVP are
-/// per-sample independent already and stay single-tape.
+/// (state updated in place, metrics/probes returned). Every role runs a
+/// compiled plan: train entries drive the data-parallel sharded tape over
+/// the train plan (`shards` = 0 means auto; any value yields bit-identical
+/// results — see `runtime::native::shard`), eval and the HVP center loss
+/// run the fused infer plan inside the thread-local arena.
 pub fn execute(
     model: &NativeModel,
+    plans: &ModelPlans,
     spec: &ArtifactSpec,
     state: &mut ModelState,
     batch: Option<&Batch>,
@@ -689,10 +535,10 @@ pub fn execute(
 ) -> Result<RunOutputs> {
     match Entry::parse(&spec.name)? {
         Entry::Train(wm, am) => {
-            shard::train_step(model, spec, state, batch, inputs, wm, am, shards)
+            shard::train_step(model, &plans.train, spec, state, batch, inputs, wm, am, shards)
         }
-        Entry::Eval(wm, am) => eval_step(model, state, batch, inputs, wm, am),
-        Entry::Hvp => hvp_step(model, state, batch, inputs),
+        Entry::Eval(wm, am) => eval_step(model, plans, state, batch, inputs, wm, am),
+        Entry::Hvp => hvp_step(model, plans, state, batch, inputs),
     }
 }
 
@@ -700,47 +546,40 @@ pub(crate) fn need_batch<'b>(batch: Option<&'b Batch>) -> Result<&'b Batch> {
     batch.ok_or_else(|| anyhow!("artifact needs a batch"))
 }
 
-fn forward_pass(
+/// Forward a batch through the fused infer plan and reduce to
+/// `(loss, acc)` — the shared tail of eval and the HVP center. Uses a
+/// pass-local arena, not the thread-local one: the engine is stateless
+/// per call, and a training thread that evaluates occasionally must not
+/// pin a batch-sized arena for its remaining lifetime (the serving
+/// workers, whose every pass needs it, are who keep the thread-local).
+fn planned_eval(
     model: &NativeModel,
+    plans: &ModelPlans,
     state: &ModelState,
     reps: BTreeMap<String, WeightRep>,
-    actlv: Vec<f32>,
+    actlv: &[f32],
     am: AMode,
-    train: bool,
-    batch: &Batch,
-) -> Result<(Tape, Var, Vec<(String, Vec<f32>, Vec<f32>)>)> {
-    let mut fwd = Fwd::new(model, state, reps, actlv, am, train);
-    let x = fwd.tape.input(batch.x.clone());
-    let logits = models::forward(model, &mut fwd, x)?;
-    let Fwd { tape, new_stats, .. } = fwd;
-    Ok((tape, logits, new_stats))
-}
-
-/// Forward-only inference to raw logits, on caller-supplied effective
-/// weights — the serving hot path (`serve::registry`).
-///
-/// Unlike [`execute`]'s eval role this takes the input tensor directly (any
-/// leading batch dimension; the native kernels derive their geometry from
-/// the input shape) and the per-layer [`WeightRep`]s prebuilt — a serving
-/// layer builds the bit-plane weights once per checkpoint via
-/// [`bitplane_weight`] and shares them (`Arc`) across every batch, instead
-/// of re-packing the planes per call like the stateless engine path.
-pub fn infer_logits(
-    model: &NativeModel,
-    state: &ModelState,
-    reps: BTreeMap<String, WeightRep>,
-    actlv: Vec<f32>,
-    am: AMode,
-    x: Tensor,
-) -> Result<Tensor> {
-    let mut fwd = Fwd::new(model, state, reps, actlv, am, false);
-    let xv = fwd.tape.input(x);
-    let logits = models::forward(model, &mut fwd, xv)?;
-    Ok(fwd.tape.value(logits).clone())
+    b: &Batch,
+) -> Result<(f32, f32)> {
+    let bound = exec::bind(&plans.infer, model, state, reps, actlv, am)?;
+    // The plan bakes the geometry in; reject a mis-shaped batch whose
+    // element count happens to fit (the old per-op checks did this).
+    let s = b.x.shape();
+    let want = &plans.infer.graph.nodes[0].shape;
+    if s.len() != 4 || s[1..] != want[..] {
+        bail!("eval batch {s:?} does not match {} input [m, {want:?}]", model.name);
+    }
+    let m = s[0];
+    let mut arena = exec::Arena::default();
+    let logits = bound.execute(b.x.data(), m, &mut arena)?;
+    let logits = Tensor::new(vec![m, bound.classes()], logits.to_vec())?;
+    let (ce, acc, _) = ce_acc_grad(&logits, b.y.data())?;
+    Ok((ce, acc))
 }
 
 fn eval_step(
     model: &NativeModel,
+    plans: &ModelPlans,
     state: &mut ModelState,
     batch: Option<&Batch>,
     inputs: &RunInputs,
@@ -757,9 +596,8 @@ fn eval_step(
     // O(NB·elems) pack repeats per batch (the engine is stateless and the
     // planes can change between calls); it is dwarfed by the GEMMs, whose
     // work carries the extra M = batch·spatial factor.
-    let (reps, _) = prepare_weights(model, state, wm, wlv.as_deref(), wm == WMode::Bit)?;
-    let (tape, logits, _) = forward_pass(model, state, reps, actlv, am, false, b)?;
-    let (ce, acc, _) = ce_acc_grad(tape.value(logits), b.y.data())?;
+    let reps = eval_weights(model, state, wm, wlv.as_deref(), wm == WMode::Bit)?;
+    let (ce, acc) = planned_eval(model, plans, state, reps, &actlv, am, b)?;
     let mut out = RunOutputs::default();
     out.metrics.insert("loss".into(), ce);
     out.metrics.insert("acc".into(), acc);
@@ -769,6 +607,7 @@ fn eval_step(
 /// Central-difference Hessian-vector product of the fp CE loss (HAWQ).
 fn hvp_step(
     model: &NativeModel,
+    plans: &ModelPlans,
     state: &mut ModelState,
     batch: Option<&Batch>,
     inputs: &RunInputs,
@@ -776,10 +615,8 @@ fn hvp_step(
     let b = need_batch(batch)?;
 
     // center loss (reported like the artifact's `loss` output)
-    let (reps, _) = prepare_weights(model, state, WMode::Fp, None, false)?;
-    let (tape, logits, _) = forward_pass(model, state, reps, Vec::new(), AMode::Ref, false, b)?;
-    let (loss, _, _) = ce_acc_grad(tape.value(logits), b.y.data())?;
-    drop(tape);
+    let reps = eval_weights(model, state, WMode::Fp, None, false)?;
+    let (loss, _) = planned_eval(model, plans, state, reps, &[], AMode::Ref, b)?;
 
     let mut out = RunOutputs::default();
     out.metrics.insert("loss".into(), loss);
@@ -807,7 +644,7 @@ fn hvp_step(
     let mut sided: Vec<BTreeMap<String, Tensor>> = Vec::with_capacity(2);
     for sign in [1.0f32, -1.0] {
         perturb(model, state, inputs, sign * eps)?;
-        let grads = fp_ref_grads(model, state, b);
+        let grads = fp_ref_grads(model, plans, state, b);
         perturb(model, state, inputs, -sign * eps)?; // restore
         sided.push(grads?);
     }
@@ -849,13 +686,15 @@ fn perturb(
 /// (clip-only activations, eval-mode BN) — the inner kernel of the HVP.
 fn fp_ref_grads(
     model: &NativeModel,
+    plans: &ModelPlans,
     state: &ModelState,
     b: &Batch,
 ) -> Result<BTreeMap<String, Tensor>> {
-    let (reps, _) = prepare_weights(model, state, WMode::Fp, None, false)?;
-    let (tape, logits, _) = forward_pass(model, state, reps, Vec::new(), AMode::Ref, false, b)?;
-    let (_, _, dlogits) = ce_acc_grad(tape.value(logits), b.y.data())?;
-    Ok(backward(&tape, logits, dlogits)?.keys)
+    let reps = eval_weights(model, state, WMode::Fp, None, false)?;
+    let x = b.x.clone();
+    let run = exec::run_on_tape(&plans.train, model, state, reps, &[], AMode::Ref, false, x, None)?;
+    let (_, _, dlogits) = ce_acc_grad(run.tape.value(run.logits), b.y.data())?;
+    Ok(backward(&run.tape, run.logits, dlogits)?.keys)
 }
 
 #[cfg(test)]
@@ -896,24 +735,44 @@ mod tests {
     #[test]
     fn fp_gradients_match_finite_differences() {
         let (model, man, batch) = tiny_setup();
+        let plan = crate::ir::plan::cached(&model, crate::ir::plan::PlanMode::Train).unwrap();
         let state = ModelState::init_fp(&man, 5);
+        let actlv = vec![0.0f32; model.act_sites.len()];
         let grads = {
             let (reps, gmaps) = prepare_weights(&model, &state, WMode::Fp, None, false).unwrap();
-            let actlv = vec![0.0; model.act_sites.len()];
-            let (tape, logits, _) =
-                forward_pass(&model, &state, reps, actlv, AMode::Relu6, true, &batch).unwrap();
-            let (_, _, dl) = ce_acc_grad(tape.value(logits), batch.y.data()).unwrap();
-            let mut g = backward(&tape, logits, dl).unwrap().keys;
+            let run = exec::run_on_tape(
+                &plan,
+                &model,
+                &state,
+                reps,
+                &actlv,
+                AMode::Relu6,
+                true,
+                batch.x.clone(),
+                None,
+            )
+            .unwrap();
+            let (_, _, dl) = ce_acc_grad(run.tape.value(run.logits), batch.y.data()).unwrap();
+            let mut g = backward(&run.tape, run.logits, dl).unwrap().keys;
             map_weight_grads(&model, gmaps, &mut g).unwrap();
             g
         };
 
         let loss_of = |s: &ModelState| -> f32 {
-            let (reps, _) = prepare_weights(&model, s, WMode::Fp, None, false).unwrap();
-            let actlv = vec![0.0; model.act_sites.len()];
-            let (tape, logits, _) =
-                forward_pass(&model, s, reps, actlv, AMode::Relu6, true, &batch).unwrap();
-            let (ce, _, _) = ce_acc_grad(tape.value(logits), batch.y.data()).unwrap();
+            let reps = eval_weights(&model, s, WMode::Fp, None, false).unwrap();
+            let run = exec::run_on_tape(
+                &plan,
+                &model,
+                s,
+                reps,
+                &actlv,
+                AMode::Relu6,
+                true,
+                batch.x.clone(),
+                None,
+            )
+            .unwrap();
+            let (ce, _, _) = ce_acc_grad(run.tape.value(run.logits), batch.y.data()).unwrap();
             ce
         };
 

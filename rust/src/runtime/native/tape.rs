@@ -1,21 +1,26 @@
 //! Reverse-mode tape for the native backend.
 //!
-//! One forward pass records a topologically ordered node list; `backward`
-//! walks it in reverse, producing input-space cotangents per node plus a
-//! keyed map of parameter gradients (effective weights under `weff:<layer>`,
-//! biases, BN affines, PACT clips). The op set is exactly what the model
-//! zoo's forward graphs need — this is not a general autodiff system.
+//! Since the layer-graph IR landed (DESIGN.md §11) the tape no longer
+//! *builds* forward computations — `ir::exec::run_on_tape` walks a
+//! compiled plan, evaluates each node with the shared kernels, and pushes
+//! one tape [`Node`] per graph node, so `Var(i)` on the tape **is** graph
+//! node `i`. This file owns what remains: the op record, the value store,
+//! and `backward`, which walks the records in reverse producing
+//! input-space cotangents plus a keyed map of parameter gradients
+//! (effective weights under `weff:<layer>`, biases, BN affines, PACT
+//! clips).
 //!
 //! Semantics mirror `python/compile` (the lowered JAX graphs) operation by
-//! operation: SAME-padded NHWC conv via im2col + the `tensor::gemm` blocked
-//! kernels, batch-norm with biased batch statistics, the fake-quant STE of
-//! `kernels/actquant.py` (pass-through inside `(0, bound)`, above-bound mass
-//! to the PACT clip), and the option-A shortcut / concat / pooling glue.
+//! operation: SAME-padded NHWC conv via im2col + the `tensor::gemm`
+//! blocked kernels, batch-norm with biased batch statistics, the
+//! fake-quant STE of `kernels/actquant.py` (pass-through inside
+//! `(0, bound)`, above-bound mass to the PACT clip), and the option-A
+//! shortcut / concat / pooling glue.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
 use crate::tensor::gemm::{self, BitPlaneMatrix, ConvGeom};
 use crate::tensor::Tensor;
@@ -23,9 +28,30 @@ use crate::tensor::Tensor;
 pub const BN_MOMENTUM: f32 = 0.1;
 pub const BN_EPS: f32 = 1e-5;
 
-/// Handle to a tape node.
+/// Handle to a tape node; equals the graph [`NodeId`] it was recorded for.
+///
+/// [`NodeId`]: crate::ir::graph::NodeId
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Var(pub usize);
+
+/// Address of one leaf-gradient deposit stream: the graph node that owns
+/// the parameter plus the state key its reduced total lands under.
+///
+/// Keying by node id (not call order, not bare strings) makes the slots
+/// partition-invariant *by construction*: every shard records against the
+/// same compiled graph, so the same parameter maps to the same slot no
+/// matter how the batch was split or in what order the ops ran.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct DepositSlot {
+    pub node: usize,
+    pub key: String,
+}
+
+impl DepositSlot {
+    pub fn new(node: usize, key: String) -> DepositSlot {
+        DepositSlot { node, key }
+    }
+}
 
 /// Cross-shard reduction hooks for data-parallel training
 /// (`runtime::native::shard`, DESIGN.md §10).
@@ -45,9 +71,9 @@ pub trait ShardHook {
     /// the other shards; returns the canonical fixed-order tree fold over
     /// all global samples. Errors if a peer shard aborted.
     fn exchange(&self, local: Vec<Vec<f64>>) -> Result<Vec<f64>>;
-    /// Deposit one per-sample leaf-gradient partial under `key` for the
+    /// Deposit one per-sample leaf-gradient partial into `slot` for the
     /// given *global* sample index (reduced later in canonical order).
-    fn deposit(&self, key: String, sample: usize, grad: Tensor);
+    fn deposit(&self, slot: DepositSlot, sample: usize, grad: Tensor);
 }
 
 /// Effective weight of a conv/dense layer for one forward pass.
@@ -64,6 +90,7 @@ pub(crate) enum Op {
     Input,
     Conv { x: Var, layer: String, w: WeightRep, geom: ConvGeom },
     Dense { x: Var, layer: String, w: WeightRep, in_dim: usize, out_dim: usize },
+    Bias { x: Var, layer: String, out_dim: usize },
     Bn { x: Var, name: String, gamma: Vec<f32>, mean: Vec<f32>, var: Vec<f32>, batch_stats: bool },
     ActQuant { x: Var, bound: f32, levels: f32, pact: Option<String> },
     Add { a: Var, b: Var },
@@ -79,6 +106,7 @@ pub(crate) struct Node {
     pub out: Tensor,
 }
 
+/// The value store one planned forward leaves behind for `backward`.
 #[derive(Default)]
 pub struct Tape {
     pub(crate) nodes: Vec<Node>,
@@ -93,324 +121,9 @@ impl Tape {
         &self.nodes[v.0].out
     }
 
-    fn push(&mut self, op: Op, out: Tensor) -> Var {
+    pub(crate) fn push(&mut self, op: Op, out: Tensor) -> Var {
         self.nodes.push(Node { op, out });
         Var(self.nodes.len() - 1)
-    }
-
-    pub fn input(&mut self, t: Tensor) -> Var {
-        self.push(Op::Input, t)
-    }
-
-    /// SAME-padded NHWC convolution; `kshape` is the HWIO kernel shape.
-    pub fn conv(
-        &mut self,
-        x: Var,
-        layer: &str,
-        w: WeightRep,
-        kshape: &[usize],
-        stride: usize,
-    ) -> Result<Var> {
-        if kshape.len() != 4 {
-            bail!("conv {layer}: kernel shape {kshape:?} is not HWIO");
-        }
-        let (kh, kw, cin, cout) = (kshape[0], kshape[1], kshape[2], kshape[3]);
-        let (geom, ydata) = {
-            let xt = self.value(x);
-            let s = xt.shape();
-            if s.len() != 4 || s[3] != cin {
-                bail!("conv {layer}: input {s:?} vs kernel {kshape:?}");
-            }
-            let geom = ConvGeom::same(s[0], s[1], s[2], cin, kh, kw, cout, stride);
-            let patches = gemm::im2col(xt.data(), &geom);
-            let rows = geom.rows();
-            let k = geom.kdim();
-            let ydata = match &w {
-                WeightRep::Dense(wt) => gemm::matmul(&patches, wt.data(), rows, k, cout),
-                WeightRep::Planes(bpm) => {
-                    let yt = bpm.matmul_t(&gemm::transpose(&patches, rows, k), rows);
-                    gemm::transpose(&yt, cout, rows)
-                }
-            };
-            (geom, ydata)
-        };
-        let out = Tensor::new(vec![geom.n, geom.oh, geom.ow, geom.cout], ydata)?;
-        Ok(self.push(Op::Conv { x, layer: layer.to_string(), w, geom }, out))
-    }
-
-    /// `x[N, in] · W[in, out] + b` (bias handled by the caller as a separate
-    /// keyed parameter; pass it pre-added via `bias`).
-    pub fn dense(&mut self, x: Var, layer: &str, w: WeightRep, bias: &[f32]) -> Result<Var> {
-        let (n, in_dim) = {
-            let s = self.value(x).shape();
-            if s.len() != 2 {
-                bail!("dense {layer}: input {s:?} is not [N, in]");
-            }
-            (s[0], s[1])
-        };
-        let out_dim = bias.len();
-        let ydata = {
-            let xd = self.value(x).data();
-            let mut y = match &w {
-                WeightRep::Dense(wt) => {
-                    if wt.shape() != [in_dim, out_dim] {
-                        bail!("dense {layer}: weight {:?} vs [{in_dim}, {out_dim}]", wt.shape());
-                    }
-                    gemm::matmul(xd, wt.data(), n, in_dim, out_dim)
-                }
-                WeightRep::Planes(bpm) => {
-                    let yt = bpm.matmul_t(&gemm::transpose(xd, n, in_dim), n);
-                    gemm::transpose(&yt, out_dim, n)
-                }
-            };
-            for row in y.chunks_mut(out_dim) {
-                for (v, &b) in row.iter_mut().zip(bias) {
-                    *v += b;
-                }
-            }
-            y
-        };
-        let out = Tensor::new(vec![n, out_dim], ydata)?;
-        Ok(self.push(Op::Dense { x, layer: layer.to_string(), w, in_dim, out_dim }, out))
-    }
-
-    /// Normalize with the supplied statistics. `batch_stats` says the
-    /// mean/var were computed from this very `x` (train mode) so backward
-    /// must differentiate through them; false treats them as constants
-    /// (eval / HVP running statistics).
-    pub fn bn(
-        &mut self,
-        x: Var,
-        name: &str,
-        gamma: &[f32],
-        beta: &[f32],
-        mean: &[f32],
-        var: &[f32],
-        batch_stats: bool,
-    ) -> Result<Var> {
-        let (shape, ydata) = {
-            let xt = self.value(x);
-            let c = *xt.shape().last().ok_or_else(|| anyhow!("bn {name}: scalar input"))?;
-            if [gamma.len(), beta.len(), mean.len(), var.len()] != [c, c, c, c] {
-                bail!("bn {name}: channel mismatch ({c} channels)");
-            }
-            let inv: Vec<f32> = var.iter().map(|&v| 1.0 / (v + BN_EPS).sqrt()).collect();
-            let ydata: Vec<f32> = xt
-                .data()
-                .iter()
-                .enumerate()
-                .map(|(i, &v)| {
-                    let ch = i % c;
-                    (v - mean[ch]) * inv[ch] * gamma[ch] + beta[ch]
-                })
-                .collect();
-            (xt.shape().to_vec(), ydata)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(
-            Op::Bn {
-                x,
-                name: name.to_string(),
-                gamma: gamma.to_vec(),
-                mean: mean.to_vec(),
-                var: var.to_vec(),
-                batch_stats,
-            },
-            out,
-        ))
-    }
-
-    /// Fake-quantized clipped activation (`kernels/actquant.py`):
-    /// `levels ≥ 1` quantizes `clip(x, 0, bound)` onto `levels` uniform
-    /// steps, `levels < 1` keeps the bare clip. `pact` names the trainable
-    /// clip parameter receiving the above-bound gradient mass (None → the
-    /// bound is the fixed ReLU6 constant).
-    pub fn act_quant(
-        &mut self,
-        x: Var,
-        bound: f32,
-        levels: f32,
-        pact: Option<String>,
-    ) -> Result<Var> {
-        let (shape, ydata) = {
-            let xt = self.value(x);
-            let ydata: Vec<f32> = if levels >= 1.0 {
-                xt.data()
-                    .iter()
-                    .map(|&v| {
-                        let xc = v.clamp(0.0, bound);
-                        (xc / bound * levels).round() / levels * bound
-                    })
-                    .collect()
-            } else {
-                xt.data().iter().map(|&v| v.clamp(0.0, bound)).collect()
-            };
-            (xt.shape().to_vec(), ydata)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(Op::ActQuant { x, bound, levels, pact }, out))
-    }
-
-    pub fn add(&mut self, a: Var, b: Var) -> Result<Var> {
-        let (shape, ydata) = {
-            let (ta, tb) = (self.value(a), self.value(b));
-            if ta.shape() != tb.shape() {
-                bail!("add: {:?} vs {:?}", ta.shape(), tb.shape());
-            }
-            let ydata: Vec<f32> = ta.data().iter().zip(tb.data()).map(|(&x, &y)| x + y).collect();
-            (ta.shape().to_vec(), ydata)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(Op::Add { a, b }, out))
-    }
-
-    /// `[N,H,W,C] → [N,C]`: mean over the spatial axes.
-    pub fn global_avg_pool(&mut self, x: Var) -> Result<Var> {
-        let (n, c, ydata) = {
-            let xt = self.value(x);
-            let s = xt.shape();
-            if s.len() != 4 {
-                bail!("global_avg_pool: input {s:?} is not NHWC");
-            }
-            let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
-            let mut y = vec![0.0f32; n * c];
-            for ni in 0..n {
-                for p in 0..h * w {
-                    let src = &xt.data()[(ni * h * w + p) * c..][..c];
-                    let dst = &mut y[ni * c..(ni + 1) * c];
-                    for (d, &v) in dst.iter_mut().zip(src) {
-                        *d += v;
-                    }
-                }
-            }
-            let inv = 1.0 / (h * w) as f32;
-            for v in &mut y {
-                *v *= inv;
-            }
-            (n, c, y)
-        };
-        let out = Tensor::new(vec![n, c], ydata)?;
-        Ok(self.push(Op::GlobalAvgPool { x }, out))
-    }
-
-    /// `x[:, ::s, ::s, :]` — strided spatial subsample.
-    pub fn subsample(&mut self, x: Var, stride: usize) -> Result<Var> {
-        let (shape, ydata) = {
-            let xt = self.value(x);
-            let s = xt.shape();
-            if s.len() != 4 {
-                bail!("subsample: input {s:?} is not NHWC");
-            }
-            let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
-            let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
-            let mut y = vec![0.0f32; n * oh * ow * c];
-            for ni in 0..n {
-                for oy in 0..oh {
-                    for ox in 0..ow {
-                        let src = &xt.data()[((ni * h + oy * stride) * w + ox * stride) * c..][..c];
-                        y[((ni * oh + oy) * ow + ox) * c..][..c].copy_from_slice(src);
-                    }
-                }
-            }
-            (vec![n, oh, ow, c], y)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(Op::Subsample { x, stride }, out))
-    }
-
-    /// Zero-pad the channel axis up to `cout` (ResNet option-A shortcut).
-    pub fn pad_channels(&mut self, x: Var, cout: usize) -> Result<Var> {
-        let (shape, cin, ydata) = {
-            let xt = self.value(x);
-            let s = xt.shape();
-            let cin = *s.last().ok_or_else(|| anyhow!("pad_channels: scalar input"))?;
-            if cout < cin {
-                bail!("pad_channels: {cout} < {cin}");
-            }
-            let pix = xt.len() / cin;
-            let mut y = vec![0.0f32; pix * cout];
-            for p in 0..pix {
-                y[p * cout..p * cout + cin].copy_from_slice(&xt.data()[p * cin..(p + 1) * cin]);
-            }
-            let mut shape = s.to_vec();
-            *shape.last_mut().unwrap() = cout;
-            (shape, cin, y)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(Op::PadChannels { x, cin }, out))
-    }
-
-    /// Concatenate NHWC tensors along the channel axis.
-    pub fn concat(&mut self, vars: &[Var]) -> Result<Var> {
-        let (shape, parts, ydata) = {
-            let base = self.value(vars[0]).shape().to_vec();
-            if base.len() != 4 {
-                bail!("concat: input {base:?} is not NHWC");
-            }
-            let mut parts = Vec::with_capacity(vars.len());
-            let mut ctotal = 0usize;
-            for &v in vars {
-                let s = self.value(v).shape();
-                if s[..3] != base[..3] {
-                    bail!("concat: {s:?} vs {base:?}");
-                }
-                parts.push((v, s[3]));
-                ctotal += s[3];
-            }
-            let pix = base[0] * base[1] * base[2];
-            let mut y = vec![0.0f32; pix * ctotal];
-            let mut off = 0usize;
-            for &(v, c) in &parts {
-                let src = self.value(v).data();
-                for p in 0..pix {
-                    y[p * ctotal + off..p * ctotal + off + c]
-                        .copy_from_slice(&src[p * c..(p + 1) * c]);
-                }
-                off += c;
-            }
-            let mut shape = base;
-            shape[3] = ctotal;
-            (shape, parts, y)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(Op::Concat { parts }, out))
-    }
-
-    /// 3×3 stride-1 average pool with edge ("SAME", clamp-index) padding —
-    /// the Inception pool branch.
-    pub fn avg_pool3x3_edge(&mut self, x: Var) -> Result<Var> {
-        let (shape, ydata) = {
-            let xt = self.value(x);
-            let s = xt.shape();
-            if s.len() != 4 {
-                bail!("avg_pool3x3: input {s:?} is not NHWC");
-            }
-            let (n, h, w, c) = (s[0], s[1], s[2], s[3]);
-            let mut y = vec![0.0f32; xt.len()];
-            for ni in 0..n {
-                for oy in 0..h {
-                    for ox in 0..w {
-                        let dst = &mut y[((ni * h + oy) * w + ox) * c..][..c];
-                        for dy in 0..3 {
-                            let iy = (oy + dy).saturating_sub(1).min(h - 1);
-                            for dx in 0..3 {
-                                let ix = (ox + dx).saturating_sub(1).min(w - 1);
-                                let src = &xt.data()[((ni * h + iy) * w + ix) * c..][..c];
-                                for (d, &v) in dst.iter_mut().zip(src) {
-                                    *d += v;
-                                }
-                            }
-                        }
-                        for v in dst.iter_mut() {
-                            *v /= 9.0;
-                        }
-                    }
-                }
-            }
-            (s.to_vec(), ydata)
-        };
-        let out = Tensor::new(shape, ydata)?;
-        Ok(self.push(Op::AvgPool3x3Edge { x }, out))
     }
 }
 
@@ -534,7 +247,7 @@ fn backward_impl(
                         let dr = &dy.data()[si * spp * cout..(si + 1) * spp * cout];
                         let dwi = gemm::matmul_tn(pr, dr, spp, k, cout);
                         h.deposit(
-                            format!("weff:{layer}"),
+                            DepositSlot::new(idx, format!("weff:{layer}")),
                             h.sample_base() + si,
                             Tensor::new(wt.shape().to_vec(), dwi)?,
                         );
@@ -563,20 +276,31 @@ fn backward_impl(
                         let dr = &dy.data()[si * out_dim..(si + 1) * out_dim];
                         let dwi = gemm::matmul_tn(xr, dr, 1, *in_dim, *out_dim);
                         h.deposit(
-                            format!("weff:{layer}"),
+                            DepositSlot::new(idx, format!("weff:{layer}")),
                             h.sample_base() + si,
                             Tensor::new(vec![*in_dim, *out_dim], dwi)?,
-                        );
-                        h.deposit(
-                            format!("w:{layer}/b"),
-                            h.sample_base() + si,
-                            Tensor::new(vec![*out_dim], dr.to_vec())?,
                         );
                     }
                 } else {
                     let dw =
                         gemm::matmul_tn(tape.value(*x).data(), dy.data(), n, *in_dim, *out_dim);
                     g.add_key(format!("weff:{layer}"), &[*in_dim, *out_dim], dw);
+                }
+                let dx = gemm::matmul_nt(dy.data(), wt.data(), n, *out_dim, *in_dim);
+                g.accumulate(*x, Tensor::new(vec![n, *in_dim], dx)?);
+            }
+            Op::Bias { x, layer, out_dim } => {
+                if let Some(h) = hook {
+                    let n = tape.value(*x).shape()[0];
+                    for si in 0..n {
+                        let dr = &dy.data()[si * out_dim..(si + 1) * out_dim];
+                        h.deposit(
+                            DepositSlot::new(idx, format!("w:{layer}/b")),
+                            h.sample_base() + si,
+                            Tensor::new(vec![*out_dim], dr.to_vec())?,
+                        );
+                    }
+                } else {
                     let mut db = vec![0.0f32; *out_dim];
                     for row in dy.data().chunks(*out_dim) {
                         for (d, &v) in db.iter_mut().zip(row) {
@@ -585,8 +309,7 @@ fn backward_impl(
                     }
                     g.add_key(format!("w:{layer}/b"), &[*out_dim], db);
                 }
-                let dx = gemm::matmul_nt(dy.data(), wt.data(), n, *out_dim, *in_dim);
-                g.accumulate(*x, Tensor::new(vec![n, *in_dim], dx)?);
+                g.accumulate(*x, dy);
             }
             Op::Bn { x, name, gamma, mean, var, batch_stats } => {
                 let xt = tape.value(*x);
@@ -618,12 +341,12 @@ fn backward_impl(
                             }
                         }
                         h.deposit(
-                            format!("bn:{name}/beta"),
+                            DepositSlot::new(idx, format!("bn:{name}/beta")),
                             h.sample_base() + si,
                             Tensor::new(vec![c], p[..c].iter().map(|&v| v as f32).collect())?,
                         );
                         h.deposit(
-                            format!("bn:{name}/gamma"),
+                            DepositSlot::new(idx, format!("bn:{name}/gamma")),
                             h.sample_base() + si,
                             Tensor::new(vec![c], p[c..].iter().map(|&v| v as f32).collect())?,
                         );
@@ -703,7 +426,7 @@ fn backward_impl(
                             for si in 0..n_local {
                                 let db = dbound_over(si * per, (si + 1) * per);
                                 h.deposit(
-                                    format!("pact:{site}"),
+                                    DepositSlot::new(idx, format!("pact:{site}")),
                                     h.sample_base() + si,
                                     Tensor::scalar(db as f32),
                                 );

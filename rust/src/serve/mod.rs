@@ -3,12 +3,15 @@
 //! BSQ's payoff is a mixed-precision model whose inference cost shrinks
 //! with bit-level sparsity; this subsystem turns that into an end-to-end
 //! throughput story. A [`Registry`] loads quantized checkpoints into
-//! immutable [`ServableModel`]s with per-layer bit-plane weights prebuilt
-//! once, a batcher coalesces single-sample requests into fixed-deadline
-//! dynamic batches ([`BatchPolicy`]), and a scoped worker pool dispatches
-//! them through the bit-plane GEMM eval path — per-sample results are
-//! bit-identical to the engine's `q_eval_*` artifacts and independent of
-//! batch composition. [`stats`] digests latency percentiles, throughput,
+//! immutable [`ServableModel`]s — each one the model's compiled layer
+//! graph (`ir`, DESIGN.md §11) bound once against the checkpoint:
+//! bit-plane weights prebuilt, conv→bn→act fused, dead layers elided,
+//! activations living at planned arena offsets. A batcher coalesces
+//! single-sample requests into fixed-deadline dynamic batches
+//! ([`BatchPolicy`]), and a scoped worker pool runs them out of
+//! thread-local arenas with zero steady-state heap allocations —
+//! per-sample results are bit-identical to the engine's `q_eval_*`
+//! artifacts and independent of batch composition. [`stats`] digests latency percentiles, throughput,
 //! and the set-weight-bits-per-sample observable that makes the
 //! sparsity-vs-speedup trade visible in production terms.
 //!

@@ -2,13 +2,16 @@
 //!
 //! A [`ServableModel`] is the deployment image of one BSQ run: the
 //! checkpoint's bit-representation state loaded once, every layer's
-//! sign-split plane bitsets prebuilt into [`BitPlaneMatrix`] weights
-//! (shared `Arc`s — no per-batch re-packing like the stateless engine eval
-//! path), and the per-layer effective-precision map derived from the
-//! trimmed-plane bitsets. The weight build goes through the *same*
-//! `native::step::bitplane_weight` code path as the engine's `q_eval_*`
-//! artifacts, so a served checkpoint is bit-identical to an engine eval of
-//! the same state — `tests/serve_e2e.rs` enforces this.
+//! sign-split plane bitsets prebuilt into [`BitPlaneMatrix`] weights and
+//! **bound into the model's compiled infer plan** (`ir::exec::bind`) —
+//! fused conv→bn→act nodes, a static activation-memory layout, fully
+//! trimmed layers elided — plus the per-layer effective-precision map
+//! derived from the trimmed-plane bitsets. The weight build goes through
+//! the *same* `native::step::bitplane_weight` code path as the engine's
+//! `q_eval_*` artifacts, so a served checkpoint is bit-identical to an
+//! engine eval of the same state — `tests/serve_e2e.rs` enforces this.
+//! Forward passes run out of a thread-local arena with zero steady-state
+//! heap allocations (`tests/serve_alloc.rs`).
 //!
 //! The [`Registry`] caches servables by `(model, checkpoint path)` behind a
 //! mutex, so concurrent load requests for the same checkpoint share one
@@ -20,8 +23,8 @@ use std::sync::{Arc, Mutex};
 
 use anyhow::{bail, Context, Result};
 
+use crate::ir;
 use crate::model::{checkpoint, ModelState};
-use crate::runtime::native::models::NativeModel;
 use crate::runtime::native::step::{self, AMode};
 use crate::runtime::native::tape::WeightRep;
 use crate::runtime::Engine;
@@ -64,19 +67,16 @@ impl LayerPrecision {
     }
 }
 
-/// An immutable, thread-shareable quantized model ready to serve.
+/// An immutable, thread-shareable quantized model ready to serve: the
+/// compiled infer plan bound once against the checkpoint's state, nothing
+/// left to look up or allocate per request.
 pub struct ServableModel {
     pub model_name: String,
     pub checkpoint: PathBuf,
     pub layers: Vec<LayerPrecision>,
-    model: Arc<NativeModel>,
-    /// Prebuilt bit-plane weights, one per quantized layer.
-    weights: BTreeMap<String, Arc<BitPlaneMatrix>>,
-    /// Frozen non-plane state the forward needs: biases, BN statistics,
-    /// PACT clips, plus the planes themselves (kept for precision queries).
-    state: ModelState,
-    actlv: Vec<f32>,
-    am: AMode,
+    /// The compiled plan resolved against this checkpoint — prebuilt
+    /// bit-plane weights, BN statistics, activation levels, elision flags.
+    bound: ir::BoundPlan,
     input_hw: (usize, usize),
     in_ch: usize,
     num_classes: usize,
@@ -124,7 +124,7 @@ impl ServableModel {
         let spec = man.artifact(&format!("q_eval_{suffix}"))?;
         state.check_against(&spec.inputs)?;
 
-        let mut weights = BTreeMap::new();
+        let mut weights: BTreeMap<String, Arc<BitPlaneMatrix>> = BTreeMap::new();
         let mut layers = Vec::with_capacity(man.qlayers.len());
         for q in &man.qlayers {
             let bpm = step::bitplane_weight(&state, model.layer(&q.name)?)?;
@@ -142,15 +142,21 @@ impl ServableModel {
             weights.insert(q.name.clone(), bpm);
         }
 
+        // Bind the compiled infer plan against this checkpoint once: all
+        // state lookups happen here, none per request.
+        let plans = engine.native_plans(model_name)?;
+        let reps: BTreeMap<String, WeightRep> = weights
+            .into_iter()
+            .map(|(k, v)| (k, WeightRep::Planes(v)))
+            .collect();
+        let actlv = act_levels(man.act_sites.len(), act_bits, act_first_last);
+        let bound = ir::bind(&plans.infer, &model, &state, reps, &actlv, am)?;
+
         Ok(ServableModel {
             model_name: model_name.to_string(),
             checkpoint: ckpt.to_path_buf(),
             layers,
-            model,
-            weights,
-            state,
-            actlv: act_levels(man.act_sites.len(), act_bits, act_first_last),
-            am,
+            bound,
             input_hw: man.input_hw,
             in_ch: man.in_ch,
             num_classes: man.num_classes,
@@ -188,11 +194,23 @@ impl ServableModel {
         weighted / params.max(1) as f64
     }
 
-    /// Run one batch `[m, h, w, c]` to logits `[m, classes]` on the
-    /// prebuilt bit-plane weights. Per-sample results are bit-identical
-    /// regardless of batch composition (every kernel accumulates per output
-    /// element in a fixed order independent of the batch dimension), which
-    /// is what lets the batcher coalesce requests freely.
+    /// Layers whose plane bitsets are fully trimmed — their GEMMs are
+    /// elided (zero-filled) by the planned executor.
+    pub fn elided_layers(&self) -> usize {
+        self.bound.elided_layers()
+    }
+
+    /// The compiled plan this servable executes (arena layout, fusion).
+    pub fn plan(&self) -> &ir::CompiledPlan {
+        self.bound.plan()
+    }
+
+    /// Run one batch `[m, h, w, c]` to logits `[m, classes]` through the
+    /// bound plan, inside this thread's persistent arena. Per-sample
+    /// results are bit-identical regardless of batch composition (every
+    /// kernel accumulates per output element in a fixed order independent
+    /// of the batch dimension), which is what lets the batcher coalesce
+    /// requests freely.
     pub fn infer(&self, x: Tensor) -> Result<Tensor> {
         let s = x.shape();
         if s.len() != 4 || (s[1], s[2]) != self.input_hw || s[3] != self.in_ch {
@@ -204,12 +222,29 @@ impl ServableModel {
                 self.in_ch
             );
         }
-        let reps: BTreeMap<String, WeightRep> = self
-            .weights
-            .iter()
-            .map(|(k, v)| (k.clone(), WeightRep::Planes(v.clone())))
-            .collect();
-        step::infer_logits(&self.model, &self.state, reps, self.actlv.clone(), self.am, x)
+        let m = s[0];
+        ir::with_thread_arena(|arena| {
+            let logits = self.bound.execute(x.data(), m, arena)?;
+            Tensor::new(vec![m, self.num_classes], logits.to_vec())
+        })
+    }
+
+    /// [`ServableModel::infer`] without the tensor marshalling: flattened
+    /// samples in, logits appended to `out`. The forward pass itself runs
+    /// allocation-free once the thread's arena is warm — the serving
+    /// workers' hot path (`tests/serve_alloc.rs` asserts the zero-alloc
+    /// steady state with a counting allocator).
+    pub fn infer_into(&self, x: &[f32], m: usize, out: &mut Vec<f32>) -> Result<usize> {
+        if x.len() != m * self.sample_elems() {
+            bail!(
+                "flat input carries {} elements, want {} ({m} samples × {})",
+                x.len(),
+                m * self.sample_elems(),
+                self.sample_elems()
+            );
+        }
+        ir::with_thread_arena(|arena| self.bound.execute_into(x, m, arena, out))?;
+        Ok(self.num_classes)
     }
 }
 

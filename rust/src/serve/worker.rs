@@ -25,7 +25,6 @@ use anyhow::{bail, Result};
 use crate::serve::batcher::{collect_batch, BatchPolicy};
 use crate::serve::registry::ServableModel;
 use crate::serve::stats::{ServeStats, ServeSummary};
-use crate::tensor::Tensor;
 use crate::util::Pcg32;
 
 /// Request-queue depth in batches: senders block (backpressure) once this
@@ -73,12 +72,13 @@ pub fn synthetic_input(seed: u64, client: usize, index: usize, elems: usize) -> 
     (0..elems).map(|_| rng.normal()).collect()
 }
 
-/// Execute one batch on the shared model and answer every rider.
+/// Execute one batch on the shared model and answer every rider. The
+/// forward pass runs through the servable's bound plan in this thread's
+/// arena (`ServableModel::infer_into`) — no tensor marshalling, and zero
+/// heap allocations inside the pass once the arena is warm.
 fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
     let m = jobs.len();
-    let (h, w) = model.input_hw();
-    let c = model.in_ch();
-    let pix = h * w * c;
+    let pix = model.sample_elems();
     let mut xb = Vec::with_capacity(m * pix);
     for j in &jobs {
         if j.x.len() != pix {
@@ -91,9 +91,8 @@ fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
         }
         xb.extend_from_slice(&j.x);
     }
-    let logits = model.infer(Tensor::new(vec![m, h, w, c], xb)?)?;
-    let classes = logits.shape()[1];
-    let data = logits.data();
+    let mut data = Vec::with_capacity(m * model.num_classes());
+    let classes = model.infer_into(&xb, m, &mut data)?;
     for (ji, j) in jobs.into_iter().enumerate() {
         let row = data[ji * classes..(ji + 1) * classes].to_vec();
         let argmax = row
@@ -137,6 +136,12 @@ pub fn run_closed_loop(
     let workers = cfg.workers.max(1).min(total);
     let policy = cfg.policy;
     let pix = model.sample_elems();
+    // Each worker gets its share of the cores for intra-op GEMM fan-out
+    // (the shard trainer's budget rule). A saturated pool (workers ≥
+    // cores) runs at cap 1, where forward passes are also allocation-free
+    // (tests/serve_alloc.rs); an undersubscribed pool keeps the idle
+    // cores working inside the kernels instead.
+    let gemm_cap = (crate::tensor::gemm::max_parallelism() / workers).max(1);
 
     let (req_tx, req_rx) = sync_channel::<ServeRequest>(policy.max_batch * QUEUE_BATCHES);
     let (batch_tx, batch_rx) = channel::<Vec<ServeRequest>>();
@@ -173,20 +178,23 @@ pub fn run_closed_loop(
             let batch_rx = &batch_rx;
             let batch_log = &batch_log;
             let failure = &failure;
-            s.spawn(move || loop {
-                let got = batch_rx.lock().unwrap().recv();
-                let jobs = match got {
-                    Ok(jobs) => jobs,
-                    Err(_) => break, // batcher gone: shutdown
-                };
-                if failure.lock().unwrap().is_some() {
-                    continue; // failed pool: drain and drop to unblock clients
-                }
-                batch_log.lock().unwrap().push(jobs.len());
-                if let Err(e) = process_batch(model, jobs) {
-                    let mut slot = failure.lock().unwrap();
-                    if slot.is_none() {
-                        *slot = Some(format!("{e:#}"));
+            s.spawn(move || {
+                crate::tensor::gemm::set_thread_parallelism_cap(gemm_cap);
+                loop {
+                    let got = batch_rx.lock().unwrap().recv();
+                    let jobs = match got {
+                        Ok(jobs) => jobs,
+                        Err(_) => break, // batcher gone: shutdown
+                    };
+                    if failure.lock().unwrap().is_some() {
+                        continue; // failed pool: drain and drop to unblock clients
+                    }
+                    batch_log.lock().unwrap().push(jobs.len());
+                    if let Err(e) = process_batch(model, jobs) {
+                        let mut slot = failure.lock().unwrap();
+                        if slot.is_none() {
+                            *slot = Some(format!("{e:#}"));
+                        }
                     }
                 }
             });

@@ -55,7 +55,14 @@ fn worker_count(work: usize) -> usize {
     if work < PAR_THRESHOLD {
         return 1;
     }
-    max_parallelism().clamp(1, 16).min(PAR_CAP.with(|c| c.get()))
+    // Check the cap before probing the host: a capped thread (serving
+    // workers, shard workers at full fan-out) must stay allocation-free —
+    // `available_parallelism` can read procfs/cgroups on first use.
+    let cap = PAR_CAP.with(|c| c.get());
+    if cap <= 1 {
+        return 1;
+    }
+    max_parallelism().clamp(1, 16).min(cap)
 }
 
 /// C[M,N] = A[M,K] · B[K,N] (freshly allocated).
@@ -113,8 +120,16 @@ fn gemm_block(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize)
 
 /// Out-of-place transpose: `src` is `[rows, cols]`, result is `[cols, rows]`.
 pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
-    assert_eq!(src.len(), rows * cols);
     let mut dst = vec![0.0f32; src.len()];
+    transpose_into(&mut dst, src, rows, cols);
+    dst
+}
+
+/// [`transpose`] into a caller-owned buffer (fully overwritten) — the
+/// planned executor's allocation-free variant.
+pub fn transpose_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
+    assert_eq!(src.len(), rows * cols);
+    assert_eq!(dst.len(), src.len());
     // tile to keep both access streams within a few cache lines
     const T: usize = 32;
     for rb in (0..rows).step_by(T) {
@@ -126,7 +141,6 @@ pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
             }
         }
     }
-    dst
 }
 
 /// C[M,N] = Aᵀ·B for A stored `[K, M]` (e.g. dW = patchesᵀ·dY).
@@ -205,9 +219,18 @@ impl ConvGeom {
 /// Extract SAME-padded patches: `x` is NHWC, result is `[R, K]` with the
 /// column order matching a flattened HWIO kernel. Out-of-image taps stay 0.
 pub fn im2col(x: &[f32], g: &ConvGeom) -> Vec<f32> {
+    let mut out = vec![0.0f32; g.rows() * g.kdim()];
+    im2col_into(x, g, &mut out);
+    out
+}
+
+/// [`im2col`] into a caller-owned buffer — zero-filled first so the padding
+/// taps stay 0 when the buffer is recycled scratch.
+pub fn im2col_into(x: &[f32], g: &ConvGeom, out: &mut [f32]) {
     assert_eq!(x.len(), g.n * g.h * g.w * g.cin);
     let kdim = g.kdim();
-    let mut out = vec![0.0f32; g.rows() * kdim];
+    assert_eq!(out.len(), g.rows() * kdim);
+    out.fill(0.0);
     for ni in 0..g.n {
         for oy in 0..g.oh {
             for ox in 0..g.ow {
@@ -230,7 +253,6 @@ pub fn im2col(x: &[f32], g: &ConvGeom) -> Vec<f32> {
             }
         }
     }
-    out
 }
 
 /// Adjoint of [`im2col`]: scatter-add patch cotangents back onto the input
@@ -378,16 +400,27 @@ impl BitPlaneMatrix {
     /// scale-add of a contiguous activation column, planes with zero
     /// popcount cost one branch.
     pub fn matmul_t(&self, xt: &[f32], m: usize) -> Vec<f32> {
-        assert_eq!(xt.len(), self.k * m, "Xᵀ is not K×M");
         let mut out = vec![0.0f32; self.n * m];
+        self.matmul_t_into(&mut out, xt, m);
+        out
+    }
+
+    /// [`BitPlaneMatrix::matmul_t`] into a caller-owned `[N, M]` buffer
+    /// (zeroed first — recycled arena scratch carries stale values). The
+    /// parallel column split honors the thread-local cap, so a capped
+    /// serving worker runs it allocation-free.
+    pub fn matmul_t_into(&self, out: &mut [f32], xt: &[f32], m: usize) {
+        assert_eq!(xt.len(), self.k * m, "Xᵀ is not K×M");
+        assert_eq!(out.len(), self.n * m, "out is not N×M");
+        out.fill(0.0);
         if m == 0 || self.nnz_bits() == 0 {
-            return out;
+            return;
         }
         let work = self.nnz_bits() as usize * m;
         let workers = worker_count(work).min(self.n.max(1));
         if workers <= 1 {
-            self.columns_into(&mut out, xt, m, 0);
-            return out;
+            self.columns_into(out, xt, m, 0);
+            return;
         }
         let cols_per = self.n.div_ceil(workers);
         std::thread::scope(|s| {
@@ -395,7 +428,6 @@ impl BitPlaneMatrix {
                 s.spawn(move || self.columns_into(chunk, xt, m, ci * cols_per));
             }
         });
-        out
     }
 
     /// Accumulate output columns `[j0, j0 + chunk.len()/m)` into `chunk`.

@@ -90,8 +90,17 @@ impl Json {
         Json::Str(s.into())
     }
 
+    /// Numeric value. NaN/±Inf have no JSON spelling — they collapse to
+    /// `Null` here (and again at serialization time for `Json::Num` built
+    /// directly), so a percentile over an empty stats window can never
+    /// emit a `BENCH_*.json` this module's own parser rejects.
     pub fn num(n: impl Into<f64>) -> Json {
-        Json::Num(n.into())
+        let n = n.into();
+        if n.is_finite() {
+            Json::Num(n)
+        } else {
+            Json::Null
+        }
     }
 
     pub fn arr_num<I: IntoIterator<Item = f64>>(it: I) -> Json {
@@ -129,7 +138,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // `NaN`/`inf` are not JSON tokens; emitting them would
+                    // silently corrupt the record for every later reader.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -409,6 +422,26 @@ mod tests {
     fn integers_serialize_without_fraction() {
         assert_eq!(Json::Num(32.0).to_string_compact(), "32");
         assert_eq!(Json::Num(0.5).to_string_compact(), "0.5");
+    }
+
+    /// Regression: a non-finite number must never serialize to a token the
+    /// parser rejects (previously `NaN`/`inf` leaked straight into
+    /// `BENCH_*.json`, e.g. a percentile over an empty stats window).
+    #[test]
+    fn non_finite_numbers_round_trip_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::num(v), Json::Null, "constructor clamps");
+            // even a directly built Num serializes parseably
+            let direct = Json::Obj(vec![("p99".into(), Json::Num(v))]);
+            for text in [direct.to_string_compact(), direct.to_string_pretty()] {
+                let back = parse(&text).expect("serialized JSON must re-parse");
+                assert_eq!(back.req("p99").unwrap(), &Json::Null);
+            }
+        }
+        // finite values are untouched
+        assert_eq!(Json::num(1.25), Json::Num(1.25));
+        let rec = Json::obj(vec![("a", Json::num(f64::NAN)), ("b", Json::num(3.0))]);
+        assert_eq!(parse(&rec.to_string_compact()).unwrap(), rec);
     }
 
     #[test]

@@ -1,0 +1,89 @@
+//! Steady-state allocation audit for the serving forward pass.
+//!
+//! The acceptance contract of the planned executor (DESIGN.md §11): once a
+//! serving thread's arena has seen a batch size, `ServableModel::infer_into`
+//! performs **zero heap allocations** — activations live at planned arena
+//! offsets, kernel scratch is grow-only, parameters were resolved at bind
+//! time, and a thread GEMM cap of 1 (the saturated serve-pool
+//! configuration, workers ≥ cores) keeps the kernels from spawning scoped
+//! threads or probing host parallelism.
+//!
+//! Measured with a counting global allocator. This file deliberately holds
+//! a single `#[test]`: the binary runs it alone, so no concurrent test
+//! thread can pollute the counter window.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+#[test]
+fn serving_forward_pass_is_allocation_free_in_steady_state() {
+    use bsq::runtime::Engine;
+    use bsq::serve::{synthesize_quantized_checkpoint, ServableModel};
+    use bsq::util::Pcg32;
+
+    let engine = Engine::native();
+    let dir = std::env::temp_dir().join(format!("bsq_alloc_{}", std::process::id()));
+    let ckpt = dir.join("tiny_q.ckpt");
+    synthesize_quantized_checkpoint(&engine, "tinynet", 6, 3, &ckpt).unwrap();
+    let sv = ServableModel::load(&engine, "tinynet", &ckpt, 4, 8).unwrap();
+
+    // Mirror the saturated serve-pool configuration (workers ≥ cores):
+    // each worker's inner GEMM budget is 1, the allocation-free regime.
+    bsq::tensor::gemm::set_thread_parallelism_cap(1);
+
+    let m = 4usize;
+    let mut rng = Pcg32::seeded(11);
+    let x: Vec<f32> = (0..m * sv.sample_elems()).map(|_| rng.normal()).collect();
+    let mut out: Vec<f32> = Vec::with_capacity(m * sv.num_classes());
+
+    // Warm pass: grows the thread-local arena + scratch and out's capacity.
+    let classes = sv.infer_into(&x, m, &mut out).unwrap();
+    assert_eq!(out.len(), m * classes);
+    let warm = out.clone();
+
+    // Steady state: the forward pass must not touch the allocator.
+    out.clear();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    sv.infer_into(&x, m, &mut out).unwrap();
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "steady-state serving forward made {delta} heap allocations");
+
+    // And it still computes the same bits it did on the warm pass.
+    assert_eq!(out.len(), warm.len());
+    for (i, (a, b)) in out.iter().zip(&warm).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i} changed across arena reuse");
+    }
+
+    // Smaller batches reuse the grown arena allocation-free too.
+    let x1 = &x[..sv.sample_elems()];
+    out.clear();
+    let before = ALLOCS.load(Ordering::SeqCst);
+    sv.infer_into(x1, 1, &mut out).unwrap();
+    let delta = ALLOCS.load(Ordering::SeqCst) - before;
+    assert_eq!(delta, 0, "batch-1 pass on a warm arena made {delta} allocations");
+
+    std::fs::remove_dir_all(dir).ok();
+}
