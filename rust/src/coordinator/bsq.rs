@@ -19,10 +19,11 @@
 use std::path::PathBuf;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::{EpochRecord, History};
 use crate::coordinator::schedule::StepDecay;
+use crate::coordinator::snapshot::{self, ResumePoint, SnapshotCfg, Snapshotter};
 use crate::coordinator::trainer::{train_epoch, Session};
 use crate::data::Loader;
 use crate::model::{checkpoint, momentum_slots, ModelState};
@@ -94,6 +95,11 @@ pub struct BsqConfig {
     /// √params): the 4k-param tinynet needs α ~50× smaller, which its
     /// tests/examples use explicitly. 0 disables rescaling.
     pub alpha_ref_steps: f64,
+    /// End-of-epoch crash-safe snapshots (None = no snapshotting).
+    pub snapshot: Option<SnapshotCfg>,
+    /// Resume from the newest usable snapshot generation instead of
+    /// starting fresh. Requires `snapshot`; errors if none is usable.
+    pub resume: bool,
 }
 
 impl BsqConfig {
@@ -131,6 +137,8 @@ impl BsqConfig {
             eval_batches: 8,
             cache_pretrained: true,
             alpha_ref_steps: 136_500.0, // 350 epochs × 390 steps (paper App. A)
+            snapshot: None,
+            resume: false,
         }
     }
 
@@ -202,20 +210,40 @@ fn ckpt_dir() -> PathBuf {
 }
 
 /// Phase 1 — float pretraining (cached by model/seed/epochs/corpus size).
-pub fn pretrain(session: &Session, cfg: &BsqConfig, history: &mut History) -> Result<ModelState> {
+///
+/// `start` resumes from a snapshot: `(completed epochs, state)` — the
+/// loader replays the completed epochs' RNG stream so the remaining ones
+/// are bit-identical to an uninterrupted run.
+pub fn pretrain(
+    session: &Session,
+    cfg: &BsqConfig,
+    history: &mut History,
+    mut snap: Option<&mut Snapshotter>,
+    start: Option<(usize, ModelState)>,
+) -> Result<ModelState> {
     let path = ckpt_dir().join(format!(
         "{}_s{}_e{}_n{}_fp.ckpt",
         cfg.model, cfg.seed, cfg.pretrain_epochs, cfg.train_size
     ));
-    if cfg.cache_pretrained && path.exists() {
-        log::info!("pretrain: reusing cached checkpoint {}", path.display());
-        return checkpoint::load(&path);
+    if start.is_none() && cfg.cache_pretrained && path.exists() {
+        match checkpoint::load(&path) {
+            Ok(state) => {
+                log::info!("pretrain: reusing cached checkpoint {}", path.display());
+                return Ok(state);
+            }
+            Err(e) => {
+                log::warn!("pretrain cache {} unusable ({e:#}); retraining", path.display());
+            }
+        }
     }
 
     // Pretraining always runs the ReLU6 graph with float activations.
     let exe = session.artifact("fp_train_relu6")?;
     let eval = session.artifact("fp_eval_relu6")?;
-    let mut state = ModelState::init_fp(&session.man, cfg.seed);
+    let (start_epoch, mut state) = match start {
+        Some((done, state)) => (done, state),
+        None => (0, ModelState::init_fp(&session.man, cfg.seed)),
+    };
     state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
     state.check_against(&exe.spec.inputs)?;
 
@@ -224,7 +252,10 @@ pub fn pretrain(session: &Session, cfg: &BsqConfig, history: &mut History) -> Re
     let sched = StepDecay::pretrain();
     let mut loader =
         Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xA);
-    for epoch in 0..cfg.pretrain_epochs {
+    for _ in 0..start_epoch {
+        loader.skip_epoch();
+    }
+    for epoch in start_epoch..cfg.pretrain_epochs {
         let t0 = Instant::now();
         let lr = sched.lr(epoch, cfg.pretrain_epochs);
         let inputs = RunInputs::default()
@@ -251,6 +282,9 @@ pub fn pretrain(session: &Session, cfg: &BsqConfig, history: &mut History) -> Re
             compression: 1.0,
             seconds: t0.elapsed().as_secs_f64(),
         });
+        if let Some(sn) = snap.as_deref_mut() {
+            sn.take(cfg, "pretrain", epoch, &state, history, None, None)?;
+        }
     }
     if cfg.cache_pretrained {
         let meta = Json::obj(vec![
@@ -266,22 +300,32 @@ pub fn pretrain(session: &Session, cfg: &BsqConfig, history: &mut History) -> Re
 
 /// Phases 2–4 — bit conversion, BSQ training with periodic re-quantization,
 /// final adjustment. Returns the trained bit-state and the final scheme.
+///
+/// `start_epoch > 0` resumes a snapshot taken after that many BSQ epochs:
+/// the state is already in bit representation (conversion and PACT setup
+/// are skipped), and the scheme/regularizer weights are recomputed from it
+/// — pure functions of the state, and snapshots land between requants, so
+/// the recomputation reproduces the live values exactly.
 pub fn bsq_train(
     session: &Session,
     cfg: &BsqConfig,
     mut state: ModelState,
     history: &mut History,
+    mut snap: Option<&mut Snapshotter>,
+    start_epoch: usize,
 ) -> Result<(ModelState, QuantScheme)> {
     let suffix = cfg.act_mode().suffix();
     let exe = session.artifact(&format!("bsq_train_{suffix}"))?;
     let eval = session.artifact(&format!("q_eval_{suffix}"))?;
 
-    state.to_bit_representation_per_layer(
-        &session.man,
-        &cfg.init_bits_vec(session.man.qlayers.len()),
-    )?;
-    if cfg.act_mode() == ActMode::Pact {
-        state.add_pact(&session.man);
+    if start_epoch == 0 {
+        state.to_bit_representation_per_layer(
+            &session.man,
+            &cfg.init_bits_vec(session.man.qlayers.len()),
+        )?;
+        if cfg.act_mode() == ActMode::Pact {
+            state.add_pact(&session.man);
+        }
     }
     state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
     state.check_against(&exe.spec.inputs)?;
@@ -292,6 +336,9 @@ pub fn bsq_train(
     let sched = StepDecay::bsq();
     let mut loader =
         Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xB);
+    for _ in 0..start_epoch {
+        loader.skip_epoch();
+    }
 
     // α rescaling for abbreviated schedules (see BsqConfig::alpha_ref_steps).
     let actual_steps = (cfg.bsq_epochs * loader.batches_per_epoch()).max(1) as f64;
@@ -302,7 +349,7 @@ pub fn bsq_train(
     };
     log::info!("bsq: α = {} (effective {alpha_eff:.4} over {actual_steps} steps)", cfg.alpha);
 
-    for epoch in 0..cfg.bsq_epochs {
+    for epoch in start_epoch..cfg.bsq_epochs {
         let t0 = Instant::now();
         let lr = sched.lr(epoch, cfg.bsq_epochs);
         let inputs = RunInputs::default()
@@ -346,6 +393,9 @@ pub fn bsq_train(
             compression: scheme.compression(),
             seconds: t0.elapsed().as_secs_f64(),
         });
+        if let Some(sn) = snap.as_deref_mut() {
+            sn.take(cfg, "bsq", epoch, &state, history, Some(&scheme), None)?;
+        }
     }
     Ok((state, scheme))
 }
@@ -411,20 +461,31 @@ pub fn requantize_all(session: &Session, state: &mut ModelState) -> Result<()> {
 
 /// Phase 5 — DoReFa finetuning at the frozen scheme (paper §3.3). Returns
 /// the final full-test accuracy.
+///
+/// `start_epoch > 0` resumes a snapshot: the state already carries float
+/// master weights and live momenta, so the bit→fp conversion and momentum
+/// reset are skipped, and the running best is recovered from `history`.
+/// `acc_before_ft` rides along in snapshot metadata because it is not
+/// recoverable from the finetuned (fp) state.
 pub fn finetune(
     session: &Session,
     cfg: &BsqConfig,
     state: &mut ModelState,
     scheme: &QuantScheme,
     history: &mut History,
+    mut snap: Option<&mut Snapshotter>,
+    start_epoch: usize,
+    acc_before_ft: f32,
 ) -> Result<f32> {
     let suffix = cfg.act_mode().suffix();
     let exe = session.artifact(&format!("dorefa_train_{suffix}"))?;
     let eval = session.artifact(&format!("dorefa_eval_{suffix}"))?;
 
-    // Materialize float master weights from the bit representation.
-    state.bit_to_fp_weights(&session.man)?;
-    state.reset_momenta();
+    if start_epoch == 0 {
+        // Materialize float master weights from the bit representation.
+        state.bit_to_fp_weights(&session.man)?;
+        state.reset_momenta();
+    }
     state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
     state.check_against(&exe.spec.inputs)?;
 
@@ -433,8 +494,12 @@ pub fn finetune(
     let sched = StepDecay::finetune();
     let mut loader =
         Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xC);
-    let mut best = 0.0f32;
-    for epoch in 0..cfg.finetune_epochs {
+    for _ in 0..start_epoch {
+        loader.skip_epoch();
+    }
+    let mut best =
+        if start_epoch > 0 { history.best_eval("finetune").unwrap_or(0.0) } else { 0.0 };
+    for epoch in start_epoch..cfg.finetune_epochs {
         let t0 = Instant::now();
         let lr = sched.lr(epoch, cfg.finetune_epochs);
         let inputs = RunInputs::default()
@@ -463,6 +528,9 @@ pub fn finetune(
             compression: scheme.compression(),
             seconds: t0.elapsed().as_secs_f64(),
         });
+        if let Some(sn) = snap.as_deref_mut() {
+            sn.take(cfg, "finetune", epoch, state, history, Some(scheme), Some(acc_before_ft))?;
+        }
     }
     // Final full-test evaluation.
     let (_, final_acc) = session.evaluate(
@@ -472,6 +540,41 @@ pub fn finetune(
         usize::MAX,
     )?;
     Ok(final_acc.max(best))
+}
+
+/// Where to re-enter the pipeline, derived from a resume point. The
+/// boundary cases collapse naturally: a completed pretrain enters BSQ at
+/// epoch 0; a completed BSQ phase enters `bsq_train` with an empty epoch
+/// range (conversion skipped, scheme recomputed) and falls through to the
+/// pre-finetune evaluation; a completed finetune replays only the final
+/// full-test evaluation.
+enum Entry {
+    Pretrain { start: Option<(usize, ModelState)> },
+    Bsq { start: usize, state: ModelState },
+    Finetune { start: usize, state: ModelState, scheme: QuantScheme, acc_before: f32 },
+}
+
+fn entry_for(rp: Option<ResumePoint>, cfg: &BsqConfig) -> Result<Entry> {
+    let Some(rp) = rp else {
+        return Ok(Entry::Pretrain { start: None });
+    };
+    let done = rp.epoch + 1;
+    Ok(match rp.phase.as_str() {
+        "pretrain" if done < cfg.pretrain_epochs => {
+            Entry::Pretrain { start: Some((done, rp.state)) }
+        }
+        "pretrain" => Entry::Bsq { start: 0, state: rp.state },
+        "bsq" => Entry::Bsq { start: done.min(cfg.bsq_epochs), state: rp.state },
+        "finetune" => Entry::Finetune {
+            start: done.min(cfg.finetune_epochs),
+            state: rp.state,
+            scheme: rp.scheme.ok_or_else(|| anyhow!("finetune snapshot missing scheme"))?,
+            acc_before: rp
+                .acc_before_ft
+                .ok_or_else(|| anyhow!("finetune snapshot missing acc_before_ft"))?,
+        },
+        other => bail!("snapshot carries unknown phase {other:?}"),
+    })
 }
 
 /// The full pipeline. This is what `bsq-repro bsq` and every experiment
@@ -486,23 +589,66 @@ pub fn run_bsq(engine: &Engine, cfg: &BsqConfig) -> Result<BsqOutcome> {
          shard-count invariant",
         session.shards()
     );
+    let mut snap: Option<Snapshotter> = cfg.snapshot.as_ref().map(Snapshotter::open);
     let mut history = History::default();
 
-    let state = pretrain(&session, cfg, &mut history)?;
-    let (mut state, scheme) = bsq_train(&session, cfg, state, &mut history)?;
+    let rp: Option<ResumePoint> = if cfg.resume {
+        let scfg = cfg
+            .snapshot
+            .as_ref()
+            .ok_or_else(|| anyhow!("resume requested without a snapshot dir"))?;
+        let rp = snapshot::latest(scfg, cfg)?.ok_or_else(|| {
+            anyhow!("resume requested but no usable snapshot in {}", scfg.dir.display())
+        })?;
+        log::info!(
+            "resuming from snapshot generation {} ({} epoch {} complete)",
+            rp.gen,
+            rp.phase,
+            rp.epoch
+        );
+        history = rp.history.clone();
+        Some(rp)
+    } else {
+        None
+    };
 
-    // Accuracy before finetuning, on the full test set.
-    let suffix = cfg.act_mode().suffix();
-    let eval = session.artifact(&format!("q_eval_{suffix}"))?;
-    let actlv = session.act_levels(cfg.act_bits, cfg.act_first_last);
-    let (_, acc_before) = session.evaluate(
-        &eval,
+    let (mut state, scheme, acc_before, ft_start) = match entry_for(rp, cfg)? {
+        Entry::Finetune { start, state, scheme, acc_before } => (state, scheme, acc_before, start),
+        entry => {
+            let (state, bsq_start) = match entry {
+                Entry::Pretrain { start } => {
+                    (pretrain(&session, cfg, &mut history, snap.as_mut(), start)?, 0)
+                }
+                Entry::Bsq { start, state } => (state, start),
+                Entry::Finetune { .. } => unreachable!("handled above"),
+            };
+            let (mut state, scheme) =
+                bsq_train(&session, cfg, state, &mut history, snap.as_mut(), bsq_start)?;
+
+            // Accuracy before finetuning, on the full test set.
+            let suffix = cfg.act_mode().suffix();
+            let eval = session.artifact(&format!("q_eval_{suffix}"))?;
+            let actlv = session.act_levels(cfg.act_bits, cfg.act_first_last);
+            let (_, acc_before) = session.evaluate(
+                &eval,
+                &mut state,
+                &RunInputs::default().vec("actlv", actlv),
+                usize::MAX,
+            )?;
+            (state, scheme, acc_before, 0)
+        }
+    };
+
+    let acc_after = finetune(
+        &session,
+        cfg,
         &mut state,
-        &RunInputs::default().vec("actlv", actlv),
-        usize::MAX,
+        &scheme,
+        &mut history,
+        snap.as_mut(),
+        ft_start,
+        acc_before,
     )?;
-
-    let acc_after = finetune(&session, cfg, &mut state, &scheme, &mut history)?;
 
     Ok(BsqOutcome {
         bits_per_param: scheme.bits_per_param(),

@@ -2,7 +2,7 @@
 
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::util::json::Json;
 
@@ -81,6 +81,41 @@ impl History {
                 .collect(),
         )
     }
+
+    /// Inverse of [`to_json`](History::to_json), for resuming from snapshot
+    /// metadata. f32 metrics roundtrip bit-exactly: the JSON writer prints
+    /// shortest-roundtrip f64, and f32 → f64 → f32 is lossless.
+    pub fn from_json(j: &Json) -> Result<History> {
+        let records = j
+            .as_arr()
+            .context("history: expected an array")?
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                let decode = || -> Result<EpochRecord> {
+                    let f32_of = |k: &str| -> Result<f32> { Ok(r.req(k)?.as_f64()? as f32) };
+                    Ok(EpochRecord {
+                        phase: r.req("phase")?.as_str()?.to_string(),
+                        epoch: r.req("epoch")?.as_usize()?,
+                        lr: f32_of("lr")?,
+                        loss: f32_of("loss")?,
+                        ce: f32_of("ce")?,
+                        acc: f32_of("acc")?,
+                        bgl: f32_of("bgl")?,
+                        eval_acc: match r.req("eval_acc")? {
+                            Json::Null => None,
+                            v => Some(v.as_f64()? as f32),
+                        },
+                        bits_per_param: r.req("bits_per_param")?.as_f64()?,
+                        compression: r.req("compression")?.as_f64()?,
+                        seconds: r.req("seconds")?.as_f64()?,
+                    })
+                };
+                decode().with_context(|| format!("history record {i}"))
+            })
+            .collect::<Result<Vec<EpochRecord>>>()?;
+        Ok(History { records })
+    }
 }
 
 /// Write an experiment record under `results/` (pretty JSON, atomic-ish).
@@ -125,6 +160,33 @@ mod tests {
         assert_eq!(h.best_eval("nope"), None);
         let j = h.to_json();
         assert_eq!(j.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn history_json_roundtrips_bit_exactly() {
+        let mut h = History::default();
+        // awkward values on purpose: subnormal-ish, repeating-fraction floats
+        let mut r = rec("bsq", 7, Some(0.1f32 + 0.2f32));
+        r.loss = 1.0f32 / 3.0;
+        r.bgl = f32::MIN_POSITIVE;
+        r.bits_per_param = 1.0 / 7.0;
+        h.push(r);
+        h.push(rec("finetune", 0, None));
+        let text = h.to_json().to_string_pretty();
+        let back = History::from_json(&crate::util::json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.records.len(), 2);
+        for (a, b) in back.records.iter().zip(&h.records) {
+            assert_eq!(a.phase, b.phase);
+            assert_eq!(a.epoch, b.epoch);
+            assert_eq!(a.lr.to_bits(), b.lr.to_bits());
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.ce.to_bits(), b.ce.to_bits());
+            assert_eq!(a.acc.to_bits(), b.acc.to_bits());
+            assert_eq!(a.bgl.to_bits(), b.bgl.to_bits());
+            assert_eq!(a.eval_acc.map(f32::to_bits), b.eval_acc.map(f32::to_bits));
+            assert_eq!(a.bits_per_param.to_bits(), b.bits_per_param.to_bits());
+            assert_eq!(a.compression.to_bits(), b.compression.to_bits());
+        }
     }
 
     #[test]

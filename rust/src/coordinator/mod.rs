@@ -3,14 +3,18 @@
 //! `bsq` implements the paper's full §3.3 pipeline (pretrain → bit
 //! conversion → regularized training with periodic re-quantization →
 //! finetune); `trainer` holds the shared session/epoch machinery;
-//! `schedule` the paper's LR shapes; `metrics` telemetry + result files.
+//! `schedule` the paper's LR shapes; `metrics` telemetry + result files;
+//! `snapshot` epoch-granular crash-safe snapshots with bit-identical
+//! resume (DESIGN.md §12).
 
 pub mod bsq;
 pub mod metrics;
 pub mod schedule;
+pub mod snapshot;
 pub mod trainer;
 
 pub use bsq::{run_bsq, ActMode, BsqConfig, BsqOutcome};
 pub use metrics::{write_result, EpochRecord, History};
 pub use schedule::StepDecay;
+pub use snapshot::{ResumePoint, SnapshotCfg, Snapshotter};
 pub use trainer::{corpus_for_model, train_epoch, Session};

@@ -1,0 +1,278 @@
+//! Epoch-granular crash-safe snapshots and resume (DESIGN.md §12).
+//!
+//! At the end of every training epoch the coordinator persists the full
+//! [`ModelState`] (bit-exact f32 binary, CRC-protected — `model::checkpoint`
+//! v2) plus a JSON meta block: phase, completed-epoch index, the full
+//! metric [`History`], the current [`QuantScheme`], the pre-finetune
+//! accuracy once known, and a config fingerprint. Generations live in a
+//! [`GenStore`] (`gen-NNNNNN.ckpt`), pruned to the newest `keep`.
+//!
+//! Resume invariant: a run killed at any point and resumed from
+//! [`latest`] replays to a **bit-identical** trajectory versus the
+//! uninterrupted run. This holds because every input to the remaining
+//! epochs is reconstructed exactly: weights/momenta are bit-exact from the
+//! checkpoint, the loader's shuffle/augmentation RNG is replayed through
+//! the completed epochs (`Loader::skip_epoch` runs the identical state
+//! transition), history metrics roundtrip through shortest-print JSON
+//! losslessly, and schemes/regularizer weights are pure functions of the
+//! snapshotted state. `tests/chaos.rs` machine-checks this end to end.
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::bsq::BsqConfig;
+use crate::coordinator::metrics::History;
+use crate::model::checkpoint::GenStore;
+use crate::model::ModelState;
+use crate::quant::{LayerPrec, QuantScheme};
+use crate::util::json::Json;
+
+/// Where and how much to snapshot (CLI: `--snapshot-dir`, `--snapshot-keep`).
+#[derive(Debug, Clone)]
+pub struct SnapshotCfg {
+    pub dir: PathBuf,
+    /// Generations retained on disk. More than one is what makes a torn
+    /// final write survivable (fallback), at one ModelState each.
+    pub keep: usize,
+}
+
+impl SnapshotCfg {
+    pub fn new(dir: impl Into<PathBuf>) -> SnapshotCfg {
+        SnapshotCfg { dir: dir.into(), keep: 3 }
+    }
+}
+
+/// Writes one snapshot generation per completed epoch.
+pub struct Snapshotter {
+    store: GenStore,
+    next_gen: u64,
+}
+
+impl Snapshotter {
+    pub fn open(cfg: &SnapshotCfg) -> Snapshotter {
+        let store = GenStore::new(&cfg.dir, cfg.keep);
+        let next_gen = store.generations().last().map(|g| g + 1).unwrap_or(0);
+        Snapshotter { store, next_gen }
+    }
+
+    /// Persist the end-of-epoch snapshot: `epoch` is the index of the epoch
+    /// that just *completed* within `phase` (its record is already in
+    /// `history`).
+    pub fn take(
+        &mut self,
+        cfg: &BsqConfig,
+        phase: &str,
+        epoch: usize,
+        state: &ModelState,
+        history: &History,
+        scheme: Option<&QuantScheme>,
+        acc_before_ft: Option<f32>,
+    ) -> Result<()> {
+        let meta = Json::obj(vec![
+            ("snapshot_version", Json::num(1.0)),
+            ("gen", Json::num(self.next_gen as f64)),
+            ("phase", Json::str(phase)),
+            ("epoch", Json::num(epoch as f64)),
+            ("acc_before_ft", acc_before_ft.map(|a| Json::num(a as f64)).unwrap_or(Json::Null)),
+            ("scheme", scheme.map(scheme_to_json).unwrap_or(Json::Null)),
+            ("history", history.to_json()),
+            ("config", config_fingerprint(cfg)),
+        ]);
+        self.store
+            .save_generation(self.next_gen, state, &meta)
+            .with_context(|| format!("snapshotting {phase} epoch {epoch}"))?;
+        self.next_gen += 1;
+        Ok(())
+    }
+}
+
+/// A decoded resume point: everything `run_bsq` needs to continue the
+/// pipeline as if it had never stopped.
+pub struct ResumePoint {
+    pub gen: u64,
+    pub phase: String,
+    /// Index of the last *completed* epoch within `phase`.
+    pub epoch: usize,
+    pub state: ModelState,
+    pub history: History,
+    pub scheme: Option<QuantScheme>,
+    pub acc_before_ft: Option<f32>,
+}
+
+/// Newest usable snapshot generation, validated against the resuming run's
+/// config fingerprint (resuming under different hyperparameters would
+/// silently fork the trajectory — that must be a hard error).
+pub fn latest(cfg: &SnapshotCfg, run: &BsqConfig) -> Result<Option<ResumePoint>> {
+    let store = GenStore::new(&cfg.dir, cfg.keep);
+    let Some((gen, state, meta)) = store.latest_good() else {
+        return Ok(None);
+    };
+    let decode = || -> Result<ResumePoint> {
+        let stored = meta.req("config")?;
+        let ours = config_fingerprint(run);
+        if *stored != ours {
+            bail!(
+                "config fingerprint mismatch: snapshot was taken by a different run\n  \
+                 snapshot: {}\n  this run: {}",
+                stored.to_string_compact(),
+                ours.to_string_compact()
+            );
+        }
+        Ok(ResumePoint {
+            gen,
+            phase: meta.req("phase")?.as_str()?.to_string(),
+            epoch: meta.req("epoch")?.as_usize()?,
+            history: History::from_json(meta.req("history")?)?,
+            scheme: match meta.req("scheme")? {
+                Json::Null => None,
+                j => Some(scheme_from_json(j)?),
+            },
+            acc_before_ft: match meta.req("acc_before_ft")? {
+                Json::Null => None,
+                j => Some(j.as_f64()? as f32),
+            },
+            state,
+        })
+    };
+    decode().map(Some).with_context(|| format!("resuming from snapshot generation {gen}"))
+}
+
+fn scheme_to_json(s: &QuantScheme) -> Json {
+    Json::Arr(
+        s.layers
+            .iter()
+            .map(|l| {
+                Json::obj(vec![
+                    ("name", Json::str(l.name.clone())),
+                    ("params", Json::num(l.params as f64)),
+                    ("bits", Json::num(l.bits as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn scheme_from_json(j: &Json) -> Result<QuantScheme> {
+    let layers = j
+        .as_arr()
+        .context("scheme: expected an array")?
+        .iter()
+        .map(|l| {
+            Ok(LayerPrec {
+                name: l.req("name")?.as_str()?.to_string(),
+                params: l.req("params")?.as_usize()?,
+                bits: l.req("bits")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<LayerPrec>>>()?;
+    Ok(QuantScheme::new(layers))
+}
+
+/// Every config field that shapes the training trajectory. Compared for
+/// exact equality on resume (f32 → f64 is lossless, and the JSON layer
+/// never touches the values, so equality is bitwise in effect).
+fn config_fingerprint(cfg: &BsqConfig) -> Json {
+    Json::obj(vec![
+        ("model", Json::str(cfg.model.clone())),
+        ("alpha", Json::num(cfg.alpha as f64)),
+        ("act_bits", Json::num(cfg.act_bits as f64)),
+        ("act_first_last", Json::num(cfg.act_first_last as f64)),
+        ("init_bits", Json::num(cfg.init_bits as f64)),
+        ("init_8bit_prefix", Json::num(cfg.init_8bit_prefix as f64)),
+        ("pretrain_epochs", Json::num(cfg.pretrain_epochs as f64)),
+        ("bsq_epochs", Json::num(cfg.bsq_epochs as f64)),
+        ("finetune_epochs", Json::num(cfg.finetune_epochs as f64)),
+        ("requant_interval", Json::num(cfg.requant_interval as f64)),
+        ("reweigh", Json::str(format!("{:?}", cfg.reweigh))),
+        ("weight_decay", Json::num(cfg.weight_decay as f64)),
+        ("seed", Json::num(cfg.seed as f64)),
+        ("train_size", Json::num(cfg.train_size as f64)),
+        ("test_size", Json::num(cfg.test_size as f64)),
+        ("eval_batches", Json::num(cfg.eval_batches as f64)),
+        ("alpha_ref_steps", Json::num(cfg.alpha_ref_steps)),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::metrics::EpochRecord;
+    use crate::tensor::Tensor;
+    use crate::util::Pcg32;
+
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bsq_snap_{tag}_{}", std::process::id()))
+    }
+
+    fn tiny_state(seed: u64) -> ModelState {
+        let mut rng = Pcg32::seeded(seed);
+        let mut s = ModelState::new();
+        s.insert("w:c1".into(), Tensor::randn(&[2, 3], 0.5, &mut rng));
+        s
+    }
+
+    fn tiny_history() -> History {
+        let mut h = History::default();
+        h.push(EpochRecord {
+            phase: "pretrain".into(),
+            epoch: 0,
+            lr: 0.1,
+            loss: 1.25,
+            ce: 1.25,
+            acc: 0.5,
+            bgl: 0.0,
+            eval_acc: Some(0.1f32 + 0.2f32),
+            bits_per_param: 32.0,
+            compression: 1.0,
+            seconds: 0.5,
+        });
+        h
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_latest() {
+        let cfg = BsqConfig::for_model("tinynet");
+        let dir = scratch("rt");
+        let scfg = SnapshotCfg::new(&dir);
+        let mut snap = Snapshotter::open(&scfg);
+        let scheme = QuantScheme::new(vec![LayerPrec { name: "c1".into(), params: 6, bits: 5 }]);
+        snap.take(&cfg, "bsq", 1, &tiny_state(3), &tiny_history(), Some(&scheme), None).unwrap();
+        snap.take(&cfg, "bsq", 2, &tiny_state(4), &tiny_history(), Some(&scheme), Some(0.75))
+            .unwrap();
+
+        let rp = latest(&scfg, &cfg).unwrap().unwrap();
+        assert_eq!(rp.gen, 1);
+        assert_eq!(rp.phase, "bsq");
+        assert_eq!(rp.epoch, 2);
+        assert_eq!(rp.scheme.as_ref().unwrap(), &scheme);
+        assert_eq!(rp.acc_before_ft.map(f32::to_bits), Some(0.75f32.to_bits()));
+        assert_eq!(rp.state.get("w:c1").unwrap(), tiny_state(4).get("w:c1").unwrap());
+        assert_eq!(rp.history.records[0].eval_acc.map(f32::to_bits), Some((0.1f32 + 0.2f32).to_bits()));
+
+        // a fresh Snapshotter continues the generation sequence
+        let snap2 = Snapshotter::open(&scfg);
+        assert_eq!(snap2.next_gen, 2);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn resume_under_a_different_config_is_a_hard_error() {
+        let cfg = BsqConfig::for_model("tinynet");
+        let dir = scratch("fp");
+        let scfg = SnapshotCfg::new(&dir);
+        let mut snap = Snapshotter::open(&scfg);
+        snap.take(&cfg, "pretrain", 0, &tiny_state(0), &tiny_history(), None, None).unwrap();
+
+        let mut other = cfg.clone();
+        other.alpha *= 2.0;
+        let err = latest(&scfg, &other).unwrap_err();
+        assert!(format!("{err:#}").contains("fingerprint mismatch"), "{err:#}");
+
+        // matching config still resumes; no snapshots at all is Ok(None)
+        assert!(latest(&scfg, &cfg).unwrap().is_some());
+        let empty = SnapshotCfg::new(scratch("fp_empty"));
+        assert!(latest(&empty, &cfg).unwrap().is_none());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -74,8 +74,12 @@ impl<'a> Loader<'a> {
         self.cursor = 0;
     }
 
-    /// Assemble the next batch (wrapping at the epoch tail).
-    pub fn next_batch(&mut self) -> Batch {
+    /// Fill the staging buffers with the next batch and advance the cursor
+    /// and augmentation RNG — the full per-batch state transition, minus
+    /// the tensor materialization. [`skip_epoch`](Loader::skip_epoch) runs
+    /// exactly this, so a resumed loader's RNG stream lands bit-identically
+    /// where the uninterrupted run's would.
+    fn fill_next(&mut self) {
         let (h, w) = self.hw;
         let c = self.channels;
         let pix = h * w * c;
@@ -96,9 +100,25 @@ impl<'a> Loader<'a> {
             self.ybuf[slot] = self.split.labels.data()[idx];
         }
         self.cursor = (self.cursor + self.batch) % self.order.len().max(1);
+    }
+
+    /// Assemble the next batch (wrapping at the epoch tail).
+    pub fn next_batch(&mut self) -> Batch {
+        self.fill_next();
+        let (h, w) = self.hw;
         Batch {
-            x: Tensor::new(vec![self.batch, h, w, c], self.xbuf.clone()).unwrap(),
+            x: Tensor::new(vec![self.batch, h, w, self.channels], self.xbuf.clone()).unwrap(),
             y: IntTensor::new(vec![self.batch], self.ybuf.clone()).unwrap(),
+        }
+    }
+
+    /// Consume one full epoch without yielding batches: the epoch advance
+    /// plus every per-batch shuffle/augmentation RNG draw, for replaying a
+    /// loader to its position at a snapshot boundary on resume.
+    pub fn skip_epoch(&mut self) {
+        self.next_epoch();
+        for _ in 0..self.batches_per_epoch() {
+            self.fill_next();
         }
     }
 }
@@ -169,6 +189,28 @@ mod tests {
         let b = l.next_batch();
         let mean: f32 = b.x.data().iter().sum::<f32>() / b.x.len() as f32;
         assert!(mean.abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn skip_epoch_matches_a_consumed_epoch_bit_for_bit() {
+        let c = corpus();
+        let mut skipped = Loader::new(&c.train, 16, AugmentCfg::default(), 9);
+        let mut walked = Loader::new(&c.train, 16, AugmentCfg::default(), 9);
+        for _ in 0..2 {
+            skipped.skip_epoch();
+            walked.next_epoch();
+            for _ in 0..walked.batches_per_epoch() {
+                walked.next_batch();
+            }
+        }
+        // after identical epoch replays, both streams continue identically
+        walked.next_epoch();
+        skipped.next_epoch();
+        for _ in 0..3 {
+            let (a, b) = (skipped.next_batch(), walked.next_batch());
+            assert_eq!(a.x.data(), b.x.data());
+            assert_eq!(a.y.data(), b.y.data());
+        }
     }
 
     #[test]

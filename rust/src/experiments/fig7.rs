@@ -18,7 +18,7 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
 
     // HAWQ importance on the pretrained fp model (cached pretrain reused).
     let mut hist = History::default();
-    let state = pretrain(&session, &cfg, &mut hist)?;
+    let state = pretrain(&session, &cfg, &mut hist, None, None)?;
     let report = analyze(&session, &state, &HawqConfig::default())?;
 
     println!("\nFigure 7 — BSQ precision vs HAWQ importance (resnet20)");

@@ -53,7 +53,7 @@ pub fn run(engine: &Engine, opts: &ExpOpts) -> Result<()> {
 
         // HAWQ: rank on the pretrained model, assign to match BSQ's budget.
         let mut hist = crate::coordinator::History::default();
-        let state = crate::coordinator::bsq::pretrain(&session, &cfg, &mut hist)?;
+        let state = crate::coordinator::bsq::pretrain(&session, &cfg, &mut hist, None, None)?;
         let report = hawq::analyze(&session, &state, &hawq::HawqConfig::default())?;
         let scheme = hawq::assign_scheme(&session, &report, bsq.bits_per_param, &[8, 4, 2]);
         let out = dorefa::train_from_scratch(

@@ -1,0 +1,407 @@
+//! `faults` — deterministic, schedule-driven fault injection (DESIGN.md §12).
+//!
+//! The chaos discipline mirrors the repo's bit-identity discipline: faults
+//! are not random monkey-testing but *seeded schedules* — a fault fires at
+//! the N-th occurrence of a named injection point, so a failing chaos run
+//! reproduces from its schedule string alone. Injection points are threaded
+//! through the shard trainer ([`SHARD_WORKER`], [`SHARD_BARRIER`]), the
+//! checkpoint writer ([`CKPT_WRITE`], [`CKPT_COMMIT`]), and the serving
+//! pool ([`SERVE_BATCH`], [`SERVE_BATCHER`]).
+//!
+//! Cost model: the plane is a single relaxed atomic load when disarmed —
+//! production paths pay one predictable branch. Arming happens either via
+//! [`inject`] (tests: returns a guard that disarms on drop and serializes
+//! concurrent injections process-wide) or [`install_global`] (the CLI's
+//! `--faults`, armed for the life of the process).
+//!
+//! Occurrence counters are keyed by `(point, key)` — e.g. shard worker 0's
+//! stream is counted independently of worker 1's — so "kill worker 0 at
+//! its 7th step" means the same step at any thread interleaving.
+//!
+//! Schedule grammar (`;`-separated): `point[#key]@nth:kind[=arg]`
+//!
+//! ```text
+//! shard.worker#0@7:panic; ckpt.commit@0:truncate=9; serve.batcher@1:delay=30
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Start of a sharded train-step worker, keyed by shard index.
+pub const SHARD_WORKER: &str = "shard.worker";
+/// Inside [`AbortBarrier::wait`] while the barrier mutex is held — a panic
+/// here poisons the mutex (the hazard the barrier must survive); a delay
+/// here stalls the lockstep.
+pub const SHARD_BARRIER: &str = "shard.barrier";
+/// Checkpoint save entry: `ioerr` makes the write fail before any byte
+/// lands (the previous file must stay intact).
+pub const CKPT_WRITE: &str = "ckpt.write";
+/// Checkpoint commit: `truncate`/`bitflip` corrupt the fully-written temp
+/// file just before the atomic rename — simulating a torn write the
+/// rename discipline cannot catch, which the CRCs must.
+pub const CKPT_COMMIT: &str = "ckpt.commit";
+/// Serve-pool batch dispatch (inside the worker's `catch_unwind`): `panic`
+/// kills the worker mid-batch, exercising the resurrect-and-retry path.
+pub const SERVE_BATCH: &str = "serve.batch";
+/// Batcher thread after a batch is collected: `delay` slows the pipeline
+/// so the bounded request queue backs up (load-shedding pressure).
+pub const SERVE_BATCHER: &str = "serve.batcher";
+
+/// What happens when a scheduled fault fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// `panic!` at the injection point (contained by the site's unwind
+    /// boundary — every instrumented site has one).
+    Panic,
+    /// Sleep in place.
+    Delay(Duration),
+    /// The site reports an I/O error instead of doing its work.
+    IoError,
+    /// Chop this many bytes off the end of the file being committed.
+    Truncate(u64),
+    /// Flip one bit (`byte_offset % file_len`, lowest bit) of the file
+    /// being committed.
+    BitFlip(u64),
+}
+
+impl fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultKind::Panic => write!(f, "panic"),
+            FaultKind::Delay(d) => write!(f, "delay={}", d.as_millis()),
+            FaultKind::IoError => write!(f, "ioerr"),
+            FaultKind::Truncate(n) => write!(f, "truncate={n}"),
+            FaultKind::BitFlip(n) => write!(f, "bitflip={n}"),
+        }
+    }
+}
+
+impl FaultKind {
+    fn parse(s: &str) -> Result<FaultKind> {
+        let (name, arg) = match s.split_once('=') {
+            Some((n, a)) => (n.trim(), Some(a.trim())),
+            None => (s.trim(), None),
+        };
+        let num = |what: &str| -> Result<u64> {
+            arg.ok_or_else(|| anyhow!("fault kind {name:?} needs =<{what}>"))?
+                .parse()
+                .map_err(|e| anyhow!("fault kind {name:?}: bad {what} {arg:?}: {e}"))
+        };
+        match name {
+            "panic" => Ok(FaultKind::Panic),
+            "delay" => Ok(FaultKind::Delay(Duration::from_millis(num("millis")?))),
+            "ioerr" => Ok(FaultKind::IoError),
+            "truncate" => Ok(FaultKind::Truncate(num("bytes")?)),
+            "bitflip" => Ok(FaultKind::BitFlip(num("byte offset")?)),
+            other => bail!("unknown fault kind {other:?}"),
+        }
+    }
+}
+
+/// One scheduled fault: fire `kind` at the `nth` occurrence of `point`
+/// (0-based), optionally restricted to one occurrence-counter `key`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    pub point: String,
+    /// `None` matches any key (each key still counts independently).
+    pub key: Option<u64>,
+    pub nth: u64,
+    pub kind: FaultKind,
+}
+
+impl fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.key {
+            Some(k) => write!(f, "{}#{}@{}:{}", self.point, k, self.nth, self.kind),
+            None => write!(f, "{}@{}:{}", self.point, self.nth, self.kind),
+        }
+    }
+}
+
+/// A parsed fault schedule. Empty schedules are legal and useful: arming
+/// one turns on occurrence counting without firing anything (see
+/// [`occurrences`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Schedule {
+    pub specs: Vec<FaultSpec>,
+}
+
+impl Schedule {
+    pub fn parse(text: &str) -> Result<Schedule> {
+        let mut specs = Vec::new();
+        for item in text.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            let (site, kind) = item
+                .split_once(':')
+                .ok_or_else(|| anyhow!("fault spec {item:?}: want point[#key]@nth:kind[=arg]"))?;
+            let (place, nth) = site
+                .split_once('@')
+                .ok_or_else(|| anyhow!("fault spec {item:?}: missing @nth"))?;
+            let (point, key) = match place.split_once('#') {
+                Some((p, k)) => {
+                    let k: u64 = k
+                        .trim()
+                        .parse()
+                        .map_err(|e| anyhow!("fault spec {item:?}: bad key: {e}"))?;
+                    (p.trim(), Some(k))
+                }
+                None => (place.trim(), None),
+            };
+            if point.is_empty() {
+                bail!("fault spec {item:?}: empty point name");
+            }
+            let nth: u64 =
+                nth.trim().parse().map_err(|e| anyhow!("fault spec {item:?}: bad nth: {e}"))?;
+            specs.push(FaultSpec {
+                point: point.to_string(),
+                key,
+                nth,
+                kind: FaultKind::parse(kind)?,
+            });
+        }
+        Ok(Schedule { specs })
+    }
+}
+
+impl fmt::Display for Schedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, s) in self.specs.iter().enumerate() {
+            if i > 0 {
+                write!(f, "; ")?;
+            }
+            write!(f, "{s}")?;
+        }
+        Ok(())
+    }
+}
+
+// -- the plane ----------------------------------------------------------------
+
+static ARMED: AtomicBool = AtomicBool::new(false);
+static PLANE: Mutex<Option<Plane>> = Mutex::new(None);
+/// Serializes [`inject`] guards so concurrent tests in one binary cannot
+/// interleave schedules through the process-global plane.
+static SERIALIZE: Mutex<()> = Mutex::new(());
+
+struct Plane {
+    /// `(spec, fired)` — each spec fires at most once.
+    specs: Vec<(FaultSpec, bool)>,
+    counters: BTreeMap<(String, u64), u64>,
+    log: Vec<String>,
+}
+
+fn lock_plane() -> MutexGuard<'static, Option<Plane>> {
+    PLANE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Active injection session. Dropping disarms the plane and clears the
+/// schedule; the embedded serialize guard keeps sessions exclusive.
+pub struct Injection {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Injection {
+    /// Human-readable lines for every fault fired so far this session.
+    pub fn fired(&self) -> Vec<String> {
+        lock_plane().as_ref().map(|p| p.log.clone()).unwrap_or_default()
+    }
+}
+
+impl Drop for Injection {
+    fn drop(&mut self) {
+        ARMED.store(false, Ordering::Release);
+        *lock_plane() = None;
+    }
+}
+
+/// Arm the plane with `schedule` for the lifetime of the returned guard.
+pub fn inject(schedule: Schedule) -> Injection {
+    let serial = SERIALIZE.lock().unwrap_or_else(|e| e.into_inner());
+    *lock_plane() = Some(Plane {
+        specs: schedule.specs.into_iter().map(|s| (s, false)).collect(),
+        counters: BTreeMap::new(),
+        log: Vec::new(),
+    });
+    ARMED.store(true, Ordering::Release);
+    Injection { _serial: serial }
+}
+
+/// Arm the plane for the rest of the process — the CLI's `--faults` path.
+pub fn install_global(schedule: Schedule) {
+    *lock_plane() = Some(Plane {
+        specs: schedule.specs.into_iter().map(|s| (s, false)).collect(),
+        counters: BTreeMap::new(),
+        log: Vec::new(),
+    });
+    ARMED.store(true, Ordering::Release);
+}
+
+/// Occurrence count of `(point, key)` since arming (0 when disarmed).
+/// With an empty schedule armed this turns the plane into a pure counter —
+/// how chaos tests calibrate `@nth` indices for timing-dependent points.
+pub fn occurrences(point: &str, key: u64) -> u64 {
+    lock_plane()
+        .as_ref()
+        .and_then(|p| p.counters.get(&(point.to_string(), key)).copied())
+        .unwrap_or(0)
+}
+
+/// Core check: count this occurrence of `(point, key)` and return the
+/// scheduled fault, if any. Call sites that need kind-specific handling
+/// (the checkpoint writer) use this directly; panic/delay sites use
+/// [`fire`]. A single relaxed-ish atomic load when disarmed.
+#[inline]
+pub fn take(point: &str, key: u64) -> Option<FaultKind> {
+    if !ARMED.load(Ordering::Acquire) {
+        return None;
+    }
+    take_slow(point, key)
+}
+
+#[cold]
+fn take_slow(point: &str, key: u64) -> Option<FaultKind> {
+    let mut guard = lock_plane();
+    let plane = guard.as_mut()?;
+    let counter = plane.counters.entry((point.to_string(), key)).or_insert(0);
+    let occ = *counter;
+    *counter += 1;
+    let (spec, fired) = plane.specs.iter_mut().find(|(s, fired)| {
+        !fired && s.point == point && s.nth == occ && s.key.map_or(true, |k| k == key)
+    })?;
+    *fired = true;
+    let kind = spec.kind;
+    let line = format!("{point}#{key} occurrence {occ}: {kind}");
+    log::warn!("fault injected: {line}");
+    plane.log.push(line.clone());
+    append_log_file(&line);
+    Some(kind)
+}
+
+/// Fire panic/delay faults in place (the right helper for pure code
+/// paths); other kinds are meaningless at such sites and are ignored.
+#[inline]
+pub fn fire(point: &str, key: u64) {
+    match take(point, key) {
+        Some(FaultKind::Panic) => panic!("injected fault: {point}#{key}"),
+        Some(FaultKind::Delay(d)) => std::thread::sleep(d),
+        _ => {}
+    }
+}
+
+/// Append a fired-fault line to `$BSQ_FAULT_LOG` (CI uploads this file as
+/// an artifact when a chaos job fails). Best-effort.
+fn append_log_file(line: &str) {
+    use std::io::Write as _;
+    let Some(path) = std::env::var_os("BSQ_FAULT_LOG") else { return };
+    if let Ok(mut f) =
+        std::fs::OpenOptions::new().create(true).append(true).open(std::path::Path::new(&path))
+    {
+        let _ = writeln!(f, "{line}");
+    }
+}
+
+/// Render a `catch_unwind` payload: the `&str`/`String` message when there
+/// is one (injected faults and `panic!` both produce these).
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parses_and_roundtrips() {
+        let text = "shard.worker#0@7:panic; ckpt.commit@0:truncate=9; serve.batcher@1:delay=30";
+        let s = Schedule::parse(text).unwrap();
+        assert_eq!(s.specs.len(), 3);
+        assert_eq!(
+            s.specs[0],
+            FaultSpec {
+                point: "shard.worker".into(),
+                key: Some(0),
+                nth: 7,
+                kind: FaultKind::Panic
+            }
+        );
+        assert_eq!(s.specs[1].kind, FaultKind::Truncate(9));
+        assert_eq!(s.specs[2].kind, FaultKind::Delay(Duration::from_millis(30)));
+        assert_eq!(Schedule::parse(&s.to_string()).unwrap(), s);
+        // empty schedules arm pure counting
+        assert!(Schedule::parse("").unwrap().specs.is_empty());
+    }
+
+    #[test]
+    fn schedule_rejects_malformed_specs() {
+        for bad in
+            ["shard.worker", "p@x:panic", "p@1:noexist", "p@1:delay", "#1@0:panic", "p#z@0:panic"]
+        {
+            assert!(Schedule::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn fires_at_the_scheduled_occurrence_only() {
+        let g = inject(Schedule::parse("t.point@2:ioerr").unwrap());
+        assert_eq!(take("t.point", 0), None); // occurrence 0
+        assert_eq!(take("t.point", 0), None); // occurrence 1
+        assert_eq!(take("t.point", 0), Some(FaultKind::IoError));
+        assert_eq!(take("t.point", 0), None); // one-shot
+        assert_eq!(occurrences("t.point", 0), 4);
+        assert_eq!(g.fired().len(), 1);
+        assert!(g.fired()[0].contains("occurrence 2"));
+    }
+
+    #[test]
+    fn keys_count_independently_and_match_exactly() {
+        let _g = inject(Schedule::parse("t.keyed#1@1:ioerr").unwrap());
+        assert_eq!(take("t.keyed", 0), None);
+        assert_eq!(take("t.keyed", 1), None); // key 1, occurrence 0
+        assert_eq!(take("t.keyed", 0), None); // key 0 never matches
+        assert_eq!(take("t.keyed", 1), Some(FaultKind::IoError));
+        assert_eq!(occurrences("t.keyed", 0), 2);
+        assert_eq!(occurrences("t.keyed", 1), 2);
+    }
+
+    #[test]
+    fn disarmed_plane_is_inert_and_guard_drop_disarms() {
+        assert_eq!(take("t.inert", 0), None);
+        assert_eq!(occurrences("t.inert", 0), 0);
+        {
+            let _g = inject(Schedule::parse("t.inert@0:panic").unwrap());
+            let caught = std::panic::catch_unwind(|| fire("t.inert", 0));
+            assert!(caught.is_err(), "scheduled panic must fire");
+        }
+        // disarmed again: same call is a no-op
+        fire("t.inert", 0);
+        assert_eq!(occurrences("t.inert", 0), 0);
+    }
+
+    #[test]
+    fn delay_fault_sleeps_in_place() {
+        let _g = inject(Schedule::parse("t.slow@0:delay=20").unwrap());
+        let t0 = std::time::Instant::now();
+        fire("t.slow", 0);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+    }
+
+    #[test]
+    fn panic_messages_unwrap_common_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("plain str")).unwrap_err();
+        assert_eq!(panic_message(p), "plain str");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 7)).unwrap_err();
+        assert_eq!(panic_message(p), "formatted 7");
+        let p = std::panic::catch_unwind(|| std::panic::panic_any(42i32)).unwrap_err();
+        assert_eq!(panic_message(p), "non-string panic payload");
+    }
+}

@@ -23,6 +23,8 @@
 //! * [`experiments`] — per-table/figure harnesses
 //! * [`serve`] — batched quantized-inference serving (registry → batcher →
 //!   worker pool over the bit-plane GEMM eval path)
+//! * [`faults`] — deterministic schedule-driven fault injection, the
+//!   substrate of the chaos suite (`tests/chaos.rs`)
 //!
 //! Training on the native backend is data-parallel sharded
 //! ([`runtime::native::shard`]): each minibatch fans across scoped worker
@@ -41,6 +43,7 @@ pub mod baselines;
 pub mod coordinator;
 pub mod data;
 pub mod experiments;
+pub mod faults;
 pub mod ir;
 pub mod model;
 pub mod quant;

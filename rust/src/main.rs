@@ -18,6 +18,12 @@
 //! the native train step fans each minibatch across N data-parallel shards
 //! with bit-identical results at any N (DESIGN.md §10).
 //!
+//! Robustness knobs (DESIGN.md §12): `bsq --snapshot-dir D [--snapshot-keep
+//! N]` writes a crash-safe snapshot after every epoch and `--resume`
+//! continues from the newest good one with a bit-identical trajectory;
+//! `--faults "point[#key]@nth:kind[=arg];..."` arms deterministic fault
+//! injection on `bsq` and `serve-bench` for chaos drills.
+//!
 //! Examples:
 //!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4 --shards 4
 //!   bsq-repro experiment table1 --alphas 3e-3,5e-3,2e-2
@@ -107,12 +113,34 @@ fn bsq_cfg_from_args(args: &mut Args) -> Result<BsqConfig> {
     if args.flag("no-cache") {
         cfg.cache_pretrained = false;
     }
+    let keep: usize = args.get_or("snapshot-keep", 3)?;
+    if let Some(dir) = args.opt_str("snapshot-dir")? {
+        let mut scfg = bsq::coordinator::SnapshotCfg::new(dir);
+        scfg.keep = keep.max(1);
+        cfg.snapshot = Some(scfg);
+    }
+    cfg.resume = args.flag("resume");
+    if cfg.resume && cfg.snapshot.is_none() {
+        bail!("--resume needs --snapshot-dir (where should the snapshots come from?)");
+    }
     Ok(cfg)
+}
+
+/// Arm the global fault-injection plane from `--faults <schedule>`
+/// (grammar: `point[#key]@nth:kind[=arg];...` — see `bsq::faults`).
+fn install_faults(args: &mut Args) -> Result<()> {
+    if let Some(spec) = args.opt_str("faults")? {
+        let schedule = bsq::faults::Schedule::parse(&spec)?;
+        log::warn!("fault injection armed: {schedule}");
+        bsq::faults::install_global(schedule);
+    }
+    Ok(())
 }
 
 fn cmd_bsq(mut args: Args) -> Result<()> {
     let cfg = bsq_cfg_from_args(&mut args)?;
     let out = args.str_or("out", "results/bsq_run.json")?;
+    install_faults(&mut args)?;
     let engine = training_engine(&mut args)?;
     args.finish()?;
     let outcome = run_bsq(&engine, &cfg)?;
@@ -308,6 +336,7 @@ fn cmd_serve_bench(mut args: Args) -> Result<()> {
     let bits: usize = args.get_or("bits", 8)?; // synthesis precision
     let seed: u64 = args.get_or("seed", 0)?;
     let out = args.opt_str("out")?;
+    install_faults(&mut args)?;
     args.finish()?;
     if batches.is_empty() || workers.is_empty() || requests == 0 {
         bail!("need non-empty --batches/--workers and --requests > 0");

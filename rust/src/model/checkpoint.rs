@@ -1,49 +1,135 @@
-//! Checkpointing: ModelState ⇄ a small self-describing binary format.
+//! Checkpointing: ModelState ⇄ a crash-safe self-describing binary format.
 //!
-//! Format (little-endian):
-//!   magic "BSQCKPT1" | u32 entry count | entries…
+//! Format v2 (little-endian):
+//!   magic "BSQCKPT2"
+//!   u32 entry count | u32 CRC32(count bytes)
 //!   entry: u32 key len | key utf8 | u32 ndim | u64 dims… | f32 data…
+//!          | u32 CRC32(every preceding byte of this entry)
 //!
-//! Plus a JSON sidecar (`.meta.json`) carrying run metadata (model name,
-//! phase, epoch, scheme) for human inspection.
+//! Every byte after the magic sits under a CRC32 (util::crc32), so a torn
+//! write — truncation or bit-rot anywhere — fails loudly on load instead of
+//! materializing garbage weights. `tests/chaos.rs` proves this exhaustively
+//! by truncating at every length and flipping every bit of a saved file.
+//!
+//! Durability discipline: [`save`] writes a temp sibling, fsyncs it, then
+//! atomically renames over the destination (and best-effort fsyncs the
+//! directory), so the destination path only ever names a fully-written
+//! file. The JSON sidecar (`.meta.json`) commits the same way, *before*
+//! the binary — a crash between the two leaves a stale-meta/old-ckpt pair,
+//! never a new-ckpt/missing-meta pair, and [`GenStore::latest_good`] only
+//! trusts generations where both halves validate.
+//!
+//! Fault hooks: [`faults::CKPT_WRITE`] (`ioerr` → save fails with the old
+//! file untouched) and [`faults::CKPT_COMMIT`] (`truncate`/`bitflip`
+//! corrupt the fsynced temp file right before the rename — the torn write
+//! the rename discipline cannot catch and the CRCs must).
 
 use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
+use crate::faults::{self, FaultKind};
 use crate::model::state::ModelState;
 use crate::tensor::Tensor;
+use crate::util::crc32::Crc32;
 use crate::util::json::Json;
 
-const MAGIC: &[u8; 8] = b"BSQCKPT1";
+const MAGIC: &[u8; 8] = b"BSQCKPT2";
+const MAGIC_V1: &[u8; 8] = b"BSQCKPT1";
 
 /// Per-entry element cap (2^31 ≈ 8 GiB of f32): a corrupt header must fail
 /// with a clear error, not an absurd allocation.
 const MAX_ELEMS: usize = 1 << 31;
 
+/// Temp sibling in the same directory (rename must not cross filesystems).
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let mut name = path.file_name().map(|n| n.to_os_string()).unwrap_or_default();
+    name.push(".tmp");
+    path.with_file_name(name)
+}
+
+/// Write `bytes`, folding them into `crc`.
+fn put<W: Write>(w: &mut W, crc: &mut Crc32, bytes: &[u8]) -> std::io::Result<()> {
+    w.write_all(bytes)?;
+    crc.update(bytes);
+    Ok(())
+}
+
+/// fsync-then-rename commit of `bytes` to `path`.
+fn commit_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = tmp_sibling(path);
+    {
+        let mut f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} → {path:?}"))?;
+    Ok(())
+}
+
+fn fsync_dir(path: &Path) {
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = std::fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
+}
+
 pub fn save(state: &ModelState, path: &Path, meta: &Json) -> Result<()> {
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let f = std::fs::File::create(path).with_context(|| format!("creating {path:?}"))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(MAGIC)?;
-    w.write_all(&(state.len() as u32).to_le_bytes())?;
-    for (key, t) in state.iter() {
-        w.write_all(&(key.len() as u32).to_le_bytes())?;
-        w.write_all(key.as_bytes())?;
-        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
-        for &d in t.shape() {
-            w.write_all(&(d as u64).to_le_bytes())?;
-        }
-        let bytes = unsafe {
-            std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
-        };
-        w.write_all(bytes)?;
+    if faults::take(faults::CKPT_WRITE, 0) == Some(FaultKind::IoError) {
+        bail!("injected I/O error writing checkpoint {path:?}");
     }
-    w.flush()?;
-    std::fs::write(path.with_extension("meta.json"), meta.to_string_pretty())?;
+    let tmp = tmp_sibling(path);
+    {
+        let f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        let mut w = BufWriter::new(f);
+        w.write_all(MAGIC)?;
+        let mut hcrc = Crc32::new();
+        put(&mut w, &mut hcrc, &(state.len() as u32).to_le_bytes())?;
+        w.write_all(&hcrc.finalize().to_le_bytes())?;
+        for (key, t) in state.iter() {
+            let mut crc = Crc32::new();
+            put(&mut w, &mut crc, &(key.len() as u32).to_le_bytes())?;
+            put(&mut w, &mut crc, key.as_bytes())?;
+            put(&mut w, &mut crc, &(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                put(&mut w, &mut crc, &(d as u64).to_le_bytes())?;
+            }
+            let bytes = unsafe {
+                std::slice::from_raw_parts(t.data().as_ptr() as *const u8, t.data().len() * 4)
+            };
+            put(&mut w, &mut crc, bytes)?;
+            w.write_all(&crc.finalize().to_le_bytes())?;
+        }
+        let f = w.into_inner().map_err(|e| anyhow!("flushing {tmp:?}: {e}"))?;
+        f.sync_all()?;
+    }
+    // Meta commits before the binary: latest_good requires both halves, so
+    // a crash between the renames can only hide this generation, never
+    // pair the new binary with a missing/old sidecar.
+    commit_bytes(&path.with_extension("meta.json"), meta.to_string_pretty().as_bytes())?;
+    match faults::take(faults::CKPT_COMMIT, 0) {
+        Some(FaultKind::Truncate(n)) => {
+            let len = std::fs::metadata(&tmp)?.len();
+            let f = std::fs::OpenOptions::new().write(true).open(&tmp)?;
+            f.set_len(len.saturating_sub(n))?;
+        }
+        Some(FaultKind::BitFlip(off)) => {
+            let mut bytes = std::fs::read(&tmp)?;
+            if !bytes.is_empty() {
+                let i = (off % bytes.len() as u64) as usize;
+                bytes[i] ^= 1;
+                std::fs::write(&tmp, &bytes)?;
+            }
+        }
+        _ => {}
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} → {path:?}"))?;
+    fsync_dir(path);
     Ok(())
 }
 
@@ -52,20 +138,29 @@ pub fn load(path: &Path) -> Result<ModelState> {
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic)?;
+    if &magic == MAGIC_V1 {
+        bail!("{path:?} is a v1 (pre-CRC) checkpoint; regenerate it with this build");
+    }
     if &magic != MAGIC {
         bail!("{path:?} is not a BSQ checkpoint");
     }
-    let count = read_u32(&mut r)? as usize;
+    let mut hcrc = Crc32::new();
+    let count = get_u32(&mut r, &mut hcrc)? as usize;
+    if read_u32(&mut r)? != hcrc.finalize() {
+        bail!("corrupt checkpoint: entry-count CRC mismatch in {path:?}");
+    }
     let mut state = ModelState::new();
     for _ in 0..count {
-        let klen = read_u32(&mut r)? as usize;
+        let mut crc = Crc32::new();
+        let klen = get_u32(&mut r, &mut crc)? as usize;
         if klen > 1 << 16 {
             bail!("corrupt checkpoint: key length {klen}");
         }
         let mut kbuf = vec![0u8; klen];
         r.read_exact(&mut kbuf)?;
+        crc.update(&kbuf);
         let key = String::from_utf8(kbuf)?;
-        let ndim = read_u32(&mut r)? as usize;
+        let ndim = get_u32(&mut r, &mut crc)? as usize;
         if ndim > 16 {
             bail!("corrupt checkpoint: ndim {ndim}");
         }
@@ -73,6 +168,7 @@ pub fn load(path: &Path) -> Result<ModelState> {
         for _ in 0..ndim {
             let mut b = [0u8; 8];
             r.read_exact(&mut b)?;
+            crc.update(&b);
             shape.push(u64::from_le_bytes(b) as usize);
         }
         // Overflow-checked element count: huge dims must not wrap into a
@@ -81,14 +177,15 @@ pub fn load(path: &Path) -> Result<ModelState> {
             .iter()
             .try_fold(1usize, |acc, &d| acc.checked_mul(d))
             .filter(|&n| n <= MAX_ELEMS)
-            .ok_or_else(|| {
-                anyhow::anyhow!("corrupt checkpoint: entry {key:?} claims shape {shape:?}")
-            })?;
+            .ok_or_else(|| anyhow!("corrupt checkpoint: entry {key:?} claims shape {shape:?}"))?;
         let mut data = vec![0f32; n];
-        let bytes = unsafe {
-            std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4)
-        };
+        let bytes =
+            unsafe { std::slice::from_raw_parts_mut(data.as_mut_ptr() as *mut u8, n * 4) };
         r.read_exact(bytes)?;
+        crc.update(bytes);
+        if read_u32(&mut r)? != crc.finalize() {
+            bail!("corrupt checkpoint: entry {key:?} CRC mismatch in {path:?}");
+        }
         state.insert(key, Tensor::new(shape, data)?);
     }
     // A checkpoint is exactly its declared entries: trailing bytes mean a
@@ -111,19 +208,104 @@ fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
     Ok(u32::from_le_bytes(b))
 }
 
+/// `read_u32` that also folds the bytes into a running CRC.
+fn get_u32<R: Read>(r: &mut R, crc: &mut Crc32) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    crc.update(&b);
+    Ok(u32::from_le_bytes(b))
+}
+
+/// N-generation checkpoint retention with fallback to the newest
+/// generation that still validates. Layout: `<dir>/gen-NNNNNN.ckpt` plus
+/// the usual `.meta.json` sidecar per generation.
+pub struct GenStore {
+    dir: PathBuf,
+    keep: usize,
+}
+
+impl GenStore {
+    pub fn new(dir: impl Into<PathBuf>, keep: usize) -> GenStore {
+        GenStore { dir: dir.into(), keep: keep.max(1) }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path(&self, generation: u64) -> PathBuf {
+        self.dir.join(format!("gen-{generation:06}.ckpt"))
+    }
+
+    /// Generation numbers present on disk, ascending (validity not checked).
+    pub fn generations(&self) -> Vec<u64> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else { return Vec::new() };
+        let mut gens: Vec<u64> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                name.strip_prefix("gen-")?.strip_suffix(".ckpt")?.parse().ok()
+            })
+            .collect();
+        gens.sort_unstable();
+        gens
+    }
+
+    /// Save `generation`, then prune down to the newest `keep` generations.
+    pub fn save_generation(&self, generation: u64, state: &ModelState, meta: &Json) -> Result<()> {
+        save(state, &self.path(generation), meta)
+            .with_context(|| format!("saving snapshot generation {generation}"))?;
+        let gens = self.generations();
+        if gens.len() > self.keep {
+            for &g in &gens[..gens.len() - self.keep] {
+                let p = self.path(g);
+                let _ = std::fs::remove_file(&p);
+                let _ = std::fs::remove_file(p.with_extension("meta.json"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Newest generation whose binary *and* meta sidecar both validate;
+    /// corrupt generations are logged and skipped — the fallback path that
+    /// makes a torn final write survivable.
+    pub fn latest_good(&self) -> Option<(u64, ModelState, Json)> {
+        for &g in self.generations().iter().rev() {
+            let p = self.path(g);
+            match load(&p).and_then(|s| Ok((s, load_meta(&p)?))) {
+                Ok((state, meta)) => return Some((g, state, meta)),
+                Err(e) => {
+                    log::warn!("snapshot generation {g} unusable ({e:#}); falling back");
+                }
+            }
+        }
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::util::Pcg32;
 
-    #[test]
-    fn roundtrip() {
-        let mut rng = Pcg32::seeded(0);
+    fn scratch(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("bsq_ckpt_{tag}_{}", std::process::id()))
+    }
+
+    fn sample_state(seed: u64) -> ModelState {
+        let mut rng = Pcg32::seeded(seed);
         let mut s = ModelState::new();
         s.insert("w:conv1".into(), Tensor::randn(&[3, 3, 2, 4], 0.5, &mut rng));
         s.insert("scale:conv1".into(), Tensor::scalar(0.7));
         s.insert("mask:conv1".into(), Tensor::full(&[9], 1.0));
-        let dir = std::env::temp_dir().join(format!("bsq_ckpt_{}", std::process::id()));
+        s
+    }
+
+    #[test]
+    fn roundtrip() {
+        let s = sample_state(0);
+        let dir = scratch("rt");
         let path = dir.join("test.ckpt");
         let meta = Json::obj(vec![("model", Json::str("tinynet")), ("epoch", Json::num(3.0))]);
         save(&s, &path, &meta).unwrap();
@@ -133,6 +315,8 @@ mod tests {
         assert_eq!(loaded.get("scale:conv1").unwrap().item().unwrap(), 0.7);
         let m = load_meta(&path).unwrap();
         assert_eq!(m.req("epoch").unwrap().as_usize().unwrap(), 3);
+        // no temp siblings left behind
+        assert!(!tmp_sibling(&path).exists());
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -146,10 +330,22 @@ mod tests {
     }
 
     #[test]
+    fn rejects_v1_checkpoints() {
+        let path = std::env::temp_dir().join(format!("bsq_ckpt_v1_{}", std::process::id()));
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(MAGIC_V1);
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("v1"), "{err}");
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
     fn rejects_trailing_bytes() {
         let mut s = ModelState::new();
         s.insert("w".into(), Tensor::scalar(1.0));
-        let dir = std::env::temp_dir().join(format!("bsq_ckpt_trail_{}", std::process::id()));
+        let dir = scratch("trail");
         let path = dir.join("t.ckpt");
         save(&s, &path, &Json::obj(vec![])).unwrap();
         assert!(load(&path).is_ok());
@@ -163,10 +359,11 @@ mod tests {
 
     #[test]
     fn rejects_absurd_entry_shapes() {
-        // magic | count 1 | key "w" | ndim 2 | dims [u64::MAX, u64::MAX]
+        // magic | count 1 + CRC | key "w" | ndim 2 | dims [u64::MAX, u64::MAX]
         let mut bytes: Vec<u8> = Vec::new();
         bytes.extend_from_slice(MAGIC);
         bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&crate::util::crc32::crc32(&1u32.to_le_bytes()).to_le_bytes());
         bytes.extend_from_slice(&1u32.to_le_bytes());
         bytes.push(b'w');
         bytes.extend_from_slice(&2u32.to_le_bytes());
@@ -177,5 +374,53 @@ mod tests {
         let err = load(&path).unwrap_err().to_string();
         assert!(err.contains("corrupt checkpoint"), "{err}");
         std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn detects_payload_corruption() {
+        let s = sample_state(1);
+        let dir = scratch("crc");
+        let path = dir.join("t.ckpt");
+        save(&s, &path, &Json::obj(vec![])).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip one bit deep in the tensor-data region
+        let i = bytes.len() - 24;
+        bytes[i] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("CRC mismatch"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn gen_store_prunes_to_keep_and_falls_back_over_corruption() {
+        let dir = scratch("gens");
+        let store = GenStore::new(&dir, 3);
+        for g in 0..5u64 {
+            let meta = Json::obj(vec![("gen", Json::num(g as f64))]);
+            store.save_generation(g, &sample_state(g), &meta).unwrap();
+        }
+        assert_eq!(store.generations(), vec![2, 3, 4]);
+
+        let (g, state, meta) = store.latest_good().unwrap();
+        assert_eq!(g, 4);
+        assert_eq!(meta.req("gen").unwrap().as_usize().unwrap(), 4);
+        assert_eq!(state.get("w:conv1").unwrap(), sample_state(4).get("w:conv1").unwrap());
+
+        // corrupt the newest binary → falls back one generation
+        let mut bytes = std::fs::read(store.path(4)).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 1;
+        std::fs::write(store.path(4), &bytes).unwrap();
+        let (g, state, _) = store.latest_good().unwrap();
+        assert_eq!(g, 3);
+        assert_eq!(state.get("w:conv1").unwrap(), sample_state(3).get("w:conv1").unwrap());
+
+        // corrupt that generation's meta sidecar → falls back again
+        std::fs::write(store.path(3).with_extension("meta.json"), b"{ torn").unwrap();
+        let (g, _, _) = store.latest_good().unwrap();
+        assert_eq!(g, 2);
+
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -26,11 +26,12 @@ use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::ops::Range;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, MutexGuard};
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::Batch;
+use crate::faults;
 use crate::ir::exec;
 use crate::ir::plan::CompiledPlan;
 use crate::model::state::ModelState;
@@ -107,6 +108,16 @@ fn tree_add_tensors(items: Vec<Tensor>) -> Option<Tensor> {
     })
 }
 
+/// Poison-tolerant lock: a worker that panics while holding one of the
+/// coordination mutexes (injected faults do exactly this) poisons it, but
+/// the protected state is plain data that is never left half-updated by
+/// the panicking critical sections here — so recovery is safe, and it is
+/// what keeps `AbortBarrier::abort` able to release every peer instead of
+/// cascading opaque `PoisonError` panics.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
 // -- abortable lockstep barrier ----------------------------------------------
 
 /// A reusable barrier whose waiters can be released with an error when a
@@ -135,7 +146,11 @@ impl AbortBarrier {
     }
 
     fn wait(&self) -> Result<()> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
+        // Injection point under the barrier mutex on purpose: a panic here
+        // unwinds with the guard held, poisoning the mutex — the exact
+        // hazard the poison-tolerant locking must survive.
+        faults::fire(faults::SHARD_BARRIER, 0);
         if st.aborted {
             bail!("{ABORTED}");
         }
@@ -147,7 +162,10 @@ impl AbortBarrier {
             return Ok(());
         }
         let gen = st.generation;
-        st = self.cv.wait_while(st, |s| s.generation == gen && !s.aborted).unwrap();
+        st = self
+            .cv
+            .wait_while(st, |s| s.generation == gen && !s.aborted)
+            .unwrap_or_else(|e| e.into_inner());
         if st.aborted {
             bail!("{ABORTED}");
         }
@@ -156,7 +174,7 @@ impl AbortBarrier {
 
     /// Sticky: every current and future waiter errors out.
     fn abort(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = lock(&self.state);
         st.aborted = true;
         self.cv.notify_all();
     }
@@ -241,7 +259,7 @@ impl ShardHook for WorkerCtx<'_> {
             bail!("exchange: {} partials for a {}-sample shard", local.len(), self.range.len());
         }
         {
-            let mut slots = self.shared.slots.lock().unwrap();
+            let mut slots = lock(&self.shared.slots);
             for (i, v) in local.into_iter().enumerate() {
                 slots[self.range.start + i] = Some(v);
             }
@@ -250,12 +268,12 @@ impl ShardHook for WorkerCtx<'_> {
         let round = self.round.get() + 1;
         self.round.set(round);
         let folded = {
-            let mut cache = self.shared.folded.lock().unwrap();
+            let mut cache = lock(&self.shared.folded);
             if cache.0 != round {
                 // First worker past the barrier folds for everyone. Taking
                 // (not cloning) the slots also clears them, so the
                 // empty-slot guard stays meaningful on every round.
-                let mut slots = self.shared.slots.lock().unwrap();
+                let mut slots = lock(&self.shared.slots);
                 let all: Option<Vec<Vec<f64>>> = slots.iter_mut().map(Option::take).collect();
                 match all.and_then(tree_add_f64) {
                     Some(v) => *cache = (round, v),
@@ -427,16 +445,22 @@ pub(crate) fn train_step(
     let mut outs: Vec<Result<WorkerOut>> = Vec::with_capacity(e);
     std::thread::scope(|s| {
         let mut handles = Vec::with_capacity(e);
-        for (r, sub) in ranges.iter().zip(subs) {
+        for (wi, (r, sub)) in ranges.iter().zip(subs).enumerate() {
             let reps_w = clone_reps(&reps);
             let actlv_w = actlv.clone();
             let ctx = WorkerCtx::new(&shared, r.clone(), n);
             handles.push(s.spawn(move || {
                 gemm::set_thread_parallelism_cap(gemm_cap);
                 let out = catch_unwind(AssertUnwindSafe(|| {
+                    // Keyed by shard index, so occurrence N of shard.worker#K
+                    // is shard K's N-th train step — a deterministic clock at
+                    // any thread interleaving.
+                    faults::fire(faults::SHARD_WORKER, wi as u64);
                     worker_body(plan, model, state_ref, reps_w, actlv_w, am, sub, &ctx)
                 }))
-                .unwrap_or_else(|_| Err(anyhow!("shard worker panicked")));
+                .unwrap_or_else(|p| {
+                    Err(anyhow!("shard worker panicked: {}", faults::panic_message(p)))
+                });
                 if out.is_err() {
                     ctx.abort(); // release peers blocked at a barrier
                 }
@@ -581,6 +605,30 @@ mod tests {
         b.abort();
         assert!(waiter.join().unwrap().is_err());
         // sticky for late arrivals too
+        assert!(b.wait().is_err());
+    }
+
+    #[test]
+    fn abort_barrier_survives_a_poisoned_mutex() {
+        // A worker that panics while holding the barrier mutex (what an
+        // injected shard.barrier fault does) poisons it. The poisoning
+        // regression: abort() must still release blocked peers, and late
+        // wait() calls must error rather than cascade PoisonError panics.
+        let b = std::sync::Arc::new(AbortBarrier::new(2));
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || b2.wait());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+
+        let b3 = b.clone();
+        let panicker = std::thread::spawn(move || {
+            let _guard = b3.state.lock().unwrap();
+            panic!("injected: poison the barrier mutex");
+        });
+        assert!(panicker.join().is_err());
+        assert!(b.state.is_poisoned());
+
+        b.abort(); // must not panic, must wake the waiter
+        assert!(waiter.join().unwrap().is_err());
         assert!(b.wait().is_err());
     }
 }

@@ -55,6 +55,9 @@ pub fn collect_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>
             }
         }
     }
+    // Chaos hook: a delay here models a stalled batcher with requests
+    // already aged in the queue (what the timeout/shed tests exercise).
+    crate::faults::fire(crate::faults::SERVE_BATCHER, 0);
     Some(batch)
 }
 

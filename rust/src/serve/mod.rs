@@ -33,7 +33,8 @@ pub use registry::{
 };
 pub use stats::{ServeStats, ServeSummary};
 pub use worker::{
-    run_closed_loop, sweep, synthetic_input, PoolConfig, ServeRequest, ServeResponse, SweepCell,
+    run_closed_loop, sweep, synthetic_input, Admission, PoolConfig, ServeRequest, ServeResponse,
+    ServeStatus, SweepCell,
 };
 
 use crate::util::json::Json;

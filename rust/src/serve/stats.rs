@@ -21,15 +21,25 @@ pub struct ServeStats {
     pub batch_sizes: Vec<usize>,
     /// Σ set weight bits across layers: per-sample work ∝ this number.
     pub weight_bits_per_sample: u64,
+    /// Forward-pass panics caught and recovered by the worker supervisor.
+    pub worker_panics: usize,
+    /// Requests answered `TimedOut` (deadline expired before dispatch).
+    pub timed_out: usize,
+    /// Requests answered `Shed` at admission (queue full).
+    pub shed: usize,
 }
 
 impl ServeStats {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
         requested: usize,
         mut latencies: Vec<Duration>,
         batch_sizes: Vec<usize>,
         wall: Duration,
         weight_bits_per_sample: u64,
+        worker_panics: usize,
+        timed_out: usize,
+        shed: usize,
     ) -> ServeStats {
         latencies.sort();
         ServeStats {
@@ -39,6 +49,9 @@ impl ServeStats {
             latencies,
             batch_sizes,
             weight_bits_per_sample,
+            worker_panics,
+            timed_out,
+            shed,
         }
     }
 
@@ -67,6 +80,9 @@ impl ServeStats {
             mean_batch,
             max_batch_observed: self.batch_sizes.iter().copied().max().unwrap_or(0),
             weight_bits_per_sample: self.weight_bits_per_sample,
+            worker_panics: self.worker_panics,
+            timed_out: self.timed_out,
+            shed: self.shed,
         }
     }
 }
@@ -86,6 +102,9 @@ pub struct ServeSummary {
     pub mean_batch: f64,
     pub max_batch_observed: usize,
     pub weight_bits_per_sample: u64,
+    pub worker_panics: usize,
+    pub timed_out: usize,
+    pub shed: usize,
 }
 
 impl ServeSummary {
@@ -102,6 +121,9 @@ impl ServeSummary {
             ("mean_batch", Json::num(self.mean_batch)),
             ("max_batch_observed", Json::num(self.max_batch_observed as f64)),
             ("weight_bits_per_sample", Json::num(self.weight_bits_per_sample as f64)),
+            ("worker_panics", Json::num(self.worker_panics as f64)),
+            ("timed_out", Json::num(self.timed_out as f64)),
+            ("shed", Json::num(self.shed as f64)),
         ])
     }
 
@@ -128,7 +150,7 @@ mod tests {
     #[test]
     fn summary_digests_latencies_and_batches() {
         let lats: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
-        let s = ServeStats::new(100, lats, vec![4, 4, 2], Duration::from_secs(2), 1234);
+        let s = ServeStats::new(100, lats, vec![4, 4, 2], Duration::from_secs(2), 1234, 1, 2, 3);
         assert_eq!(s.completed, 100);
         let sum = s.summary();
         assert_eq!(sum.throughput_rps, 50.0);
@@ -139,14 +161,18 @@ mod tests {
         assert!((sum.mean_batch - 10.0 / 3.0).abs() < 1e-9);
         assert_eq!(sum.max_batch_observed, 4);
         assert_eq!(sum.weight_bits_per_sample, 1234);
+        assert_eq!((sum.worker_panics, sum.timed_out, sum.shed), (1, 2, 3));
         let j = sum.to_json();
         assert_eq!(j.req("completed").unwrap().as_usize().unwrap(), 100);
+        assert_eq!(j.req("worker_panics").unwrap().as_usize().unwrap(), 1);
+        assert_eq!(j.req("timed_out").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("shed").unwrap().as_usize().unwrap(), 3);
         assert!(sum.report().contains("req/s"));
     }
 
     #[test]
     fn empty_run_is_well_defined() {
-        let s = ServeStats::new(0, vec![], vec![], Duration::from_millis(1), 0);
+        let s = ServeStats::new(0, vec![], vec![], Duration::from_millis(1), 0, 0, 0, 0);
         let sum = s.summary();
         assert_eq!(sum.completed, 0);
         assert_eq!(sum.p50_us, 0.0);
@@ -160,6 +186,9 @@ mod tests {
             vec![Duration::from_millis(30), Duration::from_millis(10), Duration::from_millis(20)],
             vec![3],
             Duration::from_secs(1),
+            0,
+            0,
+            0,
             0,
         );
         assert!(s.latencies.windows(2).all(|w| w[0] <= w[1]));

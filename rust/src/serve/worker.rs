@@ -15,13 +15,27 @@
 //! clients finishing drops the request senders, the batcher flushes its
 //! final batch and drops the batch sender, the workers drain and exit —
 //! no stop flags, no leaked threads.
+//!
+//! Supervision (DESIGN.md §12): a batch whose forward pass panics is
+//! caught in the worker, and its in-flight jobs are re-enqueued on a retry
+//! queue **exactly once** — no request is dropped, none is answered twice.
+//! A second panic of the same batch is a pool failure. Requests can carry a
+//! deadline (`PoolConfig::request_timeout`): a request already expired when
+//! its batch is dispatched gets a [`ServeStatus::TimedOut`] response
+//! instead of riding the forward pass. Under [`Admission::Shed`], a full
+//! request queue answers immediately with [`ServeStatus::Shed`] and a
+//! retry-after hint instead of blocking the client.
 
-use std::sync::mpsc::{channel, sync_channel, Sender};
-use std::sync::Mutex;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Sender, TrySendError};
+use std::sync::{Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
+use crate::faults;
 use crate::serve::batcher::{collect_batch, BatchPolicy};
 use crate::serve::registry::ServableModel;
 use crate::serve::stats::{ServeStats, ServeSummary};
@@ -31,11 +45,44 @@ use crate::util::Pcg32;
 /// many batches' worth of requests are already waiting.
 const QUEUE_BATCHES: usize = 4;
 
-/// Pool shape: worker count + the batcher's coalescing policy.
+/// What a client does when the bounded request queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Block until the queue drains (closed-loop benching default).
+    Block,
+    /// Answer the request locally with [`ServeStatus::Shed`] carrying this
+    /// retry-after hint — bounded-queue load shedding.
+    Shed { retry_after: Duration },
+}
+
+/// Pool shape: worker count, the batcher's coalescing policy, and the
+/// robustness knobs (per-request deadline, admission policy).
 #[derive(Debug, Clone, Copy)]
 pub struct PoolConfig {
     pub workers: usize,
     pub policy: BatchPolicy,
+    /// A request older than this at batch-dispatch time is answered
+    /// [`ServeStatus::TimedOut`] instead of riding the forward pass.
+    pub request_timeout: Option<Duration>,
+    pub admission: Admission,
+}
+
+impl PoolConfig {
+    /// Benching defaults: block on a full queue, no deadline.
+    pub fn new(workers: usize, policy: BatchPolicy) -> PoolConfig {
+        PoolConfig { workers, policy, request_timeout: None, admission: Admission::Block }
+    }
+}
+
+/// How a request was resolved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeStatus {
+    /// Served: `argmax`/`logits` are live model output.
+    Ok,
+    /// Deadline expired before its batch dispatched; payload fields empty.
+    TimedOut,
+    /// Rejected at admission: queue full; retry after the embedded hint.
+    Shed { retry_after: Duration },
 }
 
 /// One enqueued inference request.
@@ -53,12 +100,27 @@ pub struct ServeRequest {
 pub struct ServeResponse {
     pub client: usize,
     pub index: usize,
+    pub status: ServeStatus,
     pub argmax: usize,
     pub logits: Vec<f32>,
     /// Queue-to-response latency.
     pub latency: Duration,
-    /// Size of the batch this request rode in.
+    /// Size of the batch this request rode in (0 if it never rode one).
     pub batch_size: usize,
+}
+
+/// One batch in flight between batcher and workers. `retried` enforces the
+/// exactly-once re-enqueue: a batch that panics once goes back on the retry
+/// queue; a batch that panics twice fails the pool.
+struct BatchJob {
+    jobs: Vec<ServeRequest>,
+    retried: bool,
+}
+
+/// Poison-tolerant lock: a panicking batch is caught inside the worker, but
+/// an injected panic elsewhere must not cascade into `PoisonError` unwraps.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Deterministic synthetic sample for client `c`, request `i` — public so
@@ -72,15 +134,18 @@ pub fn synthetic_input(seed: u64, client: usize, index: usize, elems: usize) -> 
     (0..elems).map(|_| rng.normal()).collect()
 }
 
-/// Execute one batch on the shared model and answer every rider. The
-/// forward pass runs through the servable's bound plan in this thread's
-/// arena (`ServableModel::infer_into`) — no tensor marshalling, and zero
-/// heap allocations inside the pass once the arena is warm.
-fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
+/// Run one batch's forward pass and return a logits row per job, sending
+/// nothing. The compute/send split is what makes panic recovery safe: a
+/// panic can only happen in here, *before* any response exists, so
+/// re-enqueueing the jobs can never duplicate an answer. The pass runs
+/// through the servable's bound plan in this thread's arena
+/// (`ServableModel::infer_into`) — no tensor marshalling, and zero heap
+/// allocations inside the pass once the arena is warm.
+fn compute_rows(model: &ServableModel, jobs: &[ServeRequest]) -> Result<Vec<Vec<f32>>> {
     let m = jobs.len();
     let pix = model.sample_elems();
     let mut xb = Vec::with_capacity(m * pix);
-    for j in &jobs {
+    for j in jobs {
         if j.x.len() != pix {
             bail!(
                 "request {}/{} carries {} elements, model wants {pix}",
@@ -93,8 +158,14 @@ fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
     }
     let mut data = Vec::with_capacity(m * model.num_classes());
     let classes = model.infer_into(&xb, m, &mut data)?;
-    for (ji, j) in jobs.into_iter().enumerate() {
-        let row = data[ji * classes..(ji + 1) * classes].to_vec();
+    Ok((0..m).map(|ji| data[ji * classes..(ji + 1) * classes].to_vec()).collect())
+}
+
+/// Answer every rider of a computed batch. Infallible by construction —
+/// runs only after `compute_rows` succeeded.
+fn send_rows(jobs: Vec<ServeRequest>, rows: Vec<Vec<f32>>) {
+    let m = jobs.len();
+    for (j, row) in jobs.into_iter().zip(rows) {
         let argmax = row
             .iter()
             .enumerate()
@@ -104,6 +175,7 @@ fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
         let resp = ServeResponse {
             client: j.client,
             index: j.index,
+            status: ServeStatus::Ok,
             argmax,
             logits: row,
             latency: j.enqueued.elapsed(),
@@ -111,7 +183,20 @@ fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
         };
         let _ = j.reply.send(resp); // requester may have given up; not fatal
     }
-    Ok(())
+}
+
+/// Answer a request that never rode a batch (timeout / shed).
+fn resolve_empty(j: ServeRequest, status: ServeStatus) {
+    let resp = ServeResponse {
+        client: j.client,
+        index: j.index,
+        status,
+        argmax: 0,
+        logits: Vec::new(),
+        latency: j.enqueued.elapsed(),
+        batch_size: 0,
+    };
+    let _ = j.reply.send(resp);
 }
 
 /// Drive `total` requests through a freshly spun-up pool from `clients`
@@ -119,7 +204,8 @@ fn process_batch(model: &ServableModel, jobs: Vec<ServeRequest>) -> Result<()> {
 /// previous one answered — offered load matches capacity, the standard
 /// serving-bench discipline). Returns the run's stats plus every response,
 /// so callers can verify payloads; responses arrive in client-completion
-/// order, keyed by `(client, index)`.
+/// order, keyed by `(client, index)`. Exactly one response per request:
+/// `Ok`, `TimedOut`, or `Shed`.
 pub fn run_closed_loop(
     model: &ServableModel,
     cfg: &PoolConfig,
@@ -135,6 +221,8 @@ pub fn run_closed_loop(
     // idle on the batch queue until shutdown.
     let workers = cfg.workers.max(1).min(total);
     let policy = cfg.policy;
+    let request_timeout = cfg.request_timeout;
+    let admission = cfg.admission;
     let pix = model.sample_elems();
     // Each worker gets its share of the cores for intra-op GEMM fan-out
     // (the shard trainer's budget rule). A saturated pool (workers ≥
@@ -146,8 +234,14 @@ pub fn run_closed_loop(
     let (req_tx, req_rx) = sync_channel::<ServeRequest>(policy.max_batch * QUEUE_BATCHES);
     let (batch_tx, batch_rx) = channel::<Vec<ServeRequest>>();
     let batch_rx = Mutex::new(batch_rx);
+    // Panicked batches land here for their one retry. A plain shared deque
+    // (not another sender on `batch_tx`): workers holding a sender clone
+    // would keep the batch channel alive and break the disconnect-based
+    // structural shutdown.
+    let retry: Mutex<VecDeque<BatchJob>> = Mutex::new(VecDeque::new());
     let batch_log: Mutex<Vec<usize>> = Mutex::new(Vec::new());
     let failure: Mutex<Option<String>> = Mutex::new(None);
+    let worker_panics = AtomicUsize::new(0);
 
     let mut responses: Vec<ServeResponse> = Vec::with_capacity(total);
     let t0 = Instant::now();
@@ -164,9 +258,12 @@ pub fn run_closed_loop(
 
         // Workers: share the batch receiver behind a mutex (the lock is
         // held across the blocking recv, which only serializes *waiting* —
-        // exactly one worker can pop the next batch either way).
+        // exactly one worker can pop the next batch either way). Retried
+        // batches take priority over fresh ones, and the batcher-gone
+        // shutdown path re-checks the retry queue so a batch whose panic
+        // raced the disconnect is never orphaned.
         //
-        // On a process_batch error the worker records the first failure and
+        // On a compute error the worker records the first failure and
         // keeps *draining* batches without executing them: dropping a job
         // drops its reply sender, which unblocks its client with an error,
         // which stops that client from sending more — the structural
@@ -176,24 +273,75 @@ pub fn run_closed_loop(
         // clients would hang.
         for _ in 0..workers {
             let batch_rx = &batch_rx;
+            let retry = &retry;
             let batch_log = &batch_log;
             let failure = &failure;
+            let worker_panics = &worker_panics;
             s.spawn(move || {
                 crate::tensor::gemm::set_thread_parallelism_cap(gemm_cap);
                 loop {
-                    let got = batch_rx.lock().unwrap().recv();
-                    let jobs = match got {
-                        Ok(jobs) => jobs,
-                        Err(_) => break, // batcher gone: shutdown
+                    let job = match lock(retry).pop_front() {
+                        Some(job) => job,
+                        None => match lock(&batch_rx).recv() {
+                            Ok(jobs) => BatchJob { jobs, retried: false },
+                            // Batcher gone: drain a retry that raced the
+                            // disconnect, else shut down.
+                            Err(_) => match lock(retry).pop_front() {
+                                Some(job) => job,
+                                None => break,
+                            },
+                        },
                     };
-                    if failure.lock().unwrap().is_some() {
+                    if lock(failure).is_some() {
                         continue; // failed pool: drain and drop to unblock clients
                     }
-                    batch_log.lock().unwrap().push(jobs.len());
-                    if let Err(e) = process_batch(model, jobs) {
-                        let mut slot = failure.lock().unwrap();
-                        if slot.is_none() {
-                            *slot = Some(format!("{e:#}"));
+                    let BatchJob { jobs, retried } = job;
+                    // Deadline check at dispatch: expired riders get a
+                    // TimedOut answer instead of the forward pass.
+                    let (live, expired): (Vec<_>, Vec<_>) = match request_timeout {
+                        Some(t) => jobs.into_iter().partition(|j| j.enqueued.elapsed() < t),
+                        None => (jobs, Vec::new()),
+                    };
+                    for j in expired {
+                        resolve_empty(j, ServeStatus::TimedOut);
+                    }
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let outcome = catch_unwind(AssertUnwindSafe(|| {
+                        faults::fire(faults::SERVE_BATCH, 0);
+                        compute_rows(model, &live)
+                    }));
+                    match outcome {
+                        Ok(Ok(rows)) => {
+                            lock(batch_log).push(live.len());
+                            send_rows(live, rows);
+                        }
+                        Ok(Err(e)) => {
+                            let mut slot = lock(failure);
+                            if slot.is_none() {
+                                *slot = Some(format!("{e:#}"));
+                            }
+                        }
+                        Err(payload) => {
+                            worker_panics.fetch_add(1, Ordering::Relaxed);
+                            let msg = faults::panic_message(payload);
+                            if retried {
+                                // Second panic of the same batch: the input
+                                // is poison, not bad luck. Fail the pool.
+                                let mut slot = lock(failure);
+                                if slot.is_none() {
+                                    *slot =
+                                        Some(format!("batch panicked twice: {msg}"));
+                                }
+                            } else {
+                                log::warn!(
+                                    "serve worker panicked ({msg}); re-enqueueing \
+                                     {}-request batch once",
+                                    live.len()
+                                );
+                                lock(retry).push_back(BatchJob { jobs: live, retried: true });
+                            }
                         }
                     }
                 }
@@ -216,8 +364,29 @@ pub fn run_closed_loop(
                         enqueued: Instant::now(),
                         reply: rtx,
                     };
-                    if tx.send(req).is_err() {
-                        break; // pool tore down under us
+                    match admission {
+                        Admission::Block => {
+                            if tx.send(req).is_err() {
+                                break; // pool tore down under us
+                            }
+                        }
+                        Admission::Shed { retry_after } => match tx.try_send(req) {
+                            Ok(()) => {}
+                            Err(TrySendError::Full(req)) => {
+                                // Queue full: answer locally, skip the wait.
+                                done.push(ServeResponse {
+                                    client: c,
+                                    index: i,
+                                    status: ServeStatus::Shed { retry_after },
+                                    argmax: 0,
+                                    logits: Vec::new(),
+                                    latency: req.enqueued.elapsed(),
+                                    batch_size: 0,
+                                });
+                                continue;
+                            }
+                            Err(TrySendError::Disconnected(_)) => break,
+                        },
                     }
                     match rrx.recv() {
                         Ok(resp) => done.push(resp),
@@ -229,24 +398,51 @@ pub fn run_closed_loop(
         }
         drop(req_tx); // clients hold the only senders now
         for h in handles {
-            responses.extend(h.join().expect("serve client thread panicked"));
+            // A panicking client is a harness bug, but it must surface as
+            // a pool failure, not tear down the caller mid-scope.
+            match h.join() {
+                Ok(rs) => responses.extend(rs),
+                Err(payload) => {
+                    let mut slot = lock(&failure);
+                    if slot.is_none() {
+                        *slot = Some(format!(
+                            "serve client thread panicked: {}",
+                            faults::panic_message(payload)
+                        ));
+                    }
+                }
+            }
         }
     });
     let wall = t0.elapsed();
 
-    if let Some(msg) = failure.into_inner().unwrap() {
+    if let Some(msg) = failure.into_inner().unwrap_or_else(|e| e.into_inner()) {
         bail!("serve worker failed: {msg}");
     }
     if responses.len() != total {
         bail!("closed loop completed {}/{} requests", responses.len(), total);
     }
-    let latencies = responses.iter().map(|r| r.latency).collect();
+    let timed_out = responses.iter().filter(|r| r.status == ServeStatus::TimedOut).count();
+    let shed = responses
+        .iter()
+        .filter(|r| matches!(r.status, ServeStatus::Shed { .. }))
+        .count();
+    // Latency percentiles digest served requests only; timeout/shed volumes
+    // are reported as their own counters.
+    let latencies = responses
+        .iter()
+        .filter(|r| r.status == ServeStatus::Ok)
+        .map(|r| r.latency)
+        .collect();
     let stats = ServeStats::new(
         total,
         latencies,
-        batch_log.into_inner().unwrap(),
+        batch_log.into_inner().unwrap_or_else(|e| e.into_inner()),
         wall,
         model.weight_bits(),
+        worker_panics.load(Ordering::Relaxed),
+        timed_out,
+        shed,
     );
     Ok((stats, responses))
 }
@@ -287,7 +483,7 @@ pub fn sweep(
     let mut cells = Vec::with_capacity(batches.len() * workers.len());
     for &w in workers {
         for &b in batches {
-            let cfg = PoolConfig { workers: w, policy: BatchPolicy::new(b, max_wait) };
+            let cfg = PoolConfig::new(w, BatchPolicy::new(b, max_wait));
             let clients = (2 * b.max(1)).min(requests.max(1));
             let (stats, _) = run_closed_loop(model, &cfg, requests, clients, seed)?;
             cells.push(SweepCell { max_batch: b.max(1), workers: w, summary: stats.summary() });

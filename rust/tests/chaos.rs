@@ -1,0 +1,483 @@
+//! Chaos suite (DESIGN.md §12): seeded fault schedules against training,
+//! checkpointing, and serving, asserting the recovery invariants —
+//!
+//! * a training run killed in any phase resumes from its last snapshot to a
+//!   **bit-identical** trajectory (history, scheme, accuracies);
+//! * snapshotting itself is a pure observer (on vs off: same bits);
+//! * a checkpoint torn at *any* length or flipped in *any* bit fails loudly
+//!   on load, and generation retention falls back over corruption;
+//! * the serving pool answers every request exactly once under injected
+//!   worker panics, converts expired requests into timeout responses, and
+//!   sheds load with retry-after instead of blocking — and never hangs.
+//!
+//! Every training/serving section runs under a `faults::inject` guard
+//! (empty schedule = pure counting), which serializes chaos tests through
+//! the process-global plane — concurrent tests must not perturb each
+//! other's occurrence counters. Each guarded section also runs under a
+//! [`with_deadline`] watchdog so a recovery bug surfaces as a failed test,
+//! not a hung CI job.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use bsq::coordinator::{run_bsq, BsqConfig, BsqOutcome, History, SnapshotCfg};
+use bsq::faults::{self, Schedule};
+use bsq::model::checkpoint::{self, GenStore};
+use bsq::model::ModelState;
+use bsq::runtime::Engine;
+use bsq::serve::{
+    self, run_closed_loop, Admission, BatchPolicy, PoolConfig, ServableModel, ServeStatus,
+};
+use bsq::tensor::Tensor;
+use bsq::util::{Json, Pcg32};
+
+fn scratch(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("bsq_chaos_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Run `f` on a watchdog thread: a hang past `secs` fails the test instead
+/// of stalling the harness; a panic inside `f` is re-raised with its
+/// original message.
+fn with_deadline<T: Send + 'static>(
+    secs: u64,
+    what: &str,
+    f: impl FnOnce() -> T + Send + 'static,
+) -> T {
+    let (tx, rx) = mpsc::channel();
+    let h = std::thread::Builder::new()
+        .name(format!("chaos-{what}"))
+        .spawn(move || {
+            let _ = tx.send(f());
+        })
+        .unwrap();
+    match rx.recv_timeout(Duration::from_secs(secs)) {
+        Ok(v) => {
+            let _ = h.join();
+            v
+        }
+        Err(mpsc::RecvTimeoutError::Disconnected) => match h.join() {
+            Err(p) => std::panic::resume_unwind(p),
+            Ok(()) => panic!("{what}: worker exited without a result"),
+        },
+        Err(mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{what} exceeded its {secs}s hang deadline")
+        }
+    }
+}
+
+// -- training: kill → resume bit-identity -------------------------------------
+
+/// Tiny but phase-complete pipeline: tinynet batch 16, train 48 → exactly
+/// 3 steps/epoch, so shard worker 0's occurrence counter maps to the global
+/// train-step index: pretrain steps 0–5, bsq 6–11, finetune 12–14.
+fn tiny_cfg() -> BsqConfig {
+    let mut cfg = BsqConfig::for_model("tinynet");
+    cfg.pretrain_epochs = 2;
+    cfg.bsq_epochs = 2;
+    cfg.finetune_epochs = 1;
+    cfg.requant_interval = 1;
+    cfg.train_size = 48;
+    cfg.test_size = 32;
+    cfg.eval_batches = 2;
+    cfg.alpha_ref_steps = 0.0;
+    cfg.cache_pretrained = false; // the on-disk pretrain cache would couple trials
+    cfg
+}
+
+fn run_tiny(cfg: &BsqConfig) -> anyhow::Result<BsqOutcome> {
+    let cfg = cfg.clone();
+    with_deadline(300, "run_bsq", move || run_bsq(&Engine::native().with_shards(2), &cfg))
+}
+
+/// The bitwise fingerprint of a training trajectory (everything except the
+/// wall-clock `seconds` field).
+fn traj(h: &History) -> Vec<(String, usize, u32, u32, u32, u32, u32, Option<u32>, u64, u64)> {
+    h.records
+        .iter()
+        .map(|r| {
+            (
+                r.phase.clone(),
+                r.epoch,
+                r.lr.to_bits(),
+                r.loss.to_bits(),
+                r.ce.to_bits(),
+                r.acc.to_bits(),
+                r.bgl.to_bits(),
+                r.eval_acc.map(f32::to_bits),
+                r.bits_per_param.to_bits(),
+                r.compression.to_bits(),
+            )
+        })
+        .collect()
+}
+
+fn assert_same_outcome(a: &BsqOutcome, b: &BsqOutcome, label: &str) {
+    assert_eq!(traj(&a.history), traj(&b.history), "{label}: trajectory diverged");
+    assert_eq!(a.scheme, b.scheme, "{label}: scheme diverged");
+    assert_eq!(
+        a.acc_before_ft.to_bits(),
+        b.acc_before_ft.to_bits(),
+        "{label}: acc_before_ft diverged"
+    );
+    assert_eq!(
+        a.acc_after_ft.to_bits(),
+        b.acc_after_ft.to_bits(),
+        "{label}: acc_after_ft diverged"
+    );
+    assert_eq!(
+        a.bits_per_param.to_bits(),
+        b.bits_per_param.to_bits(),
+        "{label}: bits_per_param diverged"
+    );
+    assert_eq!(a.compression.to_bits(), b.compression.to_bits(), "{label}: compression diverged");
+}
+
+/// The uninterrupted reference run, computed once per process.
+fn baseline() -> &'static BsqOutcome {
+    static BASELINE: OnceLock<BsqOutcome> = OnceLock::new();
+    BASELINE.get_or_init(|| {
+        let _g = faults::inject(Schedule::default());
+        run_tiny(&tiny_cfg()).expect("uninterrupted baseline run")
+    })
+}
+
+#[test]
+fn snapshotting_is_a_pure_observer() {
+    let dir = scratch("observer");
+    let mut cfg = tiny_cfg();
+    cfg.snapshot = Some(SnapshotCfg::new(&dir));
+    let out = {
+        let _g = faults::inject(Schedule::default());
+        run_tiny(&cfg).unwrap()
+    };
+    assert_same_outcome(baseline(), &out, "snapshot on vs off");
+    // every epoch snapshotted, pruned to the newest `keep`
+    let store = GenStore::new(&dir, 3);
+    assert_eq!(store.generations(), vec![2, 3, 4]);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn killed_training_resumes_bit_identically_from_any_phase() {
+    // Worker 0's occurrence = global train-step index (3 steps/epoch):
+    // 4 → pretrain epoch 1, 7 → bsq epoch 0, 10 → bsq epoch 1,
+    // 13 → finetune epoch 0. One kill per phase boundary class.
+    for (occ, label) in
+        [(4u64, "pretrain e1"), (7, "bsq e0"), (10, "bsq e1"), (13, "finetune e0")]
+    {
+        let dir = scratch(&format!("kill{occ}"));
+        let mut cfg = tiny_cfg();
+        cfg.snapshot = Some(SnapshotCfg::new(&dir));
+
+        {
+            let g = faults::inject(
+                Schedule::parse(&format!("shard.worker#0@{occ}:panic")).unwrap(),
+            );
+            let err = run_tiny(&cfg).expect_err(label);
+            assert!(
+                format!("{err:#}").contains("injected fault"),
+                "{label}: wrong failure: {err:#}"
+            );
+            assert_eq!(g.fired().len(), 1, "{label}: fault did not fire");
+        }
+
+        let resumed = {
+            let _g = faults::inject(Schedule::default());
+            let mut rcfg = cfg.clone();
+            rcfg.resume = true;
+            run_tiny(&rcfg).unwrap_or_else(|e| panic!("{label}: resume failed: {e:#}"))
+        };
+        assert_same_outcome(baseline(), &resumed, label);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+#[test]
+fn barrier_panic_poisons_nothing_fatal_and_resumes_bit_identically() {
+    // shard.barrier is timing-dependent (occurrences per step depend on the
+    // graph's exchange count), so calibrate `@nth` from a pure-counting
+    // probe run instead of hardcoding it.
+    let total = {
+        let g = faults::inject(Schedule::default());
+        run_tiny(&tiny_cfg()).unwrap();
+        let t = faults::occurrences(faults::SHARD_BARRIER, 0);
+        drop(g);
+        t
+    };
+    assert!(total > 0, "tinynet training must cross lockstep barriers");
+    let mid = total / 2; // lands mid-bsq: past the first snapshot, before the end
+
+    let dir = scratch("barrier");
+    let mut cfg = tiny_cfg();
+    cfg.snapshot = Some(SnapshotCfg::new(&dir));
+    {
+        let _g =
+            faults::inject(Schedule::parse(&format!("shard.barrier@{mid}:panic")).unwrap());
+        let err = run_tiny(&cfg).expect_err("barrier kill");
+        // The panic fires while the barrier mutex is held — the run must
+        // report the injected root cause, not a PoisonError cascade.
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+    }
+    let resumed = {
+        let _g = faults::inject(Schedule::default());
+        let mut rcfg = cfg.clone();
+        rcfg.resume = true;
+        run_tiny(&rcfg).unwrap()
+    };
+    assert_same_outcome(baseline(), &resumed, "barrier kill");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn resume_falls_back_over_corrupt_generations_bit_identically() {
+    let dir = scratch("fallback");
+    let mut cfg = tiny_cfg();
+    cfg.snapshot = Some(SnapshotCfg::new(&dir));
+    {
+        let _g = faults::inject(Schedule::parse("shard.worker#0@13:panic").unwrap());
+        run_tiny(&cfg).expect_err("finetune kill");
+    }
+    // On disk (keep 3): gen 1 (pretrain e1), gen 2 (bsq e0), gen 3 (bsq e1).
+    // Tear the newest binary and the next one's meta sidecar: resume must
+    // fall back two generations and still match the baseline bits.
+    let g3 = dir.join("gen-000003.ckpt");
+    let mut bytes = std::fs::read(&g3).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 1;
+    std::fs::write(&g3, &bytes).unwrap();
+    std::fs::write(dir.join("gen-000002.meta.json"), b"{ torn").unwrap();
+    let (gen, _, _) = GenStore::new(&dir, 3).latest_good().unwrap();
+    assert_eq!(gen, 1, "fallback must land on the pretrain-e1 generation");
+
+    let resumed = {
+        let _g = faults::inject(Schedule::default());
+        let mut rcfg = cfg.clone();
+        rcfg.resume = true;
+        run_tiny(&rcfg).unwrap()
+    };
+    assert_same_outcome(baseline(), &resumed, "corrupt-generation fallback");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// -- checkpoint torn-write properties -----------------------------------------
+
+fn tiny_ckpt_state(seed: u64) -> ModelState {
+    let mut rng = Pcg32::seeded(seed);
+    let mut s = ModelState::new();
+    s.insert("w:a".into(), Tensor::randn(&[2, 3], 0.5, &mut rng));
+    s.insert("b".into(), Tensor::scalar(1.5));
+    s.insert("mask".into(), Tensor::full(&[4], 1.0));
+    s
+}
+
+#[test]
+fn every_truncation_of_a_checkpoint_fails_loudly() {
+    let dir = scratch("trunc");
+    let path = dir.join("t.ckpt");
+    checkpoint::save(&tiny_ckpt_state(3), &path, &Json::obj(vec![])).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(checkpoint::load(&path).is_ok());
+
+    let torn = dir.join("torn.ckpt");
+    for len in 0..bytes.len() {
+        std::fs::write(&torn, &bytes[..len]).unwrap();
+        assert!(
+            checkpoint::load(&torn).is_err(),
+            "a checkpoint truncated to {len}/{} bytes loaded silently",
+            bytes.len()
+        );
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn every_single_bit_flip_in_a_checkpoint_fails_loudly() {
+    let dir = scratch("flip");
+    let path = dir.join("t.ckpt");
+    checkpoint::save(&tiny_ckpt_state(4), &path, &Json::obj(vec![])).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    let flipped = dir.join("flipped.ckpt");
+    for i in 0..bytes.len() {
+        for bit in 0..8 {
+            let mut b = bytes.clone();
+            b[i] ^= 1 << bit;
+            std::fs::write(&flipped, &b).unwrap();
+            assert!(
+                checkpoint::load(&flipped).is_err(),
+                "flipping byte {i} bit {bit} loaded silently"
+            );
+        }
+    }
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn injected_save_faults_never_corrupt_the_committed_file_silently() {
+    let dir = scratch("savefault");
+    let path = dir.join("t.ckpt");
+    let meta = Json::obj(vec![("k", Json::str("v"))]);
+    let first = tiny_ckpt_state(5);
+    checkpoint::save(&first, &path, &meta).unwrap();
+
+    // ckpt.write ioerr: the save fails before any byte lands; the previous
+    // checkpoint (and its meta) stay fully readable.
+    {
+        let _g = faults::inject(Schedule::parse("ckpt.write@0:ioerr").unwrap());
+        let err = checkpoint::save(&tiny_ckpt_state(6), &path, &meta).unwrap_err();
+        assert!(format!("{err:#}").contains("injected"), "{err:#}");
+    }
+    let loaded = checkpoint::load(&path).unwrap();
+    assert_eq!(loaded.get("w:a").unwrap(), first.get("w:a").unwrap());
+    assert!(checkpoint::load_meta(&path).is_ok());
+
+    // ckpt.commit truncate: the torn write lands past the rename discipline
+    // — the CRCs must catch it on load.
+    {
+        let _g = faults::inject(Schedule::parse("ckpt.commit@0:truncate=7").unwrap());
+        checkpoint::save(&tiny_ckpt_state(6), &path, &meta).unwrap();
+    }
+    assert!(checkpoint::load(&path).is_err(), "a truncated commit loaded silently");
+
+    // ckpt.commit bitflip: same story for bit-rot.
+    {
+        let _g = faults::inject(Schedule::parse("ckpt.commit@0:bitflip=33").unwrap());
+        checkpoint::save(&tiny_ckpt_state(7), &path, &meta).unwrap();
+    }
+    assert!(checkpoint::load(&path).is_err(), "a bit-flipped commit loaded silently");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+// -- serving: supervision, timeouts, shedding ---------------------------------
+
+fn tiny_servable(engine: &Engine, dir: &std::path::Path, seed: u64) -> ServableModel {
+    let ckpt = dir.join(format!("sv_{seed}.ckpt"));
+    serve::synthesize_quantized_checkpoint(engine, "tinynet", 6, seed, &ckpt).unwrap();
+    ServableModel::load(engine, "tinynet", &ckpt, 4, 8).unwrap()
+}
+
+#[test]
+fn serve_panic_recovery_answers_every_request_exactly_once() {
+    let _g = faults::inject(Schedule::parse("serve.batch@2:panic").unwrap());
+    let worker_panics = with_deadline(180, "serve exactly-once", move || {
+        let engine = Engine::native();
+        let dir = scratch("serve_once");
+        let sv = tiny_servable(&engine, &dir, 11);
+        let (seed, total) = (5u64, 48usize);
+        let cfg = PoolConfig::new(2, BatchPolicy::new(8, Duration::from_millis(100)));
+        let (stats, responses) = run_closed_loop(&sv, &cfg, total, 16, seed).unwrap();
+
+        assert_eq!(responses.len(), total);
+        let mut keys: Vec<_> = responses.iter().map(|r| (r.client, r.index)).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        assert_eq!(keys.len(), total, "a response was dropped or duplicated");
+        assert!(responses.iter().all(|r| r.status == ServeStatus::Ok));
+
+        // Every answer — including the re-enqueued batch's — equals a
+        // direct single-sample inference, bit for bit.
+        let (h, w) = sv.input_hw();
+        let c = sv.in_ch();
+        for r in &responses {
+            let x = serve::synthetic_input(seed, r.client, r.index, sv.sample_elems());
+            let direct = sv.infer(Tensor::new(vec![1, h, w, c], x).unwrap()).unwrap();
+            for (a, b) in r.logits.iter().zip(direct.data()) {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "request {}/{} served different logits after the panic retry",
+                    r.client,
+                    r.index
+                );
+            }
+        }
+        std::fs::remove_dir_all(dir).ok();
+        stats.worker_panics
+    });
+    assert_eq!(worker_panics, 1, "the injected panic must be caught and counted");
+}
+
+#[test]
+fn serve_double_panic_fails_fast_instead_of_hanging() {
+    // Workers = 1 makes the retry deterministic: the re-enqueued batch is
+    // the next serve.batch occurrence, so @2 and @3 hit the same batch.
+    let _g = faults::inject(Schedule::parse("serve.batch@2:panic; serve.batch@3:panic").unwrap());
+    let err = with_deadline(180, "serve double panic", move || {
+        let engine = Engine::native();
+        let dir = scratch("serve_twice");
+        let sv = tiny_servable(&engine, &dir, 12);
+        let cfg = PoolConfig::new(1, BatchPolicy::new(8, Duration::from_millis(50)));
+        let out = run_closed_loop(&sv, &cfg, 24, 8, 5).map(|_| ());
+        std::fs::remove_dir_all(dir).ok();
+        out.unwrap_err()
+    });
+    assert!(format!("{err:#}").contains("panicked twice"), "{err:#}");
+}
+
+#[test]
+fn serve_deadline_produces_timeout_responses_not_hangs() {
+    let _g = faults::inject(Schedule::default());
+    let (timed_out, completed, n) = with_deadline(180, "serve timeouts", move || {
+        let engine = Engine::native();
+        let dir = scratch("serve_timeout");
+        let sv = tiny_servable(&engine, &dir, 13);
+        // A zero deadline expires every request at dispatch: the run must
+        // still answer each one (TimedOut) and terminate cleanly.
+        let cfg = PoolConfig {
+            request_timeout: Some(Duration::ZERO),
+            ..PoolConfig::new(1, BatchPolicy::new(4, Duration::from_millis(10)))
+        };
+        let (stats, responses) = run_closed_loop(&sv, &cfg, 16, 4, 3).unwrap();
+        assert!(responses.iter().all(|r| r.status == ServeStatus::TimedOut));
+        assert!(responses.iter().all(|r| r.logits.is_empty() && r.batch_size == 0));
+        assert!(stats.batch_sizes.is_empty(), "no batch should have executed");
+        std::fs::remove_dir_all(dir).ok();
+        (stats.timed_out, stats.completed, responses.len())
+    });
+    assert_eq!((timed_out, completed, n), (16, 0, 16));
+}
+
+#[test]
+fn serve_load_shedding_answers_with_retry_after() {
+    // max_batch 1 bounds the request queue at 4; stalling the batcher for
+    // two rounds guarantees the 16 concurrent clients overflow it.
+    let _g = faults::inject(
+        Schedule::parse("serve.batcher@0:delay=150; serve.batcher@1:delay=150").unwrap(),
+    );
+    let (ok, shed, total) = with_deadline(180, "serve shedding", move || {
+        let engine = Engine::native();
+        let dir = scratch("serve_shed");
+        let sv = tiny_servable(&engine, &dir, 14);
+        let retry_after = Duration::from_millis(5);
+        let cfg = PoolConfig {
+            admission: Admission::Shed { retry_after },
+            ..PoolConfig::new(1, BatchPolicy::new(1, Duration::ZERO))
+        };
+        let total = 32usize;
+        let (stats, responses) = run_closed_loop(&sv, &cfg, total, 16, 9).unwrap();
+        assert_eq!(responses.len(), total);
+        let mut ok = 0usize;
+        let mut shed = 0usize;
+        for r in &responses {
+            match r.status {
+                ServeStatus::Ok => ok += 1,
+                ServeStatus::Shed { retry_after: ra } => {
+                    shed += 1;
+                    assert_eq!(ra, retry_after);
+                    assert!(r.logits.is_empty() && r.batch_size == 0);
+                }
+                ServeStatus::TimedOut => panic!("no deadline configured"),
+            }
+        }
+        assert_eq!(stats.shed, shed);
+        assert_eq!(stats.completed, ok);
+        std::fs::remove_dir_all(dir).ok();
+        (ok, shed, total)
+    });
+    assert!(shed > 0, "a saturated queue must shed");
+    assert_eq!(ok + shed, total, "every request answered exactly once");
+}

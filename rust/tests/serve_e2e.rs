@@ -175,10 +175,7 @@ fn closed_loop_serving_answers_every_request_exactly() {
     let sv = tiny_servable(&engine, &dir, 9);
     let seed = 13u64;
     let total = 48;
-    let cfg = PoolConfig {
-        workers: 4,
-        policy: BatchPolicy::new(8, Duration::from_millis(200)),
-    };
+    let cfg = PoolConfig::new(4, BatchPolicy::new(8, Duration::from_millis(200)));
     let (stats, responses) = run_closed_loop(&sv, &cfg, total, 16, seed).unwrap();
 
     assert_eq!(stats.completed, total);
