@@ -1,12 +1,23 @@
-//! Dense vs bit-plane GEMM: the sparsity-vs-speedup sweep behind the BSQ
-//! compute story.
+//! Dense vs bit-plane GEMM: per-kernel backend columns plus the
+//! sparsity-vs-speedup sweep behind the BSQ compute story.
 //!
-//! For each workload shape, a base 8-bit weight matrix is trimmed 0–8 LSB
-//! planes (the §3.3 adjustment image: magnitudes shift right, δ doubles)
-//! and the bit-plane kernel is timed against the blocked dense f32 kernel
-//! on the *same* represented weights. Bit-plane work is proportional to
-//! set weight bits, so throughput must rise monotonically with the trim
-//! count; the dense path costs the same at every precision.
+//! Two comparisons live in one record:
+//!
+//! * **Backend columns** — every workload is timed twice at GEMM
+//!   parallelism cap 1 (kernel time, not threading): once pinned to the
+//!   scalar backend and once on AVX2/FMA when the host has it
+//!   (`with_backend`). The scalar/simd mean ratio lands in a `speedups`
+//!   object, and a matching `speedup_floors` object (≥4× dense, ≥2×
+//!   bit-plane at 0 trims, DESIGN.md §13) ships in the record so seeding
+//!   it as a `ci/baselines/` baseline arms the bench-diff gate's absolute
+//!   floor check automatically.
+//! * **Trim sweep** — for each shape, a base 8-bit weight matrix is
+//!   trimmed 0–8 LSB planes (the §3.3 adjustment image: magnitudes shift
+//!   right, δ doubles) and the bit-plane kernel is timed against the dense
+//!   f32 kernel on the *same* represented weights. Bit-plane work is
+//!   proportional to set weight bits, so throughput must rise
+//!   monotonically with the trim count; the dense path costs the same at
+//!   every precision.
 //!
 //! Two weight corpora are swept:
 //! * `bsq` — plane occupancy ≈ 12% per plane, the bit-level sparsity
@@ -17,16 +28,23 @@
 //!   adversarial worst case: even here the trim skip keeps the curve
 //!   monotone.
 //!
-//! Emits `BENCH_gemm.json` (per-run stats + a `sweeps` summary with
-//! speedups and set-bit counts) — the record EXPERIMENTS.md §Perf tracks.
+//! Emits `BENCH_gemm.json` (per-run stats + `sweeps`/`speedups`/
+//! `speedup_floors`) — the record EXPERIMENTS.md §Perf tracks.
 
-use bsq::tensor::gemm::{matmul, transpose, BitPlaneMatrix};
-use bsq::util::bench::{black_box, Bench, JsonReport};
+use bsq::tensor::gemm::{
+    matmul, set_thread_parallelism_cap, simd_available, transpose, with_backend, Backend,
+    BitPlaneMatrix,
+};
+use bsq::util::bench::{black_box, Bench, JsonReport, Stats};
 use bsq::util::json::Json;
 use bsq::util::Pcg32;
 
 /// Per-plane occupancy of the BSQ-sparse corpus (see module docs).
 const BSQ_PLANE_DENSITY: f32 = 0.12;
+
+/// The acceptance floors the SIMD rewrite must hold (DESIGN.md §13).
+const DENSE_FLOOR: f64 = 4.0;
+const BITPLANE_FLOOR: f64 = 2.0;
 
 struct Shape {
     label: &'static str,
@@ -82,33 +100,79 @@ fn shr_mag(c: i16, t: usize) -> i16 {
     }
 }
 
+/// Time `f` once per backend: always scalar, plus AVX2/FMA when present.
+/// Returns `(scalar, simd)`; pushes both into the report under
+/// `{name}/scalar` and `{name}/simd`.
+fn per_backend(
+    bench: &Bench,
+    report: &mut JsonReport,
+    name: &str,
+    macs: u64,
+    mut f: impl FnMut(),
+) -> (Stats, Option<Stats>) {
+    let scalar =
+        with_backend(Backend::Scalar, || bench.run_elems(&format!("{name}/scalar"), macs, &mut f));
+    println!("{}", scalar.report());
+    report.push(&scalar);
+    let simd = simd_available().then(|| {
+        let s = with_backend(Backend::Avx2Fma, || {
+            bench.run_elems(&format!("{name}/simd"), macs, &mut f)
+        });
+        println!("{}", s.report());
+        report.push(&s);
+        s
+    });
+    (scalar, simd)
+}
+
+fn kernel_speedup(scalar: &Stats, simd: &Option<Stats>) -> Option<f64> {
+    simd.as_ref().map(|s| scalar.mean.as_secs_f64() / s.mean.as_secs_f64().max(1e-12))
+}
+
 fn main() {
     let bench = Bench::from_env();
     let mut rng = Pcg32::seeded(0);
     let mut report = JsonReport::new("gemm");
     let mut sweeps: Vec<(String, Json)> = Vec::new();
+    let mut speedups: Vec<(String, Json)> = Vec::new();
+    let mut floors: Vec<(String, Json)> = Vec::new();
 
-    println!("== gemm: dense f32 vs bit-plane ==");
+    // Kernel time, not threading: both backends run single-threaded so the
+    // columns compare instruction streams, not fan-out.
+    set_thread_parallelism_cap(1);
+
+    println!(
+        "== gemm: dense f32 vs bit-plane (simd {}) ==",
+        if simd_available() { "on" } else { "off" }
+    );
     for shape in &SHAPES {
         let (m, k, n) = (shape.m, shape.k, shape.n);
         let macs = (m * k * n) as u64;
         let x: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
         let xt = transpose(&x, m, k);
 
+        // Dense baseline: cost is precision- and corpus-independent;
+        // measure once per shape, per backend.
+        let wdense: Vec<f32> =
+            uniform_codes(&mut rng, k * n).iter().map(|&c| c as f32 * 0.01).collect();
+        let (dense_scalar, dense_simd) =
+            per_backend(&bench, &mut report, &format!("dense/{}", shape.label), macs, || {
+                black_box(matmul(&x, &wdense, m, k, n));
+            });
+        if let Some(sp) = kernel_speedup(&dense_scalar, &dense_simd) {
+            println!("    -> dense/{}: {sp:.2}x simd over scalar", shape.label);
+            speedups.push((format!("dense_{}", shape.label), Json::num(sp)));
+            floors.push((format!("dense_{}", shape.label), Json::num(DENSE_FLOOR)));
+        }
+        // The dense mean the sweep's speedup-vs-dense column is against:
+        // the backend dispatch would actually pick (simd when present).
+        let dense_active = dense_simd.as_ref().unwrap_or(&dense_scalar);
+
         for corpus in ["bsq", "dense8"] {
             let base = match corpus {
                 "bsq" => sparse_codes(&mut rng, k * n, BSQ_PLANE_DENSITY),
                 _ => uniform_codes(&mut rng, k * n),
             };
-            // dense baseline: cost is precision-independent; measure once
-            let wdense: Vec<f32> = base.iter().map(|&c| c as f32 * 0.01).collect();
-            let dense_stats =
-                bench.run_elems(&format!("dense/{}/{corpus}", shape.label), macs, || {
-                    black_box(matmul(&x, &wdense, m, k, n));
-                });
-            println!("{}", dense_stats.report());
-            report.push(&dense_stats);
-
             let mut rows = Vec::new();
             let mut last_tp = 0.0f64;
             let mut monotone = true;
@@ -116,36 +180,52 @@ fn main() {
                 let codes: Vec<i16> = base.iter().map(|&c| shr_mag(c, t)).collect();
                 let delta = 0.01 * (1u32 << t) as f32;
                 let bpm = BitPlaneMatrix::from_codes(&codes, k, n, 8 - t, delta);
-                let s = bench.run_elems(
+                let (scalar, simd) = per_backend(
+                    &bench,
+                    &mut report,
                     &format!("bitplane/{}/{corpus}/trim{t}", shape.label),
                     macs,
                     || {
                         black_box(bpm.matmul_t(&xt, m));
                     },
                 );
-                println!("{}  [{} set bits]", s.report(), bpm.nnz_bits());
-                report.push(&s);
-                let tp = s.throughput_per_sec().unwrap_or(0.0);
+                let ksp = kernel_speedup(&scalar, &simd);
+                if t == 0 {
+                    if let Some(sp) = ksp {
+                        println!(
+                            "    -> bitplane/{}/{corpus}/trim0: {sp:.2}x simd over scalar \
+                             [{} set bits]",
+                            shape.label,
+                            bpm.nnz_bits()
+                        );
+                        let key = format!("bitplane_{}_{corpus}_trim0", shape.label);
+                        speedups.push((key.clone(), Json::num(sp)));
+                        floors.push((key, Json::num(BITPLANE_FLOOR)));
+                    }
+                }
+                // Monotonicity is judged on the backend dispatch would pick.
+                let active = simd.as_ref().unwrap_or(&scalar);
+                let tp = active.throughput_per_sec().unwrap_or(0.0);
                 if tp + 1e-9 < last_tp {
                     monotone = false;
                 }
                 last_tp = tp;
-                let speedup = dense_stats.mean.as_secs_f64() / s.mean.as_secs_f64().max(1e-12);
-                rows.push(Json::obj(vec![
+                let speedup =
+                    dense_active.mean.as_secs_f64() / active.mean.as_secs_f64().max(1e-12);
+                let mut row = vec![
                     ("trimmed_planes", Json::num(t as f64)),
                     ("occupied_planes", Json::num(bpm.occupied_planes() as f64)),
                     ("nnz_bits", Json::num(bpm.nnz_bits() as f64)),
                     ("bits_per_weight", Json::num(bpm.nnz_bits() as f64 / (k * n) as f64)),
-                    ("mean_ns", Json::num(s.mean.as_nanos() as f64)),
+                    ("scalar_mean_ns", Json::num(scalar.mean.as_nanos() as f64)),
+                    ("mean_ns", Json::num(active.mean.as_nanos() as f64)),
                     ("throughput_macs_per_sec", Json::num(tp)),
                     ("speedup_vs_dense", Json::num(speedup)),
-                ]));
-                if t == 4 {
-                    println!(
-                        "    -> {}/{corpus}: {speedup:.2}x vs dense at 4 trimmed planes",
-                        shape.label
-                    );
+                ];
+                if let Some(sp) = ksp {
+                    row.push(("kernel_speedup", Json::num(sp)));
                 }
+                rows.push(Json::obj(row));
             }
             println!(
                 "    -> {}/{corpus}: throughput monotone with trimming: {monotone}",
@@ -157,7 +237,7 @@ fn main() {
                     ("m", Json::num(m as f64)),
                     ("k", Json::num(k as f64)),
                     ("n", Json::num(n as f64)),
-                    ("dense_mean_ns", Json::num(dense_stats.mean.as_nanos() as f64)),
+                    ("dense_mean_ns", Json::num(dense_active.mean.as_nanos() as f64)),
                     ("monotone_throughput", Json::Bool(monotone)),
                     ("points", Json::Arr(rows)),
                 ]),
@@ -166,7 +246,12 @@ fn main() {
     }
 
     report.extra("plane_density_bsq", Json::num(BSQ_PLANE_DENSITY as f64));
+    report.extra("simd_available", Json::Bool(simd_available()));
     report.extra("sweeps", Json::Obj(sweeps));
+    if !speedups.is_empty() {
+        report.extra("speedups", Json::Obj(speedups));
+        report.extra("speedup_floors", Json::Obj(floors));
+    }
     match report.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("could not write bench json: {e}"),

@@ -88,6 +88,11 @@ impl Arena {
         }
         let s = plan.scratch;
         self.scratch.ensure(s.patches * m, s.transposed * m, s.colmajor * m);
+        // The SIMD GEMM's packed-B panels live in the kernel's own
+        // thread-local scratch; reserving the plan's high-water here keeps
+        // the serving steady state allocation-free (tests/serve_alloc.rs).
+        // Batch-independent: B is always the weight operand on this path.
+        gemm::reserve_pack_scratch(s.packb);
     }
 
     /// Currently reserved bytes (arena + scratch) — observability only.

@@ -34,6 +34,7 @@ use once_cell::sync::Lazy;
 
 use crate::ir::graph::{Graph, GraphNode, GraphOp, NodeId};
 use crate::runtime::native::models::{self, NativeModel};
+use crate::tensor::gemm;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PlanMode {
@@ -45,15 +46,21 @@ pub enum PlanMode {
 
 /// Scratch high-water marks in per-sample f32 elements: im2col patches,
 /// their transpose (also the dense bit-plane input transpose), and the
-/// column-major bit-plane GEMM output.
+/// column-major bit-plane GEMM output. `packb` is the SIMD GEMM's
+/// packed-B panel high-water — **batch-independent** (B is always the
+/// weight operand on the forward path), kept out of [`total`] because it
+/// lives in the kernel's own thread-local scratch, not the arena.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct ScratchSpec {
     pub patches: usize,
     pub transposed: usize,
     pub colmajor: usize,
+    pub packb: usize,
 }
 
 impl ScratchSpec {
+    /// Per-sample arena-side scratch (excludes the batch-independent
+    /// `packb`, which `Arena::prepare` reserves in the GEMM's own TLS).
     pub fn total(&self) -> usize {
         self.patches + self.transposed + self.colmajor
     }
@@ -262,11 +269,13 @@ fn scratch_spec(model: &NativeModel, graph: &Graph) -> Result<ScratchSpec> {
                 spec.patches = spec.patches.max(rows * kdim);
                 spec.transposed = spec.transposed.max(rows * kdim);
                 spec.colmajor = spec.colmajor.max(rows * k.shape[3]);
+                spec.packb = spec.packb.max(gemm::packed_b_elems(kdim, k.shape[3]));
             }
             GraphOp::Dense { layer } => {
                 let k = model.layer(layer)?;
                 spec.transposed = spec.transposed.max(k.shape[0]);
                 spec.colmajor = spec.colmajor.max(k.shape[1]);
+                spec.packb = spec.packb.max(gemm::packed_b_elems(k.shape[0], k.shape[1]));
             }
             _ => {}
         }

@@ -313,6 +313,7 @@ fn print_precision_map(sv: &serve::ServableModel) {
         sv.weight_bits(),
         sv.mean_effective_bits()
     );
+    println!("kernel backend: {}", sv.kernel_backend());
     let p = sv.plan();
     println!(
         "serve plan: {} nodes ({} fused conv-bn-act, {} dead layers elided), arena {} f32/sample \

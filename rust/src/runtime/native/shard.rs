@@ -435,7 +435,9 @@ pub(crate) fn train_step(
     let shared = SyncShared::new(e, n);
     // Keep the inner GEMM fan-out within the host budget: E shard workers
     // each get their slice of the cores instead of 16 threads apiece.
-    let gemm_cap = (gemm::max_parallelism() / e).max(1);
+    // `worker_budget` derives from the once-resolved host probe, so every
+    // step agrees on the split without re-reading procfs.
+    let gemm_cap = gemm::worker_budget(e);
 
     // Slice every sub-batch before any worker exists: a failure here must
     // never strand already-running peers at a barrier.

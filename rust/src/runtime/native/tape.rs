@@ -12,7 +12,9 @@
 //!
 //! Semantics mirror `python/compile` (the lowered JAX graphs) operation by
 //! operation: SAME-padded NHWC conv via im2col + the `tensor::gemm`
-//! blocked kernels, batch-norm with biased batch statistics, the
+//! runtime-dispatched kernels (the backward's `matmul_tn`/`matmul_nt`
+//! pack their strided views directly on the SIMD backend — no transpose
+//! materialization), batch-norm with biased batch statistics, the
 //! fake-quant STE of `kernels/actquant.py` (pass-through inside
 //! `(0, bound)`, above-bound mass to the PACT clip), and the option-A
 //! shortcut / concat / pooling glue.

@@ -67,6 +67,7 @@ pub fn sweep_json(servable: &ServableModel, cells: &[SweepCell]) -> Json {
         ("checkpoint", Json::str(servable.checkpoint.display().to_string())),
         ("weight_bits_per_sample", Json::num(servable.weight_bits() as f64)),
         ("mean_effective_bits", Json::num(servable.mean_effective_bits())),
+        ("kernel_backend", Json::str(servable.kernel_backend())),
         (
             "layers",
             Json::Arr(servable.layers.iter().map(LayerPrecision::to_json).collect()),

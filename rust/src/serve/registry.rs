@@ -200,6 +200,13 @@ impl ServableModel {
         self.bound.elided_layers()
     }
 
+    /// The GEMM backend this servable's kernels dispatch to ("avx2+fma"
+    /// or "scalar") — surfaced in serve stats so a benchmark or incident
+    /// record always states which kernel family produced it.
+    pub fn kernel_backend(&self) -> &'static str {
+        crate::tensor::gemm::active_backend().name()
+    }
+
     /// The compiled plan this servable executes (arena layout, fusion).
     pub fn plan(&self) -> &ir::CompiledPlan {
         self.bound.plan()

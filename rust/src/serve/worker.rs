@@ -229,7 +229,7 @@ pub fn run_closed_loop(
     // cores) runs at cap 1, where forward passes are also allocation-free
     // (tests/serve_alloc.rs); an undersubscribed pool keeps the idle
     // cores working inside the kernels instead.
-    let gemm_cap = (crate::tensor::gemm::max_parallelism() / workers).max(1);
+    let gemm_cap = crate::tensor::gemm::worker_budget(workers);
 
     let (req_tx, req_rx) = sync_channel::<ServeRequest>(policy.max_batch * QUEUE_BATCHES);
     let (batch_tx, batch_rx) = channel::<Vec<ServeRequest>>();

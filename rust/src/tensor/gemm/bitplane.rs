@@ -1,0 +1,194 @@
+//! The bit-plane weight representation and its GEMM (DESIGN.md §8, §13).
+//! Construction and plane bookkeeping are backend-independent; the column
+//! kernel dispatches between the scalar walk and its bitwise-identical
+//! AVX2 widening (`kernel_scalar`/`kernel_avx2::bitplane_columns`).
+
+use crate::quant::packed::PackedCodes;
+
+use super::Backend;
+#[cfg(target_arch = "x86_64")]
+use super::kernel_avx2;
+use super::kernel_scalar;
+
+/// A quantized weight matrix held as sign-split per-plane bitsets, laid out
+/// for GEMM: for each plane `b` and output column `j`, one row of
+/// `words = ceil(K/64)` u64s whose bit `k` says weight `(k, j)` has bit `b`
+/// of its magnitude set (in `pos` for positive codes, `neg` for negative).
+///
+/// Constructed from the `quant::packed` integer codes; planes at or above
+/// `bits` (trimmed by §3.3 re-quantization) are never materialized, and
+/// empty surviving planes are skipped per multiply via `plane_pop`.
+#[derive(Debug, Clone)]
+pub struct BitPlaneMatrix {
+    k: usize,
+    n: usize,
+    words: usize,
+    bits: usize,
+    delta: f32,
+    pos: Vec<u64>,
+    neg: Vec<u64>,
+    plane_pop: Vec<u64>,
+}
+
+impl BitPlaneMatrix {
+    /// Build from raw signed codes stored row-major `[K, N]` (the HWIO /
+    /// `[in, out]` flattening). `bits` caps the materialized planes; `delta`
+    /// is the LSB step δ = s/(2^bits − 1).
+    pub fn from_codes(codes: &[i16], k: usize, n: usize, bits: usize, delta: f32) -> Self {
+        assert_eq!(codes.len(), k * n, "codes are not K×N");
+        let words = k.div_ceil(64).max(1);
+        let bits = bits.min(16);
+        let mut pos = vec![0u64; bits * n * words];
+        let mut neg = vec![0u64; bits * n * words];
+        for (e, &c) in codes.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            let kk = e / n;
+            let j = e % n;
+            let (planes, mut mag) =
+                if c > 0 { (&mut pos, c as u64) } else { (&mut neg, (c as i64).unsigned_abs()) };
+            let word = kk >> 6;
+            let bit = 1u64 << (kk & 63);
+            while mag != 0 {
+                let b = mag.trailing_zeros() as usize;
+                if b >= bits {
+                    break; // only higher bits remain
+                }
+                planes[(b * n + j) * words + word] |= bit;
+                mag &= mag - 1;
+            }
+        }
+        let plane_pop = (0..bits)
+            .map(|b| {
+                let span = b * n * words..(b + 1) * n * words;
+                let ones = |w: &u64| w.count_ones() as u64;
+                pos[span.clone()].iter().map(ones).sum::<u64>()
+                    + neg[span].iter().map(ones).sum::<u64>()
+            })
+            .collect();
+        BitPlaneMatrix { k, n, words, bits, delta, pos, neg, plane_pop }
+    }
+
+    /// Build from a packed layer: the trailing weight-shape axis is the
+    /// output dimension (cout for HWIO convs, out for `[in, out]` dense).
+    ///
+    /// Mid-training codes can run one bit wider than the layer's nominal
+    /// precision (the §3.3 n+1 growth: continuous planes reach 2.0), so the
+    /// materialized plane count covers the widest code actually present —
+    /// the product always equals `p.dequantize()`, never a truncation.
+    pub fn from_packed(p: &PackedCodes) -> Self {
+        let n = p.wshape.last().copied().unwrap_or(1).max(1);
+        let k = p.elems() / n;
+        let widest = p
+            .codes
+            .iter()
+            .map(|c| 16 - c.unsigned_abs().leading_zeros() as usize)
+            .max()
+            .unwrap_or(0);
+        Self::from_codes(&p.codes, k, n, p.bits.max(widest), p.delta() as f32)
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Active (materialized) plane count.
+    pub fn bits(&self) -> usize {
+        self.bits
+    }
+
+    /// Total set weight bits — the exact work the multiply performs.
+    pub fn nnz_bits(&self) -> u64 {
+        self.plane_pop.iter().sum()
+    }
+
+    /// Planes that actually hold bits (empty ones are skipped wholesale).
+    pub fn occupied_planes(&self) -> usize {
+        self.plane_pop.iter().filter(|&&p| p != 0).count()
+    }
+
+    /// `C = Xᵀ·W·δ` over the bitsets: `xt` is X *transposed*, `[K, M]`
+    /// row-major (column `k` of X contiguous over the M batch rows), the
+    /// result is `[N, M]` (output-major; `transpose` restores `[M, N]`).
+    ///
+    /// Cost ∝ M × set bits: each set bit triggers one length-M fused
+    /// scale-add of a contiguous activation column, planes with zero
+    /// popcount cost one branch.
+    pub fn matmul_t(&self, xt: &[f32], m: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.n * m];
+        self.matmul_t_into(&mut out, xt, m);
+        out
+    }
+
+    /// [`BitPlaneMatrix::matmul_t`] into a caller-owned `[N, M]` buffer
+    /// (zeroed first — recycled arena scratch carries stale values). The
+    /// parallel column split honors the thread-local cap, so a capped
+    /// serving worker runs it allocation-free. The backend is resolved
+    /// once, here, before any worker threads spawn (fresh TLS on workers
+    /// must not re-dispatch), and the per-element result is bitwise
+    /// identical on both backends and at any column split.
+    pub fn matmul_t_into(&self, out: &mut [f32], xt: &[f32], m: usize) {
+        assert_eq!(xt.len(), self.k * m, "Xᵀ is not K×M");
+        assert_eq!(out.len(), self.n * m, "out is not N×M");
+        out.fill(0.0);
+        if m == 0 || self.nnz_bits() == 0 {
+            return;
+        }
+        let backend = super::active_backend();
+        let work = self.nnz_bits() as usize * m;
+        let workers = super::worker_count(work).min(self.n.max(1));
+        if workers <= 1 {
+            self.columns_into(out, xt, m, 0, backend);
+            return;
+        }
+        let cols_per = self.n.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (ci, chunk) in out.chunks_mut(cols_per * m).enumerate() {
+                s.spawn(move || self.columns_into(chunk, xt, m, ci * cols_per, backend));
+            }
+        });
+    }
+
+    /// Accumulate output columns `[j0, j0 + chunk.len()/m)` into `chunk`
+    /// on the given backend.
+    fn columns_into(&self, chunk: &mut [f32], xt: &[f32], m: usize, j0: usize, backend: Backend) {
+        match backend {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Avx2Fma is only ever selected when detection (or
+            // `with_backend`'s availability assert) confirmed AVX2.
+            Backend::Avx2Fma => unsafe {
+                kernel_avx2::bitplane_columns(
+                    chunk,
+                    xt,
+                    m,
+                    j0,
+                    self.bits,
+                    self.n,
+                    self.words,
+                    self.delta,
+                    &self.pos,
+                    &self.neg,
+                    &self.plane_pop,
+                )
+            },
+            _ => kernel_scalar::bitplane_columns(
+                chunk,
+                xt,
+                m,
+                j0,
+                self.bits,
+                self.n,
+                self.words,
+                self.delta,
+                &self.pos,
+                &self.neg,
+                &self.plane_pop,
+            ),
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! AVX2/FMA backend: register-blocked packed-panel dense microkernel and
+//! the 256-bit bit-plane column kernel (DESIGN.md §13).
+//!
+//! Safety contract for the whole module: every `#[target_feature]`
+//! function is only reachable through the dispatch in `gemm/mod.rs` /
+//! `gemm/bitplane.rs`, which selects `Backend::Avx2Fma` solely when
+//! `is_x86_feature_detected!` reported both features (or `with_backend`
+//! asserted availability). Pointer arithmetic stays inside the bounds the
+//! packing layouts and the callers' slice asserts establish.
+//!
+//! Determinism: the dense kernel gives every output element a fixed
+//! K-accumulation order — sequential FMA into one register lane within
+//! each KC block, one `c += acc` per block — that depends only on K,
+//! because a lane's sums involve only its own A row (broadcast) and B
+//! column (fixed vector lane) and the zero padding of edge tiles never
+//! reorders real elements. Row partitions (threads, shards) and the batch
+//! size cannot change any element's order, so SIMD results are bitwise
+//! reproducible across all of them. The bit-plane kernel goes further:
+//! unfused vector mul-then-add in the scalar walk's exact per-element
+//! order makes it bitwise equal to the scalar backend itself.
+
+use std::arch::x86_64::{
+    __m256i, _mm256_add_ps, _mm256_fmadd_ps, _mm256_loadu_ps, _mm256_loadu_si256,
+    _mm256_maskload_ps, _mm256_maskstore_ps, _mm256_mul_ps, _mm256_set1_ps, _mm256_setzero_ps,
+    _mm256_storeu_ps,
+};
+
+use super::pack::{self, KC, MR, NR};
+
+/// Writeback masks for partial tiles: loading 8 lanes at offset `8 - nr`
+/// yields `nr` high-bit-set lanes followed by zeros — exactly the lanes
+/// `maskload`/`maskstore` touch.
+static TAIL: [i32; 16] = [-1, -1, -1, -1, -1, -1, -1, -1, 0, 0, 0, 0, 0, 0, 0, 0];
+
+/// Mask enabling the first `lanes` (1..=8) of a 256-bit f32 vector.
+///
+/// # Safety
+/// Caller must be in AVX2-enabled code; `lanes` must be in 1..=8.
+#[inline(always)]
+unsafe fn tail_mask(lanes: usize) -> __m256i {
+    debug_assert!((1..=8).contains(&lanes));
+    _mm256_loadu_si256(TAIL.as_ptr().add(8 - lanes) as *const __m256i)
+}
+
+/// Dense GEMM driver: `C[M,N] += A·B` with A and B given as strided views
+/// (element `(i, kk)` of A at `a[i·a_rs + kk·a_cs]`, element `(kk, j)` of
+/// B at `b[kk·b_rs + j·b_cs]`), so the transposed entry points pack their
+/// operands directly instead of materializing transposes.
+///
+/// Packs all of B once into the thread-local scratch, then fans out over
+/// MR-aligned row chunks; each worker packs its own A tiles on the stack.
+/// The backend was resolved by the caller *before* this call, so the
+/// worker threads (fresh TLS) never re-dispatch.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn gemm(
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    a: &[f32],
+    a_rs: usize,
+    a_cs: usize,
+    b: &[f32],
+    b_rs: usize,
+    b_cs: usize,
+) {
+    pack::with_pack_buf(pack::packed_b_elems(k, n), |pb| {
+        pack::pack_b(pb, b, b_rs, b_cs, k, n);
+        let pb = &*pb;
+        let workers = super::worker_count(m * k * n).min(m.div_ceil(MR));
+        if workers <= 1 {
+            return gemm_rows(c, a, a_rs, a_cs, pb, m, k, n);
+        }
+        // Round chunks to MR so only the last chunk carries a partial tile;
+        // the split cannot change results (see module docs).
+        let rows_per = m.div_ceil(workers).div_ceil(MR) * MR;
+        std::thread::scope(|s| {
+            for (ci, cchunk) in c.chunks_mut(rows_per * n).enumerate() {
+                let rows = cchunk.len() / n;
+                let abase = &a[ci * rows_per * a_rs..];
+                s.spawn(move || gemm_rows(cchunk, abase, a_rs, a_cs, pb, rows, k, n));
+            }
+        });
+    });
+}
+
+/// One worker's share: sweep KC blocks of K; per block pack each MR-row
+/// A tile once and run it across every B panel, accumulating into C.
+fn gemm_rows(
+    c: &mut [f32],
+    a: &[f32],
+    a_rs: usize,
+    a_cs: usize,
+    pb: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) {
+    let mut apack = [0.0f32; MR * KC];
+    let panels = n.div_ceil(NR);
+    for kb in (0..k).step_by(KC) {
+        let kc = KC.min(k - kb);
+        for i0 in (0..m).step_by(MR) {
+            let mr = MR.min(m - i0);
+            pack::pack_a_tile(&mut apack, a, a_rs, a_cs, i0, mr, kb, kc);
+            for jp in 0..panels {
+                let j0 = jp * NR;
+                let nr = NR.min(n - j0);
+                // panel jp stores k contiguously: the kb..kb+kc rows are one slice
+                let bpanel = &pb[jp * k * NR + kb * NR..][..kc * NR];
+                // SAFETY: dispatch guaranteed AVX2+FMA; apack/bpanel hold
+                // kc full rows; C indices stay below m×n by construction.
+                unsafe { mk8x8(c, i0, j0, n, mr, nr, &apack, bpanel, kc) };
+            }
+        }
+    }
+}
+
+/// The 8×8 register-blocked microkernel: 8 accumulator vectors (one per A
+/// row), per k one B-panel vector load + 8 broadcast-FMAs, then one add
+/// per row into C (masked when the tile is a column edge).
+///
+/// # Safety
+/// AVX2+FMA must be available. `apack` holds `kc` rows of MR floats,
+/// `bpanel` holds `kc` rows of NR floats, and rows `i0..i0+mr` of the
+/// row-major `[?, n]` matrix `c` must have `nr` in-bounds columns at `j0`.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn mk8x8(
+    c: &mut [f32],
+    i0: usize,
+    j0: usize,
+    n: usize,
+    mr: usize,
+    nr: usize,
+    apack: &[f32; MR * KC],
+    bpanel: &[f32],
+    kc: usize,
+) {
+    let mut acc = [_mm256_setzero_ps(); MR];
+    let ap = apack.as_ptr();
+    let bp = bpanel.as_ptr();
+    for kk in 0..kc {
+        let bv = _mm256_loadu_ps(bp.add(kk * NR));
+        let arow = ap.add(kk * MR);
+        for (i, accv) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*arow.add(i));
+            *accv = _mm256_fmadd_ps(av, bv, *accv);
+        }
+    }
+    if nr == NR {
+        for (i, &accv) in acc.iter().take(mr).enumerate() {
+            let cp = c.as_mut_ptr().add((i0 + i) * n + j0);
+            _mm256_storeu_ps(cp, _mm256_add_ps(_mm256_loadu_ps(cp), accv));
+        }
+    } else {
+        let mask = tail_mask(nr);
+        for (i, &accv) in acc.iter().take(mr).enumerate() {
+            let cp = c.as_mut_ptr().add((i0 + i) * n + j0);
+            let cur = _mm256_maskload_ps(cp, mask);
+            _mm256_maskstore_ps(cp, mask, _mm256_add_ps(cur, accv));
+        }
+    }
+}
+
+/// AVX2 bit-plane column kernel: the scalar walk with each set bit's
+/// length-M scale-add widened to 256-bit lanes over the batch dimension.
+///
+/// Uses vector `mul` + `add` (NOT FMA) in the scalar walk's exact
+/// per-element order, so results are **bitwise identical** to
+/// `kernel_scalar::bitplane_columns` — serve logits do not move when
+/// dispatch flips, and batched-vs-single stays exact (per-element order
+/// never depends on M).
+///
+/// # Safety
+/// AVX2 must be available; arguments must be a `BitPlaneMatrix`'s fields
+/// with `chunk.len()` a multiple of `m` and `xt` of length `k·m`.
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn bitplane_columns(
+    chunk: &mut [f32],
+    xt: &[f32],
+    m: usize,
+    j0: usize,
+    bits: usize,
+    n: usize,
+    words: usize,
+    delta: f32,
+    pos: &[u64],
+    neg: &[u64],
+    plane_pop: &[u64],
+) {
+    let mfull = m & !(NR - 1);
+    let tail = m - mfull;
+    for (cj, col) in chunk.chunks_mut(m).enumerate() {
+        let j = j0 + cj;
+        for b in 0..bits {
+            if plane_pop[b] == 0 {
+                continue; // trimmed or regularized-away plane: free
+            }
+            let w2 = delta * (1u32 << b) as f32;
+            for (planes, scale) in [(pos, w2), (neg, -w2)] {
+                let sv = _mm256_set1_ps(scale);
+                let row = &planes[(b * n + j) * words..][..words];
+                for (wi, &word) in row.iter().enumerate() {
+                    let mut wbits = word;
+                    while wbits != 0 {
+                        let kk = (wi << 6) + wbits.trailing_zeros() as usize;
+                        wbits &= wbits - 1;
+                        let src = xt.as_ptr().add(kk * m);
+                        let dst = col.as_mut_ptr();
+                        let mut o = 0;
+                        while o < mfull {
+                            let pv = _mm256_mul_ps(sv, _mm256_loadu_ps(src.add(o)));
+                            let cv = _mm256_loadu_ps(dst.add(o));
+                            _mm256_storeu_ps(dst.add(o), _mm256_add_ps(cv, pv));
+                            o += NR;
+                        }
+                        if tail != 0 {
+                            let mask = tail_mask(tail);
+                            let pv = _mm256_mul_ps(sv, _mm256_maskload_ps(src.add(o), mask));
+                            let cv = _mm256_maskload_ps(dst.add(o), mask);
+                            _mm256_maskstore_ps(dst.add(o), mask, _mm256_add_ps(cv, pv));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

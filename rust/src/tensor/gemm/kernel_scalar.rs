@@ -1,0 +1,82 @@
+//! The original cache-blocked scalar kernels, retained verbatim — the
+//! fallback backend for non-x86 hosts and `BSQ_FORCE_SCALAR=1`, the
+//! reference side of the differential tests (`tests/gemm_diff.rs`), and
+//! the baseline every SIMD speedup in `BENCH_gemm.json` is measured
+//! against. Do not "optimize" these: their value is being the unchanged
+//! pre-SIMD semantics.
+
+/// K-tile: one `A` row segment + the matching `B` panel rows stay cache-hot.
+const KC: usize = 128;
+/// N-tile: the `B` panel width swept per K-tile (f32s; 4 KiB rows).
+const NC: usize = 1024;
+
+/// Serial cache-blocked kernel: KC×NC panels, vectorizable inner j loop.
+pub(super) fn gemm_block(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for nb in (0..n).step_by(NC) {
+            let nend = (nb + NC).min(n);
+            for i in 0..m {
+                let arow = &a[i * k..(i + 1) * k];
+                let crow = &mut c[i * n + nb..i * n + nend];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue; // dead rows/cols cost nothing
+                    }
+                    let brow = &b[kk * n + nb..kk * n + nend];
+                    for (cv, &bv) in crow.iter_mut().zip(brow) {
+                        *cv += aik * bv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Scalar bit-plane column kernel: accumulate output columns
+/// `[j0, j0 + chunk.len()/m)` into `chunk` by walking set bits of each
+/// occupied plane. Raw-parts signature (the `BitPlaneMatrix` fields) so
+/// both backends share one dispatch site in `bitplane.rs`.
+///
+/// Per-element operation order — `(plane b ascending, sign pos-then-neg,
+/// word ascending, bit ascending)` with an unfused `mul` then `add` — is
+/// the contract the AVX2 variant reproduces bitwise.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn bitplane_columns(
+    chunk: &mut [f32],
+    xt: &[f32],
+    m: usize,
+    j0: usize,
+    bits: usize,
+    n: usize,
+    words: usize,
+    delta: f32,
+    pos: &[u64],
+    neg: &[u64],
+    plane_pop: &[u64],
+) {
+    for (cj, col) in chunk.chunks_mut(m).enumerate() {
+        let j = j0 + cj;
+        for b in 0..bits {
+            if plane_pop[b] == 0 {
+                continue; // trimmed or regularized-away plane: free
+            }
+            let w2 = delta * (1u32 << b) as f32;
+            for (planes, scale) in [(pos, w2), (neg, -w2)] {
+                let row = &planes[(b * n + j) * words..][..words];
+                for (wi, &word) in row.iter().enumerate() {
+                    let mut wbits = word;
+                    while wbits != 0 {
+                        let kk = (wi << 6) + wbits.trailing_zeros() as usize;
+                        wbits &= wbits - 1;
+                        let src = &xt[kk * m..][..m];
+                        for (cv, &sv) in col.iter_mut().zip(src) {
+                            *cv += scale * sv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

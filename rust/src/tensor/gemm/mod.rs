@@ -1,33 +1,160 @@
-//! High-performance host kernels: blocked parallel f32 GEMM, im2col
-//! convolution lowering, and the bit-plane GEMM that makes inference cost
-//! scale with the bit sparsity BSQ induces (DESIGN.md §8).
+//! High-performance host kernels: runtime-dispatched dense f32 GEMM,
+//! im2col convolution lowering, and the bit-plane GEMM that makes
+//! inference cost scale with the bit sparsity BSQ induces (DESIGN.md §8,
+//! §13).
 //!
 //! Two matmul families back `runtime::native`:
 //!
-//! * **Dense f32** — [`matmul`] and the transposed variants: cache-blocked
-//!   (KC×NC tiles so one B panel stays in L1/L2 across a row sweep) and
-//!   parallel over output-row chunks via `std::thread::scope`. This is the
-//!   training path and the baseline every speedup is measured against.
+//! * **Dense f32** — [`matmul`] and the transposed variants. On x86-64
+//!   hosts with AVX2+FMA these run a register-blocked packed-panel
+//!   microkernel ([`kernel_avx2`]); everywhere else (and under
+//!   `BSQ_FORCE_SCALAR=1`) the original cache-blocked scalar kernel
+//!   ([`kernel_scalar`]) runs unchanged. This is the training path and
+//!   the baseline every speedup is measured against.
 //! * **Bit-plane** — [`BitPlaneMatrix::matmul_t`] consumes the sign-split
 //!   u64 plane bitsets of `quant::packed` directly and evaluates
 //!   `x·W = δ · Σ_b 2^b (x·P_b⁺ − x·P_b⁻)` by walking set bits with
-//!   trailing-zeros/clear-lowest loops. Work is exactly proportional to the
-//!   number of set weight bits: planes trimmed by §3.3 re-quantization (or
-//!   emptied by the regularizer) are skipped with a single popcount check,
-//!   so throughput grows as BSQ sparsifies the model.
+//!   trailing-zeros/clear-lowest loops. Work is exactly proportional to
+//!   the number of set weight bits: planes trimmed by §3.3
+//!   re-quantization (or emptied by the regularizer) are skipped with a
+//!   single popcount check. The AVX2 variant widens each set bit's
+//!   fused scale-add to 256-bit lanes over the batch dimension and is
+//!   **bit-identical** to the scalar walk (same per-element operation
+//!   order, unfused mul+add in both).
+//!
+//! **Dispatch contract** (DESIGN.md §13): the backend and the host thread
+//! budget are resolved exactly once per process into a [`OnceLock`]
+//! ([`active_backend`] / [`max_parallelism`]); every entry point reads
+//! the resolved backend *before* fanning out worker threads, so one call
+//! runs one kernel family end to end. `BSQ_FORCE_SCALAR=1` pins the
+//! scalar backend for the whole process (the forced-scalar CI leg);
+//! [`with_backend`] overrides it on the current thread for differential
+//! tests and benches.
+//!
+//! **Partition invariance**: for every kernel and every backend, the
+//! accumulation order of each output element is a fixed function of the
+//! operand shapes — independent of thread count, row/column partition,
+//! batch size, and microkernel tile position. SIMD-vs-SIMD results are
+//! therefore bitwise stable across shard counts and thread caps
+//! (`tests/shard_train.rs`, `tests/gemm_diff.rs`); scalar-vs-SIMD dense
+//! results may differ within FMA rounding tolerance (documented ≤1e-4
+//! relative).
 //!
 //! Layout conventions (all row-major): `matmul(a, b) = A[M,K]·B[K,N]`;
 //! activations NHWC; conv kernels HWIO, whose flattening `[kh·kw·cin, cout]`
 //! matches the im2col patch column order bit for bit.
 
-use crate::quant::packed::PackedCodes;
+use std::sync::OnceLock;
 
-// -- dense blocked GEMM ------------------------------------------------------
+mod bitplane;
+#[cfg(target_arch = "x86_64")]
+mod kernel_avx2;
+mod kernel_scalar;
+mod pack;
 
-/// K-tile: one `A` row segment + the matching `B` panel rows stay cache-hot.
-const KC: usize = 128;
-/// N-tile: the `B` panel width swept per K-tile (f32s; 4 KiB rows).
-const NC: usize = 1024;
+pub use bitplane::BitPlaneMatrix;
+pub use pack::{packed_b_elems, reserve_pack_scratch};
+
+// -- runtime dispatch --------------------------------------------------------
+
+/// Which dense/bit-plane kernel family executes a GEMM call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The original cache-blocked scalar kernels, retained verbatim —
+    /// non-x86 hosts, `BSQ_FORCE_SCALAR=1`, and differential testing.
+    Scalar,
+    /// Packed-panel 8×8 FMA microkernel + 256-bit bit-plane scale-adds.
+    Avx2Fma,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2Fma => "avx2+fma",
+        }
+    }
+
+    /// Can this backend run on the current host?
+    pub fn available(self) -> bool {
+        match self {
+            Backend::Scalar => true,
+            Backend::Avx2Fma => avx2_fma_detected(),
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx2_fma_detected() -> bool {
+    std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn avx2_fma_detected() -> bool {
+    false
+}
+
+/// Host facts resolved once per process: thread budget and kernel backend.
+/// One probe, one CPUID walk, one env read — never repeated per GEMM call
+/// (`available_parallelism` can touch procfs/cgroups, and per-call env
+/// reads would put syscalls on the serving hot path).
+struct Host {
+    threads: usize,
+    backend: Backend,
+}
+
+static HOST: OnceLock<Host> = OnceLock::new();
+
+fn host() -> &'static Host {
+    HOST.get_or_init(|| {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        let forced = std::env::var_os("BSQ_FORCE_SCALAR").is_some_and(|v| v != "0");
+        let backend = if !forced && Backend::Avx2Fma.available() {
+            Backend::Avx2Fma
+        } else {
+            Backend::Scalar
+        };
+        Host { threads, backend }
+    })
+}
+
+std::thread_local! {
+    /// Per-thread backend override for differential tests and the
+    /// per-kernel bench columns. `None` = the process-wide resolution.
+    static BACKEND_OVERRIDE: std::cell::Cell<Option<Backend>> =
+        const { std::cell::Cell::new(None) };
+}
+
+/// The backend the next GEMM call on this thread will dispatch to.
+pub fn active_backend() -> Backend {
+    BACKEND_OVERRIDE.with(|c| c.get()).unwrap_or_else(|| host().backend)
+}
+
+/// Is the SIMD backend both present on this host and not disabled by
+/// `BSQ_FORCE_SCALAR`?
+pub fn simd_available() -> bool {
+    host().backend == Backend::Avx2Fma
+}
+
+/// Run `f` with `backend` pinned on the current thread — the differential
+/// tests' and benches' way of exercising both dispatch paths in one
+/// process. Entry points resolve the backend before spawning their worker
+/// threads, so the override covers the whole call even though it lives in
+/// thread-local storage. Panics if the backend cannot run here.
+pub fn with_backend<R>(backend: Backend, f: impl FnOnce() -> R) -> R {
+    assert!(backend.available(), "backend {} is not available on this host", backend.name());
+    struct Restore(Option<Backend>);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            BACKEND_OVERRIDE.with(|c| c.set(self.0));
+        }
+    }
+    let _guard = Restore(BACKEND_OVERRIDE.with(|c| c.replace(Some(backend))));
+    f()
+}
+
+// -- thread budget -----------------------------------------------------------
+
 /// Below this many multiply-adds a single thread wins (spawn overhead).
 const PAR_THRESHOLD: usize = 1 << 21;
 
@@ -37,7 +164,7 @@ std::thread_local! {
     /// cores so E shards × inner GEMM threads never oversubscribe the host.
     /// Capping never changes results: the row split only partitions work,
     /// each output element keeps its fixed accumulation order.
-    static PAR_CAP: std::cell::Cell<usize> = std::cell::Cell::new(usize::MAX);
+    static PAR_CAP: std::cell::Cell<usize> = const { std::cell::Cell::new(usize::MAX) };
 }
 
 /// Cap this thread's GEMM fan-out (minimum 1). Thread-local: scoped worker
@@ -46,24 +173,34 @@ pub fn set_thread_parallelism_cap(cap: usize) {
     PAR_CAP.with(|c| c.set(cap.max(1)));
 }
 
-/// Host parallelism the kernels would use uncapped.
+/// Host parallelism the kernels would use uncapped — the once-resolved
+/// probe, not a live syscall.
 pub fn max_parallelism() -> usize {
-    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    host().threads
+}
+
+/// Per-worker inner-GEMM thread budget when `parts` coordinated workers
+/// (shard workers, serve-pool workers) share the host. Derived from the
+/// same once-resolved probe as [`max_parallelism`], so pool sizing and
+/// kernel dispatch agree on the host for the life of the process.
+pub fn worker_budget(parts: usize) -> usize {
+    (host().threads / parts.max(1)).max(1)
 }
 
 fn worker_count(work: usize) -> usize {
     if work < PAR_THRESHOLD {
         return 1;
     }
-    // Check the cap before probing the host: a capped thread (serving
-    // workers, shard workers at full fan-out) must stay allocation-free —
-    // `available_parallelism` can read procfs/cgroups on first use.
+    // Check the cap first: a capped thread (serving workers, shard workers
+    // at full fan-out) answers from two thread-local reads.
     let cap = PAR_CAP.with(|c| c.get());
     if cap <= 1 {
         return 1;
     }
-    max_parallelism().clamp(1, 16).min(cap)
+    host().threads.clamp(1, 16).min(cap)
 }
+
+// -- dense GEMM entry points -------------------------------------------------
 
 /// C[M,N] = A[M,K] · B[K,N] (freshly allocated).
 pub fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
@@ -80,43 +217,78 @@ pub fn matmul_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: u
     if m == 0 || n == 0 {
         return;
     }
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2Fma => kernel_avx2::gemm(c, m, k, n, a, k, 1, b, n, 1),
+        _ => scalar_parallel(c, a, b, m, k, n),
+    }
+}
+
+/// C[M,N] = Aᵀ·B for A stored `[K, M]` (e.g. dW = patchesᵀ·dY).
+pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_tn_into(&mut c, a, b, k, m, n);
+    c
+}
+
+/// C[M,N] += Aᵀ·B for A stored `[K, M]`. The SIMD path packs the strided
+/// panels directly (no transpose is materialized); the scalar path keeps
+/// the original transpose-then-multiply.
+pub fn matmul_tn_into(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
+    assert_eq!(a.len(), k * m, "A is not K×M");
+    assert_eq!(b.len(), k * n, "B is not K×N");
+    assert_eq!(c.len(), m * n, "C is not M×N");
+    if m == 0 || n == 0 {
+        return;
+    }
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2Fma => kernel_avx2::gemm(c, m, k, n, a, 1, m, b, n, 1),
+        _ => scalar_parallel(c, &transpose(a, k, m), b, m, k, n),
+    }
+}
+
+/// C[M,N] = A·Bᵀ for B stored `[N, K]` (e.g. dX = dY·Wᵀ).
+pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    matmul_nt_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// C[M,N] += A·Bᵀ for B stored `[N, K]` — same dispatch split as
+/// [`matmul_tn_into`].
+pub fn matmul_nt_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k, "A is not M×K");
+    assert_eq!(b.len(), n * k, "B is not N×K");
+    assert_eq!(c.len(), m * n, "C is not M×N");
+    if m == 0 || n == 0 {
+        return;
+    }
+    match active_backend() {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2Fma => kernel_avx2::gemm(c, m, k, n, a, k, 1, b, 1, k),
+        _ => scalar_parallel(c, a, &transpose(b, n, k), m, k, n),
+    }
+}
+
+/// The scalar backend's parallel driver: row chunks over
+/// [`kernel_scalar::gemm_block`], exactly the pre-SIMD `matmul_into`.
+fn scalar_parallel(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     let workers = worker_count(m * k * n).min(m);
     if workers <= 1 {
-        return gemm_block(c, a, b, m, k, n);
+        return kernel_scalar::gemm_block(c, a, b, m, k, n);
     }
     let rows_per = m.div_ceil(workers);
     std::thread::scope(|s| {
         for (ci, cchunk) in c.chunks_mut(rows_per * n).enumerate() {
             let rows = cchunk.len() / n;
             let achunk = &a[ci * rows_per * k..ci * rows_per * k + rows * k];
-            s.spawn(move || gemm_block(cchunk, achunk, b, rows, k, n));
+            s.spawn(move || kernel_scalar::gemm_block(cchunk, achunk, b, rows, k, n));
         }
     });
 }
 
-/// Serial cache-blocked kernel: KC×NC panels, vectorizable inner j loop.
-fn gemm_block(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
-    for kb in (0..k).step_by(KC) {
-        let kend = (kb + KC).min(k);
-        for nb in (0..n).step_by(NC) {
-            let nend = (nb + NC).min(n);
-            for i in 0..m {
-                let arow = &a[i * k..(i + 1) * k];
-                let crow = &mut c[i * n + nb..i * n + nend];
-                for kk in kb..kend {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue; // dead rows/cols cost nothing
-                    }
-                    let brow = &b[kk * n + nb..kk * n + nend];
-                    for (cv, &bv) in crow.iter_mut().zip(brow) {
-                        *cv += aik * bv;
-                    }
-                }
-            }
-        }
-    }
-}
+// -- transpose ---------------------------------------------------------------
 
 /// Out-of-place transpose: `src` is `[rows, cols]`, result is `[cols, rows]`.
 pub fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
@@ -141,16 +313,6 @@ pub fn transpose_into(dst: &mut [f32], src: &[f32], rows: usize, cols: usize) {
             }
         }
     }
-}
-
-/// C[M,N] = Aᵀ·B for A stored `[K, M]` (e.g. dW = patchesᵀ·dY).
-pub fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    matmul(&transpose(a, k, m), b, m, k, n)
-}
-
-/// C[M,N] = A·Bᵀ for B stored `[N, K]` (e.g. dX = dY·Wᵀ).
-pub fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    matmul(a, &transpose(b, n, k), m, k, n)
 }
 
 // -- im2col convolution lowering ---------------------------------------------
@@ -288,176 +450,6 @@ pub fn col2im_add(patches: &[f32], g: &ConvGeom, dx: &mut [f32]) {
     }
 }
 
-// -- bit-plane GEMM ----------------------------------------------------------
-
-/// A quantized weight matrix held as sign-split per-plane bitsets, laid out
-/// for GEMM: for each plane `b` and output column `j`, one row of
-/// `words = ceil(K/64)` u64s whose bit `k` says weight `(k, j)` has bit `b`
-/// of its magnitude set (in `pos` for positive codes, `neg` for negative).
-///
-/// Constructed from the `quant::packed` integer codes; planes at or above
-/// `bits` (trimmed by §3.3 re-quantization) are never materialized, and
-/// empty surviving planes are skipped per multiply via `plane_pop`.
-#[derive(Debug, Clone)]
-pub struct BitPlaneMatrix {
-    k: usize,
-    n: usize,
-    words: usize,
-    bits: usize,
-    delta: f32,
-    pos: Vec<u64>,
-    neg: Vec<u64>,
-    plane_pop: Vec<u64>,
-}
-
-impl BitPlaneMatrix {
-    /// Build from raw signed codes stored row-major `[K, N]` (the HWIO /
-    /// `[in, out]` flattening). `bits` caps the materialized planes; `delta`
-    /// is the LSB step δ = s/(2^bits − 1).
-    pub fn from_codes(codes: &[i16], k: usize, n: usize, bits: usize, delta: f32) -> Self {
-        assert_eq!(codes.len(), k * n, "codes are not K×N");
-        let words = k.div_ceil(64).max(1);
-        let bits = bits.min(16);
-        let mut pos = vec![0u64; bits * n * words];
-        let mut neg = vec![0u64; bits * n * words];
-        for (e, &c) in codes.iter().enumerate() {
-            if c == 0 {
-                continue;
-            }
-            let kk = e / n;
-            let j = e % n;
-            let (planes, mut mag) =
-                if c > 0 { (&mut pos, c as u64) } else { (&mut neg, (c as i64).unsigned_abs()) };
-            let word = kk >> 6;
-            let bit = 1u64 << (kk & 63);
-            while mag != 0 {
-                let b = mag.trailing_zeros() as usize;
-                if b >= bits {
-                    break; // only higher bits remain
-                }
-                planes[(b * n + j) * words + word] |= bit;
-                mag &= mag - 1;
-            }
-        }
-        let plane_pop = (0..bits)
-            .map(|b| {
-                let span = b * n * words..(b + 1) * n * words;
-                let ones = |w: &u64| w.count_ones() as u64;
-                pos[span.clone()].iter().map(ones).sum::<u64>()
-                    + neg[span].iter().map(ones).sum::<u64>()
-            })
-            .collect();
-        BitPlaneMatrix { k, n, words, bits, delta, pos, neg, plane_pop }
-    }
-
-    /// Build from a packed layer: the trailing weight-shape axis is the
-    /// output dimension (cout for HWIO convs, out for `[in, out]` dense).
-    ///
-    /// Mid-training codes can run one bit wider than the layer's nominal
-    /// precision (the §3.3 n+1 growth: continuous planes reach 2.0), so the
-    /// materialized plane count covers the widest code actually present —
-    /// the product always equals `p.dequantize()`, never a truncation.
-    pub fn from_packed(p: &PackedCodes) -> Self {
-        let n = p.wshape.last().copied().unwrap_or(1).max(1);
-        let k = p.elems() / n;
-        let widest = p
-            .codes
-            .iter()
-            .map(|c| 16 - c.unsigned_abs().leading_zeros() as usize)
-            .max()
-            .unwrap_or(0);
-        Self::from_codes(&p.codes, k, n, p.bits.max(widest), p.delta() as f32)
-    }
-
-    pub fn k(&self) -> usize {
-        self.k
-    }
-
-    pub fn n(&self) -> usize {
-        self.n
-    }
-
-    /// Active (materialized) plane count.
-    pub fn bits(&self) -> usize {
-        self.bits
-    }
-
-    /// Total set weight bits — the exact work the multiply performs.
-    pub fn nnz_bits(&self) -> u64 {
-        self.plane_pop.iter().sum()
-    }
-
-    /// Planes that actually hold bits (empty ones are skipped wholesale).
-    pub fn occupied_planes(&self) -> usize {
-        self.plane_pop.iter().filter(|&&p| p != 0).count()
-    }
-
-    /// `C = Xᵀ·W·δ` over the bitsets: `xt` is X *transposed*, `[K, M]`
-    /// row-major (column `k` of X contiguous over the M batch rows), the
-    /// result is `[N, M]` (output-major; [`transpose`] restores `[M, N]`).
-    ///
-    /// Cost ∝ M × set bits: each set bit triggers one length-M fused
-    /// scale-add of a contiguous activation column, planes with zero
-    /// popcount cost one branch.
-    pub fn matmul_t(&self, xt: &[f32], m: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; self.n * m];
-        self.matmul_t_into(&mut out, xt, m);
-        out
-    }
-
-    /// [`BitPlaneMatrix::matmul_t`] into a caller-owned `[N, M]` buffer
-    /// (zeroed first — recycled arena scratch carries stale values). The
-    /// parallel column split honors the thread-local cap, so a capped
-    /// serving worker runs it allocation-free.
-    pub fn matmul_t_into(&self, out: &mut [f32], xt: &[f32], m: usize) {
-        assert_eq!(xt.len(), self.k * m, "Xᵀ is not K×M");
-        assert_eq!(out.len(), self.n * m, "out is not N×M");
-        out.fill(0.0);
-        if m == 0 || self.nnz_bits() == 0 {
-            return;
-        }
-        let work = self.nnz_bits() as usize * m;
-        let workers = worker_count(work).min(self.n.max(1));
-        if workers <= 1 {
-            self.columns_into(out, xt, m, 0);
-            return;
-        }
-        let cols_per = self.n.div_ceil(workers);
-        std::thread::scope(|s| {
-            for (ci, chunk) in out.chunks_mut(cols_per * m).enumerate() {
-                s.spawn(move || self.columns_into(chunk, xt, m, ci * cols_per));
-            }
-        });
-    }
-
-    /// Accumulate output columns `[j0, j0 + chunk.len()/m)` into `chunk`.
-    fn columns_into(&self, chunk: &mut [f32], xt: &[f32], m: usize, j0: usize) {
-        for (cj, col) in chunk.chunks_mut(m).enumerate() {
-            let j = j0 + cj;
-            for b in 0..self.bits {
-                if self.plane_pop[b] == 0 {
-                    continue; // trimmed or regularized-away plane: free
-                }
-                let w2 = self.delta * (1u32 << b) as f32;
-                for (planes, scale) in [(&self.pos, w2), (&self.neg, -w2)] {
-                    let row = &planes[(b * self.n + j) * self.words..][..self.words];
-                    for (wi, &word) in row.iter().enumerate() {
-                        let mut wbits = word;
-                        while wbits != 0 {
-                            let kk = (wi << 6) + wbits.trailing_zeros() as usize;
-                            wbits &= wbits - 1;
-                            let src = &xt[kk * m..][..m];
-                            for (cv, &sv) in col.iter_mut().zip(src) {
-                                *cv += scale * sv;
-                            }
-                        }
-                    }
-                }
-            }
-        }
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -520,6 +512,32 @@ mod tests {
         close(&matmul_nt(&a, &transpose(&b, k, n), m, k, n), &want, 1e-5);
         // transpose is an involution
         assert_eq!(transpose(&transpose(&a, m, k), k, m), a);
+    }
+
+    #[test]
+    fn backend_override_scopes_and_restores() {
+        let before = active_backend();
+        with_backend(Backend::Scalar, || {
+            assert_eq!(active_backend(), Backend::Scalar);
+            // nesting restores the outer override, not the global default
+            with_backend(Backend::Scalar, || assert_eq!(active_backend(), Backend::Scalar));
+            assert_eq!(active_backend(), Backend::Scalar);
+        });
+        assert_eq!(active_backend(), before);
+        assert!(Backend::Scalar.available());
+    }
+
+    #[test]
+    fn budget_helpers_are_consistent() {
+        let p = max_parallelism();
+        assert!(p >= 1);
+        assert_eq!(worker_budget(1), p);
+        assert_eq!(worker_budget(0), p); // degenerate part count clamps
+        assert_eq!(worker_budget(usize::MAX), 1);
+        for parts in 1..=8 {
+            assert!(worker_budget(parts) >= 1);
+            assert!(worker_budget(parts) <= p);
+        }
     }
 
     #[test]

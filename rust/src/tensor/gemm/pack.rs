@@ -1,0 +1,110 @@
+//! Panel packing for the AVX2 microkernel (DESIGN.md §13).
+//!
+//! The microkernel wants both operands contiguous and padded to its
+//! register block: B as `[jp][k][NR]` column panels (so one panel row is
+//! one aligned-width vector load) and A as `[kc][MR]` tiles (so one tile
+//! row is MR broadcast sources for the same k). Packing also absorbs the
+//! operand strides: the transposed GEMM variants (`matmul_tn`/`matmul_nt`)
+//! pack their strided views directly instead of materializing a transpose.
+//!
+//! Padding is *zeros*, which is what makes the kernel partition-invariant:
+//! every logical element runs through the identical vector-FMA sequence no
+//! matter which tile (full or edge) it lands in, and the padding lanes'
+//! garbage-free zeros are simply never written back.
+//!
+//! The packed-B copy lives in a grow-only thread-local buffer so
+//! steady-state serving does no heap allocation (`tests/serve_alloc.rs`):
+//! the planned executor pre-reserves the high-water size via
+//! [`reserve_pack_scratch`] (`ScratchSpec::packb`), and reuse never
+//! shrinks. A tiles are 8 KiB stack arrays — nothing to reserve.
+
+/// Microkernel row block (A rows per tile, accumulator registers).
+pub(super) const MR: usize = 8;
+/// Microkernel column block (B columns per panel, one 256-bit vector).
+pub(super) const NR: usize = 8;
+/// K extent packed per A tile; 8 KiB per tile keeps it L1-resident.
+pub(super) const KC: usize = 256;
+
+std::thread_local! {
+    /// Grow-only packed-B scratch. Thread-local so concurrent GEMMs on
+    /// different threads (serve workers, shard workers) never contend.
+    static PACK: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Elements one packed copy of B `[K, N]` occupies: N rounded up to the
+/// panel width NR, times K (padding columns are zero-filled).
+pub fn packed_b_elems(k: usize, n: usize) -> usize {
+    n.div_ceil(NR) * NR * k
+}
+
+/// Pre-grow this thread's packed-B scratch to `elems` f32s. The planned
+/// executor calls this from `Arena::prepare` with the plan's high-water
+/// packed size so the serving steady state stays allocation-free.
+pub fn reserve_pack_scratch(elems: usize) {
+    PACK.with(|p| {
+        let mut buf = p.borrow_mut();
+        if buf.len() < elems {
+            buf.resize(elems, 0.0);
+        }
+    });
+}
+
+/// Run `f` over this thread's packed-B scratch, grown (never shrunk) to
+/// `elems`. The borrow spans the whole GEMM call; kernels never re-enter.
+#[cfg(target_arch = "x86_64")]
+pub(super) fn with_pack_buf<R>(elems: usize, f: impl FnOnce(&mut [f32]) -> R) -> R {
+    PACK.with(|p| {
+        let mut buf = p.borrow_mut();
+        if buf.len() < elems {
+            buf.resize(elems, 0.0);
+        }
+        f(&mut buf[..elems])
+    })
+}
+
+/// Pack all of B (logical `[K, N]`, element `(kk, j)` at
+/// `b[kk·b_rs + j·b_cs]`) into `[jp][k][NR]` panels: panel `jp` holds
+/// columns `jp·NR ..`, its row `kk` is the NR-wide vector the microkernel
+/// loads for that k. Every element of the used prefix is written each
+/// call (values or padding zeros), so buffer reuse is safe.
+#[cfg(target_arch = "x86_64")]
+pub(super) fn pack_b(dst: &mut [f32], b: &[f32], b_rs: usize, b_cs: usize, k: usize, n: usize) {
+    for jp in 0..n.div_ceil(NR) {
+        let j0 = jp * NR;
+        let nr = NR.min(n - j0);
+        let panel = &mut dst[jp * k * NR..(jp + 1) * k * NR];
+        for kk in 0..k {
+            let row = &mut panel[kk * NR..kk * NR + NR];
+            for (jr, slot) in row[..nr].iter_mut().enumerate() {
+                *slot = b[kk * b_rs + (j0 + jr) * b_cs];
+            }
+            row[nr..].fill(0.0);
+        }
+    }
+}
+
+/// Pack one A tile (rows `i0 .. i0+mr`, k range `kb .. kb+kc`, element
+/// `(i, kk)` at `a[i·a_rs + kk·a_cs]`) into `[kc][MR]` layout: tile row
+/// `kc` holds the MR broadcast sources for that k, rows `mr..` padded
+/// with zeros so edge tiles run the full-width kernel unchanged.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub(super) fn pack_a_tile(
+    dst: &mut [f32; MR * KC],
+    a: &[f32],
+    a_rs: usize,
+    a_cs: usize,
+    i0: usize,
+    mr: usize,
+    kb: usize,
+    kc: usize,
+) {
+    for kk in 0..kc {
+        let row = &mut dst[kk * MR..kk * MR + MR];
+        let col = (kb + kk) * a_cs;
+        for (ir, slot) in row[..mr].iter_mut().enumerate() {
+            *slot = a[(i0 + ir) * a_rs + col];
+        }
+        row[mr..].fill(0.0);
+    }
+}

@@ -10,6 +10,17 @@
 //! Improvements and newly added metrics never fail the gate; a metric that
 //! *disappeared* from the current record does — silently dropping a bench
 //! is how perf regressions hide.
+//!
+//! Beyond relative drift, a baseline may carry **absolute floors**: a
+//! `speedup_floors` object (`{"dense_conv16x16_m1024": 4.0, ...}`) makes
+//! the gate require the current record's matching `speedups` entry to
+//! meet each floor. This is how the SIMD acceptance bar (≥4× dense, ≥2×
+//! bit-plane at 0 trims vs the scalar backend, DESIGN.md §13) stays
+//! machine-checked on every run, not just the one that landed it: a
+//! future change that quietly de-vectorizes a kernel still beats the
+//! noise tolerance (both columns slow down together) but cannot beat a
+//! floor. A floor whose metric is missing from the current record fails,
+//! same rationale as missing means.
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -29,6 +40,17 @@ pub struct MetricDiff {
     pub regressed: bool,
 }
 
+/// One absolute speedup-floor check (baseline `speedup_floors` entry vs
+/// the current record's `speedups` value).
+#[derive(Debug, Clone)]
+pub struct FloorCheck {
+    pub name: String,
+    pub floor: f64,
+    /// Current value; `None` when the metric vanished from the record.
+    pub actual: Option<f64>,
+    pub passed: bool,
+}
+
 /// Full comparison of two bench records.
 #[derive(Debug, Clone)]
 pub struct DiffReport {
@@ -39,12 +61,16 @@ pub struct DiffReport {
     pub missing: Vec<String>,
     /// Metrics new in the current record (informational only).
     pub added: Vec<String>,
+    /// Absolute floors declared by the baseline (empty when none).
+    pub floors: Vec<FloorCheck>,
 }
 
 impl DiffReport {
     /// Does this comparison fail the gate?
     pub fn failed(&self) -> bool {
-        !self.missing.is_empty() || self.rows.iter().any(|r| r.regressed)
+        !self.missing.is_empty()
+            || self.rows.iter().any(|r| r.regressed)
+            || self.floors.iter().any(|f| !f.passed)
     }
 
     pub fn regressions(&self) -> usize {
@@ -75,6 +101,19 @@ impl DiffReport {
         }
         for m in &self.added {
             out.push_str(&format!("{m:<44} {:>14} {:>14} {:>9}  new\n", "-", "-", "-"));
+        }
+        for f in &self.floors {
+            let actual =
+                f.actual.map(|v| format!("{v:.2}x")).unwrap_or_else(|| "missing".to_string());
+            let verdict = if f.passed { "ok" } else { "BELOW FLOOR" };
+            out.push_str(&format!(
+                "{:<44} {:>13.2}x {:>14} {:>9}  {}\n",
+                format!("floor:{}", f.name),
+                f.floor,
+                actual,
+                "-",
+                verdict
+            ));
         }
         out
     }
@@ -127,7 +166,37 @@ pub fn compare(baseline: &Json, current: &Json, tolerance_pct: f64) -> Result<Di
         }
     }
     let added = cur.keys().filter(|k| !base.contains_key(*k)).cloned().collect();
-    Ok(DiffReport { target, tolerance_pct, rows, missing, added })
+    let floors = floor_checks(baseline, current)?;
+    Ok(DiffReport { target, tolerance_pct, rows, missing, added, floors })
+}
+
+/// Evaluate the baseline's `speedup_floors` (if any) against the current
+/// record's `speedups` object. Floors are part of the *baseline* so they
+/// arm with the seeded record and cannot be weakened by the run under test.
+fn floor_checks(baseline: &Json, current: &Json) -> Result<Vec<FloorCheck>> {
+    let Some(floors) = baseline.get("speedup_floors") else {
+        return Ok(Vec::new());
+    };
+    let empty: &[(String, Json)] = &[];
+    let speedups = match current.get("speedups") {
+        Some(s) => s.as_obj().context("current record's `speedups` is not an object")?,
+        None => empty,
+    };
+    let mut checks = Vec::new();
+    for (name, floor) in floors.as_obj().context("`speedup_floors` is not an object")? {
+        let floor = floor.as_f64().with_context(|| format!("floor {name:?} is not a number"))?;
+        if floor <= 0.0 || !floor.is_finite() {
+            bail!("floor {name:?} must be a positive finite speedup, got {floor}");
+        }
+        let actual = speedups
+            .iter()
+            .find(|(k, _)| k == name)
+            .map(|(_, v)| v.as_f64().with_context(|| format!("speedup {name:?} is not a number")))
+            .transpose()?;
+        let passed = actual.is_some_and(|v| v >= floor);
+        checks.push(FloorCheck { name: name.clone(), floor, actual, passed });
+    }
+    Ok(checks)
 }
 
 /// Compare two bench-record files on disk.
@@ -195,6 +264,63 @@ mod tests {
         assert_eq!(rep.missing, vec!["gone".to_string()]);
         assert_eq!(rep.added, vec!["fresh".to_string()]);
         assert!(rep.table().contains("MISSING"));
+    }
+
+    fn with_extra(rec: Json, key: &str, val: Json) -> Json {
+        match rec {
+            Json::Obj(mut kv) => {
+                kv.push((key.to_string(), val));
+                Json::Obj(kv)
+            }
+            _ => unreachable!(),
+        }
+    }
+
+    #[test]
+    fn speedup_floors_gate_on_current_speedups() {
+        let base = with_extra(
+            record(&[("a", 100.0)]),
+            "speedup_floors",
+            Json::obj(vec![("dense", Json::num(4.0)), ("bitplane", Json::num(2.0))]),
+        );
+        // both floors met
+        let cur = with_extra(
+            record(&[("a", 100.0)]),
+            "speedups",
+            Json::obj(vec![("dense", Json::num(5.1)), ("bitplane", Json::num(2.0))]),
+        );
+        let rep = compare(&base, &cur, 25.0).unwrap();
+        assert!(!rep.failed(), "{}", rep.table());
+        assert_eq!(rep.floors.len(), 2);
+
+        // one floor violated
+        let cur = with_extra(
+            record(&[("a", 100.0)]),
+            "speedups",
+            Json::obj(vec![("dense", Json::num(3.9)), ("bitplane", Json::num(2.5))]),
+        );
+        let rep = compare(&base, &cur, 25.0).unwrap();
+        assert!(rep.failed());
+        assert!(rep.table().contains("BELOW FLOOR"), "{}", rep.table());
+
+        // floor metric missing from the current record fails too
+        let rep = compare(&base, &record(&[("a", 100.0)]), 25.0).unwrap();
+        assert!(rep.failed());
+        assert!(rep.floors.iter().all(|f| f.actual.is_none() && !f.passed));
+
+        // a baseline without floors never checks them
+        let rep = compare(&record(&[("a", 100.0)]), &cur, 25.0).unwrap();
+        assert!(rep.floors.is_empty() && !rep.failed());
+    }
+
+    #[test]
+    fn malformed_floors_are_rejected() {
+        let base = with_extra(
+            record(&[("a", 100.0)]),
+            "speedup_floors",
+            Json::obj(vec![("dense", Json::num(0.0))]),
+        );
+        assert!(compare(&base, &record(&[("a", 100.0)]), 25.0).is_err());
     }
 
     #[test]

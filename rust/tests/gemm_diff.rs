@@ -2,10 +2,19 @@
 //! im2col convolution lowering and the bit-plane GEMM are all checked
 //! against a naive f64 reference across randomized shapes, sign patterns,
 //! word-boundary sizes and 0–8 trimmed planes.
+//!
+//! The SIMD sections (skipped when the host lacks AVX2/FMA or
+//! `BSQ_FORCE_SCALAR=1` pins the scalar backend) hold the dispatch
+//! contract of DESIGN.md §13: dense SIMD agrees with scalar within 1e-4
+//! relative (FMA rounding), bit-plane SIMD is **bitwise** equal to scalar,
+//! and SIMD results are bitwise stable across repeats, thread caps,
+//! emulated shard row-partitions, batch sizes, and every remainder-tile
+//! residue of the 8×8 register block.
 
 use bsq::quant::{requantize, to_bitplanes};
 use bsq::tensor::gemm::{
-    col2im_add, im2col, matmul, matmul_nt, matmul_tn, transpose, BitPlaneMatrix, ConvGeom,
+    col2im_add, im2col, matmul, matmul_nt, matmul_tn, set_thread_parallelism_cap, simd_available,
+    transpose, with_backend, Backend, BitPlaneMatrix, ConvGeom,
 };
 use bsq::tensor::Tensor;
 use bsq::util::Pcg32;
@@ -157,6 +166,163 @@ fn packed_layer_multiplies_like_its_dequantization() {
         let got = transpose(&bpm.matmul_t(&transpose(&x, m, k), m), n, m);
         assert_close(&got, &naive(&x, dense.data(), m, k, n), 1e-4, "packed bridge");
     }
+}
+
+// -- SIMD-vs-scalar differential + determinism ------------------------------
+
+fn randv(rng: &mut Pcg32, len: usize) -> Vec<f32> {
+    (0..len).map(|_| rng.normal()).collect()
+}
+
+/// Dense SIMD agrees with the scalar backend within FMA rounding (≤1e-4
+/// relative, the documented tolerance) on all three layout variants, over
+/// the adversarial K/N sizes and random shapes.
+#[test]
+fn simd_dense_matches_scalar_within_fma_tolerance() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Pcg32::seeded(21);
+    let mut cases =
+        vec![(1usize, 1usize, 1usize), (3, 63, 65), (8, 64, 64), (5, 65, 1), (1, 63, 63)];
+    for _ in 0..20 {
+        cases.push((
+            1 + rng.below(40) as usize,
+            1 + rng.below(200) as usize,
+            1 + rng.below(90) as usize,
+        ));
+    }
+    for (case, &(m, k, n)) in cases.iter().enumerate() {
+        let a = randv(&mut rng, m * k);
+        let b = randv(&mut rng, k * n);
+        let scalar = with_backend(Backend::Scalar, || matmul(&a, &b, m, k, n));
+        let simd = with_backend(Backend::Avx2Fma, || matmul(&a, &b, m, k, n));
+        assert_close(&simd, &scalar, 1e-4, &format!("simd nn case {case} ({m}x{k}x{n})"));
+        let at = transpose(&a, m, k);
+        let scalar_tn = with_backend(Backend::Scalar, || matmul_tn(&at, &b, k, m, n));
+        let simd_tn = with_backend(Backend::Avx2Fma, || matmul_tn(&at, &b, k, m, n));
+        assert_close(&simd_tn, &scalar_tn, 1e-4, &format!("simd tn case {case}"));
+        let bt = transpose(&b, k, n);
+        let scalar_nt = with_backend(Backend::Scalar, || matmul_nt(&a, &bt, m, k, n));
+        let simd_nt = with_backend(Backend::Avx2Fma, || matmul_nt(&a, &bt, m, k, n));
+        assert_close(&simd_nt, &scalar_nt, 1e-4, &format!("simd nt case {case}"));
+    }
+}
+
+/// Remainder-tile sweep: every (m, n) residue of the 8×8 register block ×
+/// K values straddling both the microkernel's KC boundary and the u64
+/// word boundary. Each cell checks SIMD vs the f64 naive reference, so a
+/// bad tail mask or mispacked edge tile cannot hide behind a matching-bug
+/// scalar comparison.
+#[test]
+fn simd_remainder_tiles_cover_all_residues() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Pcg32::seeded(22);
+    for mm in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 16, 17] {
+        for nn in [1usize, 2, 3, 4, 5, 6, 7, 8, 9, 15] {
+            for kk in [1usize, 63, 64, 65, 255, 256, 257] {
+                let a = randv(&mut rng, mm * kk);
+                let b = randv(&mut rng, kk * nn);
+                let got = with_backend(Backend::Avx2Fma, || matmul(&a, &b, mm, kk, nn));
+                assert_close(
+                    &got,
+                    &naive(&a, &b, mm, kk, nn),
+                    1e-4,
+                    &format!("residue m={mm} k={kk} n={nn}"),
+                );
+            }
+        }
+    }
+}
+
+/// SIMD determinism: bitwise-identical results across repeats, any thread
+/// cap, and emulated shard row-partitions (the per-sample dW split the
+/// sharded trainer's bit-identity guarantee rides on).
+#[test]
+fn simd_results_are_bitwise_partition_invariant() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Pcg32::seeded(23);
+    // big enough to clear PAR_THRESHOLD so the caps actually change fan-out
+    let (m, k, n) = (64usize, 256usize, 160usize);
+    let a = randv(&mut rng, m * k);
+    let b = randv(&mut rng, k * n);
+    let reference = with_backend(Backend::Avx2Fma, || matmul(&a, &b, m, k, n));
+
+    // repeats
+    for rep in 0..3 {
+        let again = with_backend(Backend::Avx2Fma, || matmul(&a, &b, m, k, n));
+        assert_eq!(reference, again, "repeat {rep} moved bits");
+    }
+    // thread caps
+    for cap in [1usize, 2, 3, 5, usize::MAX] {
+        let capped = with_backend(Backend::Avx2Fma, || {
+            set_thread_parallelism_cap(cap);
+            let c = matmul(&a, &b, m, k, n);
+            set_thread_parallelism_cap(usize::MAX);
+            c
+        });
+        assert_eq!(reference, capped, "cap {cap} moved bits");
+    }
+    // emulated shard partitions: arbitrary (unaligned) row splits
+    for splits in [vec![1usize, 63], vec![7, 25, 32], vec![17, 17, 17, 13]] {
+        assert_eq!(splits.iter().sum::<usize>(), m);
+        let mut stitched = Vec::with_capacity(m * n);
+        let mut r0 = 0usize;
+        for rows in splits {
+            let sub = with_backend(Backend::Avx2Fma, || {
+                matmul(&a[r0 * k..(r0 + rows) * k], &b, rows, k, n)
+            });
+            stitched.extend_from_slice(&sub);
+            r0 += rows;
+        }
+        assert_eq!(reference, stitched, "row partition moved bits");
+    }
+}
+
+/// The bit-plane SIMD kernel is bitwise equal to the scalar walk — not
+/// merely close: serve logits must not move when dispatch flips, and the
+/// batched result must contain each single-sample result exactly
+/// (batcher coalescing invariance), including trimmed and empty planes.
+#[test]
+fn simd_bitplane_is_bitwise_scalar_and_batch_invariant() {
+    if !simd_available() {
+        return;
+    }
+    let mut rng = Pcg32::seeded(24);
+    for &(k, n) in &[(63usize, 5usize), (64, 8), (65, 7), (130, 12), (1, 1)] {
+        for bits in [1usize, 4, 8] {
+            let codes = random_codes(&mut rng, k * n, bits);
+            let bpm = BitPlaneMatrix::from_codes(&codes, k, n, bits, 0.037);
+            for m in [1usize, 3, 7, 8, 9, 16] {
+                let x = randv(&mut rng, m * k);
+                let xt = transpose(&x, m, k);
+                let scalar = with_backend(Backend::Scalar, || bpm.matmul_t(&xt, m));
+                let simd = with_backend(Backend::Avx2Fma, || bpm.matmul_t(&xt, m));
+                assert_eq!(scalar, simd, "bitplane k={k} n={n} bits={bits} m={m} moved bits");
+                // batch invariance: column i of the [N, M] batched output
+                // is exactly the single-sample product of sample i
+                for i in 0..m {
+                    let xti: Vec<f32> = (0..k).map(|kk| xt[kk * m + i]).collect();
+                    let single = with_backend(Backend::Avx2Fma, || bpm.matmul_t(&xti, 1));
+                    for j in 0..n {
+                        assert_eq!(
+                            simd[j * m + i],
+                            single[j],
+                            "batched sample {i} of {m} differs at output {j}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+    // fully-trimmed planes and the empty matrix stay exact zeros on SIMD
+    let empty = BitPlaneMatrix::from_codes(&[0i16; 12], 4, 3, 8, 1.0);
+    let out = with_backend(Backend::Avx2Fma, || empty.matmul_t(&[1.0f32; 8], 2));
+    assert!(out.iter().all(|&v| v == 0.0));
 }
 
 fn naive_conv(x: &[f32], w: &[f32], g: &ConvGeom) -> Vec<f32> {
