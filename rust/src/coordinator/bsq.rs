@@ -589,7 +589,8 @@ pub fn run_bsq(engine: &Engine, cfg: &BsqConfig) -> Result<BsqOutcome> {
          shard-count invariant",
         session.shards()
     );
-    let mut snap: Option<Snapshotter> = cfg.snapshot.as_ref().map(Snapshotter::open);
+    let mut snap: Option<Snapshotter> =
+        cfg.snapshot.as_ref().map(|s| Snapshotter::open_for(s, engine, cfg));
     let mut history = History::default();
 
     let rp: Option<ResumePoint> = if cfg.resume {

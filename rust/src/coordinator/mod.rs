@@ -16,5 +16,5 @@ pub mod trainer;
 pub use bsq::{run_bsq, ActMode, BsqConfig, BsqOutcome};
 pub use metrics::{write_result, EpochRecord, History};
 pub use schedule::StepDecay;
-pub use snapshot::{ResumePoint, SnapshotCfg, Snapshotter};
+pub use snapshot::{ResumePoint, SnapshotCfg, Snapshotter, StorePublisher};
 pub use trainer::{corpus_for_model, train_epoch, Session};

@@ -17,7 +17,7 @@
 //! losslessly, and schemes/regularizer weights are pure functions of the
 //! snapshotted state. `tests/chaos.rs` machine-checks this end to end.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -26,6 +26,9 @@ use crate::coordinator::metrics::History;
 use crate::model::checkpoint::GenStore;
 use crate::model::ModelState;
 use crate::quant::{LayerPrec, QuantScheme};
+use crate::runtime::Engine;
+use crate::serve::registry::ServableModel;
+use crate::store::{DeployPin, ModelStore};
 use crate::util::json::Json;
 
 /// Where and how much to snapshot (CLI: `--snapshot-dir`, `--snapshot-keep`).
@@ -35,25 +38,106 @@ pub struct SnapshotCfg {
     /// Generations retained on disk. More than one is what makes a torn
     /// final write survivable (fallback), at one ModelState each.
     pub keep: usize,
+    /// Root of a content-addressed model store to publish each committed
+    /// generation into (CLI: `--publish-store`). `None` = snapshots only.
+    /// Publication is additive: the `GenStore` retention/fallback story is
+    /// untouched, the store just also receives every servable generation.
+    pub publish: Option<PathBuf>,
 }
 
 impl SnapshotCfg {
     pub fn new(dir: impl Into<PathBuf>) -> SnapshotCfg {
-        SnapshotCfg { dir: dir.into(), keep: 3 }
+        SnapshotCfg { dir: dir.into(), keep: 3, publish: None }
     }
 }
 
-/// Writes one snapshot generation per completed epoch.
-pub struct Snapshotter {
-    store: GenStore,
-    next_gen: u64,
+/// Publishes committed checkpoints into a [`ModelStore`] and repins the
+/// model's deploy: ingest the bytes (content-keyed, idempotent), load the
+/// servable once to fingerprint its precision map and compiled plan, pin
+/// the (weights, precision, plan) triple. The serving side picks the new
+/// pin up via `Registry::load_pinned` + `SwapHandle::swap`.
+pub struct StorePublisher<'e> {
+    engine: &'e Engine,
+    store_root: PathBuf,
+    model: String,
+    act_bits: usize,
+    act_first_last: usize,
 }
 
-impl Snapshotter {
-    pub fn open(cfg: &SnapshotCfg) -> Snapshotter {
+impl<'e> StorePublisher<'e> {
+    pub fn new(
+        engine: &'e Engine,
+        store_root: impl Into<PathBuf>,
+        model: impl Into<String>,
+        act_bits: usize,
+        act_first_last: usize,
+    ) -> StorePublisher<'e> {
+        StorePublisher {
+            engine,
+            store_root: store_root.into(),
+            model: model.into(),
+            act_bits,
+            act_first_last,
+        }
+    }
+
+    /// Publish one committed snapshot generation; returns the store digest
+    /// it now lives under. Errors if the checkpoint is not servable (e.g. a
+    /// float-weights pretrain epoch) — callers that publish every epoch
+    /// treat that case as "skip", not "fail".
+    pub fn publish(&self, ckpt: &Path, generation: u64) -> Result<String> {
+        self.publish_as(ckpt, &format!("gen-{generation:06}"))
+    }
+
+    /// [`StorePublisher::publish`] with an explicit provenance string
+    /// (the CLI's `store add` stamps the pin `"cli"`).
+    pub fn publish_as(&self, ckpt: &Path, source: &str) -> Result<String> {
+        let mut store = ModelStore::open(&self.store_root)?;
+        let digest = store.put_checkpoint(ckpt)?;
+        let sv = ServableModel::load_with_digest(
+            self.engine,
+            &self.model,
+            ckpt,
+            digest.clone(),
+            self.act_bits,
+            self.act_first_last,
+        )?;
+        store.pin_deploy(DeployPin {
+            model: self.model.clone(),
+            weights_hash: digest.clone(),
+            precision_fp: sv.precision_fingerprint(),
+            plan_fp: sv.plan_fingerprint(),
+            act_bits: self.act_bits,
+            act_first_last: self.act_first_last,
+            source: source.to_string(),
+        })?;
+        Ok(digest)
+    }
+}
+
+/// Writes one snapshot generation per completed epoch (and, when a
+/// publisher is attached, pushes each servable generation into the store).
+pub struct Snapshotter<'e> {
+    store: GenStore,
+    next_gen: u64,
+    publisher: Option<StorePublisher<'e>>,
+}
+
+impl<'e> Snapshotter<'e> {
+    pub fn open(cfg: &SnapshotCfg) -> Snapshotter<'static> {
         let store = GenStore::new(&cfg.dir, cfg.keep);
         let next_gen = store.generations().last().map(|g| g + 1).unwrap_or(0);
-        Snapshotter { store, next_gen }
+        Snapshotter { store, next_gen, publisher: None }
+    }
+
+    /// [`Snapshotter::open`] with store publication wired to the run's
+    /// model and activation config when `cfg.publish` is set.
+    pub fn open_for(cfg: &SnapshotCfg, engine: &'e Engine, run: &BsqConfig) -> Snapshotter<'e> {
+        let snap = Self::open(cfg);
+        let publisher = cfg.publish.as_ref().map(|root| {
+            StorePublisher::new(engine, root, &run.model, run.act_bits, run.act_first_last)
+        });
+        Snapshotter { store: snap.store, next_gen: snap.next_gen, publisher }
     }
 
     /// Persist the end-of-epoch snapshot: `epoch` is the index of the epoch
@@ -79,10 +163,25 @@ impl Snapshotter {
             ("history", history.to_json()),
             ("config", config_fingerprint(cfg)),
         ]);
+        let gen = self.next_gen;
         self.store
-            .save_generation(self.next_gen, state, &meta)
+            .save_generation(gen, state, &meta)
             .with_context(|| format!("snapshotting {phase} epoch {epoch}"))?;
         self.next_gen += 1;
+        if let Some(publisher) = &self.publisher {
+            // Lenient by design: publication must never fail training.
+            // Pretrain-phase float checkpoints are not servable — skip them
+            // quietly; anything else is worth a warning but not an abort.
+            match publisher.publish(&self.store.path(gen), gen) {
+                Ok(digest) => {
+                    log::info!("published gen {gen} to store as {}", &digest[..16]);
+                }
+                Err(e) if format!("{e:#}").contains("bit-representation") => {
+                    log::debug!("gen {gen} not servable yet (float weights); not published");
+                }
+                Err(e) => log::warn!("store publication of gen {gen} failed: {e:#}"),
+            }
+        }
         Ok(())
     }
 }

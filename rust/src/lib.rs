@@ -23,6 +23,8 @@
 //! * [`experiments`] — per-table/figure harnesses
 //! * [`serve`] — batched quantized-inference serving (registry → batcher →
 //!   worker pool over the bit-plane GEMM eval path)
+//! * [`store`] — content-addressed model store: checkpoints keyed by
+//!   digest, manifest-pinned deploys, byte-budgeted LRU residency
 //! * [`faults`] — deterministic schedule-driven fault injection, the
 //!   substrate of the chaos suite (`tests/chaos.rs`)
 //!
@@ -49,5 +51,6 @@ pub mod model;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod store;
 pub mod tensor;
 pub mod util;

@@ -10,7 +10,12 @@
 //!               layer-graph summary (node kinds, fusion, arena-vs-naive
 //!               activation bytes); with --checkpoint, the serving
 //!               registry's per-layer effective-precision map
-//!   serve-bench closed-loop batched-serving sweep → BENCH_serve.json
+//!   serve-bench closed-loop batched-serving sweep → BENCH_serve.json;
+//!               with --swap, each cell hot-swaps to a second checkpoint
+//!               mid-run and records the swap telemetry
+//!   store       content-addressed model store: `add` ingests a checkpoint
+//!               (keyed by its own bytes) and pins the deploy, `list`
+//!               shows objects + pins, `resolve` prints a model's pin
 //!   bench-diff  compare two BENCH_*.json records, exit non-zero on a
 //!               regression past --tolerance-pct (CI's bench gate)
 //!
@@ -26,10 +31,16 @@
 //!
 //! Examples:
 //!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4 --shards 4
+//!   bsq-repro bsq --model tinynet --snapshot-dir results/snap \
+//!       --publish-store results/store
 //!   bsq-repro experiment table1 --alphas 3e-3,5e-3,2e-2
 //!   bsq-repro experiment all --epochs-scale 0.5
 //!   bsq-repro hawq --model resnet20
 //!   bsq-repro serve-bench --model tinynet --batches 1,8,32 --workers 1,4
+//!   bsq-repro serve-bench --model tinynet --swap
+//!   bsq-repro store add --root results/store --model tinynet \
+//!       --checkpoint results/ckpt/serve.ckpt
+//!   bsq-repro store resolve --root results/store --model tinynet
 //!   bsq-repro info --model tinynet --checkpoint results/ckpt/serve.ckpt
 //!   bsq-repro bench-diff ci/baselines/BENCH_gemm.smoke.json \
 //!       rust/BENCH_gemm.smoke.json --tolerance-pct 25
@@ -57,7 +68,8 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench|bench-diff> [flags]\n\
+        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench|store|bench-diff> \
+         [flags]\n\
          run `bsq-repro <cmd> --help` conceptually via README.md §CLI"
     );
     std::process::exit(2);
@@ -77,6 +89,7 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(args),
         "info" => cmd_info(args),
         "serve-bench" => cmd_serve_bench(args),
+        "store" => cmd_store(args),
         "bench-diff" => cmd_bench_diff(args),
         _ => usage(),
     }
@@ -114,10 +127,14 @@ fn bsq_cfg_from_args(args: &mut Args) -> Result<BsqConfig> {
         cfg.cache_pretrained = false;
     }
     let keep: usize = args.get_or("snapshot-keep", 3)?;
+    let publish = args.opt_str("publish-store")?;
     if let Some(dir) = args.opt_str("snapshot-dir")? {
         let mut scfg = bsq::coordinator::SnapshotCfg::new(dir);
         scfg.keep = keep.max(1);
+        scfg.publish = publish.map(PathBuf::from);
         cfg.snapshot = Some(scfg);
+    } else if publish.is_some() {
+        bail!("--publish-store needs --snapshot-dir (publication rides the epoch snapshots)");
     }
     cfg.resume = args.flag("resume");
     if cfg.resume && cfg.snapshot.is_none() {
@@ -337,6 +354,7 @@ fn cmd_serve_bench(mut args: Args) -> Result<()> {
     let bits: usize = args.get_or("bits", 8)?; // synthesis precision
     let seed: u64 = args.get_or("seed", 0)?;
     let out = args.opt_str("out")?;
+    let swap = args.flag("swap");
     install_faults(&mut args)?;
     args.finish()?;
     if batches.is_empty() || workers.is_empty() || requests == 0 {
@@ -363,14 +381,25 @@ fn cmd_serve_bench(mut args: Args) -> Result<()> {
     print_precision_map(&servable);
 
     println!("== serve-bench: closed-loop sweep ({requests} requests per cell) ==");
-    let cells = serve::sweep(
-        &servable,
-        &batches,
-        &workers,
-        requests,
-        Duration::from_secs_f64(max_wait_ms / 1e3),
-        seed,
-    )?;
+    let max_wait = Duration::from_secs_f64(max_wait_ms / 1e3);
+    let cells = if swap {
+        // Hot-swap mode: synthesize a second checkpoint (same geometry,
+        // different weights) and install it mid-run in every cell.
+        let next_path =
+            PathBuf::from(format!("results/ckpt/serve_{model}_b{bits}_s{}_next.ckpt", seed));
+        if !next_path.exists() {
+            serve::synthesize_quantized_checkpoint(&engine, &model, bits, seed + 1, &next_path)?;
+        }
+        let next = registry.load(&model, &next_path, act_bits, 8)?;
+        println!(
+            "swap mode: each cell hot-swaps to {} ({}…) at a batch boundary",
+            next_path.display(),
+            &next.weights_digest[..16]
+        );
+        serve::sweep_swapped(&servable, &next, &batches, &workers, requests, max_wait, seed)?
+    } else {
+        serve::sweep(&servable, &batches, &workers, requests, max_wait, seed)?
+    };
     for cell in &cells {
         println!(
             "batch {:>3} × {} workers: {}",
@@ -390,6 +419,69 @@ fn cmd_serve_bench(mut args: Args) -> Result<()> {
         None => serve::write_bench_json(&json)?,
     };
     println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `store <add|list|resolve>` — operate on a content-addressed model store
+/// (DESIGN.md §14). `add` ingests a checkpoint under its content digest and
+/// pins the model's deploy to it; `list` shows objects and pins; `resolve`
+/// prints what a model name currently serves.
+fn cmd_store(mut args: Args) -> Result<()> {
+    let op = args
+        .take_positional(1)
+        .context("usage: bsq-repro store <add|list|resolve> --root DIR [flags]")?;
+    let root = args.str_or("root", "results/store")?;
+    match op.as_str() {
+        "add" => {
+            let ckpt = args.opt_str("checkpoint")?.context("store add needs --checkpoint")?;
+            let model = args.opt_str("model")?.context("store add needs --model")?;
+            let act_bits: usize = args.get_or("act-bits", 4)?;
+            let act_first_last: usize = args.get_or("act-first-last", 8)?;
+            args.finish()?;
+            let engine = Engine::cpu()?;
+            let publisher =
+                bsq::coordinator::StorePublisher::new(&engine, &root, &model, act_bits, act_first_last);
+            let digest = publisher.publish_as(std::path::Path::new(&ckpt), "cli")?;
+            println!("{model} pinned to {digest}");
+            println!("object: {}", bsq::store::ModelStore::open(&root)?.object_path(&digest).display());
+        }
+        "list" => {
+            args.finish()?;
+            let store = bsq::store::ModelStore::open(&root)?;
+            let objects = store.objects();
+            println!("{} object(s) at {}", objects.len(), store.root().display());
+            for key in &objects {
+                println!("  {key}");
+            }
+            let pins = store.manifest().pins();
+            println!("{} pin(s):", pins.len());
+            for p in pins {
+                println!(
+                    "  {:<14} → {}  (precision {}, plan {}, a{}f{}, from {})",
+                    p.model,
+                    &p.weights_hash[..16],
+                    p.precision_fp,
+                    p.plan_fp,
+                    p.act_bits,
+                    p.act_first_last,
+                    p.source
+                );
+            }
+        }
+        "resolve" => {
+            let model = args.opt_str("model")?.context("store resolve needs --model")?;
+            args.finish()?;
+            let store = bsq::store::ModelStore::open(&root)?;
+            let (pin, path) = store.resolve(&model)?;
+            println!("{model} → {}", pin.weights_hash);
+            println!("  object:       {}", path.display());
+            println!("  precision_fp: {}", pin.precision_fp);
+            println!("  plan_fp:      {}", pin.plan_fp);
+            println!("  activations:  a{} first/last {}", pin.act_bits, pin.act_first_last);
+            println!("  source:       {}", pin.source);
+        }
+        other => bail!("unknown store op {other:?} (want add, list, or resolve)"),
+    }
     Ok(())
 }
 

@@ -56,8 +56,10 @@ fn put<W: Write>(w: &mut W, crc: &mut Crc32, bytes: &[u8]) -> std::io::Result<()
     Ok(())
 }
 
-/// fsync-then-rename commit of `bytes` to `path`.
-fn commit_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
+/// fsync-then-rename commit of `bytes` to `path`. Shared with the model
+/// store (`store/`), whose manifest and object files need the same
+/// crash-safety as checkpoints themselves.
+pub(crate) fn commit_bytes(path: &Path, bytes: &[u8]) -> Result<()> {
     let tmp = tmp_sibling(path);
     {
         let mut f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;

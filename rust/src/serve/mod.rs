@@ -22,6 +22,7 @@
 pub mod batcher;
 pub mod registry;
 pub mod stats;
+pub mod swap;
 pub mod worker;
 
 use std::io;
@@ -32,16 +33,20 @@ pub use registry::{
     act_levels, synthesize_quantized_checkpoint, LayerPrecision, Registry, ServableModel,
 };
 pub use stats::{ServeStats, ServeSummary};
+pub use swap::{SwapHandle, FIRST_GEN};
 pub use worker::{
-    run_closed_loop, sweep, synthetic_input, Admission, PoolConfig, ServeRequest, ServeResponse,
-    ServeStatus, SweepCell,
+    run_closed_loop, run_closed_loop_swapped, sweep, sweep_swapped, synthetic_input, Admission,
+    ModelSource, PoolConfig, ServeRequest, ServeResponse, ServeStatus, SweepCell,
 };
 
 use crate::util::json::Json;
 
 /// Assemble the `BENCH_serve.json` payload: the servable's precision map,
-/// every sweep cell, and per-worker-count speedups of the largest batch
-/// size over the smallest (the batching win the acceptance gate tracks).
+/// every sweep cell, per-worker-count speedups of the largest batch size
+/// over the smallest (the batching win the acceptance gate tracks), swap
+/// telemetry, and a `results` array (one `{name, mean_ns}` entry per
+/// cell's mean latency) so `bench-diff` can gate this record like every
+/// other `BENCH_*.json`.
 pub fn sweep_json(servable: &ServableModel, cells: &[SweepCell]) -> Json {
     let mut speedups: Vec<(String, Json)> = Vec::new();
     let mut worker_counts: Vec<usize> = cells.iter().map(|c| c.workers).collect();
@@ -61,10 +66,24 @@ pub fn sweep_json(servable: &ServableModel, cells: &[SweepCell]) -> Json {
             }
         }
     }
+    // One bench-diff-compatible entry per cell: mean request latency as
+    // mean_ns under a stable cell name.
+    let results: Vec<Json> = cells
+        .iter()
+        .map(|c| {
+            Json::obj(vec![
+                ("name", Json::str(format!("serve_b{}_w{}", c.max_batch, c.workers))),
+                ("mean_ns", Json::num(c.summary.mean_us * 1e3)),
+            ])
+        })
+        .collect();
+    let swaps: u64 = cells.iter().map(|c| c.summary.swaps).sum();
+    let install_us_max = cells.iter().map(|c| c.summary.swap_install_us_max).max().unwrap_or(0);
     Json::obj(vec![
         ("target", Json::str("serve")),
         ("model", Json::str(servable.model_name.clone())),
         ("checkpoint", Json::str(servable.checkpoint.display().to_string())),
+        ("weights_digest", Json::str(servable.weights_digest.clone())),
         ("weight_bits_per_sample", Json::num(servable.weight_bits() as f64)),
         ("mean_effective_bits", Json::num(servable.mean_effective_bits())),
         ("kernel_backend", Json::str(servable.kernel_backend())),
@@ -74,6 +93,9 @@ pub fn sweep_json(servable: &ServableModel, cells: &[SweepCell]) -> Json {
         ),
         ("cells", Json::Arr(cells.iter().map(SweepCell::to_json).collect())),
         ("speedups", Json::Obj(speedups)),
+        ("swaps", Json::num(swaps as f64)),
+        ("swap_install_us_max", Json::num(install_us_max as f64)),
+        ("results", Json::Arr(results)),
     ])
 }
 

@@ -13,13 +13,21 @@
 //! Forward passes run out of a thread-local arena with zero steady-state
 //! heap allocations (`tests/serve_alloc.rs`).
 //!
-//! The [`Registry`] caches servables by `(model, checkpoint path)` behind a
-//! mutex, so concurrent load requests for the same checkpoint share one
-//! immutable instance.
+//! The [`Registry`] caches servables by **content digest** — the key is
+//! `(model, hash-of-checkpoint-bytes, act config)`, never the path. A
+//! checkpoint rewritten in place (exactly what `GenStore` retention and
+//! snapshot/resume do mid-training) therefore hashes to a new key and
+//! rebuilds, instead of silently serving stale weights forever — the
+//! regression `tests/swap_serve.rs::overwritten_checkpoint_is_not_served_stale`
+//! pins this. Cold misses are single-flighted (one build per key, however
+//! many threads race to it), the cache mutex is poison-tolerant (one
+//! panicked load cannot take down every later load), and residency is
+//! bounded by a byte-budgeted LRU ([`crate::store::ByteLru`]).
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use anyhow::{bail, Context, Result};
 
@@ -28,6 +36,7 @@ use crate::model::{checkpoint, ModelState};
 use crate::runtime::native::step::{self, AMode};
 use crate::runtime::native::tape::WeightRep;
 use crate::runtime::Engine;
+use crate::store::{self, ByteLru};
 use crate::tensor::gemm::BitPlaneMatrix;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -73,6 +82,9 @@ impl LayerPrecision {
 pub struct ServableModel {
     pub model_name: String,
     pub checkpoint: PathBuf,
+    /// Content digest of the checkpoint bytes — this servable's identity
+    /// in the registry cache and the model store.
+    pub weights_digest: String,
     pub layers: Vec<LayerPrecision>,
     /// The compiled plan resolved against this checkpoint — prebuilt
     /// bit-plane weights, BN statistics, activation levels, elision flags.
@@ -80,6 +92,9 @@ pub struct ServableModel {
     input_hw: (usize, usize),
     in_ch: usize,
     num_classes: usize,
+    /// Heap bytes the prebuilt bit-plane weights keep resident — what the
+    /// registry's byte-budgeted LRU charges this servable for.
+    resident_bytes: usize,
 }
 
 // Servables are shared by reference across the batcher/worker/client
@@ -97,6 +112,21 @@ impl ServableModel {
         engine: &Engine,
         model_name: &str,
         ckpt: &Path,
+        act_bits: usize,
+        act_first_last: usize,
+    ) -> Result<ServableModel> {
+        let digest = store::digest_file(ckpt)?;
+        Self::load_with_digest(engine, model_name, ckpt, digest, act_bits, act_first_last)
+    }
+
+    /// [`ServableModel::load`] with the content digest already computed —
+    /// the registry hashes the file to form the cache key and must not pay
+    /// for a second read of the same bytes on a miss.
+    pub(crate) fn load_with_digest(
+        engine: &Engine,
+        model_name: &str,
+        ckpt: &Path,
+        weights_digest: String,
         act_bits: usize,
         act_first_last: usize,
     ) -> Result<ServableModel> {
@@ -126,8 +156,10 @@ impl ServableModel {
 
         let mut weights: BTreeMap<String, Arc<BitPlaneMatrix>> = BTreeMap::new();
         let mut layers = Vec::with_capacity(man.qlayers.len());
+        let mut resident_bytes = 0usize;
         for q in &man.qlayers {
             let bpm = step::bitplane_weight(&state, model.layer(&q.name)?)?;
+            resident_bytes += bpm.resident_bytes();
             let mask = state.get(&format!("mask:{}", q.name))?;
             let nnz = bpm.nnz_bits();
             layers.push(LayerPrecision {
@@ -155,12 +187,35 @@ impl ServableModel {
         Ok(ServableModel {
             model_name: model_name.to_string(),
             checkpoint: ckpt.to_path_buf(),
+            weights_digest,
             layers,
             bound,
             input_hw: man.input_hw,
             in_ch: man.in_ch,
             num_classes: man.num_classes,
+            resident_bytes,
         })
+    }
+
+    /// Heap bytes the prebuilt bit-plane weights keep resident.
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Fingerprint of the deployed per-layer precision map — one leg of
+    /// the manifest's (weights, precision, plan) deploy pin.
+    pub fn precision_fingerprint(&self) -> String {
+        store::manifest::fingerprint_parts(self.layers.iter().map(|l| {
+            format!(
+                "{}:{}:n{}e{}o{}z{}",
+                l.name, l.kind, l.nominal_bits, l.effective_bits, l.occupied_planes, l.nnz_bits
+            )
+        }))
+    }
+
+    /// Fingerprint of the bound compiled plan — the third leg of the pin.
+    pub fn plan_fingerprint(&self) -> String {
+        store::plan_fingerprint(self.plan())
     }
 
     pub fn input_hw(&self) -> (usize, usize) {
@@ -264,21 +319,83 @@ pub fn act_levels(sites: usize, bits: usize, first_last: usize) -> Vec<f32> {
         .collect()
 }
 
+/// Acquire a registry lock even if a previous holder panicked. A panic
+/// inside one load must not poison-propagate into every later load — the
+/// guarded state (cache map, in-flight latches) stays structurally valid
+/// at every await-free step, so the data is safe to keep using. Same
+/// discipline as `runtime::native::shard`.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// One in-progress cold-miss build. Losers of the claim race park on `cv`
+/// until the winner publishes an outcome.
+struct Inflight {
+    state: Mutex<BuildState>,
+    cv: Condvar,
+}
+
+enum BuildState {
+    Building,
+    /// `anyhow::Error` is not `Clone`, so waiters get the failure rendered.
+    Done(Result<Arc<ServableModel>, String>),
+}
+
+/// Publishes a failure for the in-flight key if the builder panics or
+/// errors out before reaching its success path — without this, every
+/// waiter on the latch would park forever.
+struct BuildGuard<'a, 'e> {
+    registry: &'a Registry<'e>,
+    key: &'a str,
+    latch: &'a Inflight,
+    done: bool,
+}
+
+impl Drop for BuildGuard<'_, '_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.registry.finish(
+                self.key,
+                self.latch,
+                Err("builder thread panicked mid-load".to_string()),
+            );
+        }
+    }
+}
+
 /// Loads checkpoints into immutable [`ServableModel`]s, cached by
-/// `(model, checkpoint path)`.
+/// `(model, content digest, act config)` — see the module docs for why
+/// the key is the hash of the bytes, never the path.
 pub struct Registry<'e> {
     engine: &'e Engine,
-    cache: Mutex<BTreeMap<String, Arc<ServableModel>>>,
+    cache: Mutex<ByteLru<ServableModel>>,
+    inflight: Mutex<BTreeMap<String, Arc<Inflight>>>,
+    builds: AtomicU64,
 }
 
 impl<'e> Registry<'e> {
+    /// Unbounded residency (the pre-store behaviour).
     pub fn new(engine: &'e Engine) -> Registry<'e> {
-        Registry { engine, cache: Mutex::new(BTreeMap::new()) }
+        Registry::with_budget(engine, 0)
+    }
+
+    /// Bound resident servables to `budget_bytes` of prebuilt bit-plane
+    /// weights, evicting least-recently-served first (0 = unbounded).
+    pub fn with_budget(engine: &'e Engine, budget_bytes: usize) -> Registry<'e> {
+        Registry {
+            engine,
+            cache: Mutex::new(ByteLru::new(budget_bytes)),
+            inflight: Mutex::new(BTreeMap::new()),
+            builds: AtomicU64::new(0),
+        }
     }
 
     /// Load (or return the cached) servable for a checkpoint. The cache
-    /// key includes the activation precision: the same checkpoint served
-    /// at different act bits is a different servable (different actlv).
+    /// key is `(model, content-digest, act config)`: overwriting the file
+    /// at the same path yields a new digest and a fresh build, and the
+    /// same bytes under any path share one servable. Concurrent misses on
+    /// one key are single-flighted — exactly one thread builds, the rest
+    /// park and share the result.
     pub fn load(
         &self,
         model: &str,
@@ -286,26 +403,111 @@ impl<'e> Registry<'e> {
         act_bits: usize,
         act_first_last: usize,
     ) -> Result<Arc<ServableModel>> {
-        let key = format!("{model}@{}#a{act_bits}f{act_first_last}", ckpt.display());
-        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
-            return Ok(hit.clone());
+        let digest = store::digest_file(ckpt)?;
+        let key = format!("{model}@{digest}#a{act_bits}f{act_first_last}");
+        if let Some(hit) = lock(&self.cache).get(&key) {
+            return Ok(hit);
         }
-        // Build outside the lock: checkpoint I/O and bitset packing are the
-        // slow part and must not serialize unrelated loads.
-        let built = Arc::new(ServableModel::load(
-            self.engine,
-            model,
-            ckpt,
-            act_bits,
-            act_first_last,
-        )?);
-        let mut cache = self.cache.lock().unwrap();
-        Ok(cache.entry(key).or_insert(built).clone())
+        // Claim the build or join one already in flight.
+        let (latch, is_builder) = {
+            let mut inflight = lock(&self.inflight);
+            match inflight.get(&key) {
+                Some(l) => (Arc::clone(l), false),
+                None => {
+                    let l = Arc::new(Inflight {
+                        state: Mutex::new(BuildState::Building),
+                        cv: Condvar::new(),
+                    });
+                    inflight.insert(key.clone(), Arc::clone(&l));
+                    (l, true)
+                }
+            }
+        };
+        if !is_builder {
+            let mut st = lock(&latch.state);
+            while matches!(*st, BuildState::Building) {
+                st = latch.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            return match &*st {
+                BuildState::Done(Ok(sv)) => Ok(Arc::clone(sv)),
+                BuildState::Done(Err(msg)) => bail!("concurrent build of {key} failed: {msg}"),
+                BuildState::Building => unreachable!("woken only after a Done is published"),
+            };
+        }
+        // Builder path. A finished builder inserts into the cache *before*
+        // retiring its latch, so this re-check closes the claim race: any
+        // build that completed before our claim is visible here.
+        if let Some(hit) = lock(&self.cache).get(&key) {
+            self.finish(&key, &latch, Ok(Arc::clone(&hit)));
+            return Ok(hit);
+        }
+        let mut guard = BuildGuard { registry: self, key: &key, latch: &latch, done: false };
+        self.builds.fetch_add(1, Ordering::Relaxed);
+        // Build outside all locks: checkpoint I/O and bitset packing are
+        // the slow part and must not serialize unrelated loads.
+        match ServableModel::load_with_digest(self.engine, model, ckpt, digest, act_bits, act_first_last)
+        {
+            Ok(sv) => {
+                let sv = Arc::new(sv);
+                lock(&self.cache).insert(&key, Arc::clone(&sv), sv.resident_bytes());
+                guard.done = true;
+                self.finish(&key, &latch, Ok(Arc::clone(&sv)));
+                Ok(sv)
+            }
+            Err(e) => {
+                guard.done = true;
+                self.finish(&key, &latch, Err(format!("{e:#}")));
+                Err(e)
+            }
+        }
     }
 
-    /// Keys of everything currently loaded.
+    /// Load the deploy a model-store manifest pins for `model`, verifying
+    /// the loaded bytes still hash to the pinned digest (bit-rot check —
+    /// store objects are named by their own content).
+    pub fn load_pinned(
+        &self,
+        st: &store::ModelStore,
+        model: &str,
+    ) -> Result<Arc<ServableModel>> {
+        let (pin, path) = st.resolve(model)?;
+        let sv = self.load(model, &path, pin.act_bits, pin.act_first_last)?;
+        if sv.weights_digest != pin.weights_hash {
+            bail!(
+                "store object for {model:?} no longer hashes to its pin \
+                 (want {}, got {}) — object corrupted on disk",
+                pin.weights_hash,
+                sv.weights_digest
+            );
+        }
+        Ok(sv)
+    }
+
+    /// Publish an outcome on a latch and retire it.
+    fn finish(&self, key: &str, latch: &Inflight, outcome: Result<Arc<ServableModel>, String>) {
+        *lock(&latch.state) = BuildState::Done(outcome);
+        latch.cv.notify_all();
+        lock(&self.inflight).remove(key);
+    }
+
+    /// Keys of everything currently resident, least-recently-served first.
     pub fn loaded(&self) -> Vec<String> {
-        self.cache.lock().unwrap().keys().cloned().collect()
+        lock(&self.cache).keys_lru_first()
+    }
+
+    /// Cold-miss builds actually executed (single-flight merges races).
+    pub fn builds(&self) -> u64 {
+        self.builds.load(Ordering::Relaxed)
+    }
+
+    /// Budget-driven evictions so far.
+    pub fn evictions(&self) -> u64 {
+        lock(&self.cache).evictions()
+    }
+
+    /// Bytes of prebuilt bit-plane weights currently resident.
+    pub fn resident_bytes(&self) -> usize {
+        lock(&self.cache).resident_bytes()
     }
 }
 
@@ -377,6 +579,53 @@ mod tests {
         checkpoint::save(&fp, &fp_path, &Json::obj(vec![])).unwrap();
         let err = reg.load("tinynet", &fp_path, 4, 8).unwrap_err().to_string();
         assert!(err.contains("bit-representation"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// One panicked thread holding the cache mutex must not condemn every
+    /// later load to a poison panic — the regression for the old
+    /// `self.cache.lock().unwrap()` sites.
+    #[test]
+    fn poisoned_cache_still_serves() {
+        let engine = Engine::native();
+        let dir = std::env::temp_dir().join(format!("bsq_registry_p_{}", std::process::id()));
+        let path = dir.join("tiny_q.ckpt");
+        synthesize_quantized_checkpoint(&engine, "tinynet", 5, 2, &path).unwrap();
+
+        let reg = Registry::new(&engine);
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _g = reg.cache.lock().unwrap();
+            panic!("poison the registry cache on purpose");
+        }));
+        assert!(reg.cache.lock().is_err(), "cache mutex must actually be poisoned");
+
+        let a = reg.load("tinynet", &path, 4, 8).expect("poisoned cache must still serve");
+        let b = reg.load("tinynet", &path, 4, 8).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "and still cache");
+        assert_eq!(reg.builds(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Identical bytes under two different paths are one servable — the
+    /// flip side of content keying (the stale-overwrite side lives in
+    /// tests/swap_serve.rs).
+    #[test]
+    fn identical_bytes_share_one_servable_across_paths() {
+        let engine = Engine::native();
+        let dir = std::env::temp_dir().join(format!("bsq_registry_d_{}", std::process::id()));
+        let path_a = dir.join("a.ckpt");
+        synthesize_quantized_checkpoint(&engine, "tinynet", 6, 3, &path_a).unwrap();
+        let path_b = dir.join("b.ckpt");
+        std::fs::copy(&path_a, &path_b).unwrap();
+
+        let reg = Registry::new(&engine);
+        let a = reg.load("tinynet", &path_a, 4, 8).unwrap();
+        let b = reg.load("tinynet", &path_b, 4, 8).unwrap();
+        assert!(Arc::ptr_eq(&a, &b), "same content must be one cache entry");
+        assert_eq!(reg.loaded().len(), 1);
+        assert_eq!(reg.builds(), 1);
+        assert_eq!(a.weights_digest, b.weights_digest);
+        assert!(a.resident_bytes() > 0);
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -27,6 +27,10 @@ pub struct ServeStats {
     pub timed_out: usize,
     /// Requests answered `Shed` at admission (queue full).
     pub shed: usize,
+    /// Hot-swaps installed while this run was serving (0 = fixed model).
+    pub swaps: u64,
+    /// Worst-case swap install latency (lock→replace→unlock), microseconds.
+    pub swap_install_us_max: u64,
 }
 
 impl ServeStats {
@@ -52,7 +56,16 @@ impl ServeStats {
             worker_panics,
             timed_out,
             shed,
+            swaps: 0,
+            swap_install_us_max: 0,
         }
+    }
+
+    /// Attach hot-swap telemetry (swapped-pool runs only).
+    pub fn with_swaps(mut self, swaps: u64, swap_install_us_max: u64) -> ServeStats {
+        self.swaps = swaps;
+        self.swap_install_us_max = swap_install_us_max;
+        self
     }
 
     pub fn summary(&self) -> ServeSummary {
@@ -83,6 +96,8 @@ impl ServeStats {
             worker_panics: self.worker_panics,
             timed_out: self.timed_out,
             shed: self.shed,
+            swaps: self.swaps,
+            swap_install_us_max: self.swap_install_us_max,
         }
     }
 }
@@ -105,6 +120,8 @@ pub struct ServeSummary {
     pub worker_panics: usize,
     pub timed_out: usize,
     pub shed: usize,
+    pub swaps: u64,
+    pub swap_install_us_max: u64,
 }
 
 impl ServeSummary {
@@ -124,6 +141,8 @@ impl ServeSummary {
             ("worker_panics", Json::num(self.worker_panics as f64)),
             ("timed_out", Json::num(self.timed_out as f64)),
             ("shed", Json::num(self.shed as f64)),
+            ("swaps", Json::num(self.swaps as f64)),
+            ("swap_install_us_max", Json::num(self.swap_install_us_max as f64)),
         ])
     }
 
@@ -150,7 +169,8 @@ mod tests {
     #[test]
     fn summary_digests_latencies_and_batches() {
         let lats: Vec<Duration> = (1..=100).map(Duration::from_millis).collect();
-        let s = ServeStats::new(100, lats, vec![4, 4, 2], Duration::from_secs(2), 1234, 1, 2, 3);
+        let s = ServeStats::new(100, lats, vec![4, 4, 2], Duration::from_secs(2), 1234, 1, 2, 3)
+            .with_swaps(2, 57);
         assert_eq!(s.completed, 100);
         let sum = s.summary();
         assert_eq!(sum.throughput_rps, 50.0);
@@ -167,6 +187,9 @@ mod tests {
         assert_eq!(j.req("worker_panics").unwrap().as_usize().unwrap(), 1);
         assert_eq!(j.req("timed_out").unwrap().as_usize().unwrap(), 2);
         assert_eq!(j.req("shed").unwrap().as_usize().unwrap(), 3);
+        assert_eq!((sum.swaps, sum.swap_install_us_max), (2, 57));
+        assert_eq!(j.req("swaps").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(j.req("swap_install_us_max").unwrap().as_usize().unwrap(), 57);
         assert!(sum.report().contains("req/s"));
     }
 

@@ -1,6 +1,9 @@
-//! The serving pool: batcher thread + scoped worker threads over one
-//! immutable [`ServableModel`], plus the closed-loop load harness behind
-//! `bsq-repro serve-bench` and `benches/serve.rs`.
+//! The serving pool: batcher thread + scoped worker threads over an
+//! immutable [`ServableModel`] — either fixed for the pool's lifetime or
+//! read through a hot-swappable [`SwapHandle`] ([`ModelSource`]), swapped
+//! at batch boundaries with zero dropped or mixed requests — plus the
+//! closed-loop load harness behind `bsq-repro serve-bench` and
+//! `benches/serve.rs`.
 //!
 //! Topology (DESIGN.md §9):
 //!
@@ -30,7 +33,7 @@ use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Sender, TrySendError};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -39,6 +42,7 @@ use crate::faults;
 use crate::serve::batcher::{collect_batch, BatchPolicy};
 use crate::serve::registry::ServableModel;
 use crate::serve::stats::{ServeStats, ServeSummary};
+use crate::serve::swap::SwapHandle;
 use crate::util::Pcg32;
 
 /// Request-queue depth in batches: senders block (backpressure) once this
@@ -107,6 +111,69 @@ pub struct ServeResponse {
     pub latency: Duration,
     /// Size of the batch this request rode in (0 if it never rode one).
     pub batch_size: usize,
+    /// Generation of the servable that computed this response. 0 when no
+    /// servable was involved (fixed-model pools, timed-out and shed
+    /// requests); swappable pools stamp [`crate::serve::swap::FIRST_GEN`]
+    /// and up — the swap-under-load test keys its old-vs-new audit off
+    /// this field.
+    pub model_gen: u64,
+}
+
+/// Where a pool reads its model: a fixed borrowed servable (the classic
+/// single-checkpoint path), or a [`SwapHandle`] a publisher may hot-swap
+/// while the pool is serving.
+#[derive(Clone, Copy)]
+pub enum ModelSource<'a> {
+    Fixed(&'a ServableModel),
+    Swappable(&'a SwapHandle),
+}
+
+/// A per-batch model snapshot. Swappable pools hold an `Arc` so the
+/// servable stays alive for the whole forward pass even if a swap (or an
+/// LRU eviction in the registry) drops every other reference mid-batch.
+enum ModelRef<'a> {
+    Fixed(&'a ServableModel),
+    Owned(Arc<ServableModel>),
+}
+
+impl std::ops::Deref for ModelRef<'_> {
+    type Target = ServableModel;
+    fn deref(&self) -> &ServableModel {
+        match self {
+            ModelRef::Fixed(m) => m,
+            ModelRef::Owned(a) => a,
+        }
+    }
+}
+
+impl<'a> ModelSource<'a> {
+    /// The model a batch should run against, with its generation stamp.
+    /// Called once per batch — the entire pass runs on this snapshot, so a
+    /// swap can only take effect at a batch boundary (never a torn mix).
+    fn snapshot(&self) -> (ModelRef<'a>, u64) {
+        match self {
+            ModelSource::Fixed(m) => (ModelRef::Fixed(m), 0),
+            ModelSource::Swappable(h) => {
+                let (m, gen) = h.snapshot();
+                (ModelRef::Owned(m), gen)
+            }
+        }
+    }
+
+    fn note_batch(&self) {
+        if let ModelSource::Swappable(h) = self {
+            h.note_batch();
+        }
+    }
+
+    fn sample_elems(&self) -> usize {
+        match self {
+            ModelSource::Fixed(m) => m.sample_elems(),
+            // geometry is swap-invariant (SwapHandle::swap enforces it),
+            // so reading it off the current snapshot is stable for the run
+            ModelSource::Swappable(h) => h.snapshot().0.sample_elems(),
+        }
+    }
 }
 
 /// One batch in flight between batcher and workers. `retried` enforces the
@@ -162,8 +229,9 @@ fn compute_rows(model: &ServableModel, jobs: &[ServeRequest]) -> Result<Vec<Vec<
 }
 
 /// Answer every rider of a computed batch. Infallible by construction —
-/// runs only after `compute_rows` succeeded.
-fn send_rows(jobs: Vec<ServeRequest>, rows: Vec<Vec<f32>>) {
+/// runs only after `compute_rows` succeeded. `model_gen` is the stamp of
+/// the snapshot that computed the rows.
+fn send_rows(jobs: Vec<ServeRequest>, rows: Vec<Vec<f32>>, model_gen: u64) {
     let m = jobs.len();
     for (j, row) in jobs.into_iter().zip(rows) {
         let argmax = row
@@ -180,6 +248,7 @@ fn send_rows(jobs: Vec<ServeRequest>, rows: Vec<Vec<f32>>) {
             logits: row,
             latency: j.enqueued.elapsed(),
             batch_size: m,
+            model_gen,
         };
         let _ = j.reply.send(resp); // requester may have given up; not fatal
     }
@@ -195,6 +264,7 @@ fn resolve_empty(j: ServeRequest, status: ServeStatus) {
         logits: Vec::new(),
         latency: j.enqueued.elapsed(),
         batch_size: 0,
+        model_gen: 0,
     };
     let _ = j.reply.send(resp);
 }
@@ -213,6 +283,30 @@ pub fn run_closed_loop(
     clients: usize,
     seed: u64,
 ) -> Result<(ServeStats, Vec<ServeResponse>)> {
+    run_closed_loop_on(ModelSource::Fixed(model), cfg, total, clients, seed)
+}
+
+/// [`run_closed_loop`] against a hot-swappable handle: a publisher thread
+/// may call [`SwapHandle::swap`] while this runs, and the pool picks up
+/// the new servable at the next batch boundary with zero dropped or
+/// mixed-weights requests (`tests/swap_serve.rs` asserts the contract).
+pub fn run_closed_loop_swapped(
+    handle: &SwapHandle,
+    cfg: &PoolConfig,
+    total: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<(ServeStats, Vec<ServeResponse>)> {
+    run_closed_loop_on(ModelSource::Swappable(handle), cfg, total, clients, seed)
+}
+
+fn run_closed_loop_on(
+    source: ModelSource<'_>,
+    cfg: &PoolConfig,
+    total: usize,
+    clients: usize,
+    seed: u64,
+) -> Result<(ServeStats, Vec<ServeResponse>)> {
     if total == 0 || clients == 0 {
         bail!("closed loop needs at least one request and one client");
     }
@@ -223,7 +317,7 @@ pub fn run_closed_loop(
     let policy = cfg.policy;
     let request_timeout = cfg.request_timeout;
     let admission = cfg.admission;
-    let pix = model.sample_elems();
+    let pix = source.sample_elems();
     // Each worker gets its share of the cores for intra-op GEMM fan-out
     // (the shard trainer's budget rule). A saturated pool (workers ≥
     // cores) runs at cap 1, where forward passes are also allocation-free
@@ -308,14 +402,20 @@ pub fn run_closed_loop(
                     if live.is_empty() {
                         continue;
                     }
+                    // One snapshot per batch: the entire pass (and its
+                    // retry, if it panics) runs against whatever servable
+                    // is current at *this* boundary. A concurrent swap
+                    // changes the next batch, never this one.
+                    let (model, model_gen) = source.snapshot();
                     let outcome = catch_unwind(AssertUnwindSafe(|| {
                         faults::fire(faults::SERVE_BATCH, 0);
-                        compute_rows(model, &live)
+                        compute_rows(&model, &live)
                     }));
                     match outcome {
                         Ok(Ok(rows)) => {
+                            source.note_batch();
                             lock(batch_log).push(live.len());
-                            send_rows(live, rows);
+                            send_rows(live, rows, model_gen);
                         }
                         Ok(Err(e)) => {
                             let mut slot = lock(failure);
@@ -382,6 +482,7 @@ pub fn run_closed_loop(
                                     logits: Vec::new(),
                                     latency: req.enqueued.elapsed(),
                                     batch_size: 0,
+                                    model_gen: 0,
                                 });
                                 continue;
                             }
@@ -434,16 +535,25 @@ pub fn run_closed_loop(
         .filter(|r| r.status == ServeStatus::Ok)
         .map(|r| r.latency)
         .collect();
+    // Swapped pools report the *current* (post-swap) servable's bits plus
+    // the swap telemetry; fixed pools report their one model, zero swaps.
+    let (weight_bits, swaps, install_us) = match source {
+        ModelSource::Fixed(m) => (m.weight_bits(), 0, 0),
+        ModelSource::Swappable(h) => {
+            (h.snapshot().0.weight_bits(), h.swaps(), h.swap_install_us_max())
+        }
+    };
     let stats = ServeStats::new(
         total,
         latencies,
         batch_log.into_inner().unwrap_or_else(|e| e.into_inner()),
         wall,
-        model.weight_bits(),
+        weight_bits,
         worker_panics.load(Ordering::Relaxed),
         timed_out,
         shed,
-    );
+    )
+    .with_swaps(swaps, install_us);
     Ok((stats, responses))
 }
 
@@ -486,6 +596,49 @@ pub fn sweep(
             let cfg = PoolConfig::new(w, BatchPolicy::new(b, max_wait));
             let clients = (2 * b.max(1)).min(requests.max(1));
             let (stats, _) = run_closed_loop(model, &cfg, requests, clients, seed)?;
+            cells.push(SweepCell { max_batch: b.max(1), workers: w, summary: stats.summary() });
+        }
+    }
+    Ok(cells)
+}
+
+/// [`sweep`] through a [`SwapHandle`]: every cell starts serving `old`,
+/// and once the pool has completed a couple of batches a publisher thread
+/// installs `new` — so each cell's summary carries live hot-swap telemetry
+/// (`swaps`, `swap_install_us_max`) measured under real traffic.
+pub fn sweep_swapped(
+    old: &Arc<ServableModel>,
+    new: &Arc<ServableModel>,
+    batches: &[usize],
+    workers: &[usize],
+    requests: usize,
+    max_wait: Duration,
+    seed: u64,
+) -> Result<Vec<SweepCell>> {
+    let mut cells = Vec::with_capacity(batches.len() * workers.len());
+    for &w in workers {
+        for &b in batches {
+            let cfg = PoolConfig::new(w, BatchPolicy::new(b, max_wait));
+            let clients = (2 * b.max(1)).min(requests.max(1));
+            let handle = SwapHandle::new(Arc::clone(old));
+            let run = std::thread::scope(|s| {
+                let publisher = s.spawn(|| {
+                    // Wait for real traffic, but never past the run: short
+                    // cells (tiny --requests) may finish in one batch, in
+                    // which case the late swap is harmless telemetry.
+                    let t0 = Instant::now();
+                    while handle.batches_served() < 2
+                        && t0.elapsed() < Duration::from_secs(2)
+                    {
+                        std::thread::sleep(Duration::from_micros(200));
+                    }
+                    handle.swap(Arc::clone(new))
+                });
+                let run = run_closed_loop_swapped(&handle, &cfg, requests, clients, seed);
+                publisher.join().expect("publisher thread panicked").map(|_gen| ())?;
+                run
+            })?;
+            let (stats, _) = run;
             cells.push(SweepCell { max_batch: b.max(1), workers: w, summary: stats.summary() });
         }
     }

@@ -1,0 +1,244 @@
+//! Content digest for the model store: `util::crc32`'s streaming shape,
+//! widened from a 32-bit error check to a 256-bit content address.
+//!
+//! CRC32 is the right tool for detecting *accidental* corruption inside a
+//! checkpoint, but at 32 bits it cannot key a store — two different
+//! checkpoints colliding would silently serve the wrong weights, the exact
+//! bug class this subsystem exists to kill. `Digest256` keeps the same
+//! dependency-free, table-only construction discipline (the build is
+//! offline) and widens the state to four 64-bit lanes mixed with a
+//! splitmix64-style avalanche, Merkle–Damgård-padded with the message
+//! length so no two byte strings share a padding image. Not cryptographic
+//! — the threat model is accidental collision and bit-rot, matching the
+//! rest of the repo's integrity story — but at 256 bits of well-diffused
+//! state an accidental collision between checkpoints is beyond-astronomical.
+//!
+//! Streaming like [`crate::util::crc32::Crc32`]: `update` any number of
+//! times, `finalize` without consuming (so a caller can checkpoint a
+//! running hash), identical output for identical byte streams regardless
+//! of chunking (`streaming_matches_one_shot`).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Golden-ratio seed, the splitmix64 increment constant.
+const SEED: u64 = 0x9E37_79B9_7F4A_7C15;
+/// splitmix64 finalizer multipliers.
+const MIX1: u64 = 0xBF58_476D_1CE4_E5B9;
+const MIX2: u64 = 0x94D0_49BB_1331_11EB;
+
+/// splitmix64's output avalanche: every input bit flips ~half the output.
+#[inline]
+fn mix64(mut z: u64) -> u64 {
+    z ^= z >> 30;
+    z = z.wrapping_mul(MIX1);
+    z ^= z >> 27;
+    z = z.wrapping_mul(MIX2);
+    z ^ (z >> 31)
+}
+
+/// Streaming 256-bit content digest (see module docs).
+#[derive(Debug, Clone)]
+pub struct Digest256 {
+    lanes: [u64; 4],
+    /// Partial block awaiting 32 bytes.
+    buf: [u8; 32],
+    buf_len: usize,
+    /// Total message bytes absorbed (folded into the final block).
+    total: u64,
+}
+
+impl Digest256 {
+    pub fn new() -> Digest256 {
+        // Distinct per-lane seeds through the same avalanche that mixes
+        // blocks, so no lane pair starts in a related state.
+        let lanes = [mix64(SEED), mix64(SEED.wrapping_mul(3)), mix64(SEED.wrapping_mul(5)), mix64(SEED.wrapping_mul(7))];
+        Digest256 { lanes, buf: [0u8; 32], buf_len: 0, total: 0 }
+    }
+
+    /// Absorb one full 32-byte block: xor the four words in, then two
+    /// cross-lane mixing rounds so every message bit reaches every lane
+    /// before the next block lands.
+    fn absorb(lanes: &mut [u64; 4], block: &[u8]) {
+        debug_assert_eq!(block.len(), 32);
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            let w = u64::from_le_bytes(block[i * 8..(i + 1) * 8].try_into().unwrap());
+            *lane ^= w;
+        }
+        for _ in 0..2 {
+            for i in 0..4 {
+                let neighbor = lanes[(i + 1) & 3].rotate_left(23);
+                lanes[i] = mix64(lanes[i].wrapping_add(neighbor).wrapping_add(SEED));
+            }
+        }
+    }
+
+    pub fn update(&mut self, mut bytes: &[u8]) {
+        self.total = self.total.wrapping_add(bytes.len() as u64);
+        // Top up a partial block first.
+        if self.buf_len > 0 {
+            let take = (32 - self.buf_len).min(bytes.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&bytes[..take]);
+            self.buf_len += take;
+            bytes = &bytes[take..];
+            if self.buf_len == 32 {
+                let buf = self.buf;
+                Self::absorb(&mut self.lanes, &buf);
+                self.buf_len = 0;
+            }
+        }
+        let mut chunks = bytes.chunks_exact(32);
+        for block in &mut chunks {
+            Self::absorb(&mut self.lanes, block);
+        }
+        let rest = chunks.remainder();
+        self.buf[..rest.len()].copy_from_slice(rest);
+        self.buf_len = rest.len();
+    }
+
+    /// The 256-bit digest of everything absorbed so far. Non-consuming:
+    /// padding and length-folding run on a copy of the state.
+    pub fn finalize(&self) -> [u8; 32] {
+        let mut lanes = self.lanes;
+        // Merkle–Damgård tail: 0x80 marker, zero pad, then a length block.
+        // The marker keeps "abc" and "abc\0" distinct; the length block
+        // keeps any two same-padded prefixes distinct.
+        let mut tail = [0u8; 32];
+        tail[..self.buf_len].copy_from_slice(&self.buf[..self.buf_len]);
+        tail[self.buf_len] = 0x80;
+        Self::absorb(&mut lanes, &tail);
+        let mut len_block = [0u8; 32];
+        len_block[..8].copy_from_slice(&self.total.to_le_bytes());
+        len_block[8..16].copy_from_slice(&(!self.total).to_le_bytes());
+        Self::absorb(&mut lanes, &len_block);
+        // One extra blank round flushes the last block through the
+        // cross-lane diffusion before the state is read out.
+        Self::absorb(&mut lanes, &[0u8; 32]);
+        let mut out = [0u8; 32];
+        for (i, lane) in lanes.iter().enumerate() {
+            out[i * 8..(i + 1) * 8].copy_from_slice(&lane.to_le_bytes());
+        }
+        out
+    }
+
+    /// Hex form — the store's object key and the manifest's pin value.
+    pub fn hex(&self) -> String {
+        to_hex(&self.finalize())
+    }
+}
+
+impl Default for Digest256 {
+    fn default() -> Digest256 {
+        Digest256::new()
+    }
+}
+
+fn to_hex(bytes: &[u8; 32]) -> String {
+    let mut s = String::with_capacity(64);
+    for b in bytes {
+        s.push_str(&format!("{b:02x}"));
+    }
+    s
+}
+
+/// One-shot convenience, mirroring `crc32::crc32`.
+pub fn digest_hex(bytes: &[u8]) -> String {
+    let mut d = Digest256::new();
+    d.update(bytes);
+    d.hex()
+}
+
+/// Streaming digest of a file's bytes — how checkpoints get their store
+/// key without ever holding the whole file in memory.
+pub fn digest_file(path: &Path) -> Result<String> {
+    let mut f = std::fs::File::open(path)
+        .with_context(|| format!("opening {} for content hashing", path.display()))?;
+    let mut d = Digest256::new();
+    let mut buf = [0u8; 64 * 1024];
+    loop {
+        let n = f.read(&mut buf).with_context(|| format!("hashing {}", path.display()))?;
+        if n == 0 {
+            break;
+        }
+        d.update(&buf[..n]);
+    }
+    Ok(d.hex())
+}
+
+/// Is `s` a plausible digest key (64 lowercase hex chars)? Guards manifest
+/// entries against hand-edited garbage before the filesystem lookup.
+pub fn looks_like_digest(s: &str) -> bool {
+    s.len() == 64 && s.bytes().all(|b| b.is_ascii_hexdigit() && !b.is_ascii_uppercase())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_length_distinguishing() {
+        assert_eq!(digest_hex(b"abc"), digest_hex(b"abc"));
+        assert_ne!(digest_hex(b""), digest_hex(b"\0"));
+        assert_ne!(digest_hex(b"abc"), digest_hex(b"abc\0"));
+        // padding image of a 31-byte message must not collide with the
+        // 32-byte message that equals it plus the 0x80 marker
+        let mut a = [0u8; 31];
+        a[0] = 7;
+        let mut b = [0u8; 32];
+        b[0] = 7;
+        b[31] = 0x80;
+        assert_ne!(digest_hex(&a), digest_hex(&b));
+        let h = digest_hex(b"abc");
+        assert_eq!(h.len(), 64);
+        assert!(looks_like_digest(&h));
+        assert!(!looks_like_digest("abc"));
+        assert!(!looks_like_digest(&h.to_uppercase()));
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..257u16).map(|i| (i % 251) as u8).collect();
+        let want = digest_hex(&data);
+        for split in [0, 1, 31, 32, 33, 64, 100, 256, 257] {
+            let mut d = Digest256::new();
+            d.update(&data[..split]);
+            d.update(&data[split..]);
+            assert_eq!(d.hex(), want, "split at {split}");
+            // finalize is non-consuming and repeatable
+            assert_eq!(d.hex(), want);
+        }
+        // byte-at-a-time
+        let mut d = Digest256::new();
+        for b in &data {
+            d.update(std::slice::from_ref(b));
+        }
+        assert_eq!(d.hex(), want);
+    }
+
+    #[test]
+    fn every_single_bit_flip_changes_the_digest() {
+        // The store's core promise: same bytes → same key, one flipped bit
+        // anywhere → a different key. Machine-check every bit of a buffer
+        // spanning multiple blocks plus a ragged tail.
+        let mut data: Vec<u8> = (0..97u8).collect();
+        let base = digest_hex(&data);
+        for i in 0..data.len() {
+            for bit in 0..8 {
+                data[i] ^= 1 << bit;
+                assert_ne!(digest_hex(&data), base, "flip byte {i} bit {bit} went undetected");
+                data[i] ^= 1 << bit;
+            }
+        }
+    }
+
+    #[test]
+    fn digest_file_matches_in_memory() {
+        let path = std::env::temp_dir().join(format!("bsq_digest_{}", std::process::id()));
+        let data: Vec<u8> = (0..100_000u32).map(|i| (i * 31 % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        assert_eq!(digest_file(&path).unwrap(), digest_hex(&data));
+        std::fs::remove_file(path).ok();
+    }
+}

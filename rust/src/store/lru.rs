@@ -1,0 +1,213 @@
+//! Byte-budgeted LRU for cold servables.
+//!
+//! The registry's cache used to grow without bound: every distinct
+//! checkpoint ever loaded kept its `BoundPlan` (weights re-packed into
+//! bit-planes, arena plan, schedule) resident forever. Under a store
+//! that continuously publishes new generations of evolving models, that
+//! is a slow memory leak in the serving fleet. `ByteLru` caps residency
+//! by bytes, not entry count — a tinynet servable and a deep convnet
+//! servable are nowhere near the same size — and evicts strictly
+//! least-recently-used first.
+//!
+//! Values are `Arc`s: eviction drops the cache's reference, and the
+//! backing memory is freed when in-flight requests holding the same Arc
+//! drain. A servable mid-batch is never deallocated under a worker.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// An LRU keyed by string (content digest) holding `Arc<V>` values with
+/// a caller-reported byte weight per entry.
+pub struct ByteLru<V> {
+    /// Entries in recency order: index 0 = least recently used.
+    order: Vec<String>,
+    map: HashMap<String, (Arc<V>, usize)>,
+    budget_bytes: usize,
+    resident_bytes: usize,
+    evictions: u64,
+}
+
+impl<V> ByteLru<V> {
+    /// `budget_bytes == 0` disables eviction (unbounded cache) — the
+    /// pre-store behaviour, kept as the default so existing serve paths
+    /// are unchanged unless a budget is asked for.
+    pub fn new(budget_bytes: usize) -> ByteLru<V> {
+        ByteLru {
+            order: Vec::new(),
+            map: HashMap::new(),
+            budget_bytes,
+            resident_bytes: 0,
+            evictions: 0,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    /// Keys from least to most recently used (for diagnostics/tests).
+    pub fn keys_lru_first(&self) -> Vec<String> {
+        self.order.clone()
+    }
+
+    fn touch(&mut self, key: &str) {
+        if let Some(pos) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(pos);
+            self.order.push(k);
+        }
+    }
+
+    /// Look up and mark as most-recently-used.
+    pub fn get(&mut self, key: &str) -> Option<Arc<V>> {
+        let hit = self.map.get(key).map(|(v, _)| Arc::clone(v))?;
+        self.touch(key);
+        Some(hit)
+    }
+
+    /// Insert (or refresh) an entry, then evict LRU entries until the
+    /// budget holds again. The entry just inserted is never evicted even
+    /// if it alone exceeds the budget — the caller is about to use it,
+    /// so evicting it would only thrash.
+    pub fn insert(&mut self, key: &str, value: Arc<V>, bytes: usize) {
+        if let Some((_, old_bytes)) = self.map.remove(key) {
+            self.resident_bytes -= old_bytes;
+            if let Some(pos) = self.order.iter().position(|k| k == key) {
+                self.order.remove(pos);
+            }
+        }
+        self.map.insert(key.to_string(), (value, bytes));
+        self.order.push(key.to_string());
+        self.resident_bytes += bytes;
+        if self.budget_bytes > 0 {
+            while self.resident_bytes > self.budget_bytes && self.order.len() > 1 {
+                let victim = self.order.remove(0);
+                if let Some((_, b)) = self.map.remove(&victim) {
+                    self.resident_bytes -= b;
+                    self.evictions += 1;
+                }
+            }
+        }
+    }
+
+    /// Drop one entry by key (used when a pin is retired explicitly).
+    /// Not counted as an eviction — evictions are budget-driven only.
+    pub fn remove(&mut self, key: &str) -> bool {
+        match self.map.remove(key) {
+            Some((_, b)) => {
+                self.resident_bytes -= b;
+                if let Some(pos) = self.order.iter().position(|k| k == key) {
+                    self.order.remove(pos);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lru(budget: usize) -> ByteLru<u32> {
+        ByteLru::new(budget)
+    }
+
+    #[test]
+    fn evicts_least_recently_used_first() {
+        let mut c = lru(300);
+        c.insert("a", Arc::new(1), 100);
+        c.insert("b", Arc::new(2), 100);
+        c.insert("c", Arc::new(3), 100);
+        // Touch `a` so `b` becomes the LRU victim.
+        assert!(c.get("a").is_some());
+        c.insert("d", Arc::new(4), 100);
+        assert!(!c.contains("b"), "LRU entry should have been evicted");
+        assert!(c.contains("a") && c.contains("c") && c.contains("d"));
+        assert_eq!(c.evictions(), 1);
+        assert_eq!(c.resident_bytes(), 300);
+    }
+
+    #[test]
+    fn byte_budget_is_enforced_not_entry_count() {
+        let mut c = lru(250);
+        c.insert("small1", Arc::new(1), 50);
+        c.insert("small2", Arc::new(2), 50);
+        c.insert("big", Arc::new(3), 200);
+        // 300 > 250: evict small1 (LRU), now 250 ≤ 250.
+        assert!(!c.contains("small1"));
+        assert!(c.contains("small2") && c.contains("big"));
+        assert_eq!(c.resident_bytes(), 250);
+    }
+
+    #[test]
+    fn oversized_entry_survives_alone() {
+        let mut c = lru(100);
+        c.insert("a", Arc::new(1), 60);
+        c.insert("huge", Arc::new(2), 500);
+        // `a` is evicted, but `huge` stays even though it busts the budget.
+        assert!(!c.contains("a"));
+        assert!(c.contains("huge"));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn zero_budget_means_unbounded() {
+        let mut c = lru(0);
+        for i in 0..64 {
+            c.insert(&format!("k{i}"), Arc::new(i), 1 << 20);
+        }
+        assert_eq!(c.len(), 64);
+        assert_eq!(c.evictions(), 0);
+    }
+
+    #[test]
+    fn reinsert_updates_bytes_without_duplicating() {
+        let mut c = lru(0);
+        c.insert("a", Arc::new(1), 100);
+        c.insert("a", Arc::new(2), 40);
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), 40);
+        assert_eq!(*c.get("a").unwrap(), 2);
+        assert_eq!(c.keys_lru_first(), vec!["a".to_string()]);
+    }
+
+    #[test]
+    fn remove_is_not_an_eviction() {
+        let mut c = lru(1000);
+        c.insert("a", Arc::new(1), 100);
+        assert!(c.remove("a"));
+        assert!(!c.remove("a"));
+        assert_eq!(c.evictions(), 0);
+        assert_eq!(c.resident_bytes(), 0);
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn evicted_arc_stays_alive_while_held() {
+        let mut c = lru(100);
+        c.insert("a", Arc::new(7), 80);
+        let held = c.get("a").unwrap();
+        c.insert("b", Arc::new(8), 80);
+        assert!(!c.contains("a"));
+        // The in-flight reference still resolves — eviction never frees
+        // memory under a request.
+        assert_eq!(*held, 7);
+    }
+}

@@ -1,0 +1,272 @@
+//! Deploy manifest: the store's lockfile.
+//!
+//! A deploy is reproducible only if it pins *everything* that determines
+//! the served numerics: the exact weight bytes, the precision map those
+//! bytes decode to, and the compiled plan they execute under. The
+//! manifest records one pin per model name as a
+//! (weights-hash, precision-fingerprint, plan-fingerprint) triple plus
+//! the activation config — the package-lockfile idiom, minus serde (the
+//! build is offline; `util::json` is the only JSON layer in the crate).
+//!
+//! Resolution is strict: a model with no pin, a pin whose hash is not a
+//! digest, or a pin whose object is missing from the store is a hard
+//! error, never a silent fallback to "whatever file is at the old path" —
+//! that fallback is precisely the stale-serving bug this subsystem fixes.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::digest::{looks_like_digest, Digest256};
+use crate::ir::plan::CompiledPlan;
+use crate::model::checkpoint;
+use crate::util::json::{self, Json};
+
+pub const MANIFEST_VERSION: usize = 1;
+
+/// One pinned deploy: everything needed to reproduce a serving config.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployPin {
+    pub model: String,
+    /// Content digest of the checkpoint bytes — the store object key.
+    pub weights_hash: String,
+    /// Fingerprint over the per-layer effective-precision map.
+    pub precision_fp: String,
+    /// Fingerprint over the compiled infer plan (schedule + arena).
+    pub plan_fp: String,
+    pub act_bits: usize,
+    pub act_first_last: usize,
+    /// Provenance label (source path or `gen-NNNNNN`), informational only.
+    pub source: String,
+}
+
+impl DeployPin {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("weights_hash", Json::str(&self.weights_hash)),
+            ("precision_fp", Json::str(&self.precision_fp)),
+            ("plan_fp", Json::str(&self.plan_fp)),
+            ("act_bits", Json::num(self.act_bits as f64)),
+            ("act_first_last", Json::num(self.act_first_last as f64)),
+            ("source", Json::str(&self.source)),
+        ])
+    }
+
+    fn from_json(v: &Json) -> Result<DeployPin> {
+        let pin = DeployPin {
+            model: v.req("model")?.as_str()?.to_string(),
+            weights_hash: v.req("weights_hash")?.as_str()?.to_string(),
+            precision_fp: v.req("precision_fp")?.as_str()?.to_string(),
+            plan_fp: v.req("plan_fp")?.as_str()?.to_string(),
+            act_bits: v.req("act_bits")?.as_usize()?,
+            act_first_last: v.req("act_first_last")?.as_usize()?,
+            source: v.req("source")?.as_str()?.to_string(),
+        };
+        if !looks_like_digest(&pin.weights_hash) {
+            bail!(
+                "manifest pin for {:?} has malformed weights_hash {:?} (want 64 lowercase hex)",
+                pin.model,
+                pin.weights_hash
+            );
+        }
+        Ok(pin)
+    }
+}
+
+/// The manifest: one pin per model name, insertion-ordered.
+#[derive(Debug, Default)]
+pub struct Manifest {
+    pins: Vec<DeployPin>,
+}
+
+impl Manifest {
+    pub fn new() -> Manifest {
+        Manifest::default()
+    }
+
+    /// Parse from disk; a missing file is an empty manifest (fresh store),
+    /// a malformed file is a hard error (never guess at deploy state).
+    pub fn load(path: &Path) -> Result<Manifest> {
+        if !path.exists() {
+            return Ok(Manifest::new());
+        }
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        let v = json::parse(&text)
+            .with_context(|| format!("parsing manifest {}", path.display()))?;
+        let version = v.req("version")?.as_usize()?;
+        if version != MANIFEST_VERSION {
+            bail!("manifest {} is version {version}, this build reads {MANIFEST_VERSION}", path.display());
+        }
+        let mut pins = Vec::new();
+        for entry in v.req("pins")?.as_arr()? {
+            let pin = DeployPin::from_json(entry)?;
+            if pins.iter().any(|p: &DeployPin| p.model == pin.model) {
+                bail!("manifest {} pins {:?} twice", path.display(), pin.model);
+            }
+            pins.push(pin);
+        }
+        Ok(Manifest { pins })
+    }
+
+    /// Atomic write via the checkpoint tmp+fsync+rename path, so a crash
+    /// mid-save leaves the previous manifest intact, never a torn one.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let doc = Json::obj(vec![
+            ("version", Json::num(MANIFEST_VERSION as f64)),
+            ("pins", Json::Arr(self.pins.iter().map(DeployPin::to_json).collect())),
+        ]);
+        checkpoint::commit_bytes(path, doc.to_string_pretty().as_bytes())
+            .with_context(|| format!("writing manifest {}", path.display()))
+    }
+
+    /// Upsert the pin for `pin.model`. Returns the replaced pin, if any.
+    pub fn pin(&mut self, pin: DeployPin) -> Result<Option<DeployPin>> {
+        if !looks_like_digest(&pin.weights_hash) {
+            bail!("refusing to pin {:?}: malformed weights_hash {:?}", pin.model, pin.weights_hash);
+        }
+        match self.pins.iter_mut().find(|p| p.model == pin.model) {
+            Some(slot) => Ok(Some(std::mem::replace(slot, pin))),
+            None => {
+                self.pins.push(pin);
+                Ok(None)
+            }
+        }
+    }
+
+    /// Hard-error resolution: no pin for the model name is a deploy bug.
+    pub fn resolve(&self, model: &str) -> Result<&DeployPin> {
+        self.pins.iter().find(|p| p.model == model).ok_or_else(|| {
+            let known: Vec<&str> = self.pins.iter().map(|p| p.model.as_str()).collect();
+            anyhow::anyhow!("no manifest pin for model {model:?} (pinned: {known:?})")
+        })
+    }
+
+    pub fn pins(&self) -> &[DeployPin] {
+        &self.pins
+    }
+}
+
+/// Short (64-bit) fingerprint over a list of labelled parts. Each part is
+/// absorbed length-prefixed so `["ab","c"]` and `["a","bc"]` differ.
+pub fn fingerprint_parts<I, S>(parts: I) -> String
+where
+    I: IntoIterator<Item = S>,
+    S: AsRef<str>,
+{
+    let mut d = Digest256::new();
+    for part in parts {
+        let b = part.as_ref().as_bytes();
+        d.update(&(b.len() as u64).to_le_bytes());
+        d.update(b);
+    }
+    d.hex()[..16].to_string()
+}
+
+/// Fingerprint of a compiled plan: everything that shapes execution
+/// order and memory, none of the weight data (that's `weights_hash`).
+/// Two checkpoints of the same architecture share a plan fingerprint;
+/// a schedule, fusion, or arena-layout change breaks it — exactly the
+/// granularity a "same plan?" deploy check wants.
+pub fn plan_fingerprint(plan: &CompiledPlan) -> String {
+    let mut parts = vec![
+        format!("model={}", plan.graph.model),
+        format!("mode={:?}", plan.mode),
+        format!("nodes={}", plan.schedule_len()),
+        format!("arena={}", plan.arena_elems),
+        format!("naive={}", plan.naive_elems),
+        format!("fused={}", plan.fused),
+    ];
+    for (kind, count) in plan.graph.kind_counts() {
+        parts.push(format!("kind:{kind}={count}"));
+    }
+    fingerprint_parts(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pin(model: &str, hash_seed: u8) -> DeployPin {
+        DeployPin {
+            model: model.to_string(),
+            weights_hash: super::super::digest::digest_hex(&[hash_seed]),
+            precision_fp: fingerprint_parts(["conv1=4", "fc=2"]),
+            plan_fp: fingerprint_parts(["model=t", "nodes=5"]),
+            act_bits: 4,
+            act_first_last: 8,
+            source: "gen-000042".to_string(),
+        }
+    }
+
+    #[test]
+    fn pin_resolve_roundtrip_through_disk() {
+        let dir = std::env::temp_dir().join(format!("bsq_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        let mut m = Manifest::new();
+        assert!(m.pin(pin("tinynet", 1)).unwrap().is_none());
+        assert!(m.pin(pin("convnet", 2)).unwrap().is_none());
+        // repin replaces, not duplicates
+        let replaced = m.pin(pin("tinynet", 3)).unwrap().unwrap();
+        assert_eq!(replaced.weights_hash, super::super::digest::digest_hex(&[1]));
+        m.save(&path).unwrap();
+
+        let back = Manifest::load(&path).unwrap();
+        assert_eq!(back.pins().len(), 2);
+        assert_eq!(back.resolve("tinynet").unwrap(), m.resolve("tinynet").unwrap());
+        assert_eq!(
+            back.resolve("tinynet").unwrap().weights_hash,
+            super::super::digest::digest_hex(&[3])
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resolve_of_unpinned_model_is_a_hard_error() {
+        let m = Manifest::new();
+        let err = m.resolve("ghost").unwrap_err().to_string();
+        assert!(err.contains("no manifest pin"), "got: {err}");
+    }
+
+    #[test]
+    fn malformed_hash_is_rejected_on_pin_and_on_load() {
+        let mut m = Manifest::new();
+        let mut bad = pin("tinynet", 1);
+        bad.weights_hash = "deadbeef".to_string();
+        assert!(m.pin(bad).is_err());
+
+        let dir = std::env::temp_dir().join(format!("bsq_manifest_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        std::fs::write(
+            &path,
+            r#"{"version": 1, "pins": [{"model": "t", "weights_hash": "nope",
+                "precision_fp": "x", "plan_fp": "y", "act_bits": 4,
+                "act_first_last": 8, "source": "s"}]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_empty_wrong_version_is_error() {
+        let dir = std::env::temp_dir().join(format!("bsq_manifest_ver_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Manifest::load(&dir.join("absent.json")).unwrap().pins().is_empty());
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, r#"{"version": 99, "pins": []}"#).unwrap();
+        assert!(Manifest::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fingerprints_are_stable_and_boundary_sensitive() {
+        let a = fingerprint_parts(["ab", "c"]);
+        assert_eq!(a, fingerprint_parts(["ab", "c"]));
+        assert_ne!(a, fingerprint_parts(["a", "bc"]));
+        assert_eq!(a.len(), 16);
+    }
+}

@@ -1,0 +1,145 @@
+//! Content-addressed model store (DESIGN.md §14).
+//!
+//! The serving stack used to identify a model by *where its checkpoint
+//! lives* — and BSQ training rewrites checkpoints in place (`GenStore`
+//! retention, snapshot/resume), so "same path" stopped meaning "same
+//! weights" the moment training kept running. The store makes identity
+//! content-based, the package-manager way:
+//!
+//! ```text
+//! <root>/
+//!   objects/<digest>.ckpt        # immutable, named by their own bytes
+//!   objects/<digest>.meta.json   # checkpoint meta sidecar, same key
+//!   manifest.json                # lockfile: model → pinned deploy triple
+//! ```
+//!
+//! Objects are immutable by construction: the filename *is* the digest of
+//! the content, so an object can never go stale — a new checkpoint is a
+//! new object under a new key. The manifest ([`manifest::Manifest`]) then
+//! pins each model name to an exact (weights-hash, precision-fingerprint,
+//! plan-fingerprint) triple, which is the unit of deploy: flip the pin,
+//! and the serve layer hot-swaps to the new object at a batch boundary.
+//! [`lru::ByteLru`] bounds how many cold `BoundPlan`s stay resident.
+
+pub mod digest;
+pub mod lru;
+pub mod manifest;
+
+pub use digest::{digest_file, digest_hex, Digest256};
+pub use lru::ByteLru;
+pub use manifest::{plan_fingerprint, DeployPin, Manifest};
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::checkpoint;
+
+/// On-disk content-addressed store plus its manifest.
+pub struct ModelStore {
+    root: PathBuf,
+    manifest: Manifest,
+}
+
+impl ModelStore {
+    /// Open (creating if needed) the store rooted at `root`.
+    pub fn open(root: impl Into<PathBuf>) -> Result<ModelStore> {
+        let root = root.into();
+        std::fs::create_dir_all(root.join("objects"))
+            .with_context(|| format!("creating store at {}", root.display()))?;
+        let manifest = Manifest::load(&root.join("manifest.json"))?;
+        Ok(ModelStore { root, manifest })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    /// Path an object with this digest lives at (whether or not present).
+    pub fn object_path(&self, digest: &str) -> PathBuf {
+        self.root.join("objects").join(format!("{digest}.ckpt"))
+    }
+
+    /// Ingest a checkpoint file: hash its bytes, commit them (and the
+    /// `.meta.json` sidecar, if present) under `objects/<digest>`, and
+    /// return the digest. Idempotent — re-adding identical bytes lands on
+    /// the existing object and is a no-op copy.
+    pub fn put_checkpoint(&self, src: &Path) -> Result<String> {
+        let key = digest_file(src)?;
+        let dst = self.object_path(&key);
+        if !dst.exists() {
+            let bytes =
+                std::fs::read(src).with_context(|| format!("reading {}", src.display()))?;
+            checkpoint::commit_bytes(&dst, &bytes)
+                .with_context(|| format!("storing object {key}"))?;
+        }
+        let meta_src = src.with_extension("meta.json");
+        let meta_dst = dst.with_extension("meta.json");
+        if meta_src.exists() && !meta_dst.exists() {
+            let bytes = std::fs::read(&meta_src)
+                .with_context(|| format!("reading {}", meta_src.display()))?;
+            checkpoint::commit_bytes(&meta_dst, &bytes)
+                .with_context(|| format!("storing meta for object {key}"))?;
+        }
+        Ok(key)
+    }
+
+    /// Pin a deploy and persist the manifest in one step. The object must
+    /// already be in the store — pinning a hash the store can't serve
+    /// would turn into a load-time error at the worst possible moment.
+    pub fn pin_deploy(&mut self, pin: DeployPin) -> Result<Option<DeployPin>> {
+        let obj = self.object_path(&pin.weights_hash);
+        if !obj.exists() {
+            bail!(
+                "refusing to pin {:?} → {}: object not in store (put_checkpoint first)",
+                pin.model,
+                pin.weights_hash
+            );
+        }
+        let replaced = self.manifest.pin(pin)?;
+        self.manifest.save(&self.manifest_path())?;
+        Ok(replaced)
+    }
+
+    /// Resolve a model name to its pinned deploy and the object's path.
+    /// Missing pin and missing object are both hard errors — the store
+    /// never falls back to "whatever file is newest".
+    pub fn resolve(&self, model: &str) -> Result<(DeployPin, PathBuf)> {
+        let pin = self.manifest.resolve(model)?.clone();
+        let path = self.object_path(&pin.weights_hash);
+        if !path.exists() {
+            bail!(
+                "manifest pins {model:?} → {} but the object is missing from {}",
+                pin.weights_hash,
+                self.root.display()
+            );
+        }
+        Ok((pin, path))
+    }
+
+    /// Digests of all objects present, sorted (diagnostics / `store list`).
+    pub fn objects(&self) -> Vec<String> {
+        let Ok(entries) = std::fs::read_dir(self.root.join("objects")) else {
+            return Vec::new();
+        };
+        let mut keys: Vec<String> = entries
+            .flatten()
+            .filter_map(|e| {
+                let name = e.file_name();
+                let name = name.to_str()?;
+                let key = name.strip_suffix(".ckpt")?;
+                digest::looks_like_digest(key).then(|| key.to_string())
+            })
+            .collect();
+        keys.sort();
+        keys
+    }
+}

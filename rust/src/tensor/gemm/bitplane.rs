@@ -112,6 +112,13 @@ impl BitPlaneMatrix {
         self.plane_pop.iter().filter(|&&p| p != 0).count()
     }
 
+    /// Heap bytes this matrix keeps resident (the bitsets dominate a
+    /// servable's footprint) — what the registry's byte-budgeted LRU
+    /// charges a cached `BoundPlan` for.
+    pub fn resident_bytes(&self) -> usize {
+        (self.pos.len() + self.neg.len() + self.plane_pop.len()) * std::mem::size_of::<u64>()
+    }
+
     /// `C = Xᵀ·W·δ` over the bitsets: `xt` is X *transposed*, `[K, M]`
     /// row-major (column `k` of X contiguous over the M batch rows), the
     /// result is `[N, M]` (output-major; `transpose` restores `[M, N]`).
