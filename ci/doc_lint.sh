@@ -1,0 +1,65 @@
+#!/usr/bin/env bash
+# Doc lint: every `DESIGN.md §N` reference in the docs, code comments,
+# tests, benches, and CI config must resolve to an actual `## §N` heading
+# in rust/DESIGN.md. Catches the classic drift where a section is
+# renumbered (or never written) but its references linger.
+#
+# Run from the repo root: bash ci/doc_lint.sh
+set -u
+
+cd "$(dirname "$0")/.."
+
+design=rust/DESIGN.md
+if [ ! -f "$design" ]; then
+    echo "doc-lint: $design missing" >&2
+    exit 1
+fi
+
+# The headings that exist, one section number per line.
+sections=$(grep -o '^## §[0-9]\+' "$design" | grep -o '[0-9]\+' | sort -un)
+if [ -z "$sections" ]; then
+    echo "doc-lint: no '## §N' headings found in $design" >&2
+    exit 1
+fi
+
+# Everywhere references may live. rust/DESIGN.md itself is included:
+# cross-references between sections drift too.
+targets=(
+    README.md ROADMAP.md CHANGES.md ARCHITECTURE.md EXPERIMENTS.md
+    rust/CLI.md rust/DESIGN.md ci/baselines/README.md
+)
+refs_file=$(mktemp)
+trap 'rm -f "$refs_file"' EXIT
+
+for f in "${targets[@]}"; do
+    [ -f "$f" ] || continue
+    grep -Hno 'DESIGN\.md §[0-9]\+' "$f" >>"$refs_file" || true
+done
+grep -RHno 'DESIGN\.md §[0-9]\+' \
+    rust/src rust/tests rust/benches examples .github \
+    --include='*.rs' --include='*.yml' --include='*.yaml' \
+    >>"$refs_file" 2>/dev/null || true
+# ARCHITECTURE.md's subsystem table uses bare §N in its Design column.
+grep -Hno '§[0-9]\+' ARCHITECTURE.md >>"$refs_file" || true
+
+status=0
+checked=0
+while IFS= read -r line; do
+    n=$(printf '%s' "$line" | grep -o '§[0-9]\+$' | tr -d '§')
+    [ -n "$n" ] || continue
+    checked=$((checked + 1))
+    if ! printf '%s\n' "$sections" | grep -qx "$n"; then
+        echo "doc-lint: dangling reference to DESIGN.md §$n at ${line%:*}" >&2
+        status=1
+    fi
+done <"$refs_file"
+
+if [ "$checked" -eq 0 ]; then
+    echo "doc-lint: found no DESIGN.md § references at all — pattern broken?" >&2
+    exit 1
+fi
+
+if [ "$status" -eq 0 ]; then
+    echo "doc-lint: $checked DESIGN.md § references all resolve ($(printf '%s' "$sections" | tr '\n' ' ' | sed 's/ $//' | sed 's/ /, §/g; s/^/§/') exist)"
+fi
+exit $status

@@ -13,6 +13,11 @@
 //!   serve-bench closed-loop batched-serving sweep → BENCH_serve.json;
 //!               with --swap, each cell hot-swaps to a second checkpoint
 //!               mid-run and records the swap telemetry
+//!   ingress-bench
+//!               boot the HTTP ingress (DESIGN.md §15) and drive it with
+//!               an open-loop Poisson load sweep past saturation: reports
+//!               the latency/throughput knee, shed rates, and per-tenant
+//!               quota behaviour, merged into BENCH_serve.json
 //!   store       content-addressed model store: `add` ingests a checkpoint
 //!               (keyed by its own bytes) and pins the deploy, `list`
 //!               shows objects + pins, `resolve` prints a model's pin
@@ -38,6 +43,8 @@
 //!   bsq-repro hawq --model resnet20
 //!   bsq-repro serve-bench --model tinynet --batches 1,8,32 --workers 1,4
 //!   bsq-repro serve-bench --model tinynet --swap
+//!   bsq-repro ingress-bench --model tinynet --load-factors 0.5,1.0,1.5 \
+//!       --quota-rps 50 --conns 16
 //!   bsq-repro store add --root results/store --model tinynet \
 //!       --checkpoint results/ckpt/serve.ckpt
 //!   bsq-repro store resolve --root results/store --model tinynet
@@ -68,9 +75,9 @@ fn main() {
 
 fn usage() -> ! {
     eprintln!(
-        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench|store|bench-diff> \
-         [flags]\n\
-         run `bsq-repro <cmd> --help` conceptually via README.md §CLI"
+        "usage: bsq-repro <bsq|dorefa|hawq|eval|experiment|info|serve-bench|ingress-bench|store|\
+         bench-diff> [flags]\n\
+         every subcommand and flag is documented in rust/CLI.md"
     );
     std::process::exit(2);
 }
@@ -89,6 +96,7 @@ fn run() -> Result<()> {
         "experiment" => cmd_experiment(args),
         "info" => cmd_info(args),
         "serve-bench" => cmd_serve_bench(args),
+        "ingress-bench" => cmd_ingress_bench(args),
         "store" => cmd_store(args),
         "bench-diff" => cmd_bench_diff(args),
         _ => usage(),
@@ -418,6 +426,176 @@ fn cmd_serve_bench(mut args: Args) -> Result<()> {
         }
         None => serve::write_bench_json(&json)?,
     };
+    println!("wrote {}", path.display());
+    Ok(())
+}
+
+/// `ingress-bench` — boot the HTTP ingress on a loopback port and sweep an
+/// open-loop Poisson load across it (DESIGN.md §15): calibrate capacity
+/// closed-loop, then offer `--load-factors` multiples of it and record
+/// coordinated-omission-corrected latency, shed rates, and the saturation
+/// knee into the `BENCH_serve.json` record (merging with a prior
+/// `serve-bench` run when one exists, so both sweeps gate together).
+fn cmd_ingress_bench(mut args: Args) -> Result<()> {
+    let model = args.str_or("model", "tinynet")?;
+    let ckpt = args.opt_str("checkpoint")?;
+    let bits: usize = args.get_or("bits", 8)?; // synthesis precision
+    let act_bits: usize = args.get_or("act-bits", 4)?;
+    let seed: u64 = args.get_or("seed", 0)?;
+    let workers: usize = args.get_or("workers", 4)?;
+    let max_batch: usize = args.get_or("max-batch", 8)?;
+    let max_wait_ms: f64 = args.get_or("max-wait-ms", 2.0)?;
+    let requests: usize = args.get_or("requests", 512)?;
+    let calib_requests: usize = args.get_or("calib-requests", 256)?;
+    let conns: usize = args.get_or("conns", 16)?;
+    let factors = args
+        .list::<f64>("load-factors")?
+        .unwrap_or_else(|| vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5]);
+    let tenants: usize = args.get_or("tenants", 4)?;
+    let high_frac: f64 = args.get_or("high-frac", 0.1)?;
+    let quota_rps: Option<f64> = args.opt("quota-rps")?;
+    let quota_burst: f64 = args.get_or("quota-burst", 32.0)?;
+    let reserve_frac: f64 = args.get_or("reserve-frac", 0.25)?;
+    let retry_after_ms: u64 = args.get_or("retry-after-ms", 250)?;
+    let out = args.opt_str("out")?;
+    install_faults(&mut args)?;
+    args.finish()?;
+    if factors.is_empty() || requests == 0 || calib_requests == 0 || conns == 0 {
+        bail!("need non-empty --load-factors and --requests/--calib-requests/--conns > 0");
+    }
+    if factors.iter().any(|&f| !(f.is_finite() && f > 0.0)) {
+        bail!("--load-factors must be positive");
+    }
+
+    let engine = Engine::cpu()?;
+    let ckpt_path = match ckpt {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let p = PathBuf::from(format!("results/ckpt/serve_{model}_b{bits}_s{seed}.ckpt"));
+            if !p.exists() {
+                println!(
+                    "no --checkpoint given; synthesizing a quantized {model} checkpoint at {}",
+                    p.display()
+                );
+                serve::synthesize_quantized_checkpoint(&engine, &model, bits, seed, &p)?;
+            }
+            p
+        }
+    };
+    // Load once up front for the precision map and the load generator's
+    // sample geometry; the ingress registry re-loads by content digest.
+    let registry = serve::Registry::new(&engine);
+    let servable = registry.load(&model, &ckpt_path, act_bits, 8)?;
+    print_precision_map(&servable);
+
+    let routes = vec![serve::RouteSpec {
+        model: model.clone(),
+        source: serve::RouteSource::Checkpoint(ckpt_path),
+        act_bits,
+        act_first_last: 8,
+    }];
+    let pool_cfg = serve::PoolConfig::new(
+        workers.max(1),
+        serve::BatchPolicy {
+            max_batch: max_batch.max(1),
+            max_wait: Duration::from_secs_f64(max_wait_ms.max(0.0) / 1e3),
+        },
+    );
+    let ingress_cfg = serve::IngressConfig {
+        // Headroom over the client pool so load-gen reconnects never trip
+        // the connection bound.
+        max_conns: conns * 2 + 8,
+        admission: serve::ingress::admission::AdmissionCfg {
+            reserve_frac,
+            quota: quota_rps.map(|r| serve::ingress::admission::QuotaCfg {
+                rate_per_sec: r,
+                burst: quota_burst,
+            }),
+            retry_after: Duration::from_millis(retry_after_ms),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let lg = serve::ingress::loadgen::LoadGenCfg {
+        model: model.clone(),
+        sample_elems: servable.sample_elems(),
+        conns,
+        tenants: tenants.max(1),
+        high_frac: high_frac.clamp(0.0, 1.0),
+        seed,
+    };
+
+    println!(
+        "== ingress-bench: open-loop sweep ({requests} requests per point, {} workers × batch {}) ==",
+        pool_cfg.workers, pool_cfg.policy.max_batch
+    );
+    let (report, sweep) = serve::run_ingress(&engine, &routes, &pool_cfg, &ingress_cfg, |h| {
+        let addr = h.addr();
+        println!("ingress listening on {addr}");
+        let calibrated = serve::ingress::loadgen::calibrate(addr, &lg, calib_requests)?;
+        println!("calibrated capacity ≈ {calibrated:.0} req/s ({calib_requests} closed-loop requests)");
+        let mut points = Vec::new();
+        for &f in &factors {
+            let label = format!("{f:.2}x");
+            let p = serve::ingress::loadgen::run_point(addr, &lg, &label, calibrated * f, requests)?;
+            println!(
+                "offered {:>8.1} rps ({label}): achieved {:>8.1} rps, ok {}/{}, shed {}+{}, \
+                 err {}, mean {:.0}µs p99 {:.0}µs{}",
+                p.offered_rps,
+                p.achieved_rps,
+                p.ok,
+                p.requests,
+                p.shed_queue,
+                p.shed_quota,
+                p.errors,
+                p.mean_us,
+                p.p99_us,
+                if p.kept_up() { "" } else { "  [over knee]" }
+            );
+            points.push(p);
+        }
+        anyhow::Ok((calibrated, points))
+    })?;
+    let (calibrated, points) = sweep?;
+    let knee = serve::ingress::loadgen::find_knee(&points);
+    match knee {
+        Some(k) => println!(
+            "knee: {} offered {:.1} rps → achieved {:.1} rps",
+            points[k].label, points[k].offered_rps, points[k].achieved_rps
+        ),
+        None => println!("knee: none — every offered point overloaded the server"),
+    }
+    println!(
+        "ingress totals: {} conns ({} rejected), {} served, {} shed-queue, {} shed-quota, \
+         {} rejected, {} failed",
+        report.conns,
+        report.conns_rejected,
+        report.served,
+        report.shed_queue,
+        report.shed_quota,
+        report.rejected,
+        report.failed
+    );
+
+    let path = match out {
+        Some(p) => PathBuf::from(p),
+        None => std::env::var_os("BSQ_BENCH_OUT")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("BENCH_serve.json")),
+    };
+    let existing = std::fs::read_to_string(&path)
+        .ok()
+        .and_then(|s| bsq::util::json::parse(&s).ok());
+    let json = serve::ingress::loadgen::merge_bench_json(
+        existing,
+        &model,
+        servable.weight_bits(),
+        calibrated,
+        &points,
+        knee,
+        &report,
+    );
+    std::fs::write(&path, json.to_string_pretty() + "\n")?;
     println!("wrote {}", path.display());
     Ok(())
 }

@@ -1,0 +1,247 @@
+//! Admission control for the ingress (DESIGN.md §15): per-tenant
+//! token-bucket quotas and priority lanes layered over the pool's bounded
+//! request queue. Decisions are made *before* a request touches the queue,
+//! in a fixed order — quota first (cheapest, per-tenant fairness), then
+//! the lane check against queue occupancy, then the queue's own `try_send`
+//! as the race-safe backstop — so an overloaded server does constant work
+//! per rejected request.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Request priority, parsed from the `x-bsq-priority` header. Lanes are
+/// *admission* lanes, not dispatch lanes: a high-priority request may use
+/// the reserved queue headroom, but once admitted it rides the same FIFO
+/// batcher as everyone else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    Normal,
+    High,
+}
+
+impl Priority {
+    /// Parse the header value; absent means `Normal`, anything outside
+    /// {`normal`, `high`} is a client error (400, not a silent default).
+    pub fn parse(header: Option<&str>) -> Result<Priority, String> {
+        match header.map(|h| h.to_ascii_lowercase()) {
+            None => Ok(Priority::Normal),
+            Some(h) if h == "normal" => Ok(Priority::Normal),
+            Some(h) if h == "high" => Ok(Priority::High),
+            Some(h) => Err(format!("unknown priority: {h:.20}")),
+        }
+    }
+}
+
+/// Per-tenant token-bucket quota: sustained `rate_per_sec` with bursts up
+/// to `burst` requests.
+#[derive(Debug, Clone, Copy)]
+pub struct QuotaCfg {
+    pub rate_per_sec: f64,
+    pub burst: f64,
+}
+
+/// Admission knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionCfg {
+    /// Fraction of the queue capacity reserved for high-priority traffic:
+    /// normal requests are shed once occupancy reaches
+    /// `capacity − ceil(capacity × reserve_frac)`, high-priority ones only
+    /// at full capacity. Clamped to `[0, 0.9]`.
+    pub reserve_frac: f64,
+    /// Per-tenant quota; `None` disables quota checks entirely.
+    pub quota: Option<QuotaCfg>,
+    /// `Retry-After` hint attached to queue-occupancy sheds (quota sheds
+    /// compute their own hint from the bucket deficit).
+    pub retry_after: Duration,
+    /// Bound on the tenant-bucket table; beyond it the stalest bucket is
+    /// evicted, so an attacker rotating tenant names cannot grow memory.
+    pub max_tenants: usize,
+}
+
+impl Default for AdmissionCfg {
+    fn default() -> AdmissionCfg {
+        AdmissionCfg {
+            reserve_frac: 0.25,
+            quota: None,
+            retry_after: Duration::from_millis(250),
+            max_tenants: 1024,
+        }
+    }
+}
+
+/// Outcome of a quota check.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    Admit,
+    /// Over quota; retry once the bucket has refilled one token.
+    Shed { retry_after: Duration },
+}
+
+struct Bucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Shared admission state: the config plus the per-tenant bucket table.
+/// One instance per ingress, shared across connection threads.
+pub struct AdmissionCtl {
+    cfg: AdmissionCfg,
+    buckets: Mutex<BTreeMap<String, Bucket>>,
+}
+
+impl AdmissionCtl {
+    pub fn new(mut cfg: AdmissionCfg) -> AdmissionCtl {
+        cfg.reserve_frac = cfg.reserve_frac.clamp(0.0, 0.9);
+        if let Some(q) = &mut cfg.quota {
+            q.rate_per_sec = q.rate_per_sec.max(1e-6);
+            q.burst = q.burst.max(1.0);
+        }
+        cfg.max_tenants = cfg.max_tenants.max(1);
+        AdmissionCtl { cfg, buckets: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn cfg(&self) -> &AdmissionCfg {
+        &self.cfg
+    }
+
+    /// May a request of `prio` enter a queue currently `depth` deep out of
+    /// `capacity`? Normal traffic keeps `ceil(capacity × reserve_frac)`
+    /// slots free for high-priority traffic (at least one normal slot
+    /// always remains, so a misconfigured reserve cannot starve the lane
+    /// entirely).
+    pub fn lane_open(&self, depth: usize, capacity: usize, prio: Priority) -> bool {
+        match prio {
+            Priority::High => depth < capacity,
+            Priority::Normal => {
+                let reserve = (capacity as f64 * self.cfg.reserve_frac).ceil() as usize;
+                depth < capacity.saturating_sub(reserve).max(1)
+            }
+        }
+    }
+
+    /// Token-bucket check for `tenant` at wall-clock `now` (injected so
+    /// tests drive deterministic timelines). Admitting costs one token;
+    /// an empty bucket sheds with a hint sized to the refill deficit.
+    pub fn check_quota_at(&self, tenant: &str, now: Instant) -> Decision {
+        let Some(q) = self.cfg.quota else { return Decision::Admit };
+        let mut buckets = self.buckets.lock().unwrap_or_else(|e| e.into_inner());
+        if !buckets.contains_key(tenant) && buckets.len() >= self.cfg.max_tenants {
+            // Evict the stalest bucket — the tenant least recently seen.
+            if let Some(oldest) = buckets
+                .iter()
+                .min_by_key(|(_, b)| b.last)
+                .map(|(k, _)| k.clone())
+            {
+                buckets.remove(&oldest);
+            }
+        }
+        let bucket = buckets
+            .entry(tenant.to_string())
+            .or_insert_with(|| Bucket { tokens: q.burst, last: now });
+        let dt = now.saturating_duration_since(bucket.last).as_secs_f64();
+        bucket.tokens = (bucket.tokens + dt * q.rate_per_sec).min(q.burst);
+        bucket.last = now;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            Decision::Admit
+        } else {
+            let secs = (1.0 - bucket.tokens) / q.rate_per_sec;
+            Decision::Shed { retry_after: Duration::from_secs_f64(secs.min(3600.0)) }
+        }
+    }
+
+    pub fn check_quota(&self, tenant: &str) -> Decision {
+        self.check_quota_at(tenant, Instant::now())
+    }
+}
+
+/// Tenant names ride a header; bound and sanitize them before they become
+/// bucket-table keys.
+pub fn valid_tenant(name: &str) -> bool {
+    !name.is_empty()
+        && name.len() <= 64
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.' | b'@'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctl(quota: Option<QuotaCfg>, reserve: f64) -> AdmissionCtl {
+        AdmissionCtl::new(AdmissionCfg { reserve_frac: reserve, quota, ..Default::default() })
+    }
+
+    #[test]
+    fn lane_reserves_headroom_for_high_priority() {
+        let c = ctl(None, 0.25);
+        // capacity 4, reserve ceil(1) = 1: normal admitted below depth 3,
+        // high below depth 4.
+        assert!(c.lane_open(2, 4, Priority::Normal));
+        assert!(!c.lane_open(3, 4, Priority::Normal));
+        assert!(c.lane_open(3, 4, Priority::High));
+        assert!(!c.lane_open(4, 4, Priority::High));
+    }
+
+    #[test]
+    fn lane_never_starves_normal_traffic() {
+        let c = ctl(None, 0.9); // clamp cap; reserve would eat everything
+        assert!(c.lane_open(0, 2, Priority::Normal));
+    }
+
+    #[test]
+    fn bucket_burst_then_refill() {
+        let c = ctl(Some(QuotaCfg { rate_per_sec: 2.0, burst: 2.0 }), 0.0);
+        let t0 = Instant::now();
+        assert_eq!(c.check_quota_at("a", t0), Decision::Admit);
+        assert_eq!(c.check_quota_at("a", t0), Decision::Admit);
+        let shed = c.check_quota_at("a", t0);
+        match shed {
+            Decision::Shed { retry_after } => {
+                // Empty bucket at 2 tokens/s: one token is 500ms away.
+                assert!(retry_after > Duration::from_millis(400));
+                assert!(retry_after <= Duration::from_millis(500));
+            }
+            Decision::Admit => panic!("third burst request must shed"),
+        }
+        // Other tenants are unaffected.
+        assert_eq!(c.check_quota_at("b", t0), Decision::Admit);
+        // 600ms later one token has refilled.
+        let t1 = t0 + Duration::from_millis(600);
+        assert_eq!(c.check_quota_at("a", t1), Decision::Admit);
+        assert!(matches!(c.check_quota_at("a", t1), Decision::Shed { .. }));
+    }
+
+    #[test]
+    fn bucket_table_is_bounded() {
+        let c = AdmissionCtl::new(AdmissionCfg {
+            quota: Some(QuotaCfg { rate_per_sec: 1.0, burst: 1.0 }),
+            max_tenants: 4,
+            ..Default::default()
+        });
+        let t0 = Instant::now();
+        for i in 0..32u64 {
+            c.check_quota_at(&format!("tenant-{i}"), t0 + Duration::from_millis(i));
+        }
+        assert!(c.buckets.lock().unwrap().len() <= 4);
+    }
+
+    #[test]
+    fn tenant_names_are_sanitized() {
+        assert!(valid_tenant("team-a_01.svc@prod"));
+        assert!(!valid_tenant(""));
+        assert!(!valid_tenant(&"x".repeat(65)));
+        assert!(!valid_tenant("bad tenant"));
+        assert!(!valid_tenant("bad\r\nheader"));
+    }
+
+    #[test]
+    fn priority_parses_strictly() {
+        assert_eq!(Priority::parse(None), Ok(Priority::Normal));
+        assert_eq!(Priority::parse(Some("HIGH")), Ok(Priority::High));
+        assert_eq!(Priority::parse(Some("normal")), Ok(Priority::Normal));
+        assert!(Priority::parse(Some("urgent")).is_err());
+    }
+}

@@ -1,0 +1,551 @@
+//! Minimal HTTP/1.1 framing for the ingress, hand-rolled on `std::io`
+//! (DESIGN.md §15). Server side: [`read_request`] parses one request off a
+//! `BufRead` under strict [`Limits`] — every cap and malformation maps to
+//! a precise [`RecvError`] so the connection handler can answer 400 / 408 /
+//! 413 / 431 instead of hanging or buffering unboundedly. Client side:
+//! [`read_response`] parses one response with the same capped reader, used
+//! by the open-loop load generator and the integration tests.
+//!
+//! Scope is deliberately narrow: `Content-Length` bodies only (chunked
+//! transfer coding is rejected with 400), no continuation lines, no
+//! percent-decoding. Pipelining needs no special handling — requests are
+//! framed sequentially off the same reader, so back-to-back requests in
+//! one TCP segment are answered in order.
+
+use std::fmt;
+use std::io::{self, BufRead, Read, Write};
+use std::time::Duration;
+
+/// Parse limits. Every byte read off the socket is accounted against one
+/// of these caps *before* it is buffered, so a hostile peer cannot make
+/// the server allocate more than `max_line + max_body` per connection.
+#[derive(Debug, Clone)]
+pub struct Limits {
+    /// Cap on the request line and on each header line (bytes, excluding
+    /// the CRLF). Overflow → 431.
+    pub max_line: usize,
+    /// Cap on the number of header lines. Overflow → 431.
+    pub max_headers: usize,
+    /// Cap on `Content-Length`. Overflow → 413, checked before the body
+    /// is read.
+    pub max_body: usize,
+    /// Socket read timeout. A timeout *between* requests is an idle tick
+    /// (the conn loop re-checks shutdown); a timeout *inside* a request is
+    /// a stalled peer → 408.
+    pub read_timeout: Duration,
+}
+
+impl Default for Limits {
+    fn default() -> Limits {
+        Limits {
+            max_line: 8 * 1024,
+            max_headers: 64,
+            max_body: 1 << 20,
+            read_timeout: Duration::from_millis(1000),
+        }
+    }
+}
+
+/// Why [`read_request`] / [`read_response`] did not produce a message.
+#[derive(Debug)]
+pub enum RecvError {
+    /// Peer closed the connection cleanly between messages.
+    Closed,
+    /// Read timed out with no byte of a new message consumed — an idle
+    /// keep-alive connection, not an error.
+    IdleTimeout,
+    /// Read timed out mid-message: the peer stalled. Maps to 408.
+    Stalled,
+    /// Syntactically invalid message. Maps to 400.
+    Malformed(String),
+    /// More than `max_headers` header lines. Maps to 431.
+    TooManyHeaders,
+    /// Request line or a header line over `max_line`. Maps to 431.
+    LineTooLong,
+    /// Declared `Content-Length` over `max_body`. Maps to 413.
+    BodyTooLarge(usize),
+    /// Method outside the supported set (GET/POST). Maps to 405.
+    MethodNotAllowed(String),
+    /// Transport error other than the mapped timeouts.
+    Io(io::Error),
+}
+
+impl RecvError {
+    /// The HTTP status this error maps to, when it maps to one at all.
+    /// `Closed`/`IdleTimeout`/`Io` return `None`: there is nobody to
+    /// answer, or the transport itself failed.
+    pub fn status(&self) -> Option<u16> {
+        match self {
+            RecvError::Closed | RecvError::IdleTimeout | RecvError::Io(_) => None,
+            RecvError::Stalled => Some(408),
+            RecvError::Malformed(_) => Some(400),
+            RecvError::TooManyHeaders | RecvError::LineTooLong => Some(431),
+            RecvError::BodyTooLarge(_) => Some(413),
+            RecvError::MethodNotAllowed(_) => Some(405),
+        }
+    }
+}
+
+impl fmt::Display for RecvError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RecvError::Closed => write!(f, "connection closed"),
+            RecvError::IdleTimeout => write!(f, "idle timeout"),
+            RecvError::Stalled => write!(f, "peer stalled mid-message"),
+            RecvError::Malformed(m) => write!(f, "malformed message: {m}"),
+            RecvError::TooManyHeaders => write!(f, "too many header lines"),
+            RecvError::LineTooLong => write!(f, "header line too long"),
+            RecvError::BodyTooLarge(n) => write!(f, "declared body of {n} bytes over cap"),
+            RecvError::MethodNotAllowed(m) => write!(f, "method {m} not allowed"),
+            RecvError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line without ever buffering
+/// more than `cap` bytes, built on `fill_buf`/`consume` so an attacker
+/// streaming an endless line is cut off at the cap instead of growing the
+/// buffer. `started` tracks whether any byte of the current *message* has
+/// been consumed — it decides idle-vs-stalled on timeout and
+/// closed-vs-truncated on EOF. Returns consumed byte count alongside the
+/// line (for wire accounting).
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    cap: usize,
+    started: &mut bool,
+    line: &mut Vec<u8>,
+) -> Result<usize, RecvError> {
+    line.clear();
+    let mut consumed = 0usize;
+    loop {
+        let buf = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                return Err(if *started { RecvError::Stalled } else { RecvError::IdleTimeout })
+            }
+            Err(e) => return Err(RecvError::Io(e)),
+        };
+        if buf.is_empty() {
+            return Err(if *started {
+                RecvError::Malformed("eof mid-message".into())
+            } else {
+                RecvError::Closed
+            });
+        }
+        *started = true;
+        match buf.iter().position(|&b| b == b'\n') {
+            Some(nl) => {
+                if line.len() + nl > cap {
+                    r.consume(nl + 1);
+                    return Err(RecvError::LineTooLong);
+                }
+                line.extend_from_slice(&buf[..nl]);
+                r.consume(nl + 1);
+                consumed += nl + 1;
+                if line.last() == Some(&b'\r') {
+                    line.pop();
+                }
+                return Ok(consumed);
+            }
+            None => {
+                let take = buf.len();
+                if line.len() + take > cap {
+                    r.consume(take);
+                    return Err(RecvError::LineTooLong);
+                }
+                line.extend_from_slice(buf);
+                r.consume(take);
+                consumed += take;
+            }
+        }
+    }
+}
+
+/// Read exactly `n` body bytes, mapping timeout → `Stalled` and early EOF
+/// → `Malformed`.
+fn read_body<R: Read>(r: &mut R, n: usize) -> Result<Vec<u8>, RecvError> {
+    let mut body = vec![0u8; n];
+    let mut filled = 0usize;
+    while filled < n {
+        match r.read(&mut body[filled..]) {
+            Ok(0) => return Err(RecvError::Malformed("eof inside body".into())),
+            Ok(k) => filled += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => return Err(RecvError::Stalled),
+            Err(e) => return Err(RecvError::Io(e)),
+        }
+    }
+    Ok(body)
+}
+
+fn valid_header_name(name: &str) -> bool {
+    !name.is_empty()
+        && name
+            .bytes()
+            .all(|b| b.is_ascii_alphanumeric() || matches!(b, b'-' | b'_' | b'.'))
+}
+
+/// Parse `lines.count() <= max_headers` header lines off `r` into
+/// lowercase-name pairs. Shared by request and response parsing.
+fn read_headers<R: BufRead>(
+    r: &mut R,
+    limits: &Limits,
+    started: &mut bool,
+    wire: &mut usize,
+) -> Result<Vec<(String, String)>, RecvError> {
+    let mut headers = Vec::new();
+    let mut line = Vec::new();
+    loop {
+        *wire += read_line_capped(r, limits.max_line, started, &mut line)?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        if headers.len() >= limits.max_headers {
+            return Err(RecvError::TooManyHeaders);
+        }
+        if line[0] == b' ' || line[0] == b'\t' {
+            // obs-fold continuation lines are long deprecated and a
+            // smuggling vector; reject outright.
+            return Err(RecvError::Malformed("folded header line".into()));
+        }
+        let text = String::from_utf8_lossy(&line);
+        let Some((name, value)) = text.split_once(':') else {
+            return Err(RecvError::Malformed(format!("header without colon: {text:.60}")));
+        };
+        if !valid_header_name(name) {
+            return Err(RecvError::Malformed(format!("invalid header name: {name:.60}")));
+        }
+        headers.push((name.to_ascii_lowercase(), value.trim().to_string()));
+    }
+}
+
+/// `Content-Length` resolution: absent → 0, duplicates must agree,
+/// anything non-numeric is malformed, over-cap is `BodyTooLarge` *before*
+/// any body byte is read.
+fn content_length(headers: &[(String, String)], limits: &Limits) -> Result<usize, RecvError> {
+    let mut len: Option<usize> = None;
+    for (name, value) in headers {
+        if name == "transfer-encoding" {
+            return Err(RecvError::Malformed("transfer-encoding not supported".into()));
+        }
+        if name == "content-length" {
+            let v: usize = value
+                .parse()
+                .map_err(|_| RecvError::Malformed(format!("bad content-length: {value:.60}")))?;
+            if let Some(prev) = len {
+                if prev != v {
+                    return Err(RecvError::Malformed("conflicting content-length".into()));
+                }
+            }
+            len = Some(v);
+        }
+    }
+    let n = len.unwrap_or(0);
+    if n > limits.max_body {
+        return Err(RecvError::BodyTooLarge(n));
+    }
+    Ok(n)
+}
+
+/// One parsed request. Header names are lowercased; `keep_alive` already
+/// folds in the HTTP version default (1.1 on unless `Connection: close`,
+/// 1.0 off unless `Connection: keep-alive`).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: Option<String>,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+    pub keep_alive: bool,
+    /// Total bytes this request consumed off the wire.
+    pub wire_bytes: usize,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse one request off `r`. Blocking up to `limits.read_timeout` per
+/// socket read; see [`RecvError`] for the status mapping of each failure.
+pub fn read_request<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Request, RecvError> {
+    let mut started = false;
+    let mut wire = 0usize;
+    let mut line = Vec::new();
+    // Tolerate a little CRLF padding between pipelined requests
+    // (RFC 9112 §2.2 robustness) but never an unbounded stream of it.
+    for _ in 0..4 {
+        wire += read_line_capped(r, limits.max_line, &mut started, &mut line)?;
+        if !line.is_empty() {
+            break;
+        }
+        started = false;
+    }
+    if line.is_empty() {
+        return Err(RecvError::Malformed("blank request line".into()));
+    }
+    let text = String::from_utf8_lossy(&line).into_owned();
+    let mut parts = text.split(' ');
+    let (method, target, version) = match (parts.next(), parts.next(), parts.next(), parts.next())
+    {
+        (Some(m), Some(t), Some(v), None) => (m, t, v),
+        _ => return Err(RecvError::Malformed(format!("bad request line: {text:.80}"))),
+    };
+    if version != "HTTP/1.1" && version != "HTTP/1.0" {
+        return Err(RecvError::Malformed(format!("unsupported version: {version:.20}")));
+    }
+    if method.is_empty() || !method.bytes().all(|b| b.is_ascii_uppercase()) {
+        return Err(RecvError::Malformed(format!("bad method: {method:.20}")));
+    }
+    if method != "GET" && method != "POST" {
+        return Err(RecvError::MethodNotAllowed(method.to_string()));
+    }
+    if !target.starts_with('/') {
+        return Err(RecvError::Malformed(format!("bad request target: {target:.80}")));
+    }
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), Some(q.to_string())),
+        None => (target.to_string(), None),
+    };
+
+    let headers = read_headers(r, limits, &mut started, &mut wire)?;
+    let body_len = content_length(&headers, limits)?;
+    let body = read_body(r, body_len)?;
+    wire += body_len;
+
+    let connection = headers
+        .iter()
+        .find(|(n, _)| n == "connection")
+        .map(|(_, v)| v.to_ascii_lowercase())
+        .unwrap_or_default();
+    let keep_alive = if version == "HTTP/1.1" {
+        !connection.split(',').any(|t| t.trim() == "close")
+    } else {
+        connection.split(',').any(|t| t.trim() == "keep-alive")
+    };
+
+    Ok(Request { method: method.to_string(), path, query, headers, body, keep_alive, wire_bytes: wire })
+}
+
+/// One response — produced by handlers on the server side, parsed back by
+/// [`read_response`] on the client side (header names lowercased there).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn new(status: u16) -> Response {
+        Response { status, headers: Vec::new(), body: Vec::new() }
+    }
+
+    /// JSON body (`Content-Type: application/json`).
+    pub fn json(status: u16, v: &crate::util::json::Json) -> Response {
+        let mut r = Response::new(status);
+        r.body = v.to_string_compact().into_bytes();
+        r.headers.push(("content-type".into(), "application/json".into()));
+        r
+    }
+
+    /// Raw bytes body (`Content-Type: application/octet-stream`).
+    pub fn octets(status: u16, body: Vec<u8>) -> Response {
+        let mut r = Response::new(status);
+        r.body = body;
+        r.headers.push(("content-type".into(), "application/octet-stream".into()));
+        r
+    }
+
+    /// Machine-readable error body: `{"error": code, "message": msg}`.
+    pub fn error(status: u16, code: &str, msg: &str) -> Response {
+        use crate::util::json::Json;
+        Response::json(
+            status,
+            &Json::Obj(vec![
+                ("error".into(), Json::Str(code.into())),
+                ("message".into(), Json::Str(msg.into())),
+            ]),
+        )
+    }
+
+    /// Builder-style extra header.
+    pub fn header(mut self, name: &str, value: impl Into<String>) -> Response {
+        self.headers.push((name.to_ascii_lowercase(), value.into()));
+        self
+    }
+
+    pub fn header_value(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    pub fn reason(status: u16) -> &'static str {
+        match status {
+            200 => "OK",
+            400 => "Bad Request",
+            404 => "Not Found",
+            405 => "Method Not Allowed",
+            408 => "Request Timeout",
+            413 => "Content Too Large",
+            429 => "Too Many Requests",
+            431 => "Request Header Fields Too Large",
+            500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            _ => "Response",
+        }
+    }
+
+    /// Serialize onto `w` (one flush). Returns bytes written. The server
+    /// always states framing explicitly: `Content-Length` plus a
+    /// `Connection` header matching what the conn loop will actually do.
+    pub fn write_to<W: Write>(&self, w: &mut W, keep_alive: bool) -> io::Result<usize> {
+        let mut head = format!("HTTP/1.1 {} {}\r\n", self.status, Response::reason(self.status));
+        for (name, value) in &self.headers {
+            head.push_str(name);
+            head.push_str(": ");
+            head.push_str(value);
+            head.push_str("\r\n");
+        }
+        head.push_str(&format!("content-length: {}\r\n", self.body.len()));
+        head.push_str(if keep_alive { "connection: keep-alive\r\n" } else { "connection: close\r\n" });
+        head.push_str("\r\n");
+        w.write_all(head.as_bytes())?;
+        w.write_all(&self.body)?;
+        w.flush()?;
+        Ok(head.len() + self.body.len())
+    }
+}
+
+/// Client-side: parse one response off `r` (status line + headers +
+/// `Content-Length` body) under the same caps. Used by the load generator
+/// and tests; `IdleTimeout`/`Stalled` semantics mirror [`read_request`].
+pub fn read_response<R: BufRead>(r: &mut R, limits: &Limits) -> Result<Response, RecvError> {
+    let mut started = false;
+    let mut wire = 0usize;
+    let mut line = Vec::new();
+    read_line_capped(r, limits.max_line, &mut started, &mut line)?;
+    let text = String::from_utf8_lossy(&line).into_owned();
+    let mut parts = text.splitn(3, ' ');
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| RecvError::Malformed(format!("bad status line: {text:.80}")))?,
+        _ => return Err(RecvError::Malformed(format!("bad status line: {text:.80}"))),
+    };
+    let headers = read_headers(r, limits, &mut started, &mut wire)?;
+    let body_len = content_length(&headers, limits)?;
+    let body = read_body(r, body_len)?;
+    Ok(Response { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(raw: &[u8]) -> Result<Request, RecvError> {
+        read_request(&mut Cursor::new(raw.to_vec()), &Limits::default())
+    }
+
+    #[test]
+    fn parses_get_and_query() {
+        let r = req(b"GET /v1/models?verbose=1 HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        assert_eq!(r.method, "GET");
+        assert_eq!(r.path, "/v1/models");
+        assert_eq!(r.query.as_deref(), Some("verbose=1"));
+        assert!(r.keep_alive);
+        assert_eq!(r.header("host"), Some("x"));
+    }
+
+    #[test]
+    fn parses_post_body_and_counts_wire_bytes() {
+        let raw = b"POST /p HTTP/1.1\r\ncontent-length: 4\r\n\r\nabcd";
+        let r = req(raw).unwrap();
+        assert_eq!(r.body, b"abcd");
+        assert_eq!(r.wire_bytes, raw.len());
+    }
+
+    #[test]
+    fn connection_close_and_http10_defaults() {
+        assert!(!req(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap().keep_alive);
+        assert!(!req(b"GET / HTTP/1.0\r\n\r\n").unwrap().keep_alive);
+        assert!(req(b"GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap().keep_alive);
+    }
+
+    #[test]
+    fn malformed_requests_map_to_400() {
+        for raw in [
+            b"GARBAGE\r\n\r\n".as_slice(),
+            b"GET / HTTP/2.0\r\n\r\n".as_slice(),
+            b"GET  / HTTP/1.1\r\n\r\n".as_slice(),
+            b"GET noslash HTTP/1.1\r\n\r\n".as_slice(),
+            b"GET / HTTP/1.1\r\nno colon here\r\n\r\n".as_slice(),
+            b"GET / HTTP/1.1\r\n a: folded\r\n\r\n".as_slice(),
+            b"POST / HTTP/1.1\r\ncontent-length: nan\r\n\r\n".as_slice(),
+            b"POST / HTTP/1.1\r\ncontent-length: 2\r\ncontent-length: 3\r\n\r\nab".as_slice(),
+            b"POST / HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n".as_slice(),
+        ] {
+            assert_eq!(req(raw).unwrap_err().status(), Some(400), "{:?}", String::from_utf8_lossy(raw));
+        }
+    }
+
+    #[test]
+    fn caps_map_to_431_and_413() {
+        let long = format!("GET / HTTP/1.1\r\nx: {}\r\n\r\n", "y".repeat(9000));
+        assert_eq!(req(long.as_bytes()).unwrap_err().status(), Some(431));
+        let many = format!("GET / HTTP/1.1\r\n{}\r\n", "a: b\r\n".repeat(100));
+        assert_eq!(req(many.as_bytes()).unwrap_err().status(), Some(431));
+        let big = format!("POST / HTTP/1.1\r\ncontent-length: {}\r\n\r\n", (1 << 20) + 1);
+        assert_eq!(req(big.as_bytes()).unwrap_err().status(), Some(413));
+    }
+
+    #[test]
+    fn unsupported_method_maps_to_405() {
+        assert_eq!(req(b"PUT / HTTP/1.1\r\n\r\n").unwrap_err().status(), Some(405));
+    }
+
+    #[test]
+    fn clean_close_and_truncation_are_distinct() {
+        assert!(matches!(req(b"").unwrap_err(), RecvError::Closed));
+        assert!(matches!(req(b"GET / HT").unwrap_err(), RecvError::Malformed(_)));
+        assert!(matches!(
+            req(b"POST / HTTP/1.1\r\ncontent-length: 9\r\n\r\nabc").unwrap_err(),
+            RecvError::Malformed(_)
+        ));
+    }
+
+    #[test]
+    fn pipelined_requests_frame_sequentially() {
+        let raw = b"GET /a HTTP/1.1\r\n\r\nPOST /b HTTP/1.1\r\ncontent-length: 2\r\n\r\nhi\
+                    GET /c HTTP/1.1\r\n\r\n";
+        let mut cur = Cursor::new(raw.to_vec());
+        let lim = Limits::default();
+        assert_eq!(read_request(&mut cur, &lim).unwrap().path, "/a");
+        let b = read_request(&mut cur, &lim).unwrap();
+        assert_eq!(b.path, "/b");
+        assert_eq!(b.body, b"hi");
+        assert_eq!(read_request(&mut cur, &lim).unwrap().path, "/c");
+        assert!(matches!(read_request(&mut cur, &lim).unwrap_err(), RecvError::Closed));
+    }
+
+    #[test]
+    fn response_round_trips_through_writer_and_parser() {
+        use crate::util::json::Json;
+        let resp = Response::json(200, &Json::Obj(vec![("ok".into(), Json::Bool(true))]))
+            .header("x-bsq-argmax", "3");
+        let mut wire = Vec::new();
+        let n = resp.write_to(&mut wire, true).unwrap();
+        assert_eq!(n, wire.len());
+        let back = read_response(&mut Cursor::new(wire), &Limits::default()).unwrap();
+        assert_eq!(back.status, 200);
+        assert_eq!(back.header_value("x-bsq-argmax"), Some("3"));
+        assert_eq!(back.body, resp.body);
+    }
+}

@@ -1,0 +1,602 @@
+//! Poisson open-loop load generator for the ingress (DESIGN.md §15).
+//!
+//! Closed-loop clients (the `serve-bench` harness) can never observe
+//! saturation: they wait for each answer before sending the next request,
+//! so offered load self-throttles to capacity. This generator is
+//! *open-loop*: request arrival times are drawn up front from a Poisson
+//! process at the offered rate, and each request's latency is measured
+//! from its **scheduled** arrival — not from when a connection finally got
+//! around to sending it — which is the standard coordinated-omission
+//! correction. Past saturation the corrected latencies blow up and the
+//! shed rate rises; the sweep records both and locates the knee.
+//!
+//! Methodology (`bsq-repro ingress-bench`):
+//! 1. **Calibrate**: a short closed-loop HTTP burst estimates capacity in
+//!    requests/s. Calibration tenants rotate through a wide pool so
+//!    per-tenant quotas never distort the estimate.
+//! 2. **Sweep**: for each factor `f` in the grid, offer `f × capacity`
+//!    Poisson traffic and record achieved throughput, shed split
+//!    (queue vs quota), and corrected latency percentiles.
+//! 3. **Knee**: the highest offered point that kept up — achieved ≥ 90% of
+//!    offered, total shed ≤ 1%, no transport errors. Its achieved rate is
+//!    exported as `ingress_knee_interval` (`mean_ns = 1e9 / rps`) so a
+//!    throughput regression fails the bench-diff gate like any latency
+//!    regression would.
+
+use std::io::{BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::serve::ingress::http::{self, Limits, RecvError, Response};
+use crate::serve::ingress::IngressReport;
+use crate::serve::worker::synthetic_input;
+use crate::util::json::Json;
+use crate::util::Pcg32;
+
+/// Load-generator shape, fixed across a sweep.
+#[derive(Debug, Clone)]
+pub struct LoadGenCfg {
+    /// Route to hit: `POST /v1/models/{model}/infer`.
+    pub model: String,
+    /// Flattened sample size the model expects (octet body = 4× this).
+    pub sample_elems: usize,
+    /// Persistent keep-alive connections (the client-side parallelism cap;
+    /// keep it under the ingress `max_conns`).
+    pub conns: usize,
+    /// Sweep traffic rotates tenants `tenant-0..tenants`.
+    pub tenants: usize,
+    /// Fraction of requests tagged `x-bsq-priority: high`.
+    pub high_frac: f64,
+    pub seed: u64,
+}
+
+/// One offered-load point of the sweep.
+#[derive(Debug, Clone)]
+pub struct LoadPoint {
+    /// Stable label for bench records, e.g. `0.50x`.
+    pub label: String,
+    pub offered_rps: f64,
+    pub achieved_rps: f64,
+    pub requests: usize,
+    pub ok: usize,
+    pub shed_queue: usize,
+    pub shed_quota: usize,
+    pub errors: usize,
+    /// Coordinated-omission-corrected latencies over served requests, µs.
+    pub mean_us: f64,
+    pub p50_us: f64,
+    pub p99_us: f64,
+    pub wall_s: f64,
+}
+
+impl LoadPoint {
+    pub fn shed_rate(&self) -> f64 {
+        (self.shed_queue + self.shed_quota) as f64 / (self.requests.max(1)) as f64
+    }
+
+    /// Did this point keep up with its offered load? (The knee predicate.)
+    pub fn kept_up(&self) -> bool {
+        self.achieved_rps >= 0.9 * self.offered_rps && self.shed_rate() <= 0.01 && self.errors == 0
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.as_str())),
+            ("offered_rps", Json::num(self.offered_rps)),
+            ("achieved_rps", Json::num(self.achieved_rps)),
+            ("requests", Json::num(self.requests as f64)),
+            ("ok", Json::num(self.ok as f64)),
+            ("shed_queue", Json::num(self.shed_queue as f64)),
+            ("shed_quota", Json::num(self.shed_quota as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("mean_us", Json::num(self.mean_us)),
+            ("p50_us", Json::num(self.p50_us)),
+            ("p99_us", Json::num(self.p99_us)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("kept_up", Json::Bool(self.kept_up())),
+        ])
+    }
+}
+
+/// Client-side limits: same line caps as the server, but a long read
+/// timeout — under deliberate overload a queued response can take a while,
+/// and a client timeout would misreport server sheds as transport errors.
+fn client_limits() -> Limits {
+    Limits { read_timeout: Duration::from_secs(30), ..Limits::default() }
+}
+
+/// `[0,1)` with 53 random mantissa bits (`Pcg32::uniform` is f32-grained —
+/// too coarse for exponential interarrival tails).
+fn f64_uniform(rng: &mut Pcg32) -> f64 {
+    (rng.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Cumulative Poisson arrival offsets at `rate` requests/s: exponential
+/// interarrival gaps `-ln(1-u)/rate`.
+pub fn poisson_arrivals(rate: f64, n: usize, seed: u64) -> Vec<Duration> {
+    let mut rng = Pcg32::new(seed, 0x10ad);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += -(1.0 - f64_uniform(&mut rng)).ln() / rate.max(1e-9);
+            Duration::from_secs_f64(t)
+        })
+        .collect()
+}
+
+/// Sleep until `t`: coarse `thread::sleep` to within ~1 ms, spin the rest
+/// (kernel sleep granularity would otherwise skew high offered rates low).
+fn sleep_until(t: Instant) {
+    loop {
+        let now = Instant::now();
+        if now >= t {
+            return;
+        }
+        let rem = t - now;
+        if rem > Duration::from_millis(2) {
+            std::thread::sleep(rem - Duration::from_millis(1));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// One persistent keep-alive HTTP connection.
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Conn {
+    fn connect(addr: SocketAddr) -> std::io::Result<Conn> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        stream.set_read_timeout(Some(client_limits().read_timeout))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Conn { reader, writer: stream })
+    }
+
+    fn post_infer(
+        &mut self,
+        model: &str,
+        tenant: &str,
+        high: bool,
+        body: &[u8],
+    ) -> Result<Response, RecvError> {
+        let mut head = format!(
+            "POST /v1/models/{model}/infer HTTP/1.1\r\n\
+             content-type: application/octet-stream\r\n\
+             content-length: {}\r\n\
+             x-bsq-tenant: {tenant}\r\n",
+            body.len()
+        );
+        if high {
+            head.push_str("x-bsq-priority: high\r\n");
+        }
+        head.push_str("\r\n");
+        self.writer.write_all(head.as_bytes()).map_err(RecvError::Io)?;
+        self.writer.write_all(body).map_err(RecvError::Io)?;
+        self.writer.flush().map_err(RecvError::Io)?;
+        http::read_response(&mut self.reader, &client_limits())
+    }
+}
+
+fn sample_bytes(cfg: &LoadGenCfg, i: usize) -> Vec<u8> {
+    let x = synthetic_input(cfg.seed, i % 64, i / 64, cfg.sample_elems);
+    let mut body = Vec::with_capacity(x.len() * 4);
+    for v in x {
+        body.extend_from_slice(&v.to_le_bytes());
+    }
+    body
+}
+
+fn is_high(cfg: &LoadGenCfg, i: usize) -> bool {
+    Pcg32::new(cfg.seed ^ (i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15), 7)
+        .bool(cfg.high_frac as f32)
+}
+
+enum Outcome {
+    Ok(f64), // corrected latency, µs
+    ShedQueue,
+    ShedQuota,
+    Error,
+}
+
+fn classify(resp: &Response, latency_us: f64) -> Outcome {
+    match resp.status {
+        200 => Outcome::Ok(latency_us),
+        429 if resp.header_value("x-bsq-shed") == Some("quota") => Outcome::ShedQuota,
+        429 => Outcome::ShedQueue,
+        _ => Outcome::Error,
+    }
+}
+
+/// Fire one request as conn-thread body logic: send (reconnecting once on
+/// a transport error), classify the response.
+fn fire(conn: &mut Option<Conn>, addr: SocketAddr, model: &str, tenant: &str, high: bool, body: &[u8], start: Instant) -> Outcome {
+    for attempt in 0..2 {
+        if conn.is_none() {
+            *conn = Conn::connect(addr).ok();
+        }
+        let Some(c) = conn.as_mut() else { return Outcome::Error };
+        match c.post_infer(model, tenant, high, body) {
+            Ok(resp) => {
+                let latency_us = start.elapsed().as_secs_f64() * 1e6;
+                // The server closes the conn after framing-error 4xxs.
+                if resp.header_value("connection") == Some("close") {
+                    *conn = None;
+                }
+                return classify(&resp, latency_us);
+            }
+            Err(_) => {
+                *conn = None;
+                if attempt == 1 {
+                    return Outcome::Error;
+                }
+            }
+        }
+    }
+    Outcome::Error
+}
+
+/// Closed-loop HTTP burst → capacity estimate (requests/s). Tenants rotate
+/// through a 512-name calibration pool so token buckets never empty.
+pub fn calibrate(addr: SocketAddr, cfg: &LoadGenCfg, requests: usize) -> Result<f64> {
+    if requests == 0 || cfg.conns == 0 {
+        bail!("calibration needs at least one request and one connection");
+    }
+    let next = AtomicUsize::new(0);
+    let ok = AtomicUsize::new(0);
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        let next = &next;
+        let ok = &ok;
+        for _ in 0..cfg.conns {
+            s.spawn(move || {
+                let mut conn: Option<Conn> = None;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= requests {
+                        break;
+                    }
+                    let body = sample_bytes(cfg, i);
+                    let tenant = format!("calib-{}", i % 512);
+                    let t = Instant::now();
+                    if matches!(
+                        fire(&mut conn, addr, &cfg.model, &tenant, false, &body, t),
+                        Outcome::Ok(_)
+                    ) {
+                        ok.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64().max(1e-6);
+    let served = ok.load(Ordering::Relaxed);
+    if served == 0 {
+        bail!("calibration served 0/{requests} requests — ingress unhealthy");
+    }
+    Ok(served as f64 / wall)
+}
+
+/// Run one offered-load point: `requests` Poisson arrivals at
+/// `offered_rps`, pulled by `cfg.conns` connection threads.
+pub fn run_point(
+    addr: SocketAddr,
+    cfg: &LoadGenCfg,
+    label: &str,
+    offered_rps: f64,
+    requests: usize,
+) -> Result<LoadPoint> {
+    if requests == 0 || cfg.conns == 0 {
+        bail!("load point needs at least one request and one connection");
+    }
+    let arrivals = poisson_arrivals(offered_rps, requests, cfg.seed ^ label.len() as u64);
+    let next = AtomicUsize::new(0);
+    // Small priming offset so the first arrivals aren't already late
+    // while connection threads are still spinning up.
+    let t0 = Instant::now() + Duration::from_millis(50);
+    let mut outcomes: Vec<Outcome> = Vec::with_capacity(requests);
+    std::thread::scope(|s| {
+        let arrivals = &arrivals;
+        let next = &next;
+        let handles: Vec<_> = (0..cfg.conns)
+            .map(|_| {
+                s.spawn(move || {
+                    let mut conn: Option<Conn> = None;
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= requests {
+                            break;
+                        }
+                        let start = t0 + arrivals[i];
+                        sleep_until(start);
+                        let body = sample_bytes(cfg, i);
+                        let tenant = format!("tenant-{}", i % cfg.tenants.max(1));
+                        let high = is_high(cfg, i);
+                        out.push(fire(&mut conn, addr, &cfg.model, &tenant, high, &body, start));
+                    }
+                    out
+                })
+            })
+            .collect();
+        for h in handles {
+            if let Ok(part) = h.join() {
+                outcomes.extend(part);
+            }
+        }
+    });
+    let wall = (t0.elapsed()).as_secs_f64().max(1e-6);
+
+    let mut lat_us: Vec<f64> = Vec::new();
+    let (mut shed_queue, mut shed_quota, mut errors) = (0usize, 0usize, 0usize);
+    for o in &outcomes {
+        match o {
+            Outcome::Ok(us) => lat_us.push(*us),
+            Outcome::ShedQueue => shed_queue += 1,
+            Outcome::ShedQuota => shed_quota += 1,
+            Outcome::Error => errors += 1,
+        }
+    }
+    errors += requests - outcomes.len(); // panicked conn threads, if any
+    lat_us.sort_by(|a, b| a.total_cmp(b));
+    let ok = lat_us.len();
+    let mean_us = if ok == 0 { 0.0 } else { lat_us.iter().sum::<f64>() / ok as f64 };
+    let pct = |q: f64| -> f64 {
+        if lat_us.is_empty() {
+            0.0
+        } else {
+            lat_us[((lat_us.len() - 1) as f64 * q).round() as usize]
+        }
+    };
+    Ok(LoadPoint {
+        label: label.to_string(),
+        offered_rps,
+        achieved_rps: ok as f64 / wall,
+        requests,
+        ok,
+        shed_queue,
+        shed_quota,
+        errors,
+        mean_us,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        wall_s: wall,
+    })
+}
+
+/// Index of the knee: the highest offered point that [`LoadPoint::kept_up`].
+pub fn find_knee(points: &[LoadPoint]) -> Option<usize> {
+    let mut best: Option<usize> = None;
+    for (i, p) in points.iter().enumerate() {
+        let better = match best {
+            None => true,
+            Some(b) => points[b].offered_rps <= p.offered_rps,
+        };
+        if p.kept_up() && better {
+            best = Some(i);
+        }
+    }
+    best
+}
+
+/// Fold an ingress sweep into a `BENCH_serve.json` record. If `existing`
+/// is the closed-loop sweep's record, the ingress block and its gated
+/// metrics are merged in (replacing any previous `ingress_*` entries, so
+/// re-runs are idempotent); otherwise a minimal fresh record is built.
+///
+/// Gated metrics (`results` entries with `mean_ns`, compared by
+/// `bench-diff`):
+/// - `ingress_{label}` — mean corrected latency of every *kept-up* point
+///   (overload points are informational only: their corrected latency is
+///   dominated by run length, not server speed);
+/// - `ingress_knee_interval` — `1e9 / knee_achieved_rps`, so a capacity
+///   regression fails the gate as a slower "latency".
+///
+/// `speedups.ingress_knee_goodput` (achieved/offered at the knee, ≈ 1.0)
+/// is floor-armable via `ci/baselines/` like the GEMM floors.
+pub fn merge_bench_json(
+    existing: Option<Json>,
+    model: &str,
+    weight_bits: u64,
+    calibrated_rps: f64,
+    points: &[LoadPoint],
+    knee: Option<usize>,
+    report: &IngressReport,
+) -> Json {
+    let mut fields: Vec<(String, Json)> = match existing {
+        Some(Json::Obj(kv))
+            if kv.iter().any(|(k, v)| k == "target" && v.as_str().ok() == Some("serve")) =>
+        {
+            kv
+        }
+        _ => vec![
+            ("target".to_string(), Json::str("serve")),
+            ("model".to_string(), Json::str(model)),
+            ("weight_bits_per_sample".to_string(), Json::num(weight_bits as f64)),
+        ],
+    };
+
+    // Fresh gated entries.
+    let mut results: Vec<Json> = points
+        .iter()
+        .filter(|p| p.kept_up() && p.ok > 0 && p.mean_us > 0.0)
+        .map(|p| {
+            Json::obj(vec![
+                ("name", Json::str(format!("ingress_{}", p.label))),
+                ("mean_ns", Json::num(p.mean_us * 1e3)),
+            ])
+        })
+        .collect();
+    if let Some(k) = knee {
+        let rps = points[k].achieved_rps;
+        if rps > 0.0 {
+            results.push(Json::obj(vec![
+                ("name", Json::str("ingress_knee_interval")),
+                ("mean_ns", Json::num(1e9 / rps)),
+            ]));
+        }
+    }
+
+    let ingress = Json::obj(vec![
+        ("calibrated_rps", Json::num(calibrated_rps)),
+        ("points", Json::Arr(points.iter().map(LoadPoint::to_json).collect())),
+        (
+            "knee",
+            match knee {
+                Some(k) => Json::obj(vec![
+                    ("label", Json::str(points[k].label.as_str())),
+                    ("offered_rps", Json::num(points[k].offered_rps)),
+                    ("achieved_rps", Json::num(points[k].achieved_rps)),
+                ]),
+                None => Json::Null,
+            },
+        ),
+        ("report", report.to_json()),
+    ]);
+
+    // Merge: drop stale ingress entries, splice fresh ones.
+    let mut replaced_ingress = false;
+    for (k, v) in fields.iter_mut() {
+        match k.as_str() {
+            "results" => {
+                if let Json::Arr(entries) = v {
+                    entries.retain(|e| match e.get("name").and_then(|n| n.as_str().ok()) {
+                        Some(n) => !n.starts_with("ingress_"),
+                        None => true,
+                    });
+                    entries.extend(std::mem::take(&mut results));
+                }
+            }
+            "speedups" => {
+                if let Json::Obj(kv) = v {
+                    kv.retain(|(name, _)| !name.starts_with("ingress_"));
+                    if let Some(k) = knee {
+                        let goodput =
+                            points[k].achieved_rps / points[k].offered_rps.max(1e-9);
+                        kv.push(("ingress_knee_goodput".to_string(), Json::num(goodput)));
+                    }
+                }
+            }
+            "ingress" => {
+                *v = ingress.clone();
+                replaced_ingress = true;
+            }
+            _ => {}
+        }
+    }
+    if !results.is_empty() {
+        fields.push(("results".to_string(), Json::Arr(results)));
+    }
+    if !fields.iter().any(|(k, _)| k == "speedups") {
+        let mut kv = Vec::new();
+        if let Some(k) = knee {
+            let goodput = points[k].achieved_rps / points[k].offered_rps.max(1e-9);
+            kv.push(("ingress_knee_goodput".to_string(), Json::num(goodput)));
+        }
+        fields.push(("speedups".to_string(), Json::Obj(kv)));
+    }
+    if !replaced_ingress {
+        fields.push(("ingress".to_string(), ingress));
+    }
+    Json::Obj(fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_are_monotone_and_scale_with_rate() {
+        let fast = poisson_arrivals(1000.0, 512, 7);
+        let slow = poisson_arrivals(10.0, 512, 7);
+        assert!(fast.windows(2).all(|w| w[0] <= w[1]));
+        // Same seed: the slow schedule is exactly 100× the fast one in
+        // expectation; allow broad slack for the draw.
+        assert!(slow[511] > fast[511] * 50);
+        let mean_gap = fast[511].as_secs_f64() / 512.0;
+        assert!((mean_gap - 1e-3).abs() < 5e-4, "mean gap {mean_gap}");
+    }
+
+    fn point(label: &str, offered: f64, achieved: f64, shed: usize, errors: usize) -> LoadPoint {
+        LoadPoint {
+            label: label.to_string(),
+            offered_rps: offered,
+            achieved_rps: achieved,
+            requests: 1000,
+            ok: 1000 - shed - errors,
+            shed_queue: shed,
+            shed_quota: 0,
+            errors,
+            mean_us: 500.0,
+            p50_us: 400.0,
+            p99_us: 900.0,
+            wall_s: 1.0,
+        }
+    }
+
+    #[test]
+    fn knee_is_highest_kept_up_point() {
+        let pts = vec![
+            point("0.25x", 250.0, 249.0, 0, 0),
+            point("0.50x", 500.0, 497.0, 1, 0),
+            point("1.00x", 1000.0, 980.0, 5, 0),
+            point("2.00x", 2000.0, 1050.0, 700, 0),
+        ];
+        assert_eq!(find_knee(&pts), Some(2));
+        assert_eq!(find_knee(&pts[3..]), None);
+    }
+
+    #[test]
+    fn merge_into_existing_record_is_idempotent() {
+        let base = Json::obj(vec![
+            ("target", Json::str("serve")),
+            ("model", Json::str("tinynet")),
+            (
+                "results",
+                Json::Arr(vec![Json::obj(vec![
+                    ("name", Json::str("serve_b8_w2")),
+                    ("mean_ns", Json::num(1e6)),
+                ])]),
+            ),
+            ("speedups", Json::Obj(vec![])),
+        ]);
+        let pts = vec![point("0.50x", 500.0, 499.0, 0, 0)];
+        let report = IngressReport {
+            conns: 1,
+            conns_rejected: 0,
+            served: 500,
+            shed_queue: 0,
+            shed_quota: 0,
+            rejected: 0,
+            failed: 0,
+            bytes_in: 1,
+            bytes_out: 1,
+            routes: Vec::new(),
+        };
+        let once = merge_bench_json(Some(base), "tinynet", 1000, 1000.0, &pts, Some(0), &report);
+        let twice =
+            merge_bench_json(Some(once.clone()), "tinynet", 1000, 1000.0, &pts, Some(0), &report);
+        assert_eq!(once, twice);
+        let names: Vec<String> = once
+            .get("results")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|e| e.get("name").unwrap().as_str().unwrap().to_string())
+            .collect();
+        assert_eq!(names, vec!["serve_b8_w2", "ingress_0.50x", "ingress_knee_interval"]);
+        assert!(once.get("ingress").is_some());
+        assert!(once
+            .get("speedups")
+            .unwrap()
+            .get("ingress_knee_goodput")
+            .is_some());
+    }
+}

@@ -1,0 +1,658 @@
+//! Open-loop HTTP/1.1 front door for the serving stack (DESIGN.md §15).
+//!
+//! Hand-rolled on `std::net` — no new dependencies — and deliberately
+//! boring: one accept thread, one thread per connection (bounded by
+//! `max_conns`), blocking I/O with read timeouts. Each connection parses
+//! requests under strict [`http::Limits`], routes them to a per-model
+//! serving pool loaded through the content-addressed [`Registry`], runs
+//! them past the [`admission`] layer (per-tenant token-bucket quotas,
+//! priority lanes over the bounded queue), and answers with logits or a
+//! precise rejection (`400`/`404`/`413`/`429 + Retry-After`/`431`/`503`).
+//!
+//! ```text
+//!  socket ──accept──► conn threads ──admission──► PoolClient ─► batcher
+//!                        │   (quota → lane → try_send)            │
+//!                        ◄────────── reply channel ◄── workers ◄──┘
+//! ```
+//!
+//! Everything runs inside one `std::thread::scope` rooted in
+//! [`run_ingress`]: the caller's closure drives traffic against a live
+//! [`IngressHandle`], and when it returns the listener wakes, connection
+//! threads drain, the per-route [`PoolClient`]s drop, and the pools shut
+//! down structurally — the same no-stop-flag lifecycle as the closed-loop
+//! harness (DESIGN.md §9).
+//!
+//! Endpoints:
+//!
+//! | method | path                        | purpose                         |
+//! |--------|-----------------------------|---------------------------------|
+//! | GET    | `/healthz`                  | liveness                        |
+//! | GET    | `/v1/models`                | route table + queue occupancy   |
+//! | POST   | `/v1/models/{model}/infer`  | one sample → logits             |
+//!
+//! Infer bodies are either raw little-endian `f32` octets (the zero-copy
+//! path, `Content-Type: application/octet-stream`, the default) or JSON
+//! `{"x": [...]}`. Responses are JSON by default; `Accept:
+//! application/octet-stream` returns raw little-endian logits with the
+//! metadata in `x-bsq-*` headers — the bit-identity tests compare those
+//! bytes against a direct in-process forward pass.
+
+pub mod admission;
+pub mod http;
+pub mod loadgen;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Engine;
+use crate::serve::registry::{Registry, ServableModel};
+use crate::serve::worker::{
+    spawn_pool, ModelSource, PoolClient, PoolConfig, PoolState, ServeRequest, ServeResponse,
+    ServeStatus, Submit,
+};
+use crate::store::ModelStore;
+use crate::util::json::{self, Json};
+
+use admission::{AdmissionCfg, AdmissionCtl, Decision, Priority};
+use http::{Limits, RecvError, Request, Response};
+
+/// Where a route's checkpoint bytes come from.
+#[derive(Debug, Clone)]
+pub enum RouteSource {
+    /// Load this checkpoint file (registry still keys it by content
+    /// digest, so identical bytes under different paths share a servable).
+    Checkpoint(PathBuf),
+    /// Resolve the model's pinned deploy from the content-addressed store
+    /// rooted here ([`Registry::load_pinned`] — digest re-verified).
+    StorePin(PathBuf),
+}
+
+/// One served model: name on the URL, checkpoint source, and the
+/// activation-quantization geometry baked into its servable.
+#[derive(Debug, Clone)]
+pub struct RouteSpec {
+    pub model: String,
+    pub source: RouteSource,
+    pub act_bits: usize,
+    pub act_first_last: usize,
+}
+
+/// Ingress shape: bind address, connection bound, parse limits, admission
+/// policy. One serving pool per route is configured separately via
+/// [`PoolConfig`].
+#[derive(Debug, Clone)]
+pub struct IngressConfig {
+    /// Bind address; port 0 picks a free port (read it back off
+    /// [`IngressHandle::addr`]).
+    pub addr: String,
+    /// Concurrent connection bound; connection `max_conns + 1` is answered
+    /// `503 + Retry-After` and closed without a thread.
+    pub max_conns: usize,
+    pub limits: Limits,
+    pub admission: AdmissionCfg,
+}
+
+impl Default for IngressConfig {
+    fn default() -> IngressConfig {
+        IngressConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_conns: 64,
+            limits: Limits::default(),
+            admission: AdmissionCfg::default(),
+        }
+    }
+}
+
+/// Live counters, shared across connection threads. Counted once per
+/// request at its terminal status: exactly one of `served`, `shed_queue`,
+/// `shed_quota`, `rejected`, `failed`.
+#[derive(Default)]
+pub struct IngressStats {
+    pub conns: AtomicU64,
+    pub conns_rejected: AtomicU64,
+    pub served: AtomicU64,
+    pub shed_queue: AtomicU64,
+    pub shed_quota: AtomicU64,
+    /// Client errors: malformed/oversized/unknown-route/bad-header (4xx
+    /// other than 429).
+    pub rejected: AtomicU64,
+    /// Server-side failures (5xx).
+    pub failed: AtomicU64,
+    pub bytes_in: AtomicU64,
+    pub bytes_out: AtomicU64,
+}
+
+/// Live view of a running ingress, passed to the [`run_ingress`] body.
+pub struct IngressHandle<'a> {
+    addr: SocketAddr,
+    shutdown: &'a AtomicBool,
+    stats: &'a IngressStats,
+}
+
+impl IngressHandle<'_> {
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn stats(&self) -> &IngressStats {
+        self.stats
+    }
+
+    fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+        // Kick the accept loop out of its blocking accept. Best-effort:
+        // if the wake connect fails the listener still sees the flag on
+        // the next real connection.
+        for _ in 0..3 {
+            if TcpStream::connect(self.addr).is_ok() {
+                break;
+            }
+        }
+    }
+}
+
+/// Per-route slice of the final report.
+#[derive(Debug, Clone)]
+pub struct RouteReport {
+    pub model: String,
+    pub weights_digest: String,
+    pub weight_bits: u64,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub worker_panics: usize,
+}
+
+/// Terminal counters of one [`run_ingress`] lifetime.
+#[derive(Debug, Clone)]
+pub struct IngressReport {
+    pub conns: u64,
+    pub conns_rejected: u64,
+    pub served: u64,
+    pub shed_queue: u64,
+    pub shed_quota: u64,
+    pub rejected: u64,
+    pub failed: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    pub routes: Vec<RouteReport>,
+}
+
+impl IngressReport {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("conns", Json::num(self.conns as f64)),
+            ("conns_rejected", Json::num(self.conns_rejected as f64)),
+            ("served", Json::num(self.served as f64)),
+            ("shed_queue", Json::num(self.shed_queue as f64)),
+            ("shed_quota", Json::num(self.shed_quota as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("failed", Json::num(self.failed as f64)),
+            ("bytes_in", Json::num(self.bytes_in as f64)),
+            ("bytes_out", Json::num(self.bytes_out as f64)),
+            (
+                "routes",
+                Json::Arr(
+                    self.routes
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("model", Json::str(r.model.as_str())),
+                                ("weights_digest", Json::str(r.weights_digest.as_str())),
+                                ("weight_bits", Json::num(r.weight_bits as f64)),
+                                ("batches", Json::num(r.batches as f64)),
+                                ("mean_batch", Json::num(r.mean_batch)),
+                                ("worker_panics", Json::num(r.worker_panics as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// One model a connection thread can route to. Cloned per connection —
+/// a few `Arc`/sender bumps, nothing heavy.
+struct RouteTarget<'a> {
+    name: String,
+    servable: Arc<ServableModel>,
+    client: PoolClient<'a>,
+}
+
+impl Clone for RouteTarget<'_> {
+    fn clone(&self) -> Self {
+        RouteTarget {
+            name: self.name.clone(),
+            servable: Arc::clone(&self.servable),
+            client: self.client.clone(),
+        }
+    }
+}
+
+/// Boot an ingress over `routes`, run `body` against the live
+/// [`IngressHandle`], then shut everything down structurally and return
+/// the terminal report next to the body's return value. All request
+/// traffic happens inside `body` (tests and the load generator connect as
+/// ordinary TCP clients); returning from it is the shutdown signal.
+pub fn run_ingress<R>(
+    engine: &Engine,
+    routes: &[RouteSpec],
+    pool_cfg: &PoolConfig,
+    cfg: &IngressConfig,
+    body: impl FnOnce(&IngressHandle<'_>) -> R,
+) -> Result<(IngressReport, R)> {
+    if routes.is_empty() {
+        bail!("ingress needs at least one route");
+    }
+    for (i, r) in routes.iter().enumerate() {
+        if routes[..i].iter().any(|p| p.model == r.model) {
+            bail!("duplicate route for model {:?}", r.model);
+        }
+    }
+    // Boot fully before binding: a route that fails to load must fail
+    // run_ingress, not answer 500s.
+    let registry = Registry::new(engine);
+    let mut servables: Vec<Arc<ServableModel>> = Vec::with_capacity(routes.len());
+    for r in routes {
+        let sv = match &r.source {
+            RouteSource::Checkpoint(p) => registry
+                .load(&r.model, p, r.act_bits, r.act_first_last)
+                .with_context(|| format!("loading route {:?}", r.model))?,
+            RouteSource::StorePin(root) => {
+                let st = ModelStore::open(root.clone())?;
+                registry
+                    .load_pinned(&st, &r.model)
+                    .with_context(|| format!("resolving pinned route {:?}", r.model))?
+            }
+        };
+        servables.push(sv);
+    }
+    let states: Vec<PoolState> = routes.iter().map(|_| PoolState::new()).collect();
+    let listener = TcpListener::bind(&cfg.addr)
+        .with_context(|| format!("binding ingress to {}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let shutdown = AtomicBool::new(false);
+    let stats = IngressStats::default();
+    let live_conns = AtomicUsize::new(0);
+    let admission = AdmissionCtl::new(cfg.admission.clone());
+    let mut accept_failed = false;
+
+    let out = std::thread::scope(|s| {
+        // Reference shadows: the accept/conn closures are `move` (they
+        // must own their clones of the route table), so the shared state
+        // has to enter them as copied references, not moved values.
+        let shutdown = &shutdown;
+        let stats = &stats;
+        let live_conns = &live_conns;
+        let admission = &admission;
+
+        let mut targets: Vec<RouteTarget<'_>> = Vec::with_capacity(routes.len());
+        for (i, r) in routes.iter().enumerate() {
+            let client = spawn_pool(s, ModelSource::Fixed(&servables[i]), pool_cfg, &states[i]);
+            targets.push(RouteTarget {
+                name: r.model.clone(),
+                servable: Arc::clone(&servables[i]),
+                client,
+            });
+        }
+
+        // Accept loop: owns the listener and the route table; spawns one
+        // scoped thread per connection and joins them before returning, so
+        // by the time it exits every submit handle is dropped and the
+        // pools drain.
+        let accept = s.spawn(move || {
+            let mut conn_handles = Vec::new();
+            let mut next_conn = 0u64;
+            for inbound in listener.incoming() {
+                if shutdown.load(Ordering::Acquire) {
+                    break;
+                }
+                let stream = match inbound {
+                    Ok(st) => st,
+                    Err(_) => continue, // transient accept error
+                };
+                if live_conns.load(Ordering::Relaxed) >= cfg.max_conns {
+                    stats.conns_rejected.fetch_add(1, Ordering::Relaxed);
+                    let mut st = stream;
+                    let _ = Response::error(503, "overloaded", "connection limit reached")
+                        .header("retry-after", "1")
+                        .write_to(&mut st, false);
+                    continue;
+                }
+                live_conns.fetch_add(1, Ordering::Relaxed);
+                stats.conns.fetch_add(1, Ordering::Relaxed);
+                let conn_id = next_conn;
+                next_conn += 1;
+                let targets = targets.clone();
+                conn_handles.push(s.spawn(move || {
+                    handle_conn(stream, &targets, cfg, admission, stats, shutdown, conn_id);
+                    live_conns.fetch_sub(1, Ordering::Relaxed);
+                }));
+                // Reap finished connections so the handle list stays
+                // bounded by the live-connection cap (the scope would
+                // join stragglers anyway).
+                conn_handles.retain(|h| !h.is_finished());
+            }
+            drop(targets); // conn threads hold the remaining submit handles
+            for h in conn_handles {
+                let _ = h.join();
+            }
+        });
+
+        let handle = IngressHandle { addr, shutdown, stats };
+        let out = body(&handle);
+        handle.request_shutdown();
+        accept_failed = accept.join().is_err();
+        out
+    });
+
+    if accept_failed {
+        bail!("ingress accept thread panicked");
+    }
+    for (i, st) in states.iter().enumerate() {
+        if let Some(msg) = st.failure() {
+            bail!("ingress pool for {:?} failed: {msg}", routes[i].model);
+        }
+    }
+    let routes_report = routes
+        .iter()
+        .zip(&states)
+        .zip(&servables)
+        .map(|((r, st), sv)| {
+            let log = st.take_batch_log();
+            let mean = if log.is_empty() {
+                0.0
+            } else {
+                log.iter().sum::<usize>() as f64 / log.len() as f64
+            };
+            RouteReport {
+                model: r.model.clone(),
+                weights_digest: sv.weights_digest.clone(),
+                weight_bits: sv.weight_bits(),
+                batches: log.len(),
+                mean_batch: mean,
+                worker_panics: st.worker_panics(),
+            }
+        })
+        .collect();
+    let report = IngressReport {
+        conns: stats.conns.load(Ordering::Relaxed),
+        conns_rejected: stats.conns_rejected.load(Ordering::Relaxed),
+        served: stats.served.load(Ordering::Relaxed),
+        shed_queue: stats.shed_queue.load(Ordering::Relaxed),
+        shed_quota: stats.shed_quota.load(Ordering::Relaxed),
+        rejected: stats.rejected.load(Ordering::Relaxed),
+        failed: stats.failed.load(Ordering::Relaxed),
+        bytes_in: stats.bytes_in.load(Ordering::Relaxed),
+        bytes_out: stats.bytes_out.load(Ordering::Relaxed),
+        routes: routes_report,
+    };
+    Ok((report, out))
+}
+
+/// Count a response against exactly one terminal-status counter. The
+/// queue-vs-quota split for 429s rides the `x-bsq-shed` header the shed
+/// responses carry anyway (it doubles as the client-visible reason).
+fn count_response(stats: &IngressStats, resp: &Response) {
+    let counter = match resp.status {
+        200 => &stats.served,
+        429 if resp.header_value("x-bsq-shed") == Some("quota") => &stats.shed_quota,
+        429 => &stats.shed_queue,
+        400..=499 => &stats.rejected,
+        _ => &stats.failed,
+    };
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
+/// One connection: keep-alive request loop under the parse limits. Framing
+/// errors answer their mapped status and close (the stream position is
+/// unreliable after a malformed message); idle timeouts just re-check the
+/// shutdown flag.
+fn handle_conn(
+    stream: TcpStream,
+    targets: &[RouteTarget<'_>],
+    cfg: &IngressConfig,
+    admission: &AdmissionCtl,
+    stats: &IngressStats,
+    shutdown: &AtomicBool,
+    conn_id: u64,
+) {
+    let _ = stream.set_read_timeout(Some(cfg.limits.read_timeout));
+    let _ = stream.set_nodelay(true);
+    let reader_stream = match stream.try_clone() {
+        Ok(st) => st,
+        Err(_) => return,
+    };
+    let mut reader = std::io::BufReader::new(reader_stream);
+    let mut writer = stream;
+    let mut seq = 0usize;
+    loop {
+        if shutdown.load(Ordering::Acquire) {
+            return;
+        }
+        match http::read_request(&mut reader, &cfg.limits) {
+            Ok(req) => {
+                stats.bytes_in.fetch_add(req.wire_bytes as u64, Ordering::Relaxed);
+                let keep = req.keep_alive;
+                let resp = dispatch(&req, targets, admission, conn_id, seq);
+                seq += 1;
+                count_response(stats, &resp);
+                match resp.write_to(&mut writer, keep) {
+                    Ok(n) => stats.bytes_out.fetch_add(n as u64, Ordering::Relaxed),
+                    Err(_) => return,
+                };
+                if !keep {
+                    return;
+                }
+            }
+            Err(RecvError::IdleTimeout) => continue,
+            Err(RecvError::Closed) => return,
+            Err(e) => {
+                if let Some(status) = e.status() {
+                    let mut resp = Response::error(status, "bad_request", &e.to_string());
+                    if status == 405 {
+                        resp = resp.header("allow", "GET, POST");
+                    }
+                    count_response(stats, &resp);
+                    if let Ok(n) = resp.write_to(&mut writer, false) {
+                        stats.bytes_out.fetch_add(n as u64, Ordering::Relaxed);
+                    }
+                }
+                return;
+            }
+        }
+    }
+}
+
+fn dispatch(
+    req: &Request,
+    targets: &[RouteTarget<'_>],
+    admission: &AdmissionCtl,
+    conn_id: u64,
+    seq: usize,
+) -> Response {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => Response::json(
+            200,
+            &Json::obj(vec![
+                ("status", Json::str("ok")),
+                ("models", Json::num(targets.len() as f64)),
+            ]),
+        ),
+        ("GET", "/v1/models") => Response::json(200, &models_json(targets)),
+        _ => {
+            if let Some(name) =
+                req.path.strip_prefix("/v1/models/").and_then(|r| r.strip_suffix("/infer"))
+            {
+                let Some(target) = targets.iter().find(|t| t.name == name) else {
+                    return Response::error(404, "unknown_model", &format!("no route for {name:.64}"));
+                };
+                if req.method != "POST" {
+                    return Response::error(405, "method_not_allowed", "infer is POST-only")
+                        .header("allow", "POST");
+                }
+                return infer(req, target, admission, conn_id, seq);
+            }
+            Response::error(404, "not_found", &format!("no handler for {:.80}", req.path))
+        }
+    }
+}
+
+fn models_json(targets: &[RouteTarget<'_>]) -> Json {
+    Json::Arr(
+        targets
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("model", Json::str(t.name.as_str())),
+                    ("weights_digest", Json::str(t.servable.weights_digest.as_str())),
+                    ("weight_bits", Json::num(t.servable.weight_bits() as f64)),
+                    ("mean_effective_bits", Json::num(t.servable.mean_effective_bits())),
+                    ("sample_elems", Json::num(t.servable.sample_elems() as f64)),
+                    ("num_classes", Json::num(t.servable.num_classes() as f64)),
+                    ("kernel_backend", Json::str(t.servable.kernel_backend())),
+                    ("queue_depth", Json::num(t.client.depth() as f64)),
+                    ("queue_capacity", Json::num(t.client.capacity() as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// 429 with both a coarse integer `Retry-After` (RFC form, ceiled, ≥ 1s)
+/// and the precise `x-bsq-retry-after-ms` hint; `x-bsq-shed` names the
+/// shed reason (`queue` or `quota`).
+fn shed_response(reason: &str, retry_after: Duration) -> Response {
+    let ms = retry_after.as_millis() as u64;
+    Response::error(429, "shed", &format!("{reason} full; retry after {ms}ms"))
+        .header("retry-after", format!("{}", retry_after.as_secs_f64().ceil().max(1.0) as u64))
+        .header("x-bsq-retry-after-ms", format!("{ms}"))
+        .header("x-bsq-shed", reason)
+}
+
+/// Decode an infer body into a flattened sample of exactly `pix` floats.
+fn decode_input(req: &Request, pix: usize) -> Result<Vec<f32>, Response> {
+    let ct = req.header("content-type").unwrap_or("application/octet-stream");
+    let x: Vec<f32> = if ct.starts_with("application/json") {
+        let text = std::str::from_utf8(&req.body)
+            .map_err(|_| Response::error(400, "bad_body", "json body is not utf-8"))?;
+        let v = json::parse(text)
+            .map_err(|e| Response::error(400, "bad_body", &format!("json parse: {e:#}")))?;
+        let arr = v.get("x").unwrap_or(&v);
+        let items = arr
+            .as_arr()
+            .map_err(|_| Response::error(400, "bad_body", "expected {\"x\": [...]} or [...]"))?;
+        let mut x = Vec::with_capacity(items.len());
+        for j in items {
+            let f = j
+                .as_f64()
+                .map_err(|_| Response::error(400, "bad_body", "non-numeric sample element"))?;
+            x.push(f as f32);
+        }
+        x
+    } else {
+        if req.body.len() % 4 != 0 {
+            return Err(Response::error(400, "bad_body", "octet body length not a multiple of 4"));
+        }
+        req.body
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    };
+    if x.len() != pix {
+        return Err(Response::error(
+            400,
+            "bad_shape",
+            &format!("model wants {pix} elements, body carries {}", x.len()),
+        ));
+    }
+    Ok(x)
+}
+
+/// The infer path: validate → quota → priority lane → bounded-queue
+/// submit → block on the reply channel. The admission order is fixed so an
+/// overloaded server does constant work per rejection (DESIGN.md §15).
+fn infer(
+    req: &Request,
+    target: &RouteTarget<'_>,
+    admission: &AdmissionCtl,
+    conn_id: u64,
+    seq: usize,
+) -> Response {
+    let tenant = req.header("x-bsq-tenant").unwrap_or("anonymous");
+    if !admission::valid_tenant(tenant) {
+        return Response::error(400, "bad_tenant", "tenant must be ≤64 chars of [A-Za-z0-9._@-]");
+    }
+    let prio = match Priority::parse(req.header("x-bsq-priority")) {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, "bad_priority", &e),
+    };
+    let x = match decode_input(req, target.servable.sample_elems()) {
+        Ok(x) => x,
+        Err(resp) => return resp,
+    };
+    if let Decision::Shed { retry_after } = admission.check_quota(tenant) {
+        return shed_response("quota", retry_after);
+    }
+    if !admission.lane_open(target.client.depth(), target.client.capacity(), prio) {
+        return shed_response("queue", admission.cfg().retry_after);
+    }
+    let (rtx, rrx) = channel::<ServeResponse>();
+    match target.client.try_submit(ServeRequest::new(conn_id as usize, seq, x, rtx)) {
+        Submit::Sent => {}
+        Submit::Full(_) => return shed_response("queue", admission.cfg().retry_after),
+        Submit::Closed(_) => {
+            return Response::error(503, "shutting_down", "serving pool is gone")
+        }
+    }
+    match rrx.recv() {
+        Err(_) => Response::error(500, "pool_failure", "request dropped by a failed pool"),
+        Ok(r) => match r.status {
+            ServeStatus::Ok => ok_response(req, target, &r),
+            ServeStatus::TimedOut => {
+                Response::error(503, "deadline", "request expired before dispatch")
+                    .header("retry-after", "1")
+            }
+            ServeStatus::Shed { retry_after } => shed_response("queue", retry_after),
+        },
+    }
+}
+
+fn ok_response(req: &Request, target: &RouteTarget<'_>, r: &ServeResponse) -> Response {
+    let latency_us = r.latency.as_micros() as u64;
+    let wants_octets = req
+        .header("accept")
+        .is_some_and(|a| a.contains("application/octet-stream"));
+    if wants_octets {
+        let mut body = Vec::with_capacity(r.logits.len() * 4);
+        for &v in &r.logits {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        Response::octets(200, body)
+            .header("x-bsq-argmax", format!("{}", r.argmax))
+            .header("x-bsq-model-gen", format!("{}", r.model_gen))
+            .header("x-bsq-batch-size", format!("{}", r.batch_size))
+            .header("x-bsq-latency-us", format!("{latency_us}"))
+    } else {
+        Response::json(
+            200,
+            &Json::obj(vec![
+                ("model", Json::str(target.name.as_str())),
+                ("argmax", Json::num(r.argmax as f64)),
+                // f32→f64 printing is shortest-round-trip exact, so the
+                // JSON path loses no logit bits either.
+                ("logits", Json::arr_num(r.logits.iter().map(|&v| v as f64))),
+                ("model_gen", Json::num(r.model_gen as f64)),
+                ("batch_size", Json::num(r.batch_size as f64)),
+                ("latency_us", Json::num(latency_us as f64)),
+            ]),
+        )
+    }
+}

@@ -16,10 +16,13 @@
 //! sparsity-vs-speedup trade visible in production terms.
 //!
 //! Entry points: `bsq-repro serve-bench` (closed-loop sweep →
-//! `BENCH_serve.json`), `bsq-repro info --checkpoint` (the registry's
-//! effective-precision map), and `benches/serve.rs` (the CI smoke twin).
+//! `BENCH_serve.json`), `bsq-repro ingress-bench` (open-loop Poisson sweep
+//! over the HTTP front door, [`ingress`], DESIGN.md §15), `bsq-repro info
+//! --checkpoint` (the registry's effective-precision map), and
+//! `benches/serve.rs` (the CI smoke twin).
 
 pub mod batcher;
+pub mod ingress;
 pub mod registry;
 pub mod stats;
 pub mod swap;
@@ -34,9 +37,11 @@ pub use registry::{
 };
 pub use stats::{ServeStats, ServeSummary};
 pub use swap::{SwapHandle, FIRST_GEN};
+pub use ingress::{run_ingress, IngressConfig, IngressReport, RouteSource, RouteSpec};
 pub use worker::{
-    run_closed_loop, run_closed_loop_swapped, sweep, sweep_swapped, synthetic_input, Admission,
-    ModelSource, PoolConfig, ServeRequest, ServeResponse, ServeStatus, SweepCell,
+    run_closed_loop, run_closed_loop_swapped, spawn_pool, sweep, sweep_swapped, synthetic_input,
+    Admission, ModelSource, PoolClient, PoolConfig, PoolState, ServeRequest, ServeResponse,
+    ServeStatus, Submit, SweepCell,
 };
 
 use crate::util::json::Json;

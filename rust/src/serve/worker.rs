@@ -5,6 +5,12 @@
 //! closed-loop load harness behind `bsq-repro serve-bench` and
 //! `benches/serve.rs`.
 //!
+//! The pool core is reusable: [`spawn_pool`] wires the batcher + workers
+//! onto a caller-owned [`std::thread::scope`] and hands back a cloneable
+//! [`PoolClient`]; the closed-loop harness below and the open-loop HTTP
+//! ingress ([`crate::serve::ingress`], DESIGN.md §15) are both thin layers
+//! over that one worker loop.
+//!
 //! Topology (DESIGN.md §9):
 //!
 //! ```text
@@ -32,7 +38,7 @@
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc::{channel, sync_channel, Sender, TrySendError};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -97,6 +103,20 @@ pub struct ServeRequest {
     pub x: Vec<f32>,
     pub enqueued: Instant,
     reply: Sender<ServeResponse>,
+}
+
+impl ServeRequest {
+    /// Build a request stamped `enqueued: now`. The private reply sender
+    /// guarantees the pool answers it exactly once, with the terminal
+    /// [`ServeResponse`] arriving on the paired receiver.
+    pub fn new(
+        client: usize,
+        index: usize,
+        x: Vec<f32>,
+        reply: Sender<ServeResponse>,
+    ) -> ServeRequest {
+        ServeRequest { client, index, x, enqueued: Instant::now(), reply }
+    }
 }
 
 /// One completed request.
@@ -199,6 +219,271 @@ pub fn synthetic_input(seed: u64, client: usize, index: usize, elems: usize) -> 
         0x5e2e,
     );
     (0..elems).map(|_| rng.normal()).collect()
+}
+
+/// Shared mutable state of one pool. The caller allocates it *before*
+/// opening the thread scope so the scoped pool threads and any number of
+/// [`PoolClient`] handles can both borrow it; after the scope closes it
+/// holds the pool's telemetry (batch log, panic count, first failure).
+#[derive(Default)]
+pub struct PoolState {
+    /// Panicked batches land here for their one retry. A plain shared
+    /// deque (not another sender on the batch channel): workers holding a
+    /// sender clone would keep the batch channel alive and break the
+    /// disconnect-based structural shutdown.
+    retry: Mutex<VecDeque<BatchJob>>,
+    batch_log: Mutex<Vec<usize>>,
+    failure: Mutex<Option<String>>,
+    worker_panics: AtomicUsize,
+    /// Requests currently sitting in the bounded queue — incremented at
+    /// submit, decremented when the batcher collects a batch. This is the
+    /// admission layer's occupancy signal (DESIGN.md §15); it is racy by
+    /// at most a batch's worth of requests and only ever over-counts, so
+    /// reading it can shed slightly early but never admits into a queue
+    /// the `try_send` backstop would reject.
+    depth: AtomicUsize,
+}
+
+impl PoolState {
+    pub fn new() -> PoolState {
+        PoolState::default()
+    }
+
+    /// First recorded pool failure, if any.
+    pub fn failure(&self) -> Option<String> {
+        lock(&self.failure).clone()
+    }
+
+    /// Record a pool-level failure unless one is already recorded.
+    pub fn fail(&self, msg: String) {
+        let mut slot = lock(&self.failure);
+        if slot.is_none() {
+            *slot = Some(msg);
+        }
+    }
+
+    pub fn worker_panics(&self) -> usize {
+        self.worker_panics.load(Ordering::Relaxed)
+    }
+
+    /// Drain the per-batch size log (call after the pool's scope closed).
+    pub fn take_batch_log(&self) -> Vec<usize> {
+        std::mem::take(&mut *lock(&self.batch_log))
+    }
+
+    /// Current request-queue occupancy (conservative; see `depth` field).
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+/// Outcome of a non-blocking [`PoolClient::try_submit`].
+pub enum Submit {
+    /// Queued; the reply channel will answer exactly once.
+    Sent,
+    /// Bounded queue full — request handed back so the caller can shed it.
+    Full(ServeRequest),
+    /// The pool is gone (scope tearing down); request handed back.
+    Closed(ServeRequest),
+}
+
+/// Submit-side handle to a pool spawned with [`spawn_pool`]. Clone one per
+/// submitting thread; the pool shuts down structurally when the last clone
+/// drops — the batcher sees the request channel disconnect, flushes its
+/// final batch, and the workers drain and exit. No stop flags.
+pub struct PoolClient<'a> {
+    tx: SyncSender<ServeRequest>,
+    state: &'a PoolState,
+    capacity: usize,
+}
+
+impl Clone for PoolClient<'_> {
+    fn clone(&self) -> Self {
+        PoolClient { tx: self.tx.clone(), state: self.state, capacity: self.capacity }
+    }
+}
+
+impl<'a> PoolClient<'a> {
+    /// Bounded request-queue capacity (`max_batch × QUEUE_BATCHES`).
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Current queue occupancy (conservative; see [`PoolState`]).
+    pub fn depth(&self) -> usize {
+        self.state.depth()
+    }
+
+    /// The pool state this handle submits into.
+    pub fn state(&self) -> &'a PoolState {
+        self.state
+    }
+
+    /// Blocking submit — waits for queue room (the closed-loop client
+    /// discipline). `false` means the pool is gone; the request (and its
+    /// reply sender) was dropped.
+    pub fn send_blocking(&self, req: ServeRequest) -> bool {
+        self.state.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.send(req) {
+            Ok(()) => true,
+            Err(_) => {
+                self.state.depth.fetch_sub(1, Ordering::Relaxed);
+                false
+            }
+        }
+    }
+
+    /// Non-blocking submit — the admission-controlled ingress path.
+    pub fn try_submit(&self, req: ServeRequest) -> Submit {
+        self.state.depth.fetch_add(1, Ordering::Relaxed);
+        match self.tx.try_send(req) {
+            Ok(()) => Submit::Sent,
+            Err(TrySendError::Full(req)) => {
+                self.state.depth.fetch_sub(1, Ordering::Relaxed);
+                Submit::Full(req)
+            }
+            Err(TrySendError::Disconnected(req)) => {
+                self.state.depth.fetch_sub(1, Ordering::Relaxed);
+                Submit::Closed(req)
+            }
+        }
+    }
+}
+
+/// Spawn a pool's batcher + worker threads onto `s` and return the submit
+/// handle. `state` must be allocated *outside* the scope so the handle and
+/// the scoped threads can both borrow it. Lifecycle is structural: the
+/// pool runs until every [`PoolClient`] clone is dropped, then drains and
+/// exits; closing the scope joins the threads.
+pub fn spawn_pool<'scope, 'env>(
+    s: &'scope std::thread::Scope<'scope, 'env>,
+    source: ModelSource<'env>,
+    cfg: &PoolConfig,
+    state: &'env PoolState,
+) -> PoolClient<'env> {
+    let workers = cfg.workers.max(1);
+    let policy = cfg.policy;
+    let request_timeout = cfg.request_timeout;
+    let capacity = policy.max_batch.max(1) * QUEUE_BATCHES;
+    // Each worker gets its share of the cores for intra-op GEMM fan-out
+    // (the shard trainer's budget rule). A saturated pool (workers ≥
+    // cores) runs at cap 1, where forward passes are also allocation-free
+    // (tests/serve_alloc.rs); an undersubscribed pool keeps the idle
+    // cores working inside the kernels instead.
+    let gemm_cap = crate::tensor::gemm::worker_budget(workers);
+
+    let (req_tx, req_rx) = sync_channel::<ServeRequest>(capacity);
+    let (batch_tx, batch_rx) = channel::<Vec<ServeRequest>>();
+    // Workers share the batch receiver behind a mutex (the lock is held
+    // across the blocking recv, which only serializes *waiting* — exactly
+    // one worker can pop the next batch either way). Arc'd because
+    // spawn_pool returns before the scope closes, so the receiver cannot
+    // live on this stack frame.
+    let batch_rx = Arc::new(Mutex::new(batch_rx));
+
+    // Batcher: owns the request receiver; exits when every submit handle
+    // is gone and the queue is drained.
+    s.spawn(move || {
+        while let Some(batch) = collect_batch(&req_rx, &policy) {
+            state.depth.fetch_sub(batch.len(), Ordering::Relaxed);
+            if batch_tx.send(batch).is_err() {
+                break; // every worker died; nobody left to serve
+            }
+        }
+    });
+
+    for _ in 0..workers {
+        let batch_rx = Arc::clone(&batch_rx);
+        s.spawn(move || worker_loop(source, state, &batch_rx, request_timeout, gemm_cap));
+    }
+
+    PoolClient { tx: req_tx, state, capacity }
+}
+
+/// One worker thread: pop batches (retried batches take priority over
+/// fresh ones, and the batcher-gone shutdown path re-checks the retry
+/// queue so a batch whose panic raced the disconnect is never orphaned),
+/// partition out expired riders at dispatch, snapshot the model once per
+/// batch, and run the panic-supervised forward pass.
+///
+/// On a compute error the worker records the first failure and keeps
+/// *draining* batches without executing them: dropping a job drops its
+/// reply sender, which unblocks its submitter with an error, which stops
+/// that submitter from sending more — the structural shutdown then unwinds
+/// as usual. Breaking out instead would leave queued batches holding reply
+/// senders forever (the batch receiver lives in the sibling workers, so
+/// the batcher's send never fails) and the submitters would hang.
+fn worker_loop(
+    source: ModelSource<'_>,
+    state: &PoolState,
+    batch_rx: &Mutex<Receiver<Vec<ServeRequest>>>,
+    request_timeout: Option<Duration>,
+    gemm_cap: usize,
+) {
+    crate::tensor::gemm::set_thread_parallelism_cap(gemm_cap);
+    loop {
+        let job = match lock(&state.retry).pop_front() {
+            Some(job) => job,
+            None => match lock(batch_rx).recv() {
+                Ok(jobs) => BatchJob { jobs, retried: false },
+                // Batcher gone: drain a retry that raced the disconnect,
+                // else shut down.
+                Err(_) => match lock(&state.retry).pop_front() {
+                    Some(job) => job,
+                    None => break,
+                },
+            },
+        };
+        if state.failure().is_some() {
+            continue; // failed pool: drain and drop to unblock submitters
+        }
+        let BatchJob { jobs, retried } = job;
+        // Deadline check at dispatch: expired riders get a TimedOut
+        // answer instead of the forward pass.
+        let (live, expired): (Vec<_>, Vec<_>) = match request_timeout {
+            Some(t) => jobs.into_iter().partition(|j| j.enqueued.elapsed() < t),
+            None => (jobs, Vec::new()),
+        };
+        for j in expired {
+            resolve_empty(j, ServeStatus::TimedOut);
+        }
+        if live.is_empty() {
+            continue;
+        }
+        // One snapshot per batch: the entire pass (and its retry, if it
+        // panics) runs against whatever servable is current at *this*
+        // boundary. A concurrent swap changes the next batch, never this
+        // one.
+        let (model, model_gen) = source.snapshot();
+        let outcome = catch_unwind(AssertUnwindSafe(|| {
+            faults::fire(faults::SERVE_BATCH, 0);
+            compute_rows(&model, &live)
+        }));
+        match outcome {
+            Ok(Ok(rows)) => {
+                source.note_batch();
+                lock(&state.batch_log).push(live.len());
+                send_rows(live, rows, model_gen);
+            }
+            Ok(Err(e)) => state.fail(format!("{e:#}")),
+            Err(payload) => {
+                state.worker_panics.fetch_add(1, Ordering::Relaxed);
+                let msg = faults::panic_message(payload);
+                if retried {
+                    // Second panic of the same batch: the input is
+                    // poison, not bad luck. Fail the pool.
+                    state.fail(format!("batch panicked twice: {msg}"));
+                } else {
+                    log::warn!(
+                        "serve worker panicked ({msg}); re-enqueueing \
+                         {}-request batch once",
+                        live.len()
+                    );
+                    lock(&state.retry).push_back(BatchJob { jobs: live, retried: true });
+                }
+            }
+        }
+    }
 }
 
 /// Run one batch's forward pass and return a logits row per job, sending
@@ -313,166 +598,36 @@ fn run_closed_loop_on(
     // Same audit as the trainer's empty-shard fix: never spin up more
     // workers than there are requests — the surplus threads could only ever
     // idle on the batch queue until shutdown.
-    let workers = cfg.workers.max(1).min(total);
-    let policy = cfg.policy;
-    let request_timeout = cfg.request_timeout;
+    let cfg = PoolConfig { workers: cfg.workers.max(1).min(total), ..*cfg };
     let admission = cfg.admission;
     let pix = source.sample_elems();
-    // Each worker gets its share of the cores for intra-op GEMM fan-out
-    // (the shard trainer's budget rule). A saturated pool (workers ≥
-    // cores) runs at cap 1, where forward passes are also allocation-free
-    // (tests/serve_alloc.rs); an undersubscribed pool keeps the idle
-    // cores working inside the kernels instead.
-    let gemm_cap = crate::tensor::gemm::worker_budget(workers);
-
-    let (req_tx, req_rx) = sync_channel::<ServeRequest>(policy.max_batch * QUEUE_BATCHES);
-    let (batch_tx, batch_rx) = channel::<Vec<ServeRequest>>();
-    let batch_rx = Mutex::new(batch_rx);
-    // Panicked batches land here for their one retry. A plain shared deque
-    // (not another sender on `batch_tx`): workers holding a sender clone
-    // would keep the batch channel alive and break the disconnect-based
-    // structural shutdown.
-    let retry: Mutex<VecDeque<BatchJob>> = Mutex::new(VecDeque::new());
-    let batch_log: Mutex<Vec<usize>> = Mutex::new(Vec::new());
-    let failure: Mutex<Option<String>> = Mutex::new(None);
-    let worker_panics = AtomicUsize::new(0);
+    let state = PoolState::new();
 
     let mut responses: Vec<ServeResponse> = Vec::with_capacity(total);
     let t0 = Instant::now();
     std::thread::scope(|s| {
-        // Batcher: owns the request receiver; exits when every client
-        // sender is gone and the queue is drained.
-        s.spawn(move || {
-            while let Some(batch) = collect_batch(&req_rx, &policy) {
-                if batch_tx.send(batch).is_err() {
-                    break; // every worker died; nobody left to serve
-                }
-            }
-        });
-
-        // Workers: share the batch receiver behind a mutex (the lock is
-        // held across the blocking recv, which only serializes *waiting* —
-        // exactly one worker can pop the next batch either way). Retried
-        // batches take priority over fresh ones, and the batcher-gone
-        // shutdown path re-checks the retry queue so a batch whose panic
-        // raced the disconnect is never orphaned.
-        //
-        // On a compute error the worker records the first failure and
-        // keeps *draining* batches without executing them: dropping a job
-        // drops its reply sender, which unblocks its client with an error,
-        // which stops that client from sending more — the structural
-        // shutdown then unwinds as usual. Breaking out instead would leave
-        // queued batches holding reply senders forever (the batch receiver
-        // lives in this frame, so the batcher's send never fails) and the
-        // clients would hang.
-        for _ in 0..workers {
-            let batch_rx = &batch_rx;
-            let retry = &retry;
-            let batch_log = &batch_log;
-            let failure = &failure;
-            let worker_panics = &worker_panics;
-            s.spawn(move || {
-                crate::tensor::gemm::set_thread_parallelism_cap(gemm_cap);
-                loop {
-                    let job = match lock(retry).pop_front() {
-                        Some(job) => job,
-                        None => match lock(&batch_rx).recv() {
-                            Ok(jobs) => BatchJob { jobs, retried: false },
-                            // Batcher gone: drain a retry that raced the
-                            // disconnect, else shut down.
-                            Err(_) => match lock(retry).pop_front() {
-                                Some(job) => job,
-                                None => break,
-                            },
-                        },
-                    };
-                    if lock(failure).is_some() {
-                        continue; // failed pool: drain and drop to unblock clients
-                    }
-                    let BatchJob { jobs, retried } = job;
-                    // Deadline check at dispatch: expired riders get a
-                    // TimedOut answer instead of the forward pass.
-                    let (live, expired): (Vec<_>, Vec<_>) = match request_timeout {
-                        Some(t) => jobs.into_iter().partition(|j| j.enqueued.elapsed() < t),
-                        None => (jobs, Vec::new()),
-                    };
-                    for j in expired {
-                        resolve_empty(j, ServeStatus::TimedOut);
-                    }
-                    if live.is_empty() {
-                        continue;
-                    }
-                    // One snapshot per batch: the entire pass (and its
-                    // retry, if it panics) runs against whatever servable
-                    // is current at *this* boundary. A concurrent swap
-                    // changes the next batch, never this one.
-                    let (model, model_gen) = source.snapshot();
-                    let outcome = catch_unwind(AssertUnwindSafe(|| {
-                        faults::fire(faults::SERVE_BATCH, 0);
-                        compute_rows(&model, &live)
-                    }));
-                    match outcome {
-                        Ok(Ok(rows)) => {
-                            source.note_batch();
-                            lock(batch_log).push(live.len());
-                            send_rows(live, rows, model_gen);
-                        }
-                        Ok(Err(e)) => {
-                            let mut slot = lock(failure);
-                            if slot.is_none() {
-                                *slot = Some(format!("{e:#}"));
-                            }
-                        }
-                        Err(payload) => {
-                            worker_panics.fetch_add(1, Ordering::Relaxed);
-                            let msg = faults::panic_message(payload);
-                            if retried {
-                                // Second panic of the same batch: the input
-                                // is poison, not bad luck. Fail the pool.
-                                let mut slot = lock(failure);
-                                if slot.is_none() {
-                                    *slot =
-                                        Some(format!("batch panicked twice: {msg}"));
-                                }
-                            } else {
-                                log::warn!(
-                                    "serve worker panicked ({msg}); re-enqueueing \
-                                     {}-request batch once",
-                                    live.len()
-                                );
-                                lock(retry).push_back(BatchJob { jobs: live, retried: true });
-                            }
-                        }
-                    }
-                }
-            });
-        }
+        let pool = spawn_pool(s, source, &cfg, &state);
 
         // Closed-loop clients.
         let mut handles = Vec::with_capacity(clients);
         for c in 0..clients {
-            let tx = req_tx.clone();
+            let pool = pool.clone();
             handles.push(s.spawn(move || {
                 let quota = total / clients + usize::from(c < total % clients);
                 let mut done = Vec::with_capacity(quota);
                 for i in 0..quota {
                     let (rtx, rrx) = channel();
-                    let req = ServeRequest {
-                        client: c,
-                        index: i,
-                        x: synthetic_input(seed, c, i, pix),
-                        enqueued: Instant::now(),
-                        reply: rtx,
-                    };
+                    let req =
+                        ServeRequest::new(c, i, synthetic_input(seed, c, i, pix), rtx);
                     match admission {
                         Admission::Block => {
-                            if tx.send(req).is_err() {
+                            if !pool.send_blocking(req) {
                                 break; // pool tore down under us
                             }
                         }
-                        Admission::Shed { retry_after } => match tx.try_send(req) {
-                            Ok(()) => {}
-                            Err(TrySendError::Full(req)) => {
+                        Admission::Shed { retry_after } => match pool.try_submit(req) {
+                            Submit::Sent => {}
+                            Submit::Full(req) => {
                                 // Queue full: answer locally, skip the wait.
                                 done.push(ServeResponse {
                                     client: c,
@@ -486,7 +641,7 @@ fn run_closed_loop_on(
                                 });
                                 continue;
                             }
-                            Err(TrySendError::Disconnected(_)) => break,
+                            Submit::Closed(_) => break,
                         },
                     }
                     match rrx.recv() {
@@ -497,27 +652,22 @@ fn run_closed_loop_on(
                 done
             }));
         }
-        drop(req_tx); // clients hold the only senders now
+        drop(pool); // clients hold the only submit handles now
         for h in handles {
             // A panicking client is a harness bug, but it must surface as
             // a pool failure, not tear down the caller mid-scope.
             match h.join() {
                 Ok(rs) => responses.extend(rs),
-                Err(payload) => {
-                    let mut slot = lock(&failure);
-                    if slot.is_none() {
-                        *slot = Some(format!(
-                            "serve client thread panicked: {}",
-                            faults::panic_message(payload)
-                        ));
-                    }
-                }
+                Err(payload) => state.fail(format!(
+                    "serve client thread panicked: {}",
+                    faults::panic_message(payload)
+                )),
             }
         }
     });
     let wall = t0.elapsed();
 
-    if let Some(msg) = failure.into_inner().unwrap_or_else(|e| e.into_inner()) {
+    if let Some(msg) = state.failure() {
         bail!("serve worker failed: {msg}");
     }
     if responses.len() != total {
@@ -546,10 +696,10 @@ fn run_closed_loop_on(
     let stats = ServeStats::new(
         total,
         latencies,
-        batch_log.into_inner().unwrap_or_else(|e| e.into_inner()),
+        state.take_batch_log(),
         wall,
         weight_bits,
-        worker_panics.load(Ordering::Relaxed),
+        state.worker_panics(),
         timed_out,
         shed,
     )
