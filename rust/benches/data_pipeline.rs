@@ -1,32 +1,65 @@
 //! Data-pipeline throughput: corpus synthesis, augmented batch assembly,
-//! eval batch assembly. The loader must never be the bottleneck against a
-//! ~1.3 s/step device (resnet20 on this CPU) — §Perf records the margin.
+//! epoch turnover, and the prefetcher's overlap win (DESIGN.md §16). The
+//! loader must never be the bottleneck against a ~1.3 s/step device
+//! (resnet20 on this CPU) — §Perf records the margin.
+//!
+//! The `epoch/*` pair interleaves a fixed synthetic compute step between
+//! batches, the shape of a real training loop: synchronous assembly pays
+//! augment + compute serially, the prefetcher hides the augment behind
+//! the compute. `prefetch_speedup` in `BENCH_data_pipeline.json` is the
+//! overlap win CI's bench gate tracks.
 
-use bsq::data::{AugmentCfg, Corpus, CorpusSpec, Loader};
-use bsq::util::bench::{black_box, Bench};
+use bsq::data::{train_source, AugmentCfg, Batch, BatchSource, Corpus, CorpusSpec, Loader};
+use bsq::util::bench::{black_box, Bench, JsonReport};
+use bsq::util::json::Json;
 
-fn main() {
-    let bench = Bench::default();
+/// Stand-in for a train step: a few deterministic passes over the batch
+/// pixels, heavy enough (~augment-sized) that overlap has something to
+/// hide behind.
+fn compute_step(batch: &Batch) -> f32 {
+    let mut acc = 0.0f32;
+    for pass in 0..4u32 {
+        let k = 1.0 + pass as f32 * 1e-3;
+        for &v in batch.x.data() {
+            acc = acc.mul_add(0.999_9, v * k);
+        }
+    }
+    acc
+}
+
+/// Drain `epochs` full epochs from a source, running the synthetic
+/// compute step between batches (the pattern `bsq_train` runs).
+fn drain_epochs(src: &mut impl BatchSource, epochs: usize) -> f32 {
+    let mut acc = 0.0f32;
+    for _ in 0..epochs {
+        src.next_epoch();
+        for _ in 0..src.batches_per_epoch() {
+            let batch = src.next_batch();
+            acc += compute_step(&batch);
+        }
+    }
+    acc
+}
+
+fn main() -> anyhow::Result<()> {
+    let bench = Bench::from_env();
+    let mut report = JsonReport::new("data_pipeline");
     println!("== data_pipeline ==");
 
     let s = bench.run_elems("corpus/synthetic-cifar-1k", 1024, || {
         black_box(Corpus::generate(CorpusSpec::cifar().with_sizes(1024, 64)));
     });
     println!("{}", s.report());
+    report.push(&s);
 
     let corpus = Corpus::generate(CorpusSpec::cifar().with_sizes(4096, 512));
-    for (name, cfg) in
-        [("augmented", AugmentCfg::default()), ("eval", AugmentCfg::off())]
-    {
+    for (name, cfg) in [("augmented", AugmentCfg::default()), ("eval", AugmentCfg::off())] {
         let mut loader = Loader::new(&corpus.train, 32, cfg, 7);
         let s = bench.run_elems(&format!("loader/batch32-{name}"), 32, || {
             black_box(loader.next_batch());
         });
-        println!(
-            "{}  ({:.1} imgs/ms)",
-            s.report(),
-            32.0 / s.mean.as_secs_f64() / 1e3
-        );
+        println!("{}  ({:.1} imgs/ms)", s.report(), 32.0 / s.mean.as_secs_f64() / 1e3);
+        report.push(&s);
     }
 
     // epoch turnover (shuffle) cost
@@ -35,4 +68,31 @@ fn main() {
         loader.next_epoch();
     });
     println!("{}", s.report());
+    report.push(&s);
+    drop(loader);
+
+    // Overlap win: one epoch of assemble+compute, synchronous vs
+    // prefetched. Same seed, same stream (bit-identity is asserted in
+    // src/data/prefetch.rs tests — here we only time it).
+    let epoch_corpus = Corpus::generate(CorpusSpec::cifar().with_sizes(1024, 64));
+    let elems = 1024u64;
+    let mut sync_src = train_source(&epoch_corpus.train, 32, AugmentCfg::default(), 7, 0);
+    let s_sync = bench.run_elems("epoch/sync-batch32", elems, || {
+        black_box(drain_epochs(&mut sync_src, 1));
+    });
+    println!("{}", s_sync.report());
+    report.push(&s_sync);
+
+    let mut pf_src = train_source(&epoch_corpus.train, 32, AugmentCfg::default(), 7, 2);
+    let s_pf = bench.run_elems("epoch/prefetch-batch32-depth2", elems, || {
+        black_box(drain_epochs(&mut pf_src, 1));
+    });
+    let speedup = s_sync.mean.as_secs_f64() / s_pf.mean.as_secs_f64();
+    println!("{}  ({speedup:.2}x over sync)", s_pf.report());
+    report.push(&s_pf);
+
+    report.extra("prefetch_speedup", Json::num(speedup));
+    let path = report.write()?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

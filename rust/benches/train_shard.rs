@@ -7,9 +7,14 @@
 //! clock: the `speedup_over_1shard` map in `BENCH_train_shard.json` is the
 //! record EXPERIMENTS.md §Shard-scaling tracks, and CI's bench gate diffs
 //! the smoke version against `ci/baselines/`.
+//!
+//! Two overlap records ride along (DESIGN.md §16): `epoch_time_pause` vs
+//! `epoch_time_overlap` time a requant boundary (rebuild + eval window)
+//! pause-the-world vs overlapped, and the `prefetch` block times a full
+//! train epoch with the synchronous loader vs the background prefetcher.
 
-use bsq::coordinator::corpus_for_model;
-use bsq::data::Loader;
+use bsq::coordinator::{corpus_for_model, requantize_overlapped, RequantBuffers, Session};
+use bsq::data::{train_source, BatchSource, Loader};
 use bsq::model::{momentum_slots, ModelState};
 use bsq::runtime::{Engine, RunInputs};
 use bsq::util::bench::{Bench, JsonReport};
@@ -72,6 +77,80 @@ fn main() -> anyhow::Result<()> {
 
     report.extra("speedup_over_1shard", Json::Obj(speedups));
     report.extra("host_parallelism", Json::num(bsq::tensor::gemm::max_parallelism() as f64));
+
+    // ---- requant boundary: pause-the-world vs overlapped (DESIGN.md §16)
+    // One boundary = rebuild every layer's planes + the epoch-end eval
+    // window. Both modes produce bit-identical state (tests/overlap_train),
+    // so the delta is pure wall clock: sync pays rebuild + eval serially,
+    // overlap hides the rebuild behind the eval.
+    println!("== requant boundary: pause vs overlap (tinynet) ==");
+    let engine = Engine::native();
+    let session = Session::open(&engine, "tinynet", 128, 64, 0)?;
+    let exe = session.artifact("bsq_train_relu6")?;
+    let eval = session.artifact("q_eval_relu6")?;
+    let mut state = ModelState::init_fp(&session.man, 0);
+    state.to_bit_representation(&session.man, 8)?;
+    state.ensure_momenta(&momentum_slots(&exe.spec.inputs));
+    let actlv = session.act_levels(4, 8);
+    let eval_inputs = RunInputs::default().vec("actlv", actlv.clone());
+
+    let mut bufs = RequantBuffers::new();
+    let s_pause = bench.run("epoch_time_pause", || {
+        requantize_overlapped(&session, &mut state, &mut bufs, true, |st| {
+            session.evaluate(&eval, st, &eval_inputs, 2)
+        })
+        .unwrap();
+    });
+    println!("{}", s_pause.report());
+    report.push(&s_pause);
+
+    let s_overlap = bench.run("epoch_time_overlap", || {
+        requantize_overlapped(&session, &mut state, &mut bufs, false, |st| {
+            session.evaluate(&eval, st, &eval_inputs, 2)
+        })
+        .unwrap();
+    });
+    let requant_speedup = s_pause.mean.as_secs_f64() / s_overlap.mean.as_secs_f64();
+    println!("{}  ({requant_speedup:.2}x over pause)", s_overlap.report());
+    report.push(&s_overlap);
+    report.extra("requant_overlap_speedup", Json::num(requant_speedup));
+
+    // ---- train epoch: synchronous loader vs background prefetcher
+    println!("== train epoch: sync loader vs prefetcher (tinynet) ==");
+    let train_inputs = RunInputs::default()
+        .hyper("lr", 0.05)
+        .hyper("wd", 1e-4)
+        .hyper("alpha", 1e-3)
+        .vec("regw", vec![1.0; session.man.qlayers.len()])
+        .vec("actlv", actlv);
+    let mut prefetch_block: Vec<(&str, Json)> = Vec::new();
+    let mut sync_mean = 0.0f64;
+    for (tag, depth) in [("epoch-sync", 0usize), ("epoch-prefetch2", 2)] {
+        let mut src =
+            train_source(&session.corpus.train, session.man.batch, Default::default(), 1, depth);
+        let s = bench.run(tag, || {
+            src.next_epoch();
+            for _ in 0..src.batches_per_epoch() {
+                let b = src.next_batch();
+                exe.run(&mut state, Some(&b), &train_inputs).unwrap();
+            }
+        });
+        let mean = s.mean.as_secs_f64();
+        if depth == 0 {
+            sync_mean = mean;
+            println!("{}", s.report());
+        } else {
+            println!("{}  ({:.2}x over sync)", s.report(), sync_mean / mean);
+            prefetch_block.push(("speedup", Json::num(sync_mean / mean)));
+        }
+        report.push(&s);
+        prefetch_block.push((if depth == 0 { "sync_ns" } else { "prefetch_ns" },
+            Json::num(s.mean.as_nanos() as f64)));
+    }
+    report.extra("prefetch", Json::Obj(
+        prefetch_block.into_iter().map(|(k, v)| (k.to_string(), v)).collect(),
+    ));
+
     let path = report.write()?;
     println!("wrote {}", path.display());
     Ok(())

@@ -22,10 +22,11 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::metrics::{EpochRecord, History};
+use crate::coordinator::requant::{requantize_overlapped, RequantBuffers};
 use crate::coordinator::schedule::StepDecay;
 use crate::coordinator::snapshot::{self, ResumePoint, SnapshotCfg, Snapshotter};
 use crate::coordinator::trainer::{train_epoch, Session};
-use crate::data::Loader;
+use crate::data::{train_source, BatchSource};
 use crate::model::{checkpoint, momentum_slots, ModelState};
 use crate::quant::{reg_weights, requantize, LayerPrec, QuantScheme, Reweigh};
 use crate::runtime::{Engine, RunInputs};
@@ -100,6 +101,18 @@ pub struct BsqConfig {
     /// Resume from the newest usable snapshot generation instead of
     /// starting fresh. Requires `snapshot`; errors if none is usable.
     pub resume: bool,
+    /// Force pause-the-world re-quantization instead of overlapping the
+    /// rebuild with the epoch-end eval window (CLI `--sync-requant`, env
+    /// `BSQ_SYNC_REQUANT`). Purely a scheduling knob: both modes produce
+    /// bitwise-identical trajectories (DESIGN.md §16), so it is excluded
+    /// from the snapshot config fingerprint — a run killed in one mode
+    /// resumes cleanly in the other.
+    pub sync_requant: bool,
+    /// Batches the async prefetcher assembles ahead of training (CLI
+    /// `--prefetch-depth`, env `BSQ_PREFETCH_DEPTH`; 0 = synchronous
+    /// in-thread assembly). Trajectory-invariant like `sync_requant`, and
+    /// likewise outside the config fingerprint.
+    pub prefetch_depth: usize,
 }
 
 impl BsqConfig {
@@ -139,6 +152,11 @@ impl BsqConfig {
             alpha_ref_steps: 136_500.0, // 350 epochs × 390 steps (paper App. A)
             snapshot: None,
             resume: false,
+            sync_requant: env_truthy("BSQ_SYNC_REQUANT"),
+            prefetch_depth: std::env::var("BSQ_PREFETCH_DEPTH")
+                .ok()
+                .and_then(|v| v.parse().ok())
+                .unwrap_or(2),
         }
     }
 
@@ -151,6 +169,11 @@ impl BsqConfig {
             .map(|i| if i < self.init_8bit_prefix { 8 } else { self.init_bits })
             .collect()
     }
+}
+
+/// `1`, `true`, `yes`… arm the knob; unset, empty, or `0` leave it off.
+fn env_truthy(name: &str) -> bool {
+    std::env::var(name).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
 #[derive(Debug, Clone)]
@@ -250,8 +273,13 @@ pub fn pretrain(
     // Pretrain with float activations (clip only): actlv = 0.
     let actlv = vec![0.0f32; session.man.act_sites.len()];
     let sched = StepDecay::pretrain();
-    let mut loader =
-        Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xA);
+    let mut loader = train_source(
+        &session.corpus.train,
+        session.man.batch,
+        Default::default(),
+        cfg.seed ^ 0xA,
+        cfg.prefetch_depth,
+    );
     for _ in 0..start_epoch {
         loader.skip_epoch();
     }
@@ -334,11 +362,17 @@ pub fn bsq_train(
     let mut scheme = scheme_from_state(session, &state)?;
     let mut regw = reg_weights(&scheme, cfg.reweigh);
     let sched = StepDecay::bsq();
-    let mut loader =
-        Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xB);
+    let mut loader = train_source(
+        &session.corpus.train,
+        session.man.batch,
+        Default::default(),
+        cfg.seed ^ 0xB,
+        cfg.prefetch_depth,
+    );
     for _ in 0..start_epoch {
         loader.skip_epoch();
     }
+    let mut requant_bufs = RequantBuffers::new();
 
     // α rescaling for abbreviated schedules (see BsqConfig::alpha_ref_steps).
     let actual_steps = (cfg.bsq_epochs * loader.batches_per_epoch()).max(1) as f64;
@@ -360,26 +394,37 @@ pub fn bsq_train(
             .vec("actlv", actlv.clone());
         let m = train_epoch(&exe, &mut loader, &mut state, &inputs)?;
 
-        // Periodic re-quantization + precision adjustment (paper §3.3).
+        // Periodic re-quantization + precision adjustment (paper §3.3). The
+        // rebuild is double-buffered and overlapped against the epoch-end
+        // eval window (DESIGN.md §16): the eval reads the *pre-requant*
+        // planes while workers rebuild into spares, and the rebuilt reps
+        // install at the next batch boundary — identically in both modes,
+        // so `--sync-requant` reproduces the overlapped trajectory bitwise.
         let is_last = epoch + 1 == cfg.bsq_epochs;
-        if (cfg.requant_interval > 0 && (epoch + 1) % cfg.requant_interval == 0) || is_last {
-            requantize_all(session, &mut state)?;
+        let do_requant =
+            (cfg.requant_interval > 0 && (epoch + 1) % cfg.requant_interval == 0) || is_last;
+        let eval_inputs = RunInputs::default().vec("actlv", actlv.clone());
+        let eacc = if do_requant {
+            let ((_, eacc), _reports) = requantize_overlapped(
+                session,
+                &mut state,
+                &mut requant_bufs,
+                cfg.sync_requant,
+                |st| session.evaluate(&eval, st, &eval_inputs, cfg.eval_batches),
+            )?;
             scheme = scheme_from_state(session, &state)?;
             regw = reg_weights(&scheme, cfg.reweigh);
             log::info!(
-                "requant @ epoch {epoch}: {:.2} bits/param ({:.2}x) bits {:?}",
+                "requant @ epoch {epoch} ({}): {:.2} bits/param ({:.2}x) bits {:?}",
+                if cfg.sync_requant { "sync" } else { "overlapped" },
                 scheme.bits_per_param(),
                 scheme.compression(),
                 scheme.bits_vec()
             );
-        }
-
-        let (_, eacc) = session.evaluate(
-            &eval,
-            &mut state,
-            &RunInputs::default().vec("actlv", actlv.clone()),
-            cfg.eval_batches,
-        )?;
+            eacc
+        } else {
+            session.evaluate(&eval, &mut state, &eval_inputs, cfg.eval_batches)?.1
+        };
         history.push(EpochRecord {
             phase: "bsq".into(),
             epoch,
@@ -400,7 +445,11 @@ pub fn bsq_train(
     Ok((state, scheme))
 }
 
-/// Re-quantize every layer; masks/scales/planes updated in place.
+/// Re-quantize every layer; masks/scales/planes updated in place. The
+/// one-shot pause-the-world variant — the training loop itself goes
+/// through `requantize_overlapped` (DESIGN.md §16), which produces the
+/// identical state; this stays for callers with no window to overlap
+/// (experiment drivers, benches).
 ///
 /// The layer planes are *moved* out of the state (no per-layer clone),
 /// adjusted in parallel across `std::thread::scope` workers — layers are
@@ -448,13 +497,7 @@ pub fn requantize_all(session: &Session, state: &mut ModelState) -> Result<()> {
 
     for (name, rep) in reps {
         state.install_bitrep(&name, rep);
-        for key in [format!("m:wp:{name}"), format!("m:wn:{name}")] {
-            if state.contains(&key) {
-                if let Ok(t) = state.get_mut(&key) {
-                    t.data_mut().fill(0.0);
-                }
-            }
-        }
+        state.zero_plane_momenta(&name);
     }
     Ok(())
 }
@@ -492,8 +535,13 @@ pub fn finetune(
     let actlv = session.act_levels(cfg.act_bits, cfg.act_first_last);
     let wlv = scheme.levels_vec();
     let sched = StepDecay::finetune();
-    let mut loader =
-        Loader::new(&session.corpus.train, session.man.batch, Default::default(), cfg.seed ^ 0xC);
+    let mut loader = train_source(
+        &session.corpus.train,
+        session.man.batch,
+        Default::default(),
+        cfg.seed ^ 0xC,
+        cfg.prefetch_depth,
+    );
     for _ in 0..start_epoch {
         loader.skip_epoch();
     }

@@ -5,16 +5,19 @@
 //! finetune); `trainer` holds the shared session/epoch machinery;
 //! `schedule` the paper's LR shapes; `metrics` telemetry + result files;
 //! `snapshot` epoch-granular crash-safe snapshots with bit-identical
-//! resume (DESIGN.md §12).
+//! resume (DESIGN.md §12); `requant` the overlapped double-buffered
+//! re-quantization protocol (DESIGN.md §16).
 
 pub mod bsq;
 pub mod metrics;
+pub mod requant;
 pub mod schedule;
 pub mod snapshot;
 pub mod trainer;
 
 pub use bsq::{run_bsq, ActMode, BsqConfig, BsqOutcome};
 pub use metrics::{write_result, EpochRecord, History};
+pub use requant::{requantize_overlapped, RequantBuffers};
 pub use schedule::StepDecay;
 pub use snapshot::{ResumePoint, SnapshotCfg, Snapshotter, StorePublisher};
 pub use trainer::{corpus_for_model, train_epoch, Session};

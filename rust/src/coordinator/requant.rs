@@ -1,0 +1,194 @@
+//! Overlapped re-quantization: the §3.3 pause off the critical path
+//! (DESIGN.md §16).
+//!
+//! The paper's periodic re-quantization was a stop-the-world pause at the
+//! epoch boundary: every layer's planes were moved out of the state,
+//! rebuilt, and reinstalled while nothing else ran. This module makes the
+//! rebuild concurrent with the epoch-end **evaluation window** — the one
+//! stretch of coordinator work that *reads* the planes but never writes
+//! them — while keeping the trajectory bitwise identical to the
+//! synchronous fallback (`BSQ_SYNC_REQUANT=1` / `--sync-requant`).
+//!
+//! Protocol (both modes run the identical logical sequence):
+//!
+//! 1. **Rebuild into spares.** Each layer owns a persistent double buffer
+//!    ([`RequantBuffers`]). Synchronous mode rebuilds inline on the main
+//!    thread via [`requantize_into`] (reads the live codes, writes the
+//!    spare). Overlap mode memcpys the live planes into the spare at the
+//!    boundary, then background workers run [`requantize`] on the spares
+//!    *concurrently with the window*.
+//! 2. **The window** runs on the old pre-requant planes in the state (the
+//!    epoch-end eval in `bsq_train`). It never writes planes, so overlap
+//!    and sync see byte-identical state here.
+//! 3. **Install at the next batch boundary.** After the window (and worker
+//!    join), the rebuilt spares are swapped into the state all-or-nothing
+//!    and the old planes become the next round's spares; the repacked
+//!    plane momenta are zeroed at install (not at hand-off — the old
+//!    planes keep training meaning until the swap).
+//!
+//! Bit-identity across modes is structural: the two rebuild paths are
+//! differentially tested equal (`quant::adjust`), every state mutation
+//! happens in the same order at the same point, and scheme/regularizer
+//! takeover happens after install in both. Fault hooks
+//! [`faults::REQUANT_WORKER`] (per worker chunk, fired in both modes so
+//! one schedule means the same occurrence everywhere) and
+//! [`faults::REQUANT_INSTALL`] (once, before the install loop) extend
+//! chaos coverage to the overlap; a worker panic or install fault
+//! surfaces as a clean `Err` *before* any plane is installed or any
+//! snapshot taken, so resume replays from the previous boundary.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::trainer::Session;
+use crate::faults;
+use crate::model::ModelState;
+use crate::quant::{requantize, requantize_into, AdjustReport, BitRep};
+
+/// One layer's double buffer: the spare plane set the rebuild writes while
+/// the live planes stay in the state, plus the report of the last rebuild.
+struct LayerSpare {
+    name: String,
+    rep: BitRep,
+    report: AdjustReport,
+}
+
+const ZERO_REPORT: AdjustReport =
+    AdjustReport { bits_before: 0, bits_after: 0, msb_trimmed: 0, lsb_trimmed: 0 };
+
+/// Persistent per-layer spare buffers for the double-buffered requant.
+/// Allocated once per phase (shapes are static: `NB × layer elems`); after
+/// every install the displaced live planes become the next spares, so the
+/// steady state allocates nothing.
+#[derive(Default)]
+pub struct RequantBuffers {
+    spares: Vec<LayerSpare>,
+}
+
+impl RequantBuffers {
+    pub fn new() -> RequantBuffers {
+        RequantBuffers { spares: Vec::new() }
+    }
+
+    /// Allocate the spares on first use (clones of the live reps — the
+    /// contents are fully overwritten by every rebuild, only the shapes
+    /// matter).
+    fn ensure(&mut self, session: &Session, state: &ModelState) -> Result<()> {
+        if self.spares.len() == session.man.qlayers.len() {
+            return Ok(());
+        }
+        self.spares.clear();
+        for q in &session.man.qlayers {
+            self.spares.push(LayerSpare {
+                name: q.name.clone(),
+                rep: state.bitrep(&q.name)?,
+                report: ZERO_REPORT,
+            });
+        }
+        Ok(())
+    }
+}
+
+/// Worker-chunk layout shared by both modes: `available_parallelism`
+/// workers, layers split into contiguous chunks, one
+/// [`faults::REQUANT_WORKER`] occurrence per chunk per boundary.
+fn chunk_size(layers: usize) -> usize {
+    let workers =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(layers).max(1);
+    layers.div_ceil(workers).max(1)
+}
+
+/// Re-quantize every layer with the rebuild overlapped against `window`
+/// (`sync = true` forces the pause-the-world ordering: rebuild first, then
+/// window — same mutations, same stream, bitwise-identical trajectory).
+///
+/// `window` receives the state with the **old** planes still installed and
+/// runs to completion before anything is swapped; the rebuilt reps are
+/// installed after it returns, and the per-layer plane momenta are zeroed
+/// at that install. Returns the window's value and the per-layer
+/// [`AdjustReport`]s in manifest layer order.
+pub fn requantize_overlapped<T>(
+    session: &Session,
+    state: &mut ModelState,
+    bufs: &mut RequantBuffers,
+    sync: bool,
+    window: impl FnOnce(&mut ModelState) -> Result<T>,
+) -> Result<(T, Vec<AdjustReport>)> {
+    bufs.ensure(session, state)?;
+    let chunk = chunk_size(bufs.spares.len());
+
+    let win = if sync {
+        // Pause-the-world: rebuild inline (reading live codes straight into
+        // the spares — no plane copy), then run the window.
+        let rebuilt = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            for (ci, part) in bufs.spares.chunks_mut(chunk).enumerate() {
+                faults::fire(faults::REQUANT_WORKER, ci as u64);
+                for sp in part.iter_mut() {
+                    let rep = state.take_bitrep(&sp.name)?;
+                    sp.report = requantize_into(&rep, &mut sp.rep);
+                    state.install_bitrep(&sp.name, rep);
+                }
+            }
+            Ok(())
+        }));
+        match rebuilt {
+            Ok(r) => r?,
+            Err(p) => {
+                bail!("re-quantization worker faulted: {}", faults::panic_message(p))
+            }
+        }
+        window(state)?
+    } else {
+        // Overlap: hand copies of the live planes to background workers and
+        // run the window concurrently on the untouched originals.
+        for sp in &mut bufs.spares {
+            let rep = state.take_bitrep(&sp.name)?;
+            sp.rep.wp.data_mut().copy_from_slice(rep.wp.data());
+            sp.rep.wn.data_mut().copy_from_slice(rep.wn.data());
+            sp.rep.mask.data_mut().copy_from_slice(rep.mask.data());
+            sp.rep.scale = rep.scale;
+            state.install_bitrep(&sp.name, rep);
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            std::thread::scope(|scope| {
+                for (ci, part) in bufs.spares.chunks_mut(chunk).enumerate() {
+                    scope.spawn(move || {
+                        faults::fire(faults::REQUANT_WORKER, ci as u64);
+                        for sp in part.iter_mut() {
+                            sp.report = requantize(&mut sp.rep);
+                        }
+                    });
+                }
+                // runs on the calling thread while the workers rebuild;
+                // a worker panic propagates when the scope joins, *after*
+                // the window — never tearing the window mid-flight.
+                window(state)
+            })
+        }));
+        match res {
+            Ok(r) => r?,
+            Err(p) => {
+                bail!("re-quantization worker faulted: {}", faults::panic_message(p))
+            }
+        }
+    };
+
+    // Install barrier: the next batch boundary. All-or-nothing — a fault
+    // here leaves every live plane untouched (asserted by chaos).
+    if let Err(p) = catch_unwind(|| faults::fire(faults::REQUANT_INSTALL, 0)) {
+        bail!("re-quantization install faulted: {}", faults::panic_message(p));
+    }
+    let mut reports = Vec::with_capacity(bufs.spares.len());
+    for sp in &mut bufs.spares {
+        let old = state.take_bitrep(&sp.name)?;
+        let rebuilt = std::mem::replace(&mut sp.rep, old);
+        state.install_bitrep(&sp.name, rebuilt);
+        // Zero at install, not hand-off: trims re-split the codes into
+        // different plane slots, so the old per-plane momentum would push
+        // the wrong bits (see requantize_all).
+        state.zero_plane_momenta(&sp.name);
+        reports.push(sp.report);
+    }
+    Ok((win, reports))
+}

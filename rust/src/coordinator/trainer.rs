@@ -4,7 +4,7 @@ use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
-use crate::data::{Corpus, CorpusSpec, Loader};
+use crate::data::{BatchSource, Corpus, CorpusSpec, Loader};
 use crate::model::ModelState;
 use crate::runtime::{Engine, Executable, Manifest, RunInputs};
 
@@ -105,7 +105,9 @@ pub struct EpochMetrics {
     pub bgl: f32,
 }
 
-/// Run one epoch of a train artifact over the loader.
+/// Run one epoch of a train artifact over a batch source (the synchronous
+/// [`Loader`] or the threaded [`crate::data::Prefetcher`] — both deliver
+/// bit-identical streams, so this loop is oblivious to which it got).
 ///
 /// On the native backend each `exe.run` is a data-parallel sharded step
 /// (`runtime::native::shard`): the minibatch fans across the engine's shard
@@ -113,7 +115,7 @@ pub struct EpochMetrics {
 /// tree reduce, so the epoch's numbers do not depend on the shard count.
 pub fn train_epoch(
     exe: &Executable,
-    loader: &mut Loader,
+    loader: &mut impl BatchSource,
     state: &mut ModelState,
     inputs: &RunInputs,
 ) -> Result<EpochMetrics> {

@@ -3,12 +3,16 @@
 //! Stands in for the paper's CIFAR-10 / ImageNet inputs (DESIGN.md §4) with
 //! deterministic, learnable synthetic corpora that exercise the identical
 //! pipeline: generation → shuffle → pad-crop/flip augmentation → per-channel
-//! normalization → fixed-size NHWC batches.
+//! normalization → fixed-size NHWC batches. `prefetch` moves the
+//! augment/assemble stage onto a background thread behind a bounded channel
+//! (bit-identical to the synchronous `Loader` — DESIGN.md §16).
 
 pub mod augment;
 pub mod loader;
+pub mod prefetch;
 pub mod synthetic;
 
 pub use augment::{AugmentCfg, ChannelStats};
 pub use loader::{Batch, Loader};
+pub use prefetch::{train_source, BatchSource, Prefetcher, TrainSource};
 pub use synthetic::{Corpus, CorpusSpec, Split};

@@ -1,0 +1,357 @@
+//! Async batch prefetch: augmentation + batch assembly off the training
+//! thread (DESIGN.md §16).
+//!
+//! A [`Prefetcher`] owns a background producer thread running an ordinary
+//! [`Loader`] over an `Arc<Split>` and ships finished [`Batch`]es through a
+//! **bounded** channel, so assembly runs 1–`depth` batches ahead of the
+//! consumer and memory stays bounded by backpressure. Bit-identity with the
+//! synchronous loader is structural, not probabilistic: the producer applies
+//! the *same* state transitions (`next_epoch` / `fill_next` / `skip_epoch`)
+//! to the same `Pcg32` stream in the same order the training loop would —
+//! commands are processed strictly in submission order by a single thread —
+//! so the delivered batch stream, and therefore `--resume` replay via
+//! [`BatchSource::skip_epoch`], is bitwise identical to `Loader`'s.
+//!
+//! The consumer contract is epoch-structured (what `train_epoch` does):
+//! call [`BatchSource::next_epoch`], then [`BatchSource::next_batch`]
+//! exactly [`BatchSource::batches_per_epoch`] times. Undrained batches from
+//! an abandoned epoch are discarded on the next epoch/skip call.
+
+use std::sync::mpsc::{sync_channel, Receiver, Sender, SyncSender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::data::augment::AugmentCfg;
+use crate::data::loader::{Batch, Loader};
+use crate::data::synthetic::Split;
+
+/// The epoch-structured face of a batch stream: everything the training
+/// loop needs, implemented by both the synchronous [`Loader`] and the
+/// threaded [`Prefetcher`] so `train_epoch` is generic over the two.
+pub trait BatchSource {
+    /// Advance to the next epoch (train mode reshuffles).
+    fn next_epoch(&mut self);
+    /// The next device-ready minibatch of the current epoch.
+    fn next_batch(&mut self) -> Batch;
+    /// Full batches per epoch (ragged tail wraps; see `Loader`).
+    fn batches_per_epoch(&self) -> usize;
+    /// Replay one full epoch's RNG state transitions without yielding
+    /// batches — the `--resume` fast-forward path.
+    fn skip_epoch(&mut self);
+}
+
+impl BatchSource for Loader<'_> {
+    fn next_epoch(&mut self) {
+        Loader::next_epoch(self);
+    }
+
+    fn next_batch(&mut self) -> Batch {
+        Loader::next_batch(self)
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        Loader::batches_per_epoch(self)
+    }
+
+    fn skip_epoch(&mut self) {
+        Loader::skip_epoch(self);
+    }
+}
+
+enum Cmd {
+    NextEpoch,
+    SkipEpoch,
+    Stop,
+}
+
+/// Bounded-channel async prefetcher: a producer thread owns the loader and
+/// runs `depth` batches ahead; the consumer blocks only when assembly is
+/// genuinely slower than training.
+pub struct Prefetcher {
+    cmd: Sender<Cmd>,
+    data: Receiver<Batch>,
+    batches_per_epoch: usize,
+    /// Batches of the current epoch produced-or-pending but not yet
+    /// delivered to the consumer.
+    outstanding: usize,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    /// Spawn the producer over its own `Loader::new(split, batch, cfg, seed)`.
+    /// `depth` is the data-channel bound (clamped to ≥ 1; use the
+    /// synchronous `Loader` directly for depth 0 — see [`train_source`]).
+    pub fn new(split: Arc<Split>, batch: usize, cfg: AugmentCfg, seed: u64, depth: usize) -> Self {
+        let batches_per_epoch = split.n.div_ceil(batch);
+        let (cmd, cmd_rx) = std::sync::mpsc::channel::<Cmd>();
+        let (data_tx, data): (SyncSender<Batch>, Receiver<Batch>) = sync_channel(depth.max(1));
+        let handle = std::thread::Builder::new()
+            .name("bsq-prefetch".into())
+            .spawn(move || {
+                let mut loader = Loader::new(&split, batch, cfg, seed);
+                let per_epoch = loader.batches_per_epoch();
+                loop {
+                    match cmd_rx.recv() {
+                        Ok(Cmd::NextEpoch) => {
+                            loader.next_epoch();
+                            for _ in 0..per_epoch {
+                                // a hung-up consumer is a normal shutdown
+                                if data_tx.send(loader.next_batch()).is_err() {
+                                    return;
+                                }
+                            }
+                        }
+                        Ok(Cmd::SkipEpoch) => loader.skip_epoch(),
+                        Ok(Cmd::Stop) | Err(_) => return,
+                    }
+                }
+            })
+            .expect("spawning prefetch producer thread");
+        Prefetcher { cmd, data, batches_per_epoch, outstanding: 0, handle: Some(handle) }
+    }
+
+    /// Discard batches of an epoch the consumer abandoned mid-stream, so
+    /// the producer can reach the next command.
+    fn drain_outstanding(&mut self) {
+        while self.outstanding > 0 {
+            if self.data.recv().is_err() {
+                break; // producer died; surfaced on the next next_batch/join
+            }
+            self.outstanding -= 1;
+        }
+        self.outstanding = 0;
+    }
+}
+
+impl BatchSource for Prefetcher {
+    fn next_epoch(&mut self) {
+        self.drain_outstanding();
+        if self.cmd.send(Cmd::NextEpoch).is_ok() {
+            self.outstanding = self.batches_per_epoch;
+        }
+    }
+
+    fn next_batch(&mut self) -> Batch {
+        assert!(
+            self.outstanding > 0,
+            "prefetcher: next_batch with no epoch outstanding (call next_epoch first)"
+        );
+        let b = self.data.recv().expect("prefetch producer thread died");
+        self.outstanding -= 1;
+        b
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        self.batches_per_epoch
+    }
+
+    fn skip_epoch(&mut self) {
+        self.drain_outstanding();
+        let _ = self.cmd.send(Cmd::SkipEpoch);
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        let _ = self.cmd.send(Cmd::Stop);
+        // Unblock a producer parked on the full bounded channel: drain until
+        // it observes Stop (or the consumer hang-up) and drops its sender.
+        while self.data.recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            if h.join().is_err() && !std::thread::panicking() {
+                panic!("prefetch producer thread panicked");
+            }
+        }
+    }
+}
+
+/// A training-phase batch stream: synchronous in-thread assembly, or the
+/// threaded prefetcher, chosen by `depth` (0 = synchronous). Both deliver
+/// bit-identical batches; the coordinator picks via `--prefetch-depth`.
+pub enum TrainSource<'a> {
+    Sync(Loader<'a>),
+    Prefetch(Prefetcher),
+}
+
+/// Build the batch source for one training phase. `depth == 0` keeps
+/// everything on the calling thread (the `BSQ_SYNC_REQUANT=1`-style
+/// fallback for the data pipeline); `depth >= 1` runs assembly that many
+/// batches ahead on a background thread.
+pub fn train_source(
+    split: &Arc<Split>,
+    batch: usize,
+    cfg: AugmentCfg,
+    seed: u64,
+    depth: usize,
+) -> TrainSource<'_> {
+    if depth == 0 {
+        TrainSource::Sync(Loader::new(split, batch, cfg, seed))
+    } else {
+        TrainSource::Prefetch(Prefetcher::new(Arc::clone(split), batch, cfg, seed, depth))
+    }
+}
+
+impl BatchSource for TrainSource<'_> {
+    fn next_epoch(&mut self) {
+        match self {
+            TrainSource::Sync(l) => BatchSource::next_epoch(l),
+            TrainSource::Prefetch(p) => p.next_epoch(),
+        }
+    }
+
+    fn next_batch(&mut self) -> Batch {
+        match self {
+            TrainSource::Sync(l) => BatchSource::next_batch(l),
+            TrainSource::Prefetch(p) => p.next_batch(),
+        }
+    }
+
+    fn batches_per_epoch(&self) -> usize {
+        match self {
+            TrainSource::Sync(l) => BatchSource::batches_per_epoch(l),
+            TrainSource::Prefetch(p) => p.batches_per_epoch(),
+        }
+    }
+
+    fn skip_epoch(&mut self) {
+        match self {
+            TrainSource::Sync(l) => BatchSource::skip_epoch(l),
+            TrainSource::Prefetch(p) => p.skip_epoch(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::{Corpus, CorpusSpec};
+
+    fn corpus() -> Corpus {
+        Corpus::generate(CorpusSpec::tiny().with_sizes(64, 32))
+    }
+
+    fn collect_epochs(src: &mut impl BatchSource, epochs: usize) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for _ in 0..epochs {
+            src.next_epoch();
+            for _ in 0..src.batches_per_epoch() {
+                out.push(src.next_batch());
+            }
+        }
+        out
+    }
+
+    fn assert_streams_equal(a: &[Batch], b: &[Batch]) {
+        assert_eq!(a.len(), b.len());
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.x.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                y.x.data().iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "pixel mismatch at batch {i}"
+            );
+            assert_eq!(x.y.data(), y.y.data(), "label mismatch at batch {i}");
+        }
+    }
+
+    /// Satellite: prefetch-vs-synchronous differential sweep over batch
+    /// sizes and augment configs — every delivered batch bitwise equal.
+    #[test]
+    fn prefetcher_matches_sync_loader_across_configs() {
+        let c = corpus();
+        let configs = [
+            AugmentCfg::default(),
+            AugmentCfg::off(),
+            AugmentCfg { pad: 2, hflip: false, enabled: true },
+        ];
+        for &batch in &[8usize, 16, 48] {
+            for cfg in configs {
+                for depth in [1usize, 2, 4] {
+                    let mut sync = Loader::new(&c.train, batch, cfg, 11);
+                    let mut pre = Prefetcher::new(Arc::clone(&c.train), batch, cfg, 11, depth);
+                    assert_eq!(
+                        BatchSource::batches_per_epoch(&sync),
+                        pre.batches_per_epoch()
+                    );
+                    let a = collect_epochs(&mut sync, 3);
+                    let b = collect_epochs(&mut pre, 3);
+                    assert_streams_equal(&a, &b);
+                }
+            }
+        }
+    }
+
+    /// Satellite: skip_epoch-then-train ≡ consumed-epoch-then-train with
+    /// the prefetcher enabled — the `--resume` replay invariant holds
+    /// through the producer thread.
+    #[test]
+    fn prefetcher_skip_epoch_matches_consumed_epoch() {
+        let c = corpus();
+        let mut skipped = Prefetcher::new(Arc::clone(&c.train), 16, AugmentCfg::default(), 9, 2);
+        let mut walked = Prefetcher::new(Arc::clone(&c.train), 16, AugmentCfg::default(), 9, 2);
+        for _ in 0..2 {
+            skipped.skip_epoch();
+            collect_epochs(&mut walked, 1);
+        }
+        let a = collect_epochs(&mut skipped, 1);
+        let b = collect_epochs(&mut walked, 1);
+        assert_streams_equal(&a, &b);
+    }
+
+    /// A prefetcher replaying skipped epochs matches the *synchronous*
+    /// loader that consumed them — cross-implementation resume identity.
+    #[test]
+    fn prefetcher_resume_matches_sync_consumed_run() {
+        let c = corpus();
+        let mut sync = Loader::new(&c.train, 16, AugmentCfg::default(), 21);
+        collect_epochs(&mut sync, 2);
+        let mut pre = Prefetcher::new(Arc::clone(&c.train), 16, AugmentCfg::default(), 21, 2);
+        pre.skip_epoch();
+        pre.skip_epoch();
+        let a = collect_epochs(&mut sync, 2);
+        let b = collect_epochs(&mut pre, 2);
+        assert_streams_equal(&a, &b);
+    }
+
+    /// Abandoning an epoch mid-stream must not wedge or desync: the next
+    /// next_epoch discards undelivered batches and both sides stay aligned.
+    #[test]
+    fn abandoned_epoch_is_discarded_cleanly() {
+        let c = corpus();
+        let mut sync = Loader::new(&c.train, 16, AugmentCfg::default(), 5);
+        let mut pre = Prefetcher::new(Arc::clone(&c.train), 16, AugmentCfg::default(), 5, 1);
+        // consume epoch 0 only partially on the prefetcher...
+        BatchSource::next_epoch(&mut sync);
+        pre.next_epoch();
+        for _ in 0..BatchSource::batches_per_epoch(&sync) {
+            BatchSource::next_batch(&mut sync);
+        }
+        pre.next_batch();
+        // ...then both advance; epoch 1 must still be bitwise aligned.
+        let a = collect_epochs(&mut sync, 1);
+        let b = collect_epochs(&mut pre, 1);
+        assert_streams_equal(&a, &b);
+    }
+
+    #[test]
+    fn train_source_depth_selects_implementation() {
+        let c = corpus();
+        let mut s0 = train_source(&c.train, 16, AugmentCfg::default(), 7, 0);
+        let mut s2 = train_source(&c.train, 16, AugmentCfg::default(), 7, 2);
+        assert!(matches!(&s0, TrainSource::Sync(_)));
+        assert!(matches!(&s2, TrainSource::Prefetch(_)));
+        let a = collect_epochs(&mut s0, 2);
+        let b = collect_epochs(&mut s2, 2);
+        assert_streams_equal(&a, &b);
+    }
+
+    /// Dropping a prefetcher mid-epoch (producer parked on the bounded
+    /// channel) must shut down cleanly, not deadlock.
+    #[test]
+    fn drop_mid_epoch_does_not_deadlock() {
+        let c = corpus();
+        let mut pre = Prefetcher::new(Arc::clone(&c.train), 8, AugmentCfg::default(), 3, 1);
+        pre.next_epoch();
+        pre.next_batch();
+        drop(pre);
+    }
+}

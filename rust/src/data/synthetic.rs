@@ -12,6 +12,8 @@
 //! Profiles: `cifar()` (10 classes, 32×32), `imagenet_sim()` (100 classes,
 //! 32×32), `tiny()` (10 classes, 16×16).
 
+use std::sync::Arc;
+
 use crate::tensor::{IntTensor, Tensor};
 use crate::util::Pcg32;
 
@@ -128,12 +130,15 @@ pub struct Split {
     pub n: usize,
 }
 
-/// The full corpus.
+/// The full corpus. Splits are `Arc`-shared so a background prefetch
+/// thread (`data::prefetch`) can hold a handle while the training thread
+/// keeps borrowing through the `Corpus`; deref coercion keeps every
+/// `&corpus.train` call site working unchanged.
 #[derive(Debug, Clone)]
 pub struct Corpus {
     pub spec: CorpusSpec,
-    pub train: Split,
-    pub test: Split,
+    pub train: Arc<Split>,
+    pub test: Arc<Split>,
 }
 
 impl Corpus {
@@ -143,7 +148,7 @@ impl Corpus {
         let protos = make_prototypes(&spec, &mut rng);
         let train = render_split(&spec, &protos, spec.train_size, Pcg32::new(spec.seed, 2));
         let test = render_split(&spec, &protos, spec.test_size, Pcg32::new(spec.seed, 3));
-        Corpus { spec, train, test }
+        Corpus { spec, train: Arc::new(train), test: Arc::new(test) }
     }
 }
 

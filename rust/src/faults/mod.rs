@@ -5,8 +5,9 @@
 //! the N-th occurrence of a named injection point, so a failing chaos run
 //! reproduces from its schedule string alone. Injection points are threaded
 //! through the shard trainer ([`SHARD_WORKER`], [`SHARD_BARRIER`]), the
-//! checkpoint writer ([`CKPT_WRITE`], [`CKPT_COMMIT`]), and the serving
-//! pool ([`SERVE_BATCH`], [`SERVE_BATCHER`]).
+//! checkpoint writer ([`CKPT_WRITE`], [`CKPT_COMMIT`]), the serving
+//! pool ([`SERVE_BATCH`], [`SERVE_BATCHER`]), and the overlapped
+//! re-quantization path ([`REQUANT_WORKER`], [`REQUANT_INSTALL`]).
 //!
 //! Cost model: the plane is a single relaxed atomic load when disarmed —
 //! production paths pay one predictable branch. Arming happens either via
@@ -51,6 +52,16 @@ pub const SERVE_BATCH: &str = "serve.batch";
 /// Batcher thread after a batch is collected: `delay` slows the pipeline
 /// so the bounded request queue backs up (load-shedding pressure).
 pub const SERVE_BATCHER: &str = "serve.batcher";
+/// Start of an overlapped re-quantization worker chunk (DESIGN.md §16),
+/// keyed by chunk index: `panic` kills the rebuild mid-overlap (the run
+/// dies before install, so resume replays from the last snapshot); `delay`
+/// makes the rebuild slower than the overlap window, proving the install
+/// barrier actually waits.
+pub const REQUANT_WORKER: &str = "requant.worker";
+/// Just before the rebuilt reps are installed into the model state at the
+/// batch boundary: `panic` here proves the install is all-or-nothing —
+/// state still holds the old planes and no snapshot has been taken.
+pub const REQUANT_INSTALL: &str = "requant.install";
 
 /// What happens when a scheduled fault fires.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -20,7 +20,9 @@
 //!               quota behaviour, merged into BENCH_serve.json
 //!   store       content-addressed model store: `add` ingests a checkpoint
 //!               (keyed by its own bytes) and pins the deploy, `list`
-//!               shows objects + pins, `resolve` prints a model's pin
+//!               shows objects + pins, `resolve` prints a model's pin,
+//!               `gc` deletes objects not pinned within --keep-deploys
+//!               deploys (--dry-run to preview)
 //!   bench-diff  compare two BENCH_*.json records, exit non-zero on a
 //!               regression past --tolerance-pct (CI's bench gate)
 //!
@@ -33,6 +35,12 @@
 //! continues from the newest good one with a bit-identical trajectory;
 //! `--faults "point[#key]@nth:kind[=arg];..."` arms deterministic fault
 //! injection on `bsq` and `serve-bench` for chaos drills.
+//!
+//! Overlap knobs (DESIGN.md §16): re-quantization rebuilds concurrently
+//! with the epoch-end eval and batches prefetch on a background thread by
+//! default; `bsq --sync-requant` (or BSQ_SYNC_REQUANT=1) forces the
+//! pause-the-world ordering and `--prefetch-depth 0` the synchronous
+//! loader — both are bitwise trajectory-invariant.
 //!
 //! Examples:
 //!   bsq-repro bsq --model resnet20 --alpha 5e-3 --act-bits 4 --shards 4
@@ -148,6 +156,13 @@ fn bsq_cfg_from_args(args: &mut Args) -> Result<BsqConfig> {
     if cfg.resume && cfg.snapshot.is_none() {
         bail!("--resume needs --snapshot-dir (where should the snapshots come from?)");
     }
+    // Overlap knobs (DESIGN.md §16): both are trajectory-invariant, so
+    // they sit outside the config fingerprint and can differ across a
+    // kill/resume pair.
+    if args.flag("sync-requant") {
+        cfg.sync_requant = true;
+    }
+    cfg.prefetch_depth = args.get_or("prefetch-depth", cfg.prefetch_depth)?;
     Ok(cfg)
 }
 
@@ -600,14 +615,16 @@ fn cmd_ingress_bench(mut args: Args) -> Result<()> {
     Ok(())
 }
 
-/// `store <add|list|resolve>` — operate on a content-addressed model store
-/// (DESIGN.md §14). `add` ingests a checkpoint under its content digest and
-/// pins the model's deploy to it; `list` shows objects and pins; `resolve`
-/// prints what a model name currently serves.
+/// `store <add|list|resolve|gc>` — operate on a content-addressed model
+/// store (DESIGN.md §14). `add` ingests a checkpoint under its content
+/// digest and pins the model's deploy to it; `list` shows objects and
+/// pins; `resolve` prints what a model name currently serves; `gc`
+/// deletes objects that are neither pinned nor were pinned within the
+/// last `--keep-deploys` deploys (`--dry-run` lists without deleting).
 fn cmd_store(mut args: Args) -> Result<()> {
     let op = args
         .take_positional(1)
-        .context("usage: bsq-repro store <add|list|resolve> --root DIR [flags]")?;
+        .context("usage: bsq-repro store <add|list|resolve|gc> --root DIR [flags]")?;
     let root = args.str_or("root", "results/store")?;
     match op.as_str() {
         "add" => {
@@ -658,7 +675,24 @@ fn cmd_store(mut args: Args) -> Result<()> {
             println!("  activations:  a{} first/last {}", pin.act_bits, pin.act_first_last);
             println!("  source:       {}", pin.source);
         }
-        other => bail!("unknown store op {other:?} (want add, list, or resolve)"),
+        "gc" => {
+            let keep: usize = args.get_or("keep-deploys", 3)?;
+            let dry_run = args.flag("dry-run");
+            args.finish()?;
+            let store = bsq::store::ModelStore::open(&root)?;
+            let report = store.gc(keep, dry_run)?;
+            let verb = if dry_run { "would delete" } else { "deleted" };
+            println!(
+                "{verb} {} object(s), kept {}, {} bytes freed (keep-deploys {keep})",
+                report.deleted.len(),
+                report.kept,
+                report.bytes_freed
+            );
+            for key in &report.deleted {
+                println!("  {key}");
+            }
+        }
+        other => bail!("unknown store op {other:?} (want add, list, resolve, or gc)"),
     }
     Ok(())
 }

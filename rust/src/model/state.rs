@@ -167,6 +167,20 @@ impl ModelState {
         })
     }
 
+    /// Zero a layer's plane momentum buffers (`m:wp:` / `m:wn:`), if they
+    /// exist. Re-quantization re-splits the codes into different planes, so
+    /// stale per-plane momentum is meaningless after an install — both the
+    /// synchronous pause and the overlapped install path (DESIGN.md §16)
+    /// share this. Single fallible lookup per key: absent momenta (e.g.
+    /// before the first train step of a phase) are simply skipped.
+    pub fn zero_plane_momenta(&mut self, layer: &str) {
+        for key in [format!("m:wp:{layer}"), format!("m:wn:{layer}")] {
+            if let Some(t) = self.map.get_mut(&key) {
+                t.data_mut().fill(0.0);
+            }
+        }
+    }
+
     /// Per-layer active-bit counts, in manifest layer order.
     pub fn bits_by_layer(&self, man: &Manifest) -> Result<Vec<usize>> {
         man.qlayers
@@ -293,6 +307,19 @@ mod tests {
         assert!(s.contains("wp:conv1"));
         // missing layers fail cleanly
         assert!(s.take_bitrep("nope").is_err());
+    }
+
+    #[test]
+    fn zero_plane_momenta_clears_only_that_layer() {
+        let mut s = ModelState::new();
+        s.insert("m:wp:c1".into(), Tensor::full(&[2], 3.0));
+        s.insert("m:wn:c1".into(), Tensor::full(&[2], 4.0));
+        s.insert("m:wp:c2".into(), Tensor::full(&[2], 5.0));
+        s.zero_plane_momenta("c1");
+        assert!(s.get("m:wp:c1").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(s.get("m:wn:c1").unwrap().data().iter().all(|&v| v == 0.0));
+        assert!(s.get("m:wp:c2").unwrap().data().iter().all(|&v| v == 5.0));
+        s.zero_plane_momenta("absent"); // no-op, not an error
     }
 
     #[test]

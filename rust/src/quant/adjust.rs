@@ -92,6 +92,63 @@ pub fn requantize(rep: &mut BitRep) -> AdjustReport {
     }
 }
 
+/// [`requantize`] into a double buffer: read `src`'s codes, write the
+/// rebuilt planes / mask / scale into `dst`, leave `src` untouched.
+///
+/// This is the overlapped-requant worker primitive (DESIGN.md §16): the
+/// training thread keeps reading the live `src` planes while a background
+/// worker rebuilds into the spare, and the coordinator installs the spare
+/// at the next batch boundary. Bitwise identical to cloning `src` and
+/// running [`requantize`] on the clone (asserted by a differential test),
+/// but reads only the i16 codes off `src` instead of copying 2·NB float
+/// planes first. `dst` must be shape-compatible — a spare created as a
+/// clone of the layer.
+pub fn requantize_into(src: &BitRep, dst: &mut BitRep) -> AdjustReport {
+    assert_eq!(src.wp.shape(), dst.wp.shape(), "requantize_into: spare wp shape mismatch");
+    assert_eq!(src.wn.shape(), dst.wn.shape(), "requantize_into: spare wn shape mismatch");
+    let n = src.bits();
+    if n == 0 {
+        // Dead layer: the spare must mirror it exactly (it gets installed).
+        dst.wp.data_mut().copy_from_slice(src.wp.data());
+        dst.wn.data_mut().copy_from_slice(src.wn.data());
+        dst.mask = src.mask.clone();
+        dst.scale = src.scale;
+        return AdjustReport { bits_before: 0, bits_after: 0, msb_trimmed: 0, lsb_trimmed: 0 };
+    }
+
+    let codes = codes_i16(src);
+    let mut delta = src.delta();
+    let mut bits = PlaneBits::from_codes(&codes);
+    let occ = bits.occupancy();
+    if occ == 0 {
+        dst.mask = packed_mask(0);
+        dst.wp.data_mut().fill(0.0);
+        dst.wn.data_mut().fill(0.0);
+        dst.scale = src.scale; // meaningless for a dead layer; kept as in requantize
+        return AdjustReport { bits_before: n, bits_after: 0, msb_trimmed: n, lsb_trimmed: 0 };
+    }
+
+    let hi = 31 - occ.leading_zeros() as usize;
+    let lsb = (occ.trailing_zeros() as usize).min(hi);
+    if lsb > 0 {
+        bits.drop_low_planes(lsb);
+        delta *= (1u64 << lsb) as f64;
+    }
+    let n_after = hi - lsb + 1;
+    debug_assert!(n_after <= NB);
+
+    bits.expand_into(dst.wp.data_mut(), dst.wn.data_mut());
+    dst.mask = packed_mask(n_after);
+    dst.scale = (delta * ((1u64 << n_after) - 1) as f64) as f32;
+
+    AdjustReport {
+        bits_before: n,
+        bits_after: n_after,
+        msb_trimmed: (n + 1).saturating_sub(n_after + lsb),
+        lsb_trimmed: lsb,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -231,6 +288,47 @@ mod tests {
             // planes come back exactly binary
             assert!(rep.wp.data().iter().all(|&v| v == 0.0 || v == 1.0));
             assert!(rep.wn.data().iter().all(|&v| v == 0.0 || v == 1.0));
+        }
+    }
+
+    /// Differential: `requantize_into` a spare ≡ `requantize` in place, for
+    /// random continuous mid-training reps — and the source is untouched.
+    #[test]
+    fn prop_requantize_into_matches_in_place() {
+        let mut rng = Pcg32::seeded(1312);
+        for case in 0..200 {
+            let n = case % 9; // include the dead-layer n == 0 path
+            let elems = 1 + rng.below(40) as usize;
+            let w = Tensor::randn(&[elems], 0.5, &mut rng);
+            let mut src = to_bitplanes(&w, n.max(1)).unwrap();
+            if n == 0 {
+                src.mask = packed_mask(0);
+            }
+            for v in src.wp.data_mut().iter_mut().chain(src.wn.data_mut()) {
+                *v = (*v + rng.range(-0.45, 0.45)).clamp(0.0, 2.0);
+            }
+            src.scale = rng.range(0.05, 3.0);
+
+            let src_snapshot = src.clone();
+            let mut in_place = src.clone();
+            let r_in_place = requantize(&mut in_place);
+            let mut spare = src.clone(); // shape-compatible double buffer
+            let r_into = requantize_into(&src, &mut spare);
+
+            assert_eq!(r_into, r_in_place, "case {case}: reports differ");
+            assert_eq!(spare.wp, in_place.wp, "case {case}: wp differs");
+            assert_eq!(spare.wn, in_place.wn, "case {case}: wn differs");
+            assert_eq!(spare.mask, in_place.mask, "case {case}: mask differs");
+            assert_eq!(
+                spare.scale.to_bits(),
+                in_place.scale.to_bits(),
+                "case {case}: scale differs"
+            );
+            // the source is never written
+            assert_eq!(src.wp, src_snapshot.wp);
+            assert_eq!(src.wn, src_snapshot.wn);
+            assert_eq!(src.mask, src_snapshot.mask);
+            assert_eq!(src.scale.to_bits(), src_snapshot.scale.to_bits());
         }
     }
 

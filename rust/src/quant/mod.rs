@@ -13,7 +13,7 @@ pub mod reference;
 pub mod regweight;
 pub mod scheme;
 
-pub use adjust::{requantize, AdjustReport};
+pub use adjust::{requantize, requantize_into, AdjustReport};
 pub use bitplane::{from_bitplanes, packed_mask, to_bitplanes, BitRep, NB};
 pub use packed::{PackedCodes, PlaneBits};
 pub use regweight::{reg_weights, Reweigh};

@@ -74,10 +74,20 @@ impl DeployPin {
     }
 }
 
-/// The manifest: one pin per model name, insertion-ordered.
+/// The manifest: one pin per model name, insertion-ordered, plus the pin
+/// history `store gc` prunes against: a monotone deploy counter and the
+/// last deploy each object hash was pinned at. Both fields are optional on
+/// load (absent → 0 / empty) so manifests written before gc existed still
+/// parse — the version number stays at [`MANIFEST_VERSION`] because old
+/// readers simply ignore the extra keys.
 #[derive(Debug, Default)]
 pub struct Manifest {
     pins: Vec<DeployPin>,
+    deploy_seq: usize,
+    /// `(weights_hash, deploy_seq at last pin)` — upserted on every pin,
+    /// never pruned here (gc consults it; pruning history would forget the
+    /// very recency data gc needs).
+    history: Vec<(String, usize)>,
 }
 
 impl Manifest {
@@ -107,7 +117,22 @@ impl Manifest {
             }
             pins.push(pin);
         }
-        Ok(Manifest { pins })
+        // Lenient: manifests from before `store gc` lack these keys.
+        let deploy_seq = match v.get("deploy_seq") {
+            Some(n) => n.as_usize()?,
+            None => 0,
+        };
+        let mut history = Vec::new();
+        if let Some(arr) = v.get("history") {
+            for entry in arr.as_arr()? {
+                let hash = entry.req("hash")?.as_str()?.to_string();
+                if !looks_like_digest(&hash) {
+                    bail!("manifest {} history has malformed hash {hash:?}", path.display());
+                }
+                history.push((hash, entry.req("seq")?.as_usize()?));
+            }
+        }
+        Ok(Manifest { pins, deploy_seq, history })
     }
 
     /// Atomic write via the checkpoint tmp+fsync+rename path, so a crash
@@ -116,15 +141,39 @@ impl Manifest {
         let doc = Json::obj(vec![
             ("version", Json::num(MANIFEST_VERSION as f64)),
             ("pins", Json::Arr(self.pins.iter().map(DeployPin::to_json).collect())),
+            ("deploy_seq", Json::num(self.deploy_seq as f64)),
+            (
+                "history",
+                Json::Arr(
+                    self.history
+                        .iter()
+                        .map(|(hash, seq)| {
+                            Json::obj(vec![
+                                ("hash", Json::str(hash)),
+                                ("seq", Json::num(*seq as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ]);
         checkpoint::commit_bytes(path, doc.to_string_pretty().as_bytes())
             .with_context(|| format!("writing manifest {}", path.display()))
     }
 
     /// Upsert the pin for `pin.model`. Returns the replaced pin, if any.
+    /// Every pin bumps the deploy counter and stamps the pinned hash with
+    /// it, so `store gc` can tell "pinned three deploys ago" from "never
+    /// pinned at all".
     pub fn pin(&mut self, pin: DeployPin) -> Result<Option<DeployPin>> {
         if !looks_like_digest(&pin.weights_hash) {
             bail!("refusing to pin {:?}: malformed weights_hash {:?}", pin.model, pin.weights_hash);
+        }
+        self.deploy_seq += 1;
+        let seq = self.deploy_seq;
+        match self.history.iter_mut().find(|(h, _)| *h == pin.weights_hash) {
+            Some(slot) => slot.1 = seq,
+            None => self.history.push((pin.weights_hash.clone(), seq)),
         }
         match self.pins.iter_mut().find(|p| p.model == pin.model) {
             Some(slot) => Ok(Some(std::mem::replace(slot, pin))),
@@ -145,6 +194,27 @@ impl Manifest {
 
     pub fn pins(&self) -> &[DeployPin] {
         &self.pins
+    }
+
+    /// Number of deploys (pins) this manifest has ever recorded.
+    pub fn deploy_seq(&self) -> usize {
+        self.deploy_seq
+    }
+
+    /// Hashes `store gc --keep-deploys N` must not delete: everything a
+    /// model currently serves, plus anything pinned within the last `keep`
+    /// deploys (seq in `(deploy_seq - keep, deploy_seq]`). Objects the
+    /// manifest has never pinned don't appear — they are garbage at any
+    /// `keep`.
+    pub fn live_hashes(&self, keep: usize) -> std::collections::BTreeSet<String> {
+        let mut live: std::collections::BTreeSet<String> =
+            self.pins.iter().map(|p| p.weights_hash.clone()).collect();
+        for (hash, seq) in &self.history {
+            if seq + keep > self.deploy_seq {
+                live.insert(hash.clone());
+            }
+        }
+        live
     }
 }
 
@@ -259,6 +329,51 @@ mod tests {
         let path = dir.join("manifest.json");
         std::fs::write(&path, r#"{"version": 99, "pins": []}"#).unwrap();
         assert!(Manifest::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn legacy_manifest_without_history_keys_still_loads() {
+        let dir = std::env::temp_dir().join(format!("bsq_manifest_legacy_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        let hash = super::super::digest::digest_hex(&[7]);
+        std::fs::write(
+            &path,
+            format!(
+                r#"{{"version": 1, "pins": [{{"model": "t", "weights_hash": "{hash}",
+                    "precision_fp": "x", "plan_fp": "y", "act_bits": 4,
+                    "act_first_last": 8, "source": "s"}}]}}"#
+            ),
+        )
+        .unwrap();
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.deploy_seq(), 0);
+        // the current pin is live even with no history at all
+        assert_eq!(m.live_hashes(0).into_iter().collect::<Vec<_>>(), vec![hash]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pin_history_tracks_recency_through_disk() {
+        let dir = std::env::temp_dir().join(format!("bsq_manifest_hist_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.json");
+        let mut m = Manifest::new();
+        m.pin(pin("tinynet", 1)).unwrap(); // seq 1
+        m.pin(pin("tinynet", 2)).unwrap(); // seq 2 — hash 1 now unpinned
+        m.pin(pin("tinynet", 3)).unwrap(); // seq 3 — hash 2 now unpinned
+        m.save(&path).unwrap();
+
+        let back = Manifest::load(&path).unwrap();
+        assert_eq!(back.deploy_seq(), 3);
+        let h = |b: u8| super::super::digest::digest_hex(&[b]);
+        // keep 0: only the live pin survives
+        assert_eq!(back.live_hashes(0), [h(3)].into_iter().collect());
+        // keep 2: hashes pinned at seq > 1 survive
+        assert_eq!(back.live_hashes(2), [h(2), h(3)].into_iter().collect());
+        // keep well past the horizon: everything ever pinned survives
+        assert_eq!(back.live_hashes(10), [h(1), h(2), h(3)].into_iter().collect());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -19,7 +19,10 @@
 //! pins each model name to an exact (weights-hash, precision-fingerprint,
 //! plan-fingerprint) triple, which is the unit of deploy: flip the pin,
 //! and the serve layer hot-swaps to the new object at a batch boundary.
-//! [`lru::ByteLru`] bounds how many cold `BoundPlan`s stay resident.
+//! [`lru::ByteLru`] bounds how many cold `BoundPlan`s stay resident, and
+//! [`ModelStore::gc`] reclaims objects that are neither pinned now nor
+//! were pinned within the last N deploys (the manifest keeps a pin
+//! history for exactly this).
 
 pub mod digest;
 pub mod lru;
@@ -34,6 +37,18 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::model::checkpoint;
+
+/// What a [`ModelStore::gc`] pass did (or, dry-run, would do).
+#[derive(Debug, Default)]
+pub struct GcReport {
+    /// Digests removed (or listed, under `dry_run`), in sorted order.
+    pub deleted: Vec<String>,
+    /// Objects that survived (pinned now, or pinned recently enough).
+    pub kept: usize,
+    /// Bytes of object + sidecar files freed (would-free under `dry_run`).
+    pub bytes_freed: u64,
+    pub dry_run: bool,
+}
 
 /// On-disk content-addressed store plus its manifest.
 pub struct ModelStore {
@@ -123,6 +138,37 @@ impl ModelStore {
             );
         }
         Ok((pin, path))
+    }
+
+    /// Garbage-collect unreferenced objects: delete (or, with `dry_run`,
+    /// merely list) every object that is neither currently pinned nor was
+    /// pinned within the last `keep_deploys` deploys. Objects the manifest
+    /// has never pinned are unreferenced at any `keep_deploys`. Deletion
+    /// removes both the `.ckpt` object and its `.meta.json` sidecar; the
+    /// manifest itself is never touched, so a gc can never un-deploy
+    /// anything.
+    pub fn gc(&self, keep_deploys: usize, dry_run: bool) -> Result<GcReport> {
+        let live = self.manifest.live_hashes(keep_deploys);
+        let mut report = GcReport { dry_run, ..GcReport::default() };
+        for key in self.objects() {
+            if live.contains(&key) {
+                report.kept += 1;
+                continue;
+            }
+            let obj = self.object_path(&key);
+            let meta = obj.with_extension("meta.json");
+            for path in [&obj, &meta] {
+                if let Ok(md) = std::fs::metadata(path) {
+                    report.bytes_freed += md.len();
+                    if !dry_run {
+                        std::fs::remove_file(path)
+                            .with_context(|| format!("deleting {}", path.display()))?;
+                    }
+                }
+            }
+            report.deleted.push(key);
+        }
+        Ok(report)
     }
 
     /// Digests of all objects present, sorted (diagnostics / `store list`).

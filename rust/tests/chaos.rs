@@ -4,6 +4,9 @@
 //! * a training run killed in any phase resumes from its last snapshot to a
 //!   **bit-identical** trajectory (history, scheme, accuracies);
 //! * snapshotting itself is a pure observer (on vs off: same bits);
+//! * a fault in the overlapped requant rebuild or at its install barrier
+//!   (DESIGN.md §16) dies cleanly pre-install and resumes bit-identically
+//!   — in either mode, regardless of which mode crashed;
 //! * a checkpoint torn at *any* length or flipped in *any* bit fails loudly
 //!   on load, and generation retention falls back over corruption;
 //! * the serving pool answers every request exactly once under injected
@@ -261,6 +264,95 @@ fn resume_falls_back_over_corrupt_generations_bit_identically() {
     };
     assert_same_outcome(baseline(), &resumed, "corrupt-generation fallback");
     std::fs::remove_dir_all(dir).ok();
+}
+
+// -- overlapped re-quantization faults (DESIGN.md §16) ------------------------
+
+/// A worker panic during the overlapped rebuild must surface as a clean
+/// error *before* any plane is installed or any bsq snapshot taken, and a
+/// resume — in either mode, including the mode the run did NOT crash in —
+/// replays to the baseline bits. `requant.worker#0` is keyed by chunk
+/// index, so `@1` addresses the second requant boundary (bsq epoch 1)
+/// regardless of how many worker chunks this host splits the layers into.
+#[test]
+fn requant_worker_kill_resumes_bit_identically_across_modes() {
+    for (sync, label) in [(true, "killed sync, resumed overlapped"),
+                          (false, "killed overlapped, resumed sync")] {
+        let dir = scratch(if sync { "rq_sync" } else { "rq_overlap" });
+        let mut cfg = tiny_cfg();
+        cfg.sync_requant = sync;
+        cfg.prefetch_depth = if sync { 0 } else { 2 };
+        cfg.snapshot = Some(SnapshotCfg::new(&dir));
+
+        {
+            let g = faults::inject(Schedule::parse("requant.worker#0@1:panic").unwrap());
+            let err = run_tiny(&cfg).expect_err(label);
+            assert!(
+                format!("{err:#}").contains("injected fault"),
+                "{label}: wrong failure: {err:#}"
+            );
+            assert_eq!(g.fired().len(), 1, "{label}: fault did not fire");
+        }
+
+        // Resume in the OTHER mode: the knobs are outside the config
+        // fingerprint precisely so an operator can fall back to
+        // --sync-requant on a crashed overlapped run (and vice versa).
+        let resumed = {
+            let _g = faults::inject(Schedule::default());
+            let mut rcfg = cfg.clone();
+            rcfg.resume = true;
+            rcfg.sync_requant = !sync;
+            rcfg.prefetch_depth = if sync { 2 } else { 0 };
+            run_tiny(&rcfg).unwrap_or_else(|e| panic!("{label}: resume failed: {e:#}"))
+        };
+        assert_same_outcome(baseline(), &resumed, label);
+        std::fs::remove_dir_all(dir).ok();
+    }
+}
+
+/// The install barrier is all-or-nothing: a fault at `requant.install`
+/// kills the run with every live plane untouched (the next resume replays
+/// the epoch and lands on the baseline bits, which it could not if some
+/// layers had already swapped).
+#[test]
+fn requant_install_fault_is_all_or_nothing() {
+    let dir = scratch("rq_install");
+    let mut cfg = tiny_cfg();
+    cfg.sync_requant = false;
+    cfg.snapshot = Some(SnapshotCfg::new(&dir));
+    {
+        let g = faults::inject(Schedule::parse("requant.install@0:panic").unwrap());
+        let err = run_tiny(&cfg).expect_err("install kill");
+        assert!(format!("{err:#}").contains("injected fault"), "{err:#}");
+        assert_eq!(g.fired().len(), 1, "install fault did not fire");
+    }
+    let resumed = {
+        let _g = faults::inject(Schedule::default());
+        let mut rcfg = cfg.clone();
+        rcfg.resume = true;
+        run_tiny(&rcfg).unwrap()
+    };
+    assert_same_outcome(baseline(), &resumed, "install kill");
+    std::fs::remove_dir_all(dir).ok();
+}
+
+/// A slow rebuild worker must stall the install barrier, never be raced
+/// past it: delaying chunk 0 through the whole eval window changes no
+/// bits, only wall clock.
+#[test]
+fn slow_requant_worker_stalls_the_install_never_corrupts_it() {
+    let out = {
+        let g = faults::inject(
+            Schedule::parse("requant.worker#0@0:delay=100; requant.worker#0@1:delay=100")
+                .unwrap(),
+        );
+        let mut cfg = tiny_cfg();
+        cfg.sync_requant = false;
+        let out = run_tiny(&cfg).unwrap();
+        assert_eq!(g.fired().len(), 2, "both delays must fire");
+        out
+    };
+    assert_same_outcome(baseline(), &out, "delayed worker");
 }
 
 // -- checkpoint torn-write properties -----------------------------------------

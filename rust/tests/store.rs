@@ -1,7 +1,8 @@
 //! Integration tests for the content-addressed model store (DESIGN.md §14):
 //! digest round-trips, manifest pin/resolve (missing hash is a hard error),
-//! byte-budgeted LRU eviction, and GenStore→store publication — including
-//! that publication never disturbs the snapshot store's own
+//! byte-budgeted LRU eviction, gc retention (pinned and recently-deployed
+//! objects survive, orphans don't), and GenStore→store publication —
+//! including that publication never disturbs the snapshot store's own
 //! `latest_good` fallback semantics.
 
 use std::path::PathBuf;
@@ -153,6 +154,53 @@ fn put_checkpoint_is_idempotent_and_keyed_by_content() {
     let k3 = store.put_checkpoint(&other).unwrap();
     assert_ne!(k1, k3);
     assert_eq!(store.objects().len(), 2);
+    std::fs::remove_dir_all(dir).ok();
+}
+
+#[test]
+fn gc_spares_pinned_and_recent_objects_and_reclaims_the_rest() {
+    let engine = Engine::native();
+    let dir = scratch("gc");
+    let ckpts: Vec<_> = (0..4).map(|s| quantized_ckpt(&engine, &dir, 20 + s)).collect();
+    let mut store = ModelStore::open(dir.join("store")).unwrap();
+
+    // deploy history: k0 (seq 1) → k1 (seq 2) → k2 (seq 3, current pin);
+    // k3 is ingested but never pinned — an orphan at any horizon.
+    let keys: Vec<String> = ckpts.iter().map(|c| store.put_checkpoint(c).unwrap()).collect();
+    for key in &keys[..3] {
+        store.pin_deploy(pin("tinynet", key)).unwrap();
+    }
+    assert_eq!(store.objects().len(), 4);
+
+    // dry run deletes nothing, but reports what a real pass would take
+    let preview = store.gc(1, true).unwrap();
+    assert!(preview.dry_run);
+    assert_eq!(preview.deleted.len(), 2); // k0 (too old) + k3 (orphan)
+    assert!(preview.bytes_freed > 0);
+    assert_eq!(store.objects().len(), 4, "dry run must not delete");
+
+    // keep-deploys 1: survivors are the current pin and the last deploy
+    let report = store.gc(1, false).unwrap();
+    let mut gone = report.deleted.clone();
+    gone.sort();
+    let mut expect = vec![keys[0].clone(), keys[3].clone()];
+    expect.sort();
+    assert_eq!(gone, expect);
+    assert_eq!(report.kept, 2);
+    assert_eq!(report.bytes_freed, preview.bytes_freed);
+    assert!(!store.object_path(&keys[0]).exists());
+    assert!(store.object_path(&keys[1]).exists(), "recently-deployed object must survive");
+    assert!(store.object_path(&keys[2]).exists(), "pinned object must survive");
+
+    // the store still resolves and serves after the gc
+    let (live, obj) = store.resolve("tinynet").unwrap();
+    assert_eq!(live.weights_hash, keys[2]);
+    assert_eq!(digest_file(&obj).unwrap(), keys[2]);
+
+    // gc is idempotent once the garbage is gone
+    let again = store.gc(1, false).unwrap();
+    assert!(again.deleted.is_empty());
+    assert_eq!(again.kept, 2);
     std::fs::remove_dir_all(dir).ok();
 }
 
